@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing.
+
+Every benchmark prints ``name,value,derived`` CSV rows (one per table cell
+group) and returns a dict for run.py's summary. Scale with ECOLORA_BENCH=full
+(paper-like rounds) vs the default quick profile (CI-sized; same protocol,
+fewer rounds/clients so it finishes on one CPU core).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.sparsify import SparsifyConfig  # noqa: E402
+from repro.data.synthetic import TaskConfig  # noqa: E402
+from repro.fed.strategies import EcoLoRAConfig  # noqa: E402
+from repro.fed.trainer import FedConfig, FederatedTrainer  # noqa: E402
+
+FULL = os.environ.get("ECOLORA_BENCH", "quick") == "full"
+
+MODEL = "llama2-7b"  # the paper's QA model (reduced variant)
+
+
+def task_config(seed: int = 0) -> TaskConfig:
+    return TaskConfig(vocab_size=256, seq_len=32,
+                      n_samples=2048 if FULL else 512,
+                      n_categories=8, seed=seed)
+
+
+def fed_config(method: str = "fedit", eco: EcoLoRAConfig | None = None,
+               **kw) -> FedConfig:
+    base = dict(
+        method=method,
+        n_clients=100 if FULL else 16,
+        clients_per_round=10 if FULL else 5,
+        rounds=40 if FULL else 7,
+        local_steps=4 if FULL else 2,
+        local_batch=8,
+        lr=3e-3,
+        eco=eco,
+        pretrain_steps=120 if FULL else 60,
+    )
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def run_fed(method: str, eco: EcoLoRAConfig | None, seed: int = 0, **kw):
+    cfg = get_config(MODEL).reduced()
+    fed = fed_config(method, eco, seed=seed, **kw)
+    tr = FederatedTrainer(cfg, fed, task_config(seed))
+    tr.run()
+    return tr
+
+
+def default_eco(**kw) -> EcoLoRAConfig:
+    base = dict(n_segments=5 if FULL else 3, beta=0.5,
+                sparsify=SparsifyConfig())
+    base.update(kw)
+    return EcoLoRAConfig(**base)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    print(f"{name},{value},{derived}")

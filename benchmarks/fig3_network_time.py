@@ -1,0 +1,39 @@
+"""Figure 3 analogue: computation vs communication time under the paper's
+four UL/DL bandwidth scenarios (netsim replaces ns-3)."""
+from benchmarks.common import default_eco, emit, run_fed
+from repro.netsim.network import SCENARIOS, NetworkSimulator
+
+
+def replay(tr, scenario):
+    sim = NetworkSimulator(scenario)
+    nclients = tr.fed.clients_per_round
+    for lg in tr.logs:
+        down = lg.download_bytes // max(nclients, 1)
+        up = lg.upload_bytes // max(nclients, 1)
+        sim.round(lg.round_t, [down] * nclients, [up] * nclients,
+                  [lg.compute_s] * nclients, lg.overhead_s)
+    return sim.totals()
+
+
+def main():
+    out = {}
+    runs = {"base": run_fed("fedit", None),
+            "eco": run_fed("fedit", default_eco())}
+    for name in SCENARIOS:
+        for tag, tr in runs.items():
+            t = replay(tr, SCENARIOS[name])
+            out[(name, tag)] = t
+            emit(f"fig3/{name}/{tag}/comm_s", round(t["communication_s"], 1),
+                 f"compute_s={t['computation_s']:.1f}")
+    for name in SCENARIOS:
+        b, e = out[(name, "base")], out[(name, "eco")]
+        emit(f"fig3/{name}/comm_reduction",
+             round(1 - e["communication_s"] / b["communication_s"], 3),
+             "paper@1/5Mbps: 0.79")
+        emit(f"fig3/{name}/total_reduction",
+             round(1 - e["total_s"] / b["total_s"], 3), "paper@1/5Mbps: 0.65")
+    return out
+
+
+if __name__ == "__main__":
+    main()

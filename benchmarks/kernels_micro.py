@@ -1,0 +1,46 @@
+"""Kernel microbenchmarks (interpret-mode correctness-path timing on CPU;
+on TPU these are the perf-critical ops). Prints name,us_per_call,derived."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+
+
+def timeit(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    m, k, n, r = 256, 512, 256, 16
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32)
+    a = jax.random.normal(ks[2], (k, r), jnp.float32)
+    b = jax.random.normal(ks[3], (r, n), jnp.float32)
+    us = timeit(lambda: ops.lora_matmul(x, w, a, b, 2.0))
+    emit("kernels/lora_matmul", round(us, 1),
+         f"flops={2*m*k*n + 2*m*k*r + 2*m*r*n}")
+
+    v = jax.random.normal(ks[0], (1 << 16,), jnp.float32)
+    res = jnp.zeros_like(v)
+    us = timeit(lambda: ops.sparsify_residual(v, res, 0.3))
+    emit("kernels/sparsify_residual", round(us, 1), f"n={v.size}")
+
+    q = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
+    kk = jax.random.normal(ks[1], (2, 2048, 2, 64), jnp.float32)
+    vv = jax.random.normal(ks[2], (2, 2048, 2, 64), jnp.float32)
+    valid = jnp.arange(2048) < 1500
+    us = timeit(lambda: ops.decode_attention(q, kk, vv, valid, 4))
+    emit("kernels/decode_attention", round(us, 1), "s=2048")
+    return {}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,fig3]
+  ECOLORA_BENCH=full for paper-scale rounds (slow); default is quick profile.
+
+Prints ``name,value,derived`` CSV; section timings at the end.
+"""
+import argparse
+import sys
+import time
+
+ALL = ["fig2_gini", "table1_comm_params", "table2_dpo", "fig3_network_time",
+       "table3_ablation", "table4_compression", "table5_topk", "table6_noniid",
+       "table7_quantization", "kernels_micro"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark prefixes")
+    args = ap.parse_args()
+    names = ALL
+    if args.only:
+        want = args.only.split(",")
+        names = [n for n in ALL if any(n.startswith(w) for w in want)]
+    failures = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"bench/{name}/elapsed_s,{time.time()-t0:.1f},")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"bench/{name}/FAILED,{type(e).__name__}: {e},")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

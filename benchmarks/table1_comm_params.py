@@ -1,0 +1,26 @@
+"""Table 1 analogue: accuracy + upload/total communication parameters for
+FedIT / FLoRA / FFA-LoRA, each with and without EcoLoRA."""
+from benchmarks.common import default_eco, emit, run_fed
+
+
+def main():
+    rows = {}
+    for method in ("fedit", "flora", "ffa_lora"):
+        for eco in (None, default_eco()):
+            tr = run_fed(method, eco)
+            s = tr.summary()
+            tag = f"{method}{'+eco' if eco else ''}"
+            rows[tag] = s
+            emit(f"table1/{tag}/metric", round(s["final_metric"], 4),
+                 f"loss={s['final_loss']:.3f}")
+            emit(f"table1/{tag}/upload_params_M", round(s["upload_params_M"], 3))
+            emit(f"table1/{tag}/total_params_M", round(s["total_params_M"], 3))
+    for m in ("fedit", "flora", "ffa_lora"):
+        red = 1 - rows[m + "+eco"]["upload_params_M"] / rows[m]["upload_params_M"]
+        emit(f"table1/{m}/upload_reduction", round(red, 3),
+             "paper: up to 0.89")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Table 2 analogue: federated DPO (VA task) with and without EcoLoRA."""
+from benchmarks.common import default_eco, emit, run_fed
+
+
+def main():
+    out = {}
+    for eco in (None, default_eco()):
+        tr = run_fed("dpo", eco)
+        s = tr.summary()
+        tag = "dpo" + ("+eco" if eco else "")
+        out[tag] = s
+        emit(f"table2/{tag}/pref_acc", round(s["final_metric"], 4))
+        emit(f"table2/{tag}/upload_params_M", round(s["upload_params_M"], 3))
+        emit(f"table2/{tag}/total_params_M", round(s["total_params_M"], 3))
+    return out
+
+
+if __name__ == "__main__":
+    main()

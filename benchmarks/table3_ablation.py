@@ -1,0 +1,28 @@
+"""Table 3 analogue: component ablations (w/o round-robin, w/o
+sparsification, fixed sparsification, w/o encoding, full)."""
+from benchmarks.common import default_eco, emit, run_fed
+from repro.core.sparsify import SparsifyConfig
+
+
+def main():
+    variants = {
+        "full": default_eco(),
+        "wo_rr": default_eco(round_robin=False),
+        "wo_sparse": default_eco(sparsify=SparsifyConfig(enabled=False)),
+        "fixed_sparse": default_eco(sparsify=SparsifyConfig(
+            k_max=0.55, k_min_a=0.55, k_min_b=0.55, gamma_a=0.0, gamma_b=0.0)),
+        "wo_encoding": default_eco(encoding=False),
+    }
+    out = {}
+    for tag, eco in variants.items():
+        tr = run_fed("fedit", eco)
+        s = tr.summary()
+        out[tag] = s
+        emit(f"table3/{tag}/metric", round(s["final_metric"], 4))
+        emit(f"table3/{tag}/upload_MB", round(s["upload_MB"], 3))
+        emit(f"table3/{tag}/total_MB", round(s["total_MB"], 3))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Table 4 analogue: compression levels (N_s, k_min^A, k_min^B)."""
+from benchmarks.common import FULL, default_eco, emit, run_fed
+from repro.core.sparsify import SparsifyConfig
+
+
+def main():
+    grids = [
+        (3, 0.6, 0.5), (5, 0.6, 0.5), (10, 0.6, 0.5),
+        (5, 0.6, 0.25), (5, 0.3, 0.5),
+    ]
+    out = {}
+    for ns, ka, kb in grids:
+        eco = default_eco(n_segments=ns, sparsify=SparsifyConfig(
+            k_max=0.95, k_min_a=ka, k_min_b=kb))
+        tr = run_fed("fedit", eco,
+                     clients_per_round=max(ns, 10 if FULL else 5))
+        s = tr.summary()
+        tag = f"ns{ns}_kA{ka}_kB{kb}"
+        out[tag] = s
+        emit(f"table4/{tag}/metric", round(s["final_metric"], 4))
+        emit(f"table4/{tag}/upload_params_M", round(s["upload_params_M"], 3))
+        emit(f"table4/{tag}/total_params_M", round(s["total_params_M"], 3))
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Table 5 / Appendix C analogue: fixed top-k vs adaptive sparsification at
+matched k levels."""
+from benchmarks.common import default_eco, emit, run_fed
+from repro.core.sparsify import SparsifyConfig
+
+
+def main():
+    out = {}
+    for k in (0.9, 0.7, 0.5):
+        fixed = default_eco(sparsify=SparsifyConfig(
+            k_max=k, k_min_a=k, k_min_b=k, gamma_a=0.0, gamma_b=0.0))
+        # adaptive with the same average budget: anneal around k
+        adap = default_eco(sparsify=SparsifyConfig(
+            k_max=min(0.95, k + 0.25), k_min_a=max(0.05, k - 0.15),
+            k_min_b=max(0.05, k - 0.25)))
+        for tag, eco in (("fixed", fixed), ("adaptive", adap)):
+            tr = run_fed("fedit", eco)
+            s = tr.summary()
+            out[(k, tag)] = s
+            emit(f"table5/k{k}/{tag}/metric", round(s["final_metric"], 4),
+                 f"upload_MB={s['upload_MB']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Table 6 analogue: task-heterogeneous non-IID (one task domain per
+client)."""
+from benchmarks.common import default_eco, emit, run_fed
+
+
+def main():
+    out = {}
+    for method in ("fedit", "ffa_lora"):
+        for eco in (None, default_eco()):
+            tr = run_fed(method, eco, partition="task")
+            s = tr.summary()
+            tag = f"{method}{'+eco' if eco else ''}"
+            out[tag] = s
+            emit(f"table6/{tag}/metric", round(s["final_metric"], 4))
+            emit(f"table6/{tag}/upload_params_M", round(s["upload_params_M"], 3))
+            emit(f"table6/{tag}/total_params_M", round(s["total_params_M"], 3))
+    return out
+
+
+if __name__ == "__main__":
+    main()

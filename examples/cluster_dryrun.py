@@ -1,0 +1,41 @@
+"""Cluster-mode demo: lower one (arch x shape) on the production mesh and
+print its roofline decomposition. (Runs its own process logic: 512 host
+devices are forced before jax import via repro.launch.dryrun.)
+
+    PYTHONPATH=src python examples/cluster_dryrun.py --arch llama3.2-1b --shape train_4k
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one  # sets XLA_FLAGS on import
+    from repro.launch.roofline import analyze, what_would_help
+
+    res = run_one(args.arch, args.shape, multi_pod=args.multi_pod)
+    if res["status"] != "ok":
+        print(res)
+        return
+    r = analyze(res)
+    print(f"{r.arch} x {r.shape} on {r.n_chips} chips")
+    print(f"  compute    {r.compute_s:.3e} s")
+    print(f"  memory     {r.memory_s:.3e} s")
+    print(f"  collective {r.collective_s:.3e} s")
+    print(f"  dominant:  {r.dominant}")
+    print(f"  6ND/HLO flops ratio: {r.flops_ratio:.2f} "
+          f"(LoRA-ideal {r.lora_flops_ratio:.2f})")
+    print(f"  peak memory: {r.peak_gib:.2f} GiB/device")
+    print(f"  next lever: {what_would_help(r)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end driver (deliverable b): federated fine-tuning of a ~100M-param
+decoder with EcoLoRA for a few hundred aggregate optimizer steps.
+
+    PYTHONPATH=src python examples/fed_finetune.py [--rounds 25]
+
+Prints per-round eval + the final communication ledger, and writes a
+round-resumable checkpoint.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.checkpoint import ckpt
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+# ~126M params: 12L x d768 x ff3072, vocab 8192 (runs on CPU)
+MODEL_100M = ModelConfig(
+    name="demo-100m", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=4, head_dim=64, d_ff=3072, vocab_size=8192,
+    mlp_act="swiglu", lora_rank=8, lora_alpha=16.0,
+    param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--out", default="results/fed_finetune.ckpt")
+    args = ap.parse_args()
+
+    tc = TaskConfig(vocab_size=4096, seq_len=64, n_samples=2048, seed=0)
+    fed = FedConfig(n_clients=24, clients_per_round=6, rounds=args.rounds,
+                    local_steps=2, local_batch=4, lr=2e-3,
+                    eco=EcoLoRAConfig(n_segments=3), pretrain_steps=60)
+    # total optimizer steps = rounds x clients/round x local steps
+    print(f"total federated optimizer steps: "
+          f"{args.rounds * fed.clients_per_round * fed.local_steps}")
+    tr = FederatedTrainer(MODEL_100M, fed, tc)
+    for lg in tr.run():
+        print(f"round {lg.round_t:3d} | loss {lg.global_loss:.4f} | "
+              f"acc {lg.metric:.3f} | up {lg.upload_bytes/1e6:.2f} MB | "
+              f"down {lg.download_bytes/1e6:.2f} MB")
+    s = tr.summary()
+    print("\nledger:", {k: round(v, 3) if isinstance(v, float) else v
+                        for k, v in s.items()})
+    n = ckpt.save_fed_state(args.out, tr)
+    print(f"checkpoint: {args.out} ({n/1e6:.2f} MB)")
+
+
+if __name__ == "__main__":
+    main()

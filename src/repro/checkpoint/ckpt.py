@@ -1,0 +1,112 @@
+"""Checkpointing: msgpack + zstd pytree serialisation, round-resumable
+federated state. (orbax is not available offline.)"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def _pack_leaf(x):
+    a = np.asarray(x)
+    # msgpack can't do bf16; view as uint16 with a dtype tag
+    if a.dtype.name == "bfloat16":
+        return {"__nd__": True, "dtype": "bfloat16",
+                "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"__nd__": True, "dtype": a.dtype.name, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_leaf(d):
+    if d["dtype"] == "bfloat16":
+        import ml_dtypes
+        arr = np.frombuffer(d["data"], np.uint16).view(ml_dtypes.bfloat16)
+    else:
+        arr = np.frombuffer(d["data"], np.dtype(d["dtype"]))
+    return arr.reshape(d["shape"]).copy()
+
+
+def _encode(obj):
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, (str, int, float, bool, type(None), bytes)):
+        return obj
+    return _pack_leaf(obj)
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get("__nd__"):
+            return _unpack_leaf(obj)
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any, level: int = 3) -> int:
+    """Returns bytes written."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    raw = msgpack.packb(_encode(tree), use_bin_type=True)
+    comp = zstd.ZstdCompressor(level=level).compress(raw)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)
+    return len(comp)
+
+
+def load(path: str) -> Any:
+    with open(path, "rb") as f:
+        raw = zstd.ZstdDecompressor().decompress(f.read())
+    return _decode(msgpack.unpackb(raw, raw=False))
+
+
+def save_fed_state(path: str, trainer) -> int:
+    """Round-resumable federated state (global vec, client state, ledger)."""
+    st = trainer.strategy
+    state = {
+        "round": len(trainer.logs),
+        "global_vec": st.global_vec,
+        "last_broadcast": st.last_broadcast,
+        "client_views": trainer.client_views,
+        "client_tau": list(st.client_tau),
+        "client_vecs": {str(i): v for i, v in enumerate(st.client_vec)
+                        if v is not None},
+        "residuals": {str(i): c.sparsifier.residual
+                      for i, c in enumerate(st.up_comp)
+                      if c.sparsifier.residual is not None},
+        "down_residual": st.down_comp.sparsifier.residual,
+        "ledger": {
+            "upload_params": st.ledger.upload_params,
+            "download_params": st.ledger.download_params,
+            "upload_bytes": st.ledger.upload_bytes,
+            "download_bytes": st.ledger.download_bytes,
+        },
+    }
+    return save(path, state)
+
+
+def load_fed_state(path: str, trainer) -> int:
+    """Restores state in place; returns the resume round."""
+    state = load(path)
+    st = trainer.strategy
+    st.global_vec = state["global_vec"]
+    st.last_broadcast = state["last_broadcast"]
+    trainer.client_views = state["client_views"]
+    st.client_tau = list(state["client_tau"])
+    for k, v in state["client_vecs"].items():
+        st.client_vec[int(k)] = v
+    for k, v in state["residuals"].items():
+        st.up_comp[int(k)].sparsifier.residual = v
+    if state["down_residual"] is not None:
+        st.down_comp.sparsifier.residual = state["down_residual"]
+    for k, v in state["ledger"].items():
+        setattr(st.ledger, k, int(v))
+    return int(state["round"])

@@ -1,0 +1,36 @@
+"""Config registry: ``get_config(arch_id)`` and the assigned-architecture list."""
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, shape_applicable
+
+_MODULES = {
+    "llama3.2-1b": "llama3_2_1b",
+    "musicgen-large": "musicgen_large",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "deepseek-v3-671b": "deepseek_v3",
+    "mamba2-130m": "mamba2_130m",
+    "gemma3-27b": "gemma3_27b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "llama-3.2-vision-11b": "llama3_2_vision_11b",
+    "llama2-7b": "llama2_7b",
+    "llama2-13b": "llama2_13b",
+}
+
+ASSIGNED_ARCHS = [
+    "llama3.2-1b", "musicgen-large", "zamba2-1.2b", "granite-moe-3b-a800m",
+    "deepseek-v3-671b", "mamba2-130m", "gemma3-27b", "nemotron-4-15b",
+    "codeqwen1.5-7b", "llama-3.2-vision-11b",
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+    if name.endswith("-reduced"):
+        return get_config(name[: -len("-reduced")]).reduced()
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}").CONFIG
+
+
+__all__ = ["get_config", "ASSIGNED_ARCHS", "INPUT_SHAPES", "InputShape",
+           "ModelConfig", "shape_applicable"]

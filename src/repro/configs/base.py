@@ -1,0 +1,169 @@
+"""Config system: ModelConfig covers all six assigned architecture families.
+
+Every architecture in ``repro/configs/<id>.py`` instantiates a ModelConfig;
+``reduced()`` derives the CPU-smoke variant (<=2 layers, d_model<=512,
+<=4 experts) from the same definition so smoke tests exercise the identical
+code path as the full dry-run configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    source: str = ""  # citation (paper / model card)
+
+    # trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    mlp_act: str = "swiglu"  # swiglu | sq_relu | geglu | gelu
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    rope_theta: float = 500000.0
+    max_seq_len: int = 8192
+
+    # sliding-window attention (gemma3-style local:global interleave)
+    sliding_window: int = 0          # 0 -> full attention everywhere
+    global_attn_every: int = 0       # e.g. 6 -> layers 5,11,... are global
+    swa_windowed_cache: bool = False # decode: local layers keep only a
+                                     # window-sized ring-buffer KV cache
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-expert hidden dim
+    first_dense_layers: int = 0      # leading dense FFN layers (deepseek-v3)
+    router_aux_loss: float = 0.0     # load-balance aux loss coefficient
+    moe_impl: str = "dense"          # dense | capacity (see §Perf)
+
+    # MLA (deepseek-v3)
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+    mtp_depth: int = 0               # multi-token-prediction heads
+
+    # SSM (mamba2 SSD) / hybrid (zamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 64
+    ssm_ngroups: int = 1
+    attn_every: int = 0              # hybrid: shared attn block every k ssm layers
+
+    # cross-attention conditioning (VLM image tokens / audio text-conditioning)
+    cross_attn_every: int = 0        # every k-th layer gets cross-attn
+    cond_tokens: int = 0             # number of conditioning tokens from frontend
+    cond_dim: int = 0                # frontend embedding dim (projector maps to d_model)
+
+    # LoRA (paper setting: attention projections; rank/alpha per §A)
+    lora_rank: int = 16
+    lora_alpha: float = 32.0
+    lora_targets: Tuple[str, ...] = ("wq", "wk", "wv", "wo")
+
+    # dtypes
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # --- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True if decode at 500k context is sub-quadratic-memory feasible:
+        SSM/hybrid (O(1)/windowed state) or dense with a sliding window."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke-test variant of the same family (2L, d_model<=512, <=4 experts)."""
+        kw = dict(
+            name=self.name + "-reduced",
+            num_layers=2,
+            d_model=min(self.d_model, 256),
+            num_heads=4,
+            num_kv_heads=min(4, max(1, self.num_kv_heads * 4 // max(self.num_heads, 1)) or 1),
+            head_dim=64,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            max_seq_len=512,
+            lora_rank=4,
+            lora_alpha=8.0,
+            param_dtype="float32",
+            compute_dtype="float32",
+        )
+        if self.num_experts:
+            kw.update(num_experts=4, experts_per_token=2,
+                      moe_d_ff=min(self.moe_d_ff or 256, 256),
+                      first_dense_layers=min(self.first_dense_layers, 1))
+        if self.use_mla:
+            kw.update(q_lora_rank=32, kv_lora_rank=32, qk_rope_dim=16,
+                      qk_nope_dim=32, v_head_dim=48, head_dim=48, mtp_depth=min(self.mtp_depth, 1))
+        if self.ssm_state:
+            kw.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=16)
+        if self.attn_every:
+            kw.update(attn_every=2)
+        if self.sliding_window:
+            kw.update(sliding_window=64, global_attn_every=min(self.global_attn_every, 2))
+        if self.cross_attn_every:
+            kw.update(cross_attn_every=min(self.cross_attn_every, 2),
+                      cond_tokens=8, cond_dim=64)
+        return self.replace(**kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    """An assigned (seq_len, global_batch, kind) workload."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether an (arch, shape) pair is in the dry-run matrix; reason if not."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, ("pure full-attention arch: 500k decode requires "
+                       "sub-quadratic attention (see DESIGN.md)")
+    return True, ""

@@ -1,0 +1,10 @@
+"""codeqwen1.5-7b [dense] — qwen1.5 arch [hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    head_dim=128, d_ff=13440, vocab_size=92416,
+    mlp_act="swiglu", rope_theta=1000000.0,
+)

@@ -1,0 +1,17 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP
+[arXiv:2412.19437]. d_ff=2048 is the per-expert (MoE) intermediate; the 3
+leading dense layers use 18432 as in the release."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    source="arXiv:2412.19437",
+    num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128,
+    d_ff=18432, vocab_size=129280,
+    num_experts=256, experts_per_token=8, num_shared_experts=1,
+    moe_d_ff=2048, first_dense_layers=3, router_aux_loss=0.001,
+    use_mla=True, q_lora_rank=1536, kv_lora_rank=512,
+    qk_rope_dim=64, qk_nope_dim=128, v_head_dim=128, head_dim=192,
+    mtp_depth=1, mlp_act="swiglu",
+    lora_targets=("wq_a", "wq_b", "wkv_a", "wkv_b", "wo"),
+)

@@ -1,0 +1,12 @@
+"""gemma3-27b [dense] — 5:1 local:global sliding window, 128k
+[hf:google/gemma-3-27b family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b", family="dense",
+    source="hf:google/gemma-3-1b-pt (gemma3 family card)",
+    num_layers=62, d_model=5376, num_heads=32, num_kv_heads=16,
+    head_dim=128, d_ff=21504, vocab_size=262144,
+    mlp_act="geglu", rope_theta=1000000.0, tie_embeddings=True,
+    sliding_window=1024, global_attn_every=6,
+)

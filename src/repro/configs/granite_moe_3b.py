@@ -1,0 +1,12 @@
+"""granite-moe-3b-a800m [moe] — 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+    head_dim=64, d_ff=512, vocab_size=49155,
+    num_experts=40, experts_per_token=8, moe_d_ff=512,
+    mlp_act="swiglu", router_aux_loss=0.01, tie_embeddings=True,
+)

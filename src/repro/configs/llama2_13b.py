@@ -1,0 +1,11 @@
+"""llama2-13b — the paper's larger QA model."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-13b", family="dense",
+    source="arXiv:2307.09288 (paper's QA model)",
+    num_layers=40, d_model=5120, num_heads=40, num_kv_heads=40,
+    head_dim=128, d_ff=13824, vocab_size=32000,
+    mlp_act="swiglu", rope_theta=10000.0,
+    lora_rank=16, lora_alpha=32.0,
+)

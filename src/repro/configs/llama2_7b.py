@@ -1,0 +1,12 @@
+"""llama2-7b — the paper's own QA model (Touvron et al. 2023); used by the
+paper-table reproductions at reduced scale."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b", family="dense",
+    source="arXiv:2307.09288 (paper's QA model)",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+    head_dim=128, d_ff=11008, vocab_size=32000,
+    mlp_act="swiglu", rope_theta=10000.0,
+    lora_rank=16, lora_alpha=32.0,
+)

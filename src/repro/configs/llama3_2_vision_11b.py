@@ -1,0 +1,14 @@
+"""llama-3.2-vision-11b [vlm] — cross-attn image layers
+[hf:meta-llama/Llama-3.2-11B-Vision]. Vision encoder (ViT) is a stub:
+input_specs provides patch embeddings; a learned projector feeds the
+cross-attention KV. 40 layers = 32 self + 8 cross (every 5th)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=128256,
+    mlp_act="swiglu", rope_theta=500000.0,
+    cross_attn_every=5, cond_tokens=1024, cond_dim=1280,
+)

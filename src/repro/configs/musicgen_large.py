@@ -1,0 +1,15 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Backbone only: the EnCodec/mel frontend is a stub; input_specs provides text-
+conditioning embeddings (T5-style) consumed via per-layer cross-attention.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="audio",
+    source="arXiv:2306.05284",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+    head_dim=64, d_ff=8192, vocab_size=2048,
+    mlp_act="gelu", rope_theta=10000.0,
+    cross_attn_every=1, cond_tokens=256, cond_dim=1024,
+)

@@ -1,0 +1,13 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention [arXiv:2411.15242]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    head_dim=128,  # shared block attends over concat(h, e) = 4096 dims
+    d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=64,
+    attn_every=6,
+    lora_targets=("wq", "wk", "wv", "wo", "in_proj", "out_proj"),
+)

@@ -1,0 +1,19 @@
+"""EcoLoRA core: the paper's contribution.
+
+  segments     - round-robin segment sharing (§3.3, Eq. 2)
+  staleness    - exponential-decay global/local mixing (Eq. 3)
+  sparsify     - adaptive top-k with residual feedback (§3.4, Eqs. 4-6)
+  golomb       - lossless gap/Golomb position coding (§3.5)
+  compression  - the composed wire pipeline + traffic ledger
+  convergence  - §3.7 constants (mu, Delta) and the T^{-1/2} bound
+"""
+from repro.core.compression import CommLedger, Compressor, Packet
+from repro.core.convergence import ConvergenceConstants, contraction_delta_of_topk
+from repro.core.golomb import (decode_sparse, encode_sparse, expected_bits_per_position,
+                               golomb_parameter)
+from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,
+                                 segment_bounds, segment_id, segments_covered,
+                                 tree_spec, tree_to_vector, vector_to_tree)
+from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig, adaptive_k,
+                                 gini, sparsify_with_residual, topk_mask)
+from repro.core.staleness import mix_models, mix_weight

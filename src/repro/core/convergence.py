@@ -1,0 +1,60 @@
+"""Convergence-analysis constants (paper §3.7 / Appendix B).
+
+The bound: with L-smooth F, bounded gradients G^2, and a delta-contractive
+compressor, for learning rate 1/L < eta < (5-2delta)/((6-4delta) L):
+
+    (1/T) sum ||grad F||^2 <= (F(P0) - F*) / (mu T) + eta (2 eta L - 1) Delta / mu
+
+with  mu    = eta (5/2 + delta (2 eta L - 1) - 3 eta L)
+      Delta = e^{-beta}/(1 - e^{-beta}) * L^2 eta^2 Ns^2 G^2.
+
+We expose these so tests can (a) check the admissible-eta interval is
+non-empty for delta in (0, 1], (b) verify the empirical fedsim loss curve
+decays consistently with O(T^{-1/2}), and (c) confirm the top-k sparsifier
+actually satisfies the contractive property with delta >= k (it does:
+dropping the smallest-(1-k) mass removes at most (1-k) of the energy).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ConvergenceConstants:
+    L: float       # smoothness
+    G2: float      # gradient bound
+    delta: float   # compressor contraction
+    beta: float    # staleness decay
+    n_segments: int
+    eta: float
+
+    @property
+    def mu(self) -> float:
+        e = self.eta
+        return e * (2.5 + self.delta * (2 * e * self.L - 1) - 3 * e * self.L)
+
+    @property
+    def Delta(self) -> float:
+        b = math.exp(-self.beta)
+        return (b / (1 - b)) * (self.L ** 2) * (self.eta ** 2) \
+            * (self.n_segments ** 2) * self.G2
+
+    @property
+    def eta_interval(self):
+        """(1/L, (5-2delta)/((6-4delta) L)) — admissible learning rates."""
+        lo = 1.0 / self.L
+        hi = (5 - 2 * self.delta) / ((6 - 4 * self.delta) * self.L)
+        return lo, hi
+
+    def bound(self, f0_minus_fstar: float, T: int) -> float:
+        """RHS of the paper's inequality after T rounds."""
+        assert self.mu > 0, "mu <= 0: eta outside admissible interval"
+        return (f0_minus_fstar / (self.mu * T)
+                + self.eta * (2 * self.eta * self.L - 1) * self.Delta / self.mu)
+
+
+def contraction_delta_of_topk(k: float) -> float:
+    """Top-k keeps >= k of the energy in the worst case when magnitudes are
+    uniform; in general ||C(x) - x||^2 <= (1 - k) ||x||^2, i.e. delta >= k."""
+    return max(min(k, 1.0), 0.0)

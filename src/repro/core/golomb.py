@@ -1,0 +1,168 @@
+"""Lossless position encoding (paper §3.5): gap deltas + Golomb coding.
+
+With keep-rate k, gaps between consecutive nonzero positions are
+geometric(k); Golomb coding with parameter m* = ceil(-1/log2(1-k)) is the
+optimal prefix code for geometric sources (Golomb 1966). The paper's example:
+k=0.1 -> ~4.8 bits/position vs 16 fixed, a ~3.3x compression per position.
+
+Implementation is vectorised numpy bit-packing (encode) and an index-walk
+decode; both exact (round-trip tested property-based). ``expected_bits`` is
+the analytic rate used by the netsim when simulating very large tensors.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+def golomb_parameter(k: float) -> int:
+    """m* = ceil(-1 / log2(1-k)) for keep-rate (nonzero prob) k."""
+    k = min(max(k, 1e-9), 1 - 1e-9)
+    return max(1, int(math.ceil(-1.0 / math.log2(1.0 - k))))
+
+
+def _truncated_binary_lengths(m: int) -> Tuple[int, int, int]:
+    """Truncated binary code for remainder in [0, m): returns (b, cutoff, b-1)
+    where values < cutoff use b-1 bits, the rest use b bits."""
+    b = max(1, math.ceil(math.log2(m))) if m > 1 else 1
+    cutoff = (1 << b) - m  # 2^b - m values get the short code
+    return b, cutoff, b - 1
+
+
+def encode_gaps(gaps: np.ndarray, m: int) -> np.ndarray:
+    """Golomb-encode nonnegative integer gaps with parameter m.
+    Returns a packed uint8 byte array (bit count via golomb_bitlen)."""
+    gaps = np.asarray(gaps, dtype=np.int64)
+    if gaps.size == 0:
+        return np.zeros(0, np.uint8)
+    q = gaps // m
+    r = gaps % m
+    b, cutoff, bm1 = _truncated_binary_lengths(m)
+    # per-symbol bit lengths: q ones + 1 zero + remainder bits
+    if m == 1:
+        rem_len = np.zeros_like(q)
+    else:
+        rem_len = np.where(r < cutoff, bm1, b)
+    total = int((q + 1 + rem_len).sum())
+    bits = np.zeros(total, np.uint8)
+    starts = np.concatenate([[0], np.cumsum(q + 1 + rem_len)[:-1]])
+    # vectorised unary part: indices of 1-bits are starts[i] + arange(q[i])
+    reps = q.astype(np.int64)
+    if reps.sum() > 0:
+        base = np.repeat(starts, reps)
+        offs = np.concatenate([np.arange(n, dtype=np.int64) for n in reps if n > 0]) \
+            if reps.max() > 0 else np.zeros(0, np.int64)
+        bits[base + offs] = 1
+    # remainder bits (MSB first)
+    rem_start = starts + q + 1
+    if m > 1:
+        code = np.where(r < cutoff, r, r + cutoff)  # long codes shifted
+        for j in range(int(b)):  # b is small (<= ~20)
+            # bit j (from MSB) of each code, only where rem_len > j
+            sel = rem_len > j
+            if not sel.any():
+                continue
+            shift = (rem_len[sel] - 1 - j).astype(np.int64)
+            bitvals = (code[sel] >> shift) & 1
+            bits[rem_start[sel] + j] = bitvals.astype(np.uint8)
+    return np.packbits(bits)
+
+
+def decode_gaps(data: np.ndarray, m: int, count: int) -> np.ndarray:
+    """Decode ``count`` gaps from a packed byte array."""
+    if count == 0:
+        return np.zeros(0, np.int64)
+    bits = np.unpackbits(np.asarray(data, np.uint8))
+    b, cutoff, bm1 = _truncated_binary_lengths(m)
+    out = np.zeros(count, np.int64)
+    pos = 0
+    for i in range(count):
+        q = 0
+        while bits[pos]:
+            q += 1
+            pos += 1
+        pos += 1  # the zero terminator
+        if m == 1:
+            out[i] = q * m
+            continue
+        val = 0
+        for _ in range(bm1):
+            val = (val << 1) | int(bits[pos]); pos += 1
+        if val >= cutoff:
+            val = (val << 1) | int(bits[pos]); pos += 1
+            val -= cutoff
+        out[i] = q * m + val
+    return out
+
+
+def golomb_bitlen(gaps: np.ndarray, m: int) -> int:
+    """Exact encoded bit count without materialising the stream."""
+    gaps = np.asarray(gaps, dtype=np.int64)
+    if gaps.size == 0:
+        return 0
+    q = gaps // m
+    r = gaps % m
+    b, cutoff, bm1 = _truncated_binary_lengths(m)
+    rem_len = np.zeros_like(q) if m == 1 else np.where(r < cutoff, bm1, b)
+    return int((q + 1 + rem_len).sum())
+
+
+def expected_bits_per_position(k: float) -> float:
+    """Analytic E[bits/gap] for geometric(k) gaps under the optimal m*."""
+    k = min(max(k, 1e-9), 1 - 1e-9)
+    m = golomb_parameter(k)
+    b, cutoff, bm1 = _truncated_binary_lengths(m)
+    # E[quotient] for gap ~ Geom(k) support {0,1,...}: E[g] = (1-k)/k
+    # E[q] = sum_g P(g) * (g // m); compute numerically over a long tail
+    gmax = int(min(10_000_000, max(1000, 50 / k)))
+    g = np.arange(gmax)
+    p = (1 - k) ** g * k
+    q = g // m
+    r = g % m
+    rem_len = np.zeros_like(q, float) if m == 1 else np.where(r < cutoff, bm1, b)
+    return float(((q + 1 + rem_len) * p).sum() / p.sum())
+
+
+# --------------------------------------------------------------------------
+# packet-level helpers
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EncodedSparse:
+    """Wire representation of one sparse tensor slice."""
+    positions: np.ndarray     # packed Golomb bytes
+    values_fp16: np.ndarray   # nonzero values, fp16
+    m: int
+    count: int
+    dense_size: int
+
+    @property
+    def wire_bits(self) -> int:
+        return int(self.positions.size * 8 + self.values_fp16.size * 16 + 64)
+
+    @property
+    def wire_bytes(self) -> int:
+        return (self.wire_bits + 7) // 8
+
+
+def encode_sparse(dense: np.ndarray, k_hint: float) -> EncodedSparse:
+    """Encode a dense-layout sparse vector (zeros = not transmitted)."""
+    idx = np.flatnonzero(dense)
+    gaps = np.diff(idx, prepend=-1) - 1  # geometric(k) gaps
+    m = golomb_parameter(max(k_hint, idx.size / max(dense.size, 1) or 1e-6))
+    return EncodedSparse(positions=encode_gaps(gaps, m),
+                         values_fp16=dense[idx].astype(np.float16),
+                         m=m, count=int(idx.size), dense_size=int(dense.size))
+
+
+def decode_sparse(enc: EncodedSparse) -> np.ndarray:
+    if enc.positions.size == 0 and enc.count == enc.dense_size:
+        return enc.values_fp16.astype(np.float32)  # dense packet
+    gaps = decode_gaps(enc.positions, enc.m, enc.count)
+    idx = np.cumsum(gaps + 1) - 1
+    out = np.zeros(enc.dense_size, np.float32)
+    out[idx] = enc.values_fp16.astype(np.float32)
+    return out

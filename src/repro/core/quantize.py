@@ -1,0 +1,66 @@
+"""Quantization baseline (beyond-paper comparison).
+
+The paper's related work (§2.3) contrasts sparsification against
+quantization (signSGD, ternary, natural compression) and argues
+sparsification compresses further with less degradation. We implement the
+standard uniform stochastic quantizer (QSGD-style) so the claim is testable
+in OUR harness — `benchmarks/table7_quantization.py` runs EcoLoRA vs 8/4/2
+-bit quantized FedIT at matched protocols.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8
+    stochastic: bool = True
+    per_chunk: int = 2048   # scale granularity
+
+
+def quantize(x: np.ndarray, cfg: QuantConfig, rng: np.random.Generator
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (codes int, scales float32 per chunk). Symmetric uniform."""
+    n = x.size
+    nchunks = -(-n // cfg.per_chunk)
+    pad = nchunks * cfg.per_chunk - n
+    xp = np.pad(x.astype(np.float32), (0, pad)).reshape(nchunks, cfg.per_chunk)
+    qmax = (1 << (cfg.bits - 1)) - 1
+    scales = np.abs(xp).max(axis=1) / max(qmax, 1)
+    scales = np.where(scales == 0, 1.0, scales)
+    y = xp / scales[:, None]
+    if cfg.stochastic:
+        y = np.floor(y + rng.random(y.shape))
+    else:
+        y = np.rint(y)
+    codes = np.clip(y, -qmax - 1, qmax).astype(np.int32)
+    return codes.reshape(-1)[:n], scales.astype(np.float32)
+
+
+def dequantize(codes: np.ndarray, scales: np.ndarray, cfg: QuantConfig
+               ) -> np.ndarray:
+    n = codes.size
+    nchunks = scales.size
+    pad = nchunks * cfg.per_chunk - n
+    cp = np.pad(codes.astype(np.float32), (0, pad)).reshape(nchunks, cfg.per_chunk)
+    return (cp * scales[:, None]).reshape(-1)[:n]
+
+
+def wire_bytes(n: int, cfg: QuantConfig) -> int:
+    """codes at `bits` each + one fp32 scale per chunk + small header."""
+    nchunks = -(-n // cfg.per_chunk)
+    return (n * cfg.bits + 7) // 8 + 4 * nchunks + 8
+
+
+def quantization_error(x: np.ndarray, cfg: QuantConfig, seed: int = 0) -> float:
+    """Relative L2 error — the contraction-quality analogue of top-k's
+    (1 - delta); lets tests compare compressor quality at matched bytes."""
+    rng = np.random.default_rng(seed)
+    codes, scales = quantize(x, cfg, rng)
+    xq = dequantize(codes, scales, cfg)
+    denom = float(np.sum(x.astype(np.float64) ** 2)) or 1.0
+    return float(np.sum((x - xq) ** 2) / denom)

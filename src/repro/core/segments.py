@@ -1,0 +1,108 @@
+"""Round-robin segment sharing (paper §3.3).
+
+LoRA parameters across all layers are flattened into ONE deterministic vector
+(see repro.models.lora.flatten_lora) and partitioned into ``n_segments``
+equally sized contiguous segments ``P = [s_0 ... s_{Ns-1}]``. In round ``t``
+client ``i`` uploads only segment ``(i + t) mod Ns`` — upload drops to
+``1/Ns`` of the LoRA bytes. Segment boundaries depend only on (tree spec,
+n_segments), so every client and the server agree on them without metadata
+exchange.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.lora import flatten_lora, unflatten_lora
+
+Params = Dict[str, Any]
+
+
+def segment_id(client_id: int, round_t: int, n_segments: int) -> int:
+    """The paper's schedule: client i uploads segment (i + t) mod Ns."""
+    return (client_id + round_t) % n_segments
+
+
+def tree_spec(tree: Params) -> List[Tuple[str, tuple, Any]]:
+    """Deterministic (path, shape, dtype) listing — the protocol's shared
+    knowledge of the parameter layout."""
+    return [(path, tuple(np.shape(leaf)), np.asarray(leaf).dtype)
+            for path, leaf in flatten_lora(tree)]
+
+
+def tree_to_vector(tree: Params) -> np.ndarray:
+    """Flatten the LoRA tree to one float32 vector in protocol order."""
+    parts = [np.asarray(leaf, dtype=np.float32).reshape(-1)
+             for _, leaf in flatten_lora(tree)]
+    if not parts:
+        return np.zeros((0,), np.float32)
+    return np.concatenate(parts)
+
+
+def vector_to_tree(vec: np.ndarray, spec: Sequence[Tuple[str, tuple, Any]]) -> Params:
+    out = []
+    off = 0
+    for path, shape, dtype in spec:
+        n = int(np.prod(shape)) if shape else 1
+        out.append((path, vec[off:off + n].reshape(shape).astype(dtype)))
+        off += n
+    assert off == vec.size, f"vector size {vec.size} != spec size {off}"
+    return unflatten_lora(out)
+
+
+def segment_bounds(total: int, n_segments: int) -> List[Tuple[int, int]]:
+    """Equal partition [start, end) per segment; remainder goes to the last."""
+    base = total // n_segments
+    bounds = []
+    for s in range(n_segments):
+        start = s * base
+        end = (s + 1) * base if s < n_segments - 1 else total
+        bounds.append((start, end))
+    return bounds
+
+
+def extract_segment(vec: np.ndarray, seg: int, n_segments: int) -> np.ndarray:
+    start, end = segment_bounds(vec.size, n_segments)[seg]
+    return vec[start:end]
+
+
+@dataclass
+class SegmentUpdate:
+    """One client's per-round upload (pre-compression)."""
+    client_id: int
+    round_t: int
+    seg_id: int
+    values: np.ndarray  # the segment slice (dense, float32)
+    num_samples: int
+    local_loss: float
+
+
+def aggregate_segments(updates: Sequence[SegmentUpdate], global_vec: np.ndarray,
+                       n_segments: int) -> np.ndarray:
+    """Server-side Eq. 2: same-ID segments are combined by sample-weighted
+    average; segments nobody uploaded this round keep their previous global
+    value (the staleness Eq. 3 handles the client-side consequences)."""
+    new_vec = np.array(global_vec, copy=True)
+    bounds = segment_bounds(global_vec.size, n_segments)
+    by_seg: Dict[int, List[SegmentUpdate]] = {}
+    for u in updates:
+        by_seg.setdefault(u.seg_id, []).append(u)
+    for seg, ups in by_seg.items():
+        start, end = bounds[seg]
+        wsum = float(sum(u.num_samples for u in ups))
+        acc = np.zeros(end - start, np.float64)
+        for u in ups:
+            assert u.values.size == end - start, \
+                f"segment {seg} size mismatch: {u.values.size} != {end - start}"
+            acc += (u.num_samples / wsum) * u.values.astype(np.float64)
+        new_vec[start:end] = acc.astype(np.float32)
+    return new_vec
+
+
+def segments_covered(client_ids: Sequence[int], round_t: int,
+                     n_segments: int) -> bool:
+    """Whether every segment is uploaded by >=1 client this round (the paper
+    requires Ns <= Nt so this holds whenever >=Ns clients participate)."""
+    return len({segment_id(c, round_t, n_segments) for c in client_ids}) == n_segments

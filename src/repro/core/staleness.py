@@ -1,0 +1,27 @@
+"""Staleness-aware model mixing (paper Eq. 3, after Chen et al. 2019).
+
+At the start of a round, client i mixes the downloaded global model with its
+own (possibly stale) local model:
+
+    P_hat_i^t = (1 - e^{-beta (t - tau)}) P^t + e^{-beta (t - tau)} P_i^tau
+
+where tau is the last round client i participated. Fresh clients
+(t - tau small) trust their local state more; long-idle clients defer to the
+global consensus — exactly countering the delay the round-robin segment
+schedule introduces.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def mix_weight(beta: float, round_t: int, last_round: int) -> float:
+    """e^{-beta (t - tau)} — the LOCAL model's weight."""
+    dt = max(int(round_t) - int(last_round), 0)
+    return float(np.exp(-beta * dt))
+
+
+def mix_models(global_vec: np.ndarray, local_vec: np.ndarray, beta: float,
+               round_t: int, last_round: int) -> np.ndarray:
+    w_local = mix_weight(beta, round_t, last_round)
+    return ((1.0 - w_local) * global_vec + w_local * local_vec).astype(np.float32)

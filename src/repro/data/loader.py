@@ -1,0 +1,55 @@
+"""Batching for tokenised text datasets (the real-text complement to the
+synthetic tasks): padding, loss masks over completions, epoch shuffling."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import PAD, ByteTokenizer
+
+
+@dataclass
+class TextDataset:
+    """Instruction/response pairs tokenised once up front."""
+    tokenizer: ByteTokenizer
+    seq_len: int
+    examples: List[Tuple[np.ndarray, int]]  # (ids, prompt_len)
+    categories: np.ndarray                  # non-IID handle
+
+    @classmethod
+    def from_pairs(cls, tokenizer: ByteTokenizer,
+                   pairs: Sequence[Tuple[str, str]], seq_len: int,
+                   categories=None) -> "TextDataset":
+        ex = []
+        for ins, resp in pairs:
+            ids, plen = tokenizer.encode_instruction(ins, resp, seq_len + 1)
+            ex.append((np.array(ids, np.int32), plen))
+        cats = (np.asarray(categories, np.int64) if categories is not None
+                else np.zeros(len(ex), np.int64))
+        return cls(tokenizer, seq_len, ex, cats)
+
+    def __len__(self) -> int:
+        return len(self.examples)
+
+    def batch(self, idxs: np.ndarray) -> Dict[str, np.ndarray]:
+        """Padded (tokens, labels, loss_mask) with loss only on completions."""
+        n = len(idxs)
+        toks = np.full((n, self.seq_len + 1), PAD, np.int32)
+        mask = np.zeros((n, self.seq_len), np.float32)
+        for r, i in enumerate(np.asarray(idxs)):
+            ids, plen = self.examples[int(i)]
+            L = min(ids.size, self.seq_len + 1)
+            toks[r, :L] = ids[:L]
+            # supervise positions predicting completion tokens
+            mask[r, max(plen - 1, 0):max(L - 1, 0)] = 1.0
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+                "loss_mask": mask}
+
+
+def epoch_batches(ds: TextDataset, batch: int, rng: np.random.Generator
+                  ) -> Iterator[Dict[str, np.ndarray]]:
+    order = rng.permutation(len(ds))
+    for i in range(0, len(order) - batch + 1, batch):
+        yield ds.batch(order[i:i + batch])

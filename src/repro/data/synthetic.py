@@ -1,0 +1,157 @@
+"""Synthetic datasets standing in for Dolly / Alpaca-GPT4 / UltraFeedback.
+
+No datasets or pretrained weights ship offline, so the paper's setup is
+recreated structurally (DESIGN.md §2):
+
+  * a BASE distribution (shared bigram chain with ~4 plausible successors per
+    token) on which the base model is PRETRAINED full-parameter — the
+    "pretrained LLM" of the paper;
+  * per-CATEGORY deviations: each category rewires the successor sets of a
+    fraction of tokens — the downstream task clients fine-tune on with LoRA.
+    Categories double as the non-IID Dirichlet handle (Dolly's category
+    labels, Appendix A).
+
+Metric: held-out next-token accuracy on category data (ARC stand-in). A
+base-pretrained model scores well on unchanged tokens but must learn the
+rewired ones through LoRA — mirroring fine-tuning dynamics.
+
+  * PreferenceTask ("VA"): (prompt, chosen, rejected) triples; chosen follows
+    the category chain, rejected is noise-corrupted (UltraFeedback stand-in,
+    Table 2 / federated DPO).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TaskConfig:
+    vocab_size: int = 256
+    seq_len: int = 64
+    n_categories: int = 8
+    n_samples: int = 2048
+    seed: int = 0
+    branch: int = 4          # successors per token
+    peak: float = 0.7        # probability of the top successor
+    rewire_frac: float = 0.5  # fraction of tokens each category rewires
+
+
+def _block_chain(rng: np.random.Generator, v: int, n_blocks: int, branch: int,
+                 peak: float) -> Tuple[np.ndarray, np.ndarray]:
+    """Block-diagonal chain: each token's successors stay inside its block,
+    so a block is a self-contained 'task domain' (category)."""
+    bs = v // n_blocks
+    succ = np.zeros((v, branch), np.int64)
+    for t in range(v):
+        blk = min(t // bs, n_blocks - 1)
+        lo, hi = blk * bs, v if blk == n_blocks - 1 else (blk + 1) * bs
+        succ[t] = rng.permutation(np.arange(lo, hi))[:branch]
+    rest = (1.0 - peak)
+    probs = np.array([peak] + [rest * 0.5 ** i for i in range(branch - 1)])
+    probs[-1] += 1.0 - probs.sum()
+    return succ, probs
+
+
+class InstructionTask:
+    """Block-category Markov-chain LM task.
+
+    * base chain: block-diagonal successors (pretraining distribution);
+    * fine-tune chain: SAME blocks, but ``rewire_frac`` of each block's
+      tokens get new successors — one consistent global target, so federated
+      averaging has a well-defined optimum;
+    * category c data = sequences inside block c under the fine-tune chain —
+      non-IID clients update different token rows.
+    """
+
+    def __init__(self, cfg: TaskConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v, c = cfg.vocab_size, cfg.n_categories
+        self.base_succ, self.probs = _block_chain(rng, v, c, cfg.branch, cfg.peak)
+        self.ft_succ = self.base_succ.copy()
+        bs = v // c
+        self.rewired = np.zeros(v, bool)
+        for blk in range(c):
+            lo = blk * bs
+            hi = v if blk == c - 1 else lo + bs
+            toks = rng.choice(np.arange(lo, hi),
+                              size=int(cfg.rewire_frac * (hi - lo)), replace=False)
+            self.rewired[toks] = True
+            for t in toks:
+                self.ft_succ[t] = rng.permutation(np.arange(lo, hi))[:cfg.branch]
+        self.categories = rng.integers(0, c, size=cfg.n_samples)
+        self._rng = rng
+        self.samples = self._rollout(self.ft_succ, self.categories, rng)
+
+    def _rollout(self, succ: np.ndarray, cats: np.ndarray,
+                 rng: np.random.Generator) -> np.ndarray:
+        """Vectorised rollout starting inside each sample's category block."""
+        n, s = cats.size, self.cfg.seq_len
+        v, c = self.cfg.vocab_size, self.cfg.n_categories
+        bs = v // c
+        out = np.zeros((n, s + 1), np.int32)
+        width = np.where(cats == c - 1, v - (c - 1) * bs, bs)
+        out[:, 0] = cats * bs + rng.integers(0, 1 << 30, size=n) % width
+        cum = np.cumsum(self.probs)
+        for t in range(1, s + 1):
+            slot = np.searchsorted(cum, rng.random(n))
+            out[:, t] = succ[out[:, t - 1], slot]
+        return out
+
+    def base_batch(self, n: int, rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        """Pretraining data: base chain, categories mixed uniformly."""
+        cats = rng.integers(0, self.cfg.n_categories, size=n)
+        out = self._rollout(self.base_succ, cats, rng)
+        return {"tokens": out[:, :-1], "labels": out[:, 1:]}
+
+    def batch(self, idxs: np.ndarray) -> Dict[str, np.ndarray]:
+        arr = self.samples[np.asarray(idxs)]
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    def eval_set(self, n: int = 256, seed: int = 999) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(seed)
+        cats = rng.integers(0, self.cfg.n_categories, size=n)
+        arr = self._rollout(self.ft_succ, cats, rng)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    @property
+    def optimal_accuracy(self) -> float:
+        """Top-1 accuracy of the true chain (upper bound for the metric)."""
+        return float(self.cfg.peak)
+
+
+class PreferenceTask:
+    """(prompt, chosen, rejected) triples for federated DPO."""
+
+    def __init__(self, cfg: TaskConfig, corrupt: float = 0.5):
+        self.cfg = cfg
+        self.inner = InstructionTask(cfg)
+        self.corrupt = corrupt
+        rng = np.random.default_rng(cfg.seed + 1)
+        full = self.inner.samples
+        half = cfg.seq_len // 2
+        self.prompt = full[:, :half]
+        self.chosen = full[:, half:]
+        rej = self.chosen.copy()
+        flip = rng.random(rej.shape) < corrupt
+        rej[flip] = rng.integers(0, cfg.vocab_size, size=int(flip.sum()))
+        self.rejected = rej
+        self.categories = self.inner.categories
+        self.samples = full  # len() support
+
+    def base_batch(self, n, rng):
+        return self.inner.base_batch(n, rng)
+
+    def batch(self, idxs: np.ndarray) -> Dict[str, np.ndarray]:
+        idxs = np.asarray(idxs)
+        p, c, r = self.prompt[idxs], self.chosen[idxs], self.rejected[idxs]
+        return {
+            "chosen_tokens": np.concatenate([p, c], 1)[:, :-1],
+            "chosen_labels": np.concatenate([p, c], 1)[:, 1:],
+            "rejected_tokens": np.concatenate([p, r], 1)[:, :-1],
+            "rejected_labels": np.concatenate([p, r], 1)[:, 1:],
+            "prompt_len": np.full(idxs.size, p.shape[1] - 1, np.int32),
+        }

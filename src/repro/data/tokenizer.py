@@ -1,0 +1,104 @@
+"""Byte-level tokenizer with a trainable merge vocabulary (BPE-lite).
+
+The fedsim's synthetic tasks generate token ids directly; this tokenizer is
+the real-text path (examples, user datasets): deterministic byte fallback,
+optional learned merges, special tokens for instruction formatting — enough
+to fine-tune on local text without external tokenizer assets.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+N_SPECIAL = 4
+
+
+@dataclass
+class ByteTokenizer:
+    """Tokens: [0..3] specials, [4..259] bytes, [260..] learned merges."""
+    merges: List[Tuple[int, int]] = field(default_factory=list)
+    _ranks: Dict[Tuple[int, int], int] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._ranks = {m: i for i, m in enumerate(self.merges)}
+
+    @property
+    def vocab_size(self) -> int:
+        return N_SPECIAL + 256 + len(self.merges)
+
+    # -- training ----------------------------------------------------------
+    def train(self, corpus: Iterable[str], num_merges: int = 256) -> "ByteTokenizer":
+        seqs = [self._bytes(t) for t in corpus]
+        for _ in range(num_merges):
+            counts: Counter = Counter()
+            for s in seqs:
+                counts.update(zip(s, s[1:]))
+            if not counts:
+                break
+            pair, n = counts.most_common(1)[0]
+            if n < 2:
+                break
+            new_id = self.vocab_size
+            self.merges.append(pair)
+            self._ranks[pair] = len(self.merges) - 1
+            seqs = [self._apply_merge(s, pair, new_id) for s in seqs]
+        return self
+
+    @staticmethod
+    def _apply_merge(seq: List[int], pair: Tuple[int, int], new_id: int) -> List[int]:
+        out: List[int] = []
+        i = 0
+        while i < len(seq):
+            if i + 1 < len(seq) and (seq[i], seq[i + 1]) == pair:
+                out.append(new_id)
+                i += 2
+            else:
+                out.append(seq[i])
+                i += 1
+        return out
+
+    # -- encode / decode -----------------------------------------------------
+    @staticmethod
+    def _bytes(text: str) -> List[int]:
+        return [b + N_SPECIAL for b in text.encode("utf-8")]
+
+    def encode(self, text: str, bos: bool = True, eos: bool = False) -> List[int]:
+        seq = self._bytes(text)
+        # greedy lowest-rank merging (BPE order)
+        while len(seq) > 1:
+            best, best_rank = None, None
+            for p in zip(seq, seq[1:]):
+                r = self._ranks.get(p)
+                if r is not None and (best_rank is None or r < best_rank):
+                    best, best_rank = p, r
+            if best is None:
+                break
+            seq = self._apply_merge(seq, best, N_SPECIAL + 256 + best_rank)
+        if bos:
+            seq = [BOS] + seq
+        if eos:
+            seq = seq + [EOS]
+        return seq
+
+    def decode(self, ids: Sequence[int]) -> str:
+        def expand(i: int) -> List[int]:
+            if i < N_SPECIAL:
+                return []
+            if i < N_SPECIAL + 256:
+                return [i - N_SPECIAL]
+            a, b = self.merges[i - N_SPECIAL - 256]
+            return expand(a) + expand(b)
+        out: List[int] = []
+        for i in ids:
+            out.extend(expand(int(i)))
+        return bytes(out).decode("utf-8", errors="replace")
+
+    def encode_instruction(self, instruction: str, response: str,
+                           max_len: int) -> Tuple[List[int], int]:
+        """[BOS] instr [SEP] response [EOS] -> (ids, prompt_len)."""
+        ids = ([BOS] + self.encode(instruction, bos=False) + [SEP])
+        prompt_len = len(ids)
+        ids = ids + self.encode(response, bos=False) + [EOS]
+        return ids[:max_len], min(prompt_len, max_len)

@@ -1,0 +1,88 @@
+"""Client-side local training (jit-compiled once per config, reused by every
+simulated client — they share shapes, so fedsim pays one compile)."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.lora import freeze_a_mask
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+def make_local_trainer(cfg: ModelConfig, params: Params, opt_cfg: adamw.AdamWConfig,
+                       task: str = "lm", freeze_a: bool = False,
+                       dpo_beta: float = 0.1) -> Callable:
+    """Returns jitted fn(lora, opt_state, batches) -> (lora', opt_state', mean_loss).
+
+    ``batches`` leaves have a leading local-steps axis; training scans over it.
+    """
+    if task == "dpo":
+        from repro.fed.dpo import dpo_loss
+        loss_fn = functools.partial(dpo_loss, params=params, cfg=cfg, beta=dpo_beta)
+    else:
+        def loss_fn(lora, batch):
+            return M.loss_fn(lora, params, batch, cfg, remat=False)
+
+    mask = None
+
+    def step(carry, batch):
+        lora, opt_state = carry
+        loss, grads = jax.value_and_grad(loss_fn)(lora, batch)
+        m = freeze_a_mask(lora) if freeze_a else None
+        lora, opt_state = adamw.apply_updates(lora, grads, opt_state, opt_cfg, mask=m)
+        return (lora, opt_state), loss
+
+    @jax.jit
+    def local_train(lora, opt_state, batches):
+        (lora, opt_state), losses = jax.lax.scan(step, (lora, opt_state), batches)
+        return lora, opt_state, jnp.mean(losses)
+
+    return local_train
+
+
+def make_evaluator(cfg: ModelConfig, params: Params, task: str = "lm") -> Callable:
+    """Jitted eval: returns (loss, top1-accuracy) on a fixed eval batch."""
+    @jax.jit
+    def evaluate(lora, batch):
+        h, _, _ = M.trunk(params, lora, batch["tokens"], cfg,
+                          cond=batch.get("cond"), remat=False)
+        loss = M.chunked_ce_loss(h, batch["labels"], params, cfg)
+        w = M.unembed_matrix(params, cfg).astype(cfg.cdtype)
+        logits = jnp.einsum("bsd,dv->bsv", h, w)
+        acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+        return loss, acc
+
+    return evaluate
+
+
+def stack_batches(task, idxs: np.ndarray, steps: int, batch: int,
+                  rng: np.random.Generator) -> Dict[str, np.ndarray]:
+    """Sample ``steps`` local batches (with replacement if data is scarce)."""
+    need = steps * batch
+    pool = rng.choice(idxs, size=need, replace=idxs.size < need or None)
+    b = task.batch(pool)
+    return {k: v.reshape((steps, batch) + v.shape[1:]) for k, v in b.items()}
+
+
+class TimedCall:
+    """Measures walltime of the jitted local step (feeds the netsim)."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.last_s = 0.0
+
+    def __call__(self, *a, **kw):
+        t0 = time.perf_counter()
+        out = self.fn(*a, **kw)
+        jax.block_until_ready(out)
+        self.last_s = time.perf_counter() - t0
+        return out

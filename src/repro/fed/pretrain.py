@@ -1,0 +1,42 @@
+"""Base-model pretraining on the shared chain (the fedsim's stand-in for
+"start from a pretrained LLM"). Full-parameter AdamW, centralised, brief.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+def pretrain_base(cfg: ModelConfig, params: Params, task, *, steps: int = 150,
+                  batch: int = 32, lr: float = 3e-3, seed: int = 0
+                  ) -> Tuple[Params, float]:
+    """Returns (pretrained params, final loss). Trains ALL params (no LoRA)."""
+    lora0 = M.init_lora(cfg, jax.random.PRNGKey(seed))
+    zero_lora = jax.tree_util.tree_map(jnp.zeros_like, lora0)
+    opt_cfg = adamw.AdamWConfig(lr=lr)
+    opt = adamw.init_state(params)
+
+    def loss_of_params(p, b):
+        return M.loss_fn(zero_lora, p, b, cfg, remat=False)
+
+    @jax.jit
+    def step(p, opt, b):
+        loss, g = jax.value_and_grad(loss_of_params)(p, b)
+        p, opt = adamw.apply_updates(p, g, opt, opt_cfg)
+        return p, opt, loss
+
+    rng = np.random.default_rng(seed)
+    loss = jnp.float32(0.0)
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in task.base_batch(batch, rng).items()}
+        params, opt, loss = step(params, opt, b)
+    return params, float(loss)

@@ -1,0 +1,59 @@
+"""Client sampling policies (§4.1: 10 of 100 uniformly; plus availability /
+weighted variants for the cross-device setting the paper motivates —
+low-bandwidth clients exist, EcoLoRA is what lets them participate)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class UniformSampler:
+    n_clients: int
+    per_round: int
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False, default=None)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def sample(self, round_t: int) -> np.ndarray:
+        return self._rng.choice(self.n_clients, size=self.per_round,
+                                replace=False)
+
+
+@dataclass
+class WeightedSampler(UniformSampler):
+    """Sample proportional to local dataset size (FedAvg's implicit ideal)."""
+    weights: Optional[Sequence[float]] = None
+
+    def sample(self, round_t: int) -> np.ndarray:
+        w = np.asarray(self.weights, float)
+        p = w / w.sum()
+        return self._rng.choice(self.n_clients, size=self.per_round,
+                                replace=False, p=p)
+
+
+@dataclass
+class AvailabilitySampler(UniformSampler):
+    """Cross-device realism: each client is online with probability
+    ``availability[i]``; rounds sample only from the online set (and may be
+    short — the paper's Ns <= Nt coverage requirement is checked upstream)."""
+    availability: Optional[Sequence[float]] = None
+
+    def sample(self, round_t: int) -> np.ndarray:
+        avail = np.asarray(self.availability, float)
+        online = np.flatnonzero(self._rng.random(self.n_clients) < avail)
+        if online.size == 0:
+            online = np.arange(self.n_clients)
+        take = min(self.per_round, online.size)
+        return self._rng.choice(online, size=take, replace=False)
+
+
+def make_sampler(kind: str, n_clients: int, per_round: int, seed: int = 0,
+                 **kw):
+    cls = {"uniform": UniformSampler, "weighted": WeightedSampler,
+           "availability": AvailabilitySampler}[kind]
+    return cls(n_clients, per_round, seed, **kw)

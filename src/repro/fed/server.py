@@ -1,0 +1,81 @@
+"""Server facade: the deployable API surface over a strategy.
+
+FederatedTrainer drives simulation; a real deployment instead instantiates
+``Server`` and speaks the message protocol below over its transport of
+choice (the wire payloads are exactly `core.compression.Packet`s).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.compression import Packet
+from repro.core.segments import SegmentUpdate
+from repro.fed.strategies import BaseStrategy
+
+
+@dataclass
+class BroadcastMsg:
+    round_t: int
+    packet: Packet            # compressed global delta
+    segment_schedule: int     # Ns (clients derive their segment id)
+
+
+@dataclass
+class UploadMsg:
+    client_id: int
+    round_t: int
+    packet: Packet            # compressed segment update
+    num_samples: int
+    local_loss: float
+
+
+class Server:
+    def __init__(self, strategy: BaseStrategy):
+        self.strategy = strategy
+        self.round_t = 0
+        self._pending: List[SegmentUpdate] = []
+
+    # -- round lifecycle -----------------------------------------------------
+    def begin_round(self) -> BroadcastMsg:
+        pkt, _applied = self.strategy.broadcast(self.round_t)
+        ns = (self.strategy.eco.n_segments
+              if self.strategy.eco and self.strategy.eco.round_robin else 1)
+        return BroadcastMsg(self.round_t, pkt, ns)
+
+    def receive(self, msg: UploadMsg) -> None:
+        from repro.core.compression import Compressor
+        values = Compressor.decompress(msg.packet)
+        self._pending.append(SegmentUpdate(
+            msg.client_id, msg.round_t, self._seg_of(msg), values,
+            msg.num_samples, msg.local_loss))
+        self.strategy.ledger.log_upload(msg.packet)
+
+    def _ns(self) -> int:
+        return (self.strategy.eco.n_segments
+                if self.strategy.eco and self.strategy.eco.round_robin else 1)
+
+    def _seg_of(self, msg: UploadMsg) -> int:
+        from repro.core.segments import segment_id
+        return segment_id(msg.client_id, msg.round_t, self._ns())
+
+    def end_round(self, global_loss: Optional[float] = None) -> Dict:
+        self.strategy.aggregate(self.round_t, self._pending)
+        if global_loss is not None:
+            self.strategy.observe_global_loss(global_loss)
+        self.strategy.ledger.snapshot_round(self.round_t)
+        stats = {
+            "round": self.round_t,
+            "n_updates": len(self._pending),
+            "upload_bytes": self.strategy.ledger.upload_bytes,
+            "download_bytes": self.strategy.ledger.download_bytes,
+        }
+        self._pending = []
+        self.round_t += 1
+        return stats
+
+    @property
+    def global_vector(self) -> np.ndarray:
+        return self.strategy.global_vec

@@ -1,0 +1,169 @@
+"""Aggregation strategies: FedIT, FFA-LoRA, FLoRA — each usable plain or
+wrapped with EcoLoRA (round-robin segments + adaptive sparsify + Golomb).
+
+All strategies operate on the protocol-ordered LoRA vector (see
+repro.core.segments). Uploads/downloads transmit *updates* (deltas) with
+error feedback — consistent with §3.4's reading of LoRA params as updates
+and with the Sattler et al. (2019) STC lineage the paper builds on; see
+DESIGN.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.compression import CommLedger, Compressor, Packet
+from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,
+                                 segment_bounds, segment_id)
+from repro.core.sparsify import SparsifyConfig
+from repro.core.staleness import mix_models
+
+
+@dataclass
+class EcoLoRAConfig:
+    enabled: bool = True
+    n_segments: int = 5
+    beta: float = 0.5
+    sparsify: SparsifyConfig = field(default_factory=SparsifyConfig)
+    encoding: bool = True
+    round_robin: bool = True        # ablation: w/o R.R. Segment
+    compress_download: bool = True
+
+
+class BaseStrategy:
+    """FedIT (Zhang et al. 2024): FedAvg over the full LoRA vector."""
+
+    name = "fedit"
+    freeze_a = False
+
+    def __init__(self, spec, vec_size: int, n_clients: int,
+                 eco: Optional[EcoLoRAConfig] = None):
+        self.spec = spec
+        self.size = vec_size
+        self.n_clients = n_clients
+        self.eco = eco if (eco and eco.enabled) else None
+        self.global_vec = np.zeros(vec_size, np.float32)
+        self.ledger = CommLedger()
+        # per-client local state: (vector copy, last participation round)
+        self.client_vec = [None] * n_clients
+        self.client_tau = [0] * n_clients
+        sp = (eco.sparsify if self.eco else SparsifyConfig(enabled=False))
+        enc = eco.encoding if self.eco else True
+        self.up_comp = [Compressor(spec, sp, encoding=enc) for _ in range(n_clients)]
+        self.down_comp = Compressor(spec, sp, encoding=enc)
+        self.last_broadcast = np.zeros(vec_size, np.float32)
+
+    # -- download ----------------------------------------------------------
+    def broadcast(self, round_t: int) -> Tuple[Packet, np.ndarray]:
+        """Server -> clients: compressed delta of global vs last broadcast."""
+        delta = self.global_vec - self.last_broadcast
+        if self.eco and self.eco.compress_download:
+            pkt = self.down_comp.compress(delta, round_t)
+            applied = Compressor.decompress(pkt)
+        else:
+            pkt = self.down_comp.compress(delta, round_t)  # enabled=False -> dense
+            applied = delta
+        self.last_broadcast = self.last_broadcast + applied
+        return pkt, applied
+
+    def client_start(self, cid: int, round_t: int, global_view: np.ndarray
+                     ) -> np.ndarray:
+        """Eq. 3 mixing of downloaded global with the client's stale local."""
+        if self.client_vec[cid] is None or self.eco is None:
+            start = np.array(global_view, copy=True)
+        else:
+            start = mix_models(global_view, self.client_vec[cid],
+                               self.eco.beta, round_t, self.client_tau[cid])
+        return start
+
+    # -- upload ------------------------------------------------------------
+    def client_upload(self, cid: int, round_t: int, trained_vec: np.ndarray,
+                      start_vec: np.ndarray, n_samples: int, loss: float
+                      ) -> Tuple[Packet, SegmentUpdate]:
+        self.client_vec[cid] = np.array(trained_vec, copy=True)
+        self.client_tau[cid] = round_t
+        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
+        seg = segment_id(cid, round_t, ns)
+        bounds = segment_bounds(self.size, ns)[seg]
+        update = (trained_vec - start_vec)[bounds[0]:bounds[1]]
+        comp = self.up_comp[cid]
+        comp.observe_loss(loss)
+        pkt = comp.compress(update, round_t, slice_=bounds)
+        recv = Compressor.decompress(pkt)
+        return pkt, SegmentUpdate(cid, round_t, seg, recv, n_samples, loss)
+
+    # -- aggregate ----------------------------------------------------------
+    def aggregate(self, round_t: int, updates: List[SegmentUpdate]) -> None:
+        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
+        delta = aggregate_segments(updates, np.zeros(self.size, np.float32), ns)
+        self.global_vec = self.global_vec + delta
+
+    def observe_global_loss(self, loss: float) -> None:
+        self.down_comp.observe_loss(loss)
+        for c in self.up_comp:
+            c.observe_loss(loss)
+
+
+class FFALoRAStrategy(BaseStrategy):
+    """FFA-LoRA (Sun et al. 2024): A frozen at shared random init; only B
+    trained/aggregated — the protocol vector is the B-subvector."""
+
+    name = "ffa_lora"
+    freeze_a = True
+
+
+class FLoRAStrategy(BaseStrategy):
+    """FLoRA (Wang et al. 2024): stacking aggregation. Server keeps each
+    participant's full LoRA (round-robin segments update the per-client copy
+    it holds), stacks [B_1..B_K][A_1;..;A_K] — the global delta is the exact
+    SUM of weighted products — merges it into the base weights, and clients
+    re-initialise fresh LoRA every round. The download per round is the
+    stacked modules, K_t x LoRA-size: Table 1's huge 'Total Param.' column.
+
+    The trainer performs the merge/reinit (it owns the base params); this
+    class tracks per-client vectors and the stacking wire multiplier.
+    """
+
+    name = "flora"
+    freeze_a = False
+    merges_into_base = True
+
+    def __init__(self, spec, vec_size, n_clients, eco=None):
+        super().__init__(spec, vec_size, n_clients, eco)
+        self.server_client_vecs: Dict[int, np.ndarray] = {}
+        self.round_participants: List[Tuple[int, int]] = []  # (cid, n_samples)
+
+    def aggregate(self, round_t: int, updates: List[SegmentUpdate]) -> None:
+        # round-robin segments update the SERVER'S copy of each client's LoRA
+        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
+        bounds = segment_bounds(self.size, ns)
+        self.round_participants = []
+        for u in updates:
+            vec = self.server_client_vecs.setdefault(
+                u.client_id, np.zeros(self.size, np.float32))
+            s, e = bounds[u.seg_id]
+            vec[s:e] += u.values  # delta-transmission: accumulate
+            self.round_participants.append((u.client_id, u.num_samples))
+        # the broadcastable "global" = weighted average (clients use it for
+        # Eq. 3 mixing); the exact stacked product is merged by the trainer.
+        if self.round_participants:
+            w = np.array([n for _, n in self.round_participants], np.float64)
+            w /= w.sum()
+            self.global_vec = np.sum(
+                [wi * self.server_client_vecs[cid]
+                 for (cid, _), wi in zip(self.round_participants, w)], axis=0
+            ).astype(np.float32)
+
+    def client_start(self, cid: int, round_t: int, global_view: np.ndarray
+                     ) -> np.ndarray:
+        # re-init semantics: no Eq. 3 mixing with pre-merge stale LoRA
+        return np.array(global_view, copy=True)
+
+
+def make_strategy(method: str, spec, vec_size: int, n_clients: int,
+                  eco: Optional[EcoLoRAConfig]) -> BaseStrategy:
+    cls = {"fedit": BaseStrategy, "ffa_lora": FFALoRAStrategy,
+           "flora": FLoRAStrategy, "dpo": BaseStrategy}[method]
+    return cls(spec, vec_size, n_clients, eco)

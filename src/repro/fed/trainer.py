@@ -1,0 +1,298 @@
+"""Federated fine-tuning driver (the paper's experimental loop, §4.1).
+
+100 clients, 10 sampled/round, 40 rounds, Dirichlet(0.5) non-IID — at
+reduced model scale. Drives any strategy (FedIT / FFA-LoRA / FLoRA / DPO),
+optionally wrapped with EcoLoRA, logs exact communication traffic, and feeds
+a NetworkSimulator for Figure-3-style timing.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.segments import tree_spec, tree_to_vector, vector_to_tree
+from repro.data.partition import dirichlet_partition, task_partition
+from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
+from repro.fed.client import (TimedCall, make_evaluator, make_local_trainer,
+                              stack_batches)
+from repro.fed.strategies import BaseStrategy, EcoLoRAConfig, make_strategy
+from repro.models import model as M
+from repro.models.lora import flatten_lora, unflatten_lora
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class FedConfig:
+    method: str = "fedit"              # fedit | ffa_lora | flora | dpo
+    n_clients: int = 100
+    clients_per_round: int = 10
+    rounds: int = 40
+    local_steps: int = 4
+    local_batch: int = 8
+    lr: float = 3e-4
+    seed: int = 0
+    partition: str = "dirichlet"       # dirichlet | task
+    dirichlet_alpha: float = 0.5
+    eco: Optional[EcoLoRAConfig] = None
+    dpo_beta: float = 0.1
+    eval_every: int = 1
+    compute_model_s: Optional[float] = None  # netsim compute time override
+    pretrain_steps: int = 120                # "pretrained LLM" stand-in
+    pretrain_lr: float = 3e-3
+
+
+@dataclass
+class RoundLog:
+    round_t: int
+    global_loss: float
+    metric: float                     # top-1 acc (lm) or pref-acc (dpo)
+    upload_bytes: int
+    download_bytes: int
+    upload_params: int
+    download_params: int
+    compute_s: float
+    overhead_s: float
+
+
+def _split_ab_spec(spec, b_only: bool):
+    if not b_only:
+        return spec
+    return [s for s in spec if s[0].endswith("/b")]
+
+
+def _tree_to_protovec(tree: Params, b_only: bool) -> np.ndarray:
+    pairs = flatten_lora(tree)
+    if b_only:
+        pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
+    return np.concatenate([np.asarray(l, np.float32).reshape(-1) for p, l in pairs]) \
+        if pairs else np.zeros(0, np.float32)
+
+
+def _protovec_to_tree(vec: np.ndarray, template: Params, b_only: bool) -> Params:
+    """Write the protocol vector back into a copy of ``template``."""
+    pairs = flatten_lora(template)
+    out = []
+    off = 0
+    for path, leaf in pairs:
+        if b_only and not path.endswith("/b"):
+            out.append((path, leaf))
+            continue
+        n = int(np.prod(np.shape(leaf)))
+        out.append((path, jnp.asarray(vec[off:off + n].reshape(np.shape(leaf)),
+                                      dtype=leaf.dtype)))
+        off += n
+    assert off == vec.size
+    return unflatten_lora(out)
+
+
+def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
+                           weight: float) -> Params:
+    """FLoRA merge: base_W += weight * scale * (a @ b) for every LoRA pair."""
+    scale = cfg.lora_alpha / cfg.lora_rank
+
+    def walk(p_node, l_node):
+        if isinstance(l_node, dict) and "a" in l_node and "b" in l_node \
+                and not isinstance(l_node["a"], dict):
+            return None  # handled by parent
+        return None
+
+    # align trees: lora mirrors params structure at group/attn/target level
+    def apply(p_node, l_node):
+        out = dict(p_node)
+        for k, lv in l_node.items():
+            if isinstance(lv, dict) and "a" in lv and not isinstance(lv["a"], dict):
+                a, b = lv["a"], lv["b"]
+                if a.ndim == 3:  # stacked layers
+                    delta = jnp.einsum("lir,lro->lio", a.astype(jnp.float32),
+                                       b.astype(jnp.float32))
+                else:
+                    delta = jnp.einsum("ir,ro->io", a.astype(jnp.float32),
+                                       b.astype(jnp.float32))
+                out[k] = (p_node[k].astype(jnp.float32)
+                          + weight * scale * delta).astype(p_node[k].dtype)
+            elif isinstance(lv, dict):
+                out[k] = apply(p_node[k], lv)
+        return out
+
+    return apply(params, lora)
+
+
+class FederatedTrainer:
+    def __init__(self, cfg: ModelConfig, fed: FedConfig,
+                 task_cfg: Optional[TaskConfig] = None):
+        self.cfg = cfg
+        self.fed = fed
+        self.rng = np.random.default_rng(fed.seed)
+        key = jax.random.PRNGKey(fed.seed)
+        kp, kl = jax.random.split(key)
+        self.params = M.init_params(cfg, kp)
+        self.lora0 = M.init_lora(cfg, kl)
+
+        tcfg = task_cfg or TaskConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=min(cfg.max_seq_len, 64),
+                                      seed=fed.seed)
+        assert tcfg.vocab_size <= cfg.vocab_size
+        self.task = (PreferenceTask(tcfg) if fed.method == "dpo"
+                     else InstructionTask(tcfg))
+        if fed.pretrain_steps:
+            from repro.fed.pretrain import pretrain_base
+            self.params, self.pretrain_loss = pretrain_base(
+                cfg, self.params, self.task, steps=fed.pretrain_steps,
+                lr=fed.pretrain_lr, seed=fed.seed)
+        cats = self.task.categories
+        if fed.partition == "task":
+            self.parts = task_partition(cats, fed.n_clients, fed.seed)
+        else:
+            self.parts = dirichlet_partition(cats, fed.n_clients,
+                                             fed.dirichlet_alpha, fed.seed)
+
+        self.b_only = (fed.method == "ffa_lora")
+        self.spec = _split_ab_spec(tree_spec(self.lora0), self.b_only)
+        vec0 = _tree_to_protovec(self.lora0, self.b_only)
+        self.strategy = make_strategy(fed.method, self.spec, vec0.size,
+                                      fed.n_clients, fed.eco)
+        # global protocol vector starts at the (shared) init
+        self.strategy.global_vec = vec0.copy()
+        self.strategy.last_broadcast = vec0.copy()
+        self.client_views = np.tile(vec0, (fed.n_clients, 1))
+
+        opt_cfg = adamw.AdamWConfig(lr=fed.lr)
+        task_kind = "dpo" if fed.method == "dpo" else "lm"
+        self.local_train = TimedCall(make_local_trainer(
+            cfg, self.params, opt_cfg, task=task_kind,
+            freeze_a=self.strategy.freeze_a, dpo_beta=fed.dpo_beta))
+        self.evaluator = make_evaluator(cfg, self.params)
+        if fed.method == "dpo":
+            from repro.fed.dpo import preference_accuracy
+            import functools
+            self._pref_acc = jax.jit(functools.partial(
+                preference_accuracy, params=self.params, cfg=cfg, beta=fed.dpo_beta))
+            self.eval_batch = self.task.batch(
+                self.rng.choice(len(self.task.samples), size=64, replace=False))
+        else:
+            self.eval_batch = self.task.eval_set(n=128, seed=fed.seed + 999)
+        self.logs: List[RoundLog] = []
+        self._opt_template = adamw.init_state(self.lora0)
+
+    # ------------------------------------------------------------------
+    def _vec_to_lora(self, vec: np.ndarray) -> Params:
+        return _protovec_to_tree(vec, self.lora0, self.b_only)
+
+    def evaluate(self, vec: np.ndarray):
+        lora = self._vec_to_lora(vec)
+        if self.fed.method == "dpo":
+            from repro.fed.dpo import dpo_loss  # loss for Eq. 4 signal
+            batch = {k: jnp.asarray(v) for k, v in self.eval_batch.items()}
+            acc = float(self._pref_acc(lora, batch))
+            loss = 1.0 - acc  # monotone signal for the adaptive schedule
+            return loss, acc
+        batch = {k: jnp.asarray(v) for k, v in self.eval_batch.items()}
+        loss, acc = self.evaluator(lora, batch)
+        return float(loss), float(acc)
+
+    def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
+        fed = self.fed
+        strat = self.strategy
+        for t in range(rounds or fed.rounds):
+            sampled = self.rng.choice(fed.n_clients, size=fed.clients_per_round,
+                                      replace=False)
+            up0, down0 = strat.ledger.upload_bytes, strat.ledger.download_bytes
+            upp0, downp0 = strat.ledger.upload_params, strat.ledger.download_params
+
+            # ---- download: one broadcast, applied to each participant ----
+            t_over = time.perf_counter()
+            pkt, applied = strat.broadcast(t)
+            for cid in sampled:
+                strat.ledger.log_download(pkt)
+                self.client_views[cid] += applied
+
+            # ---- local training ----
+            updates = []
+            compute_s = []
+            for cid in sampled:
+                start_vec = strat.client_start(cid, t, self.client_views[cid])
+                lora = self._vec_to_lora(start_vec)
+                opt_state = self._opt_template
+                batches = stack_batches(self.task, self.parts[cid],
+                                        fed.local_steps, fed.local_batch, self.rng)
+                batches = {k: jnp.asarray(v) for k, v in batches.items()}
+                lora, opt_state, loss = self.local_train(lora, opt_state, batches)
+                compute_s.append(fed.compute_model_s or self.local_train.last_s)
+                trained_vec = _tree_to_protovec(jax.device_get(lora), self.b_only)
+                pkt_up, upd = strat.client_upload(cid, t, trained_vec, start_vec,
+                                                  self.parts[cid].size, float(loss))
+                strat.ledger.log_upload(pkt_up)
+                updates.append(upd)
+
+            # ---- aggregate + (FLoRA) merge into base ----
+            strat.aggregate(t, updates)
+            if getattr(strat, "merges_into_base", False):
+                w = np.array([u.num_samples for u in updates], np.float64)
+                w /= w.sum()
+                for u, wi in zip(updates, w):
+                    cvec = strat.server_client_vecs[u.client_id]
+                    self.params = merge_lora_into_params(
+                        self.params, self._vec_to_lora(cvec), self.cfg, float(wi))
+                    # the stacked module download (what Table 1's huge FLoRA
+                    # totals measure): every sampled client receives every
+                    # participant's module next round
+                    pkt_stack = strat.down_comp.compress(cvec, t)
+                    for _ in sampled:
+                        strat.ledger.log_download(pkt_stack)
+                # re-init: fresh LoRA each round (a random, b = 0 — an
+                # all-zero re-init would kill both LoRA gradients)
+                reinit = _tree_to_protovec(
+                    M.init_lora(self.cfg, jax.random.PRNGKey(fed.seed + 1000 + t)),
+                    self.b_only)
+                strat.global_vec = reinit.copy()
+                strat.last_broadcast = reinit.copy()
+                strat.server_client_vecs.clear()
+                self.client_views[:] = reinit[None, :]
+                self.local_train = TimedCall(make_local_trainer(
+                    self.cfg, self.params, adamw.AdamWConfig(lr=fed.lr),
+                    task="dpo" if fed.method == "dpo" else "lm",
+                    freeze_a=strat.freeze_a, dpo_beta=fed.dpo_beta))
+                self.evaluator = make_evaluator(self.cfg, self.params)
+            overhead_s = time.perf_counter() - t_over - sum(compute_s)
+
+            # ---- eval / adaptive-k loss signal ----
+            gloss, metric = self.evaluate(strat.global_vec)
+            strat.observe_global_loss(gloss)
+            strat.ledger.snapshot_round(t)
+            self.logs.append(RoundLog(
+                t, gloss, metric,
+                strat.ledger.upload_bytes - up0,
+                strat.ledger.download_bytes - down0,
+                strat.ledger.upload_params - upp0,
+                strat.ledger.download_params - downp0,
+                float(np.max(compute_s)) if compute_s else 0.0,
+                max(overhead_s, 0.0)))
+        return self.logs
+
+    # ------------------------------------------------------------------
+    def rounds_to_metric(self, target: float) -> Optional[int]:
+        for lg in self.logs:
+            if lg.metric >= target:
+                return lg.round_t + 1
+        return None
+
+    def summary(self) -> Dict[str, Any]:
+        led = self.strategy.ledger
+        return {
+            "method": self.fed.method,
+            "ecolora": bool(self.fed.eco and self.fed.eco.enabled),
+            "final_loss": self.logs[-1].global_loss if self.logs else None,
+            "final_metric": self.logs[-1].metric if self.logs else None,
+            "upload_params_M": led.upload_params / 1e6,
+            "total_params_M": led.total_params / 1e6,
+            "upload_MB": led.upload_bytes / 1e6,
+            "total_MB": led.total_bytes / 1e6,
+        }

@@ -1,0 +1,93 @@
+"""Flash-decode GQA attention Pallas TPU kernel (one query token vs a long
+KV cache).
+
+Why a kernel: decode_32k / long_500k are dominated by streaming the KV cache
+from HBM. The kernel processes the cache in sequence blocks with an online
+softmax (running max / normaliser in VMEM scratch), never materialising the
+(H, S) logits row, and shares each K/V block across the n_rep=H/Hkv query
+heads of its group (GQA reuse) — the HBM traffic is exactly one pass over
+K and V, which is this op's roofline.
+
+Grid: (batch, kv_heads, seq_blocks); scratch per (b, h): running m, l, acc.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, n_rep, nsb, scale):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (n_rep, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (Sb, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (Sb, D)
+    valid = valid_ref[...]                        # (Sb,)
+
+    logits = jnp.dot(q, k.T) * scale              # (n_rep, Sb)
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    m_prev = m_ref[...]                           # (n_rep, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new)                   # (n_rep, Sb)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(sb == nsb - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_rep", "sblock", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     valid: jnp.ndarray, n_rep: int, *, sblock: int = 512,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, 1, H, D); k/v: (B, S, Hkv, D); valid: (S,) bool mask.
+    H = Hkv * n_rep. Returns (B, 1, H, D)."""
+    bsz, _, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    assert h == hkv * n_rep
+    sblock = min(sblock, s)
+    assert s % sblock == 0, (s, sblock)
+    nsb = s // sblock
+    scale = 1.0 / (d ** 0.5)
+
+    # regroup q to (B, Hkv, n_rep, D) so each grid cell owns one KV head group
+    qg = q[:, 0].reshape(bsz, hkv, n_rep, d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_rep=n_rep, nsb=nsb, scale=scale),
+        grid=(bsz, hkv, nsb),
+        in_specs=[
+            pl.BlockSpec((1, 1, n_rep, d), lambda b, g, sb: (b, g, 0, 0)),   # q
+            pl.BlockSpec((1, sblock, 1, d), lambda b, g, sb: (b, sb, g, 0)),  # k
+            pl.BlockSpec((1, sblock, 1, d), lambda b, g, sb: (b, sb, g, 0)),  # v
+            pl.BlockSpec((sblock,), lambda b, g, sb: (sb,)),                  # valid
+        ],
+        out_specs=pl.BlockSpec((1, 1, n_rep, d), lambda b, g, sb: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, n_rep, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((n_rep, 1), jnp.float32),   # running max
+            pltpu.VMEM((n_rep, 1), jnp.float32),   # running normaliser
+            pltpu.VMEM((n_rep, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qg, k, v, valid)
+    return out.reshape(bsz, 1, h, d)

@@ -1,0 +1,47 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) everything runs with interpret=True; on TPU set
+``repro.kernels.ops.INTERPRET = False`` (launch scripts do this when
+jax.default_backend() == 'tpu').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attn as _da
+from repro.kernels import lora_matmul as _lm
+from repro.kernels import sparsify as _sp
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def lora_matmul(x, w, a, b, scale: float, **kw):
+    """Fused y = x @ w + (x @ a) @ b * scale. Accepts (..., K) x; flattens
+    leading dims to M."""
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    out = _lm.lora_matmul(x.reshape(m, x.shape[-1]), w, a, b, scale=scale,
+                          interpret=INTERPRET, **kw)
+    return out.reshape(lead + (w.shape[1],))
+
+
+def sparsify_residual(x, residual, k_frac: float, **kw):
+    """Fused adaptive-top-k + residual (Eqs. 5-6). 1-D inputs, padded here."""
+    n = x.shape[0]
+    block = min(kw.pop("block", 1024), n)
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    rp = jnp.pad(residual, (0, pad))
+    tau = _sp.topk_threshold(x + residual, k_frac)
+    s, nr = _sp.sparsify_residual(xp, rp, tau, block=block,
+                                  interpret=INTERPRET, **kw)
+    return s[:n], nr[:n]
+
+
+def decode_attention(q, k, v, valid, n_rep: int, **kw):
+    """Flash-decode GQA attention. q:(B,1,H,D), k/v:(B,S,Hkv,D), valid:(S,)."""
+    return _da.decode_attention(q, k, v, valid, n_rep,
+                                interpret=INTERPRET, **kw)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, a: jnp.ndarray,
+                    b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """y = x @ w + (x @ a) @ b * scale.  x:(M,K) w:(K,N) a:(K,R) b:(R,N)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y + jnp.dot(jnp.dot(x, a, preferred_element_type=jnp.float32).astype(x.dtype),
+                    b, preferred_element_type=jnp.float32) * scale
+    return y.astype(x.dtype)
+
+
+def sparsify_residual_ref(x: jnp.ndarray, residual: jnp.ndarray,
+                          threshold: jnp.ndarray):
+    """Fused Eq. 5/6 inner loop given a precomputed magnitude threshold.
+    Returns (sparse_dense_layout, new_residual)."""
+    offered = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    keep = jnp.abs(offered) >= threshold
+    sparse = jnp.where(keep, offered, 0.0)
+    new_residual = offered - sparse
+    return sparse.astype(x.dtype), new_residual.astype(residual.dtype)
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    valid: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """One-token GQA decode attention.
+    q:(B,1,H,D), k/v:(B,S,Hkv,D), valid:(S,) bool. H = Hkv * n_rep."""
+    b, _, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    kk = jnp.repeat(k, n_rep, axis=2)
+    vv = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / jnp.sqrt(jnp.float32(d))
+    logits = jnp.where(valid[None, None, None, :], logits, -2.3819763e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

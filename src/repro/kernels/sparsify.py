@@ -1,0 +1,69 @@
+"""Fused sparsify+residual Pallas TPU kernel (EcoLoRA Eqs. 5-6 inner loop).
+
+Why a kernel: on-device compression in cluster mode touches every LoRA
+element three times when unfused (offered = P + R; mask = |offered| >= tau;
+R' = offered - sparse). Fused, each element is read once from HBM, thresheld
+in VREGs, and both outputs stream back — the op is purely memory-bound, so
+one pass is the roofline.
+
+The magnitude threshold tau is computed outside (jax.lax.top_k on a sampled
+subset or exact) — selection is a reduction, the elementwise pass is the
+volume work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, r_ref, tau_ref, s_ref, nr_ref):
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    tau = tau_ref[0]
+    offered = x + r
+    keep = jnp.abs(offered) >= tau
+    sparse = jnp.where(keep, offered, 0.0)
+    s_ref[...] = sparse.astype(s_ref.dtype)
+    nr_ref[...] = (offered - sparse).astype(nr_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sparsify_residual(x: jnp.ndarray, residual: jnp.ndarray, tau: jnp.ndarray,
+                      *, block: int = 1024, interpret: bool = True):
+    """x, residual: (N,) with N % block == 0 (pad upstream); tau: (1,) f32.
+    Returns (sparse, new_residual), both (N,)."""
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), x.dtype),
+            jax.ShapeDtypeStruct((n,), residual.dtype),
+        ],
+        interpret=interpret,
+    )(x, residual, tau)
+
+
+def topk_threshold(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Exact magnitude threshold keeping ceil(k*n) entries (host-side
+    reduction feeding the kernel)."""
+    n = x.shape[0]
+    keep = max(1, min(n, int(jnp.ceil(k_frac * n)) if not isinstance(k_frac, float)
+                      else int(-(-k_frac * n // 1))))
+    vals = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), keep)[0]
+    return vals[-1:]

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) on the production meshes, prove memory fits,
+and extract the roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+jax import — 512 host devices exist only here, never in tests/benches).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch import hlo as hlo_mod
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step, step_arguments
+from repro.models import model as M
+
+from jax.sharding import PartitionSpec as P
+
+
+def out_shardings_for(cfg, shape, mesh):
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    bshard = baxes if shape.global_batch >= nb else None
+    lspec = shd.lora_pspecs(cfg, mesh)
+    if shape.kind == "train":
+        return (lspec, shd.opt_pspecs(lspec), P())
+    v_ax = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    logits = P(bshard, None, v_ax)
+    if shape.kind == "prefill":
+        return (logits, shd.cache_pspecs(cfg, shape, mesh))
+    return (logits, shd.cache_pspecs(cfg, shape, mesh))
+
+
+def in_shardings_for(cfg, shape, mesh):
+    pspec = shd.param_pspecs(cfg, mesh)
+    lspec = shd.lora_pspecs(cfg, mesh)
+    bspec = shd.batch_pspecs(cfg, shape, mesh)
+    if shape.kind == "train":
+        return (pspec, lspec, shd.opt_pspecs(lspec), bspec)
+    if shape.kind == "prefill":
+        return (pspec, lspec, bspec)
+    return (pspec, lspec, bspec, shd.cache_pspecs(cfg, shape, mesh))
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            remat: bool = True, keep_hlo: bool = False,
+            sharding_overrides=None, cfg_overrides=None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "why": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    step = make_step(cfg, shape, remat=remat)
+    args = step_arguments(cfg, shape)
+    in_sh = in_shardings_for(cfg, shape, mesh)
+    out_sh = out_shardings_for(cfg, shape, mesh)
+    if sharding_overrides:
+        in_sh, out_sh = sharding_overrides(cfg, shape, mesh, in_sh, out_sh)
+
+    from repro.models import acts
+    baxes = ("pod", "data") if multi_pod else ("data",)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    acts.set_policy(acts.make_mesh_policy(
+        mesh, batch_axes=baxes if shape.global_batch >= nb else ()))
+
+    # donation: train updates (lora, opt) in place; serve updates the KV cache
+    # in place — without aliasing, a 32k cache would be double-counted.
+    donate = {"train": (1, 2), "prefill": (), "decode": (3,)}[shape.kind]
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(step,
+                         in_shardings=shd.named(mesh, in_sh),
+                         out_shardings=shd.named(mesh, out_sh),
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = hlo_mod.collective_bytes(hlo_text)
+    stats = hlo_mod.fusion_stats(hlo_text)
+    from repro.launch.hlo_walk import walk
+    walked = walk(hlo_text)  # trip-count-aware per-device flops/bytes
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "n_chips": n_chips,
+        "mesh": dict(mesh.shape),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "temp_size_in_bytes", 0)
+                              + getattr(mem, "argument_size_in_bytes", 0)
+                              + getattr(mem, "output_size_in_bytes", 0)),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collective_bytes": coll,
+        "walked": walked,
+        "hlo_stats": stats,
+    }
+    if keep_hlo:
+        result["hlo_text"] = hlo_text
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    pairs = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in pairs:
+        tag = f"{arch}__{shape}__{'multipod' if args.multi_pod else 'pod'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip-cached] {tag}")
+            continue
+        try:
+            res = run_one(arch, shape, multi_pod=args.multi_pod,
+                          remat=not args.no_remat)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res["status"] == "ok":
+            gb = res["memory"]["peak_bytes"] / 2**30
+            print(f"[ok] {tag}: peak {gb:.2f} GiB/dev, "
+                  f"flops {res['cost']['flops']:.3e}, "
+                  f"coll {res['collective_bytes'].get('total', 0)/2**30:.3f} GiB "
+                  f"(compile {res['compile_s']}s)")
+            print("  memory_analysis:", res["memory"])
+            print("  cost_analysis:", res["cost"])
+        elif res["status"] == "skipped":
+            print(f"[skipped] {tag}: {res['why']}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

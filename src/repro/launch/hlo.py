@@ -1,0 +1,76 @@
+"""Compiled-HLO analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` has no collective-bytes entry, so we parse the compiled
+module text and sum RESULT-shape bytes of every collective op (the moved
+payload; for all-reduce the result equals the operand). Reported per
+collective kind so the perf loop can see WHICH collective dominates.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %ag = bf16[16,2048,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result bytes per collective kind (plus 'total').
+
+    Counts `-start` ops once and skips the paired `-done`.
+    """
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))
+
+
+def fusion_stats(hlo_text: str) -> Dict[str, int]:
+    return {
+        "fusions": count_ops(hlo_text, "fusion"),
+        "custom-calls": count_ops(hlo_text, "custom-call"),
+        "while": count_ops(hlo_text, "while"),
+        "all-gather": count_ops(hlo_text, "all-gather"),
+        "all-reduce": count_ops(hlo_text, "all-reduce"),
+        "reduce-scatter": count_ops(hlo_text, "reduce-scatter"),
+        "all-to-all": count_ops(hlo_text, "all-to-all"),
+        "collective-permute": count_ops(hlo_text, "collective-permute"),
+    }

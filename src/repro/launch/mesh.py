@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+touches no jax device state — smoke tests must keep seeing 1 CPU device;
+only dryrun.py sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import.
+
+Production target: TPU v5e, 256 chips/pod (16x16), 2 pods = 512 chips.
+Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+In cluster mode the "pod" axis carries the federated-client role (DESIGN.md
+§2): EcoLoRA's segment schedule runs across pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever fits the local devices (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,206 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape x mesh) from the dry-run's compiled artifacts.
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective = collective_bytes / (chips x 50 GB/s/link ICI)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() (whole-program,
+i.e. already summed over devices on the host backend — we treat them as
+GLOBAL totals and divide by chip count); collective_bytes is parsed from the
+compiled HLO (launch/hlo.py).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); for LoRA fine-tuning the
+*useful* step FLOPs are ~ 4*N*D + 6*N_lora*D (no weight-grad matmuls for the
+frozen base), so we report both ratios.
+
+Caveat recorded in EXPERIMENTS.md: the host (CPU) backend legalises some
+bf16 while-loop buffers to f32, inflating memory_analysis ~1.5-2x vs a real
+TPU lowering; the terms below use cost_analysis bytes, which are less
+affected, and the memory table carries the caveat.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline --dir results/dryrun [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total and active parameter counts from the shape tree."""
+    import numpy as np
+
+    from repro.models import model as M
+    total = 0
+    active = 0
+    moe_total = 0
+    for path, shp in _walk(M.param_shapes(cfg)):
+        n = int(np.prod(shp))
+        total += n
+        if "we_" in path:  # routed experts
+            moe_total += n
+            if cfg.num_experts:
+                frac = (cfg.experts_per_token + cfg.num_shared_experts) / cfg.num_experts
+                active += int(n * min(frac, 1.0))
+        else:
+            active += n
+    lora = sum(int(np.prod(s)) for _, s in _walk(M.lora_shapes(cfg)))
+    return {"total": total, "active": active, "lora": lora}
+
+
+def _walk(tree, prefix=""):
+    for k in sorted(tree):
+        v = tree[k]
+        p = f"{prefix}/{k}"
+        if isinstance(v, dict):
+            yield from _walk(v, p)
+        else:
+            yield p, v
+
+
+def model_flops(cfg, shape) -> Dict[str, float]:
+    pc = count_params(cfg)
+    d = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n = pc["active"]
+    if shape.kind == "train":
+        ideal = 6 * n * d            # classic 6ND
+        lora_ideal = 4 * n * d + 6 * pc["lora"] * d  # frozen-base backprop
+    else:
+        ideal = 2 * n * d
+        lora_ideal = 2 * n * d
+    return {"model_flops": float(ideal), "lora_model_flops": float(lora_ideal),
+            "tokens": d, **pc}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    lora_flops_ratio: float
+    peak_gib: float
+    alias_peak_gib: float       # donation-aware (outputs alias arguments)
+    coll_breakdown: Dict[str, float]
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def analyze(res: dict) -> Optional[Roofline]:
+    if res.get("status") != "ok":
+        return None
+    cfg = get_config(res["arch"])
+    shape = INPUT_SHAPES[res["shape"]]
+    chips = res["n_chips"]
+    walked = res.get("walked", {})
+    # per-DEVICE quantities (the SPMD module is one device's program; the
+    # walker multiplies while-loop bodies by their trip counts)
+    flops = walked.get("flops", res["cost"]["flops"])
+    byts = walked.get("hbm_bytes", res["cost"]["bytes_accessed"])
+    coll = walked.get("coll_total", res["collective_bytes"].get("total", 0))
+    mf = model_flops(cfg, shape)
+    per_dev_model = mf["model_flops"] / chips
+    per_dev_lora = mf["lora_model_flops"] / chips
+    c = flops / PEAK_FLOPS
+    m = byts / HBM_BW
+    x = coll / ICI_BW
+    dom = max((("compute", c), ("memory", m), ("collective", x)),
+              key=lambda kv: kv[1])[0]
+    return Roofline(
+        arch=res["arch"], shape=res["shape"], n_chips=chips,
+        compute_s=c, memory_s=m, collective_s=x, dominant=dom,
+        flops_ratio=per_dev_model / flops if flops else 0.0,
+        lora_flops_ratio=per_dev_lora / flops if flops else 0.0,
+        peak_gib=res["memory"]["peak_bytes"] / 2**30,
+        alias_peak_gib=(res["memory"]["argument_bytes"]
+                        + res["memory"]["temp_bytes"]) / 2**30,
+        coll_breakdown={k.replace("coll_", ""): v / 2**30
+                        for k, v in walked.items()
+                        if k.startswith("coll_") and k != "coll_total"}
+        if walked else
+        {k: v / 2**30 for k, v in res["collective_bytes"].items()
+         if k != "total"})
+
+
+def what_would_help(r: Roofline) -> str:
+    if r.dominant == "collective":
+        big = max(r.coll_breakdown, key=r.coll_breakdown.get) \
+            if r.coll_breakdown else "?"
+        return (f"cut {big} volume (resharding: fewer transitions between "
+                f"sharding layouts, or overlap collectives with compute)")
+    if r.dominant == "memory":
+        return ("raise arithmetic intensity: larger fused blocks, fewer "
+                "remat passes, bf16 end-to-end, better layout reuse")
+    return ("compute-bound (good): close the MODEL/HLO flops gap "
+            f"(ratio {r.flops_ratio:.2f}) by trimming remat recompute")
+
+
+def load_all(dir_: str):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def to_markdown(rows, skipped) -> str:
+    lines = [
+        "| arch | shape | chips | compute (s) | memory (s) | collective (s) |"
+        " dominant | 6ND/HLO | LoRA-ideal/HLO | peak GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.n_chips} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+            f"{r.flops_ratio:.2f} | {r.lora_flops_ratio:.2f} | {r.peak_gib:.1f} |")
+    for s in skipped:
+        lines.append(f"| {s['arch']} | {s['shape']} | - | - | - | - | skipped |"
+                     f" - | - | - |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    rows, skipped = [], []
+    for res in load_all(args.dir):
+        r = analyze(res)
+        if r is None:
+            if res.get("status") == "skipped":
+                skipped.append(res)
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    if args.md:
+        print(to_markdown(rows, skipped))
+        return
+    for r in rows:
+        print(f"{r.arch:22s} {r.shape:12s} dom={r.dominant:10s} "
+              f"c={r.compute_s:.2e} m={r.memory_s:.2e} x={r.collective_s:.2e} "
+              f"6ND/HLO={r.flops_ratio:5.2f} peak={r.peak_gib:6.1f}GiB | "
+              f"{what_would_help(r)[:60]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Sharding policies: param/batch/cache PartitionSpecs per architecture.
+
+Strategy (DESIGN.md §5):
+  * base weights: TP over "model" on the head/ff/expert/vocab dim x FSDP over
+    "data" on the other big dim (deepseek-v3 @671B NEEDS both: 2.6 GB/chip);
+  * batch: ("pod","data") — except batch-1 decode (long_500k), where the KV
+    cache seq dim takes the "data" axis instead (flash-decode style);
+  * LoRA + optimizer state: replicated in-pod (tiny; their cross-pod sync is
+    the EcoLoRA protocol's job, not the compiler's);
+  * weights are replicated across pods (each pod = one federated client
+    holding a full sharded copy).
+
+Policies are path-rule based over the param tree so all 10 architectures
+share one implementation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", p)) for p in path)
+
+
+# rules keyed by the LAST path component; value = (dim -> axis) from the
+# RIGHT (negative dims), applied after accounting for stacked-layer dims.
+_FSDP = "data"
+_TP = "model"
+
+_RULES = {
+    # embeddings
+    "embed": {-2: _TP, -1: _FSDP},       # (V, d): vocab TP, d FSDP
+    "unembed": {-2: _FSDP, -1: _TP},     # (d, V)
+    "cond_proj": {-2: None, -1: _TP},
+    # attention projections (d, H*hd) / (H*hd, d)
+    "wq": {-2: _FSDP, -1: _TP},
+    "wk": {-2: _FSDP, -1: _TP},
+    "wv": {-2: _FSDP, -1: _TP},
+    "wo": {-2: _TP, -1: _FSDP},
+    # MLA factors
+    "wq_a": {-2: _FSDP, -1: _TP},
+    "wq_b": {-2: _FSDP, -1: _TP},
+    "wkv_a": {-2: _FSDP, -1: None},      # latent small: replicate cols
+    "wkv_b": {-2: _FSDP, -1: _TP},
+    # MLPs (d, ff) / (ff, d)
+    "wg": {-2: _FSDP, -1: _TP},
+    "wu": {-2: _FSDP, -1: _TP},
+    "wd": {-2: _TP, -1: _FSDP},
+    # MoE experts (E, d, ff) / (E, ff, d): experts TP, d FSDP
+    "we_g": {-3: _TP, -2: _FSDP, -1: None},
+    "we_u": {-3: _TP, -2: _FSDP, -1: None},
+    "we_d": {-3: _TP, -2: None, -1: _FSDP},
+    "router": {-2: _FSDP, -1: None},
+    "shared_wg": {-2: _FSDP, -1: _TP},
+    "shared_wu": {-2: _FSDP, -1: _TP},
+    "shared_wd": {-2: _TP, -1: _FSDP},
+    # mamba2
+    "in_proj": {-2: _FSDP, -1: _TP},
+    "out_proj": {-2: _TP, -1: _FSDP},
+    "conv_w": {-2: None, -1: _TP},
+    "conv_b": {-1: _TP},
+    "proj": {-2: _FSDP, -1: _TP},        # mtp proj
+}
+
+
+def _spec_for(path: str, shape: tuple, mesh) -> P:
+    leaf = path.split("/")[-1]
+    rule = _RULES.get(leaf)
+    ndim = len(shape)
+    axes = [None] * ndim
+    if rule:
+        for rel, ax in rule.items():
+            dim = ndim + rel
+            # only shard divisible dims (e.g. mamba2's vocab 50280 % 16 != 0)
+            if (0 <= dim < ndim and ax in mesh.axis_names
+                    and shape[dim] % mesh.shape[ax] == 0):
+                axes[dim] = ax
+    return P(*axes)
+
+
+def param_pspecs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    shapes = M.param_shapes(cfg)
+
+    def mk(path, shp):
+        return _spec_for(_path_str(path), shp, mesh)
+
+    return jax.tree_util.tree_map_with_path(mk, shapes, is_leaf=M._is_shape)
+
+
+def lora_pspecs(cfg: ModelConfig, mesh) -> Dict[str, Any]:
+    """LoRA fully replicated (in-pod AND cross-pod; sync is protocol-level)."""
+    shapes = M.lora_shapes(cfg)
+    return jax.tree_util.tree_map(lambda s: P(), shapes, is_leaf=M._is_shape)
+
+
+def opt_pspecs(lora_specs) -> Dict[str, Any]:
+    return {"m": lora_specs, "v": lora_specs,
+            "step": P()}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    bshard = baxes if shape.global_batch >= int(np.prod(
+        [mesh.shape[a] for a in baxes])) else None
+    specs = {"tokens": P(bshard, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(bshard, None)
+    if cfg.cross_attn_every and shape.kind != "decode":
+        specs["cond"] = P(bshard, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: InputShape, mesh) -> Dict[str, Any]:
+    """Decode caches. Leaf shapes: (L, B, S, ...) attention KV; MLA latent
+    (L, B, S, R); mamba conv (L, B, W, C) / ssd (L, B, H, P, N)."""
+    shapes = M.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    ndev_b = int(np.prod([mesh.shape[a] for a in baxes]))
+    batch_sharded = shape.global_batch >= ndev_b
+    bshard = baxes if batch_sharded else None
+    # batch=1 long-context: the cache SEQ dim takes the "data" axis instead
+    # (flash-decode style — XLA inserts the partial-softmax reductions)
+    base_seq_shard = None if batch_sharded else "data"
+
+    def mk(path, s):
+        leaf = _path_str(path).split("/")[-1]
+        nd = len(s)
+        if leaf in ("k", "v"):          # (L, B, S, Hkv, hd)
+            heads_divide = s[-2] % mesh.shape[_TP] == 0
+            hkv_ax = _TP if heads_divide else None
+            # when kv-heads can't take the model axis, the seq dim does —
+            # a 32k cache x large batch otherwise exceeds 16 GB/chip
+            seq = base_seq_shard if base_seq_shard else (None if heads_divide else _TP)
+            return P(None, bshard, seq, hkv_ax, None)
+        if leaf in ("xk", "xv"):        # (L, B, Nc, Hkv, hd)
+            hkv_ax = _TP if s[-2] % mesh.shape[_TP] == 0 else None
+            return P(None, bshard, None, hkv_ax, None)
+        if leaf in ("c_kv", "k_rope"):  # (L, B, S, R): latent has no heads —
+            # shard seq over model when batch holds data (decode_32k), else
+            # over data (long decode)
+            seq = base_seq_shard if base_seq_shard else _TP
+            return P(None, bshard, seq, None)
+        if leaf == "conv":              # (L, B, W, C)
+            return P(None, bshard, None, _TP if s[-1] % mesh.shape[_TP] == 0 else None)
+        if leaf == "ssd":               # (L, B, H, P, N)
+            h_ax = _TP if s[-3] % mesh.shape[_TP] == 0 else None
+            return P(None, bshard, h_ax, None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(mk, shapes, is_leaf=M._is_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,85 @@
+"""Step functions lowered by the dry-run and the cluster trainer.
+
+  train_step   — one LoRA fine-tuning step (loss, grad wrt LoRA, AdamW), with
+                 optional EcoLoRA cross-pod segment sync (cluster mode);
+  prefill_step — forward over the full sequence, emits last-token logits +
+                 populated KV caches;
+  serve_step   — ONE new token against a seq_len KV cache.
+
+All are pure functions built per (cfg, shape, mesh) so jax.jit can lower them
+from ShapeDtypeStructs without touching real memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    remat: bool = True, eco_sync=None):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(lr=3e-4)
+
+    def train_step(params, lora, opt_state, batch):
+        loss, grads = jax.value_and_grad(M.loss_fn)(lora, params, batch, cfg, remat)
+        if eco_sync is not None:
+            grads = eco_sync(grads)
+        lora, opt_state = adamw.apply_updates(lora, grads, opt_state, opt_cfg)
+        return lora, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, remat: bool = True):
+    def prefill_step(params, lora, batch):
+        return M.prefill(params, lora, batch, cfg, remat=remat)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, cache_pos: Optional[int] = None):
+    # cache_pos is a static trace-time scalar for the dry-run (mid-cache);
+    # the serving example threads a dynamic position instead.
+    def serve_step(params, lora, batch, cache):
+        logits, new_cache = M.decode_step(params, lora, batch["tokens"],
+                                          cache, cache_pos or 0, cfg)
+        return logits, new_cache
+
+    return serve_step
+
+
+def step_arguments(cfg: ModelConfig, shape: InputShape):
+    """Abstract (ShapeDtypeStruct) arguments for the step of this shape."""
+    batch = M.input_specs(cfg, shape)
+    params = M.abstract_params(cfg)
+    lora = M.abstract_lora(cfg)
+    if shape.kind == "train":
+        opt = {
+            "m": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), lora),
+            "v": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), lora),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        return (params, lora, opt, batch)
+    if shape.kind == "prefill":
+        return (params, lora, batch)
+    cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return (params, lora, batch, cache)
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, remat: bool = True,
+              eco_sync=None):
+    if shape.kind == "train":
+        return make_train_step(cfg, remat=remat, eco_sync=eco_sync)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, remat=remat)
+    return make_serve_step(cfg, cache_pos=shape.seq_len // 2)

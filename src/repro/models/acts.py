@@ -1,0 +1,80 @@
+"""Activation-sharding hints.
+
+Model code is mesh-agnostic; launchers install a policy mapping semantic
+activation kinds to PartitionSpecs, applied via with_sharding_constraint.
+Without a policy (smoke tests, fedsim) this is the identity.
+
+Kinds:  btd (batch, seq, d_model) | bshd (batch, seq, heads, head_dim)
+        bhqk (batch, heads, q, k) | btf (batch, seq, ff) | etd (experts,
+        tokens, d) | blv (batch, seq-chunk, vocab)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_POLICY: Optional[Callable] = None
+
+
+def set_policy(policy: Optional[Callable]) -> None:
+    global _POLICY
+    _POLICY = policy
+
+
+def constrain(x, kind: str):
+    if _POLICY is None:
+        return x
+    return _POLICY(x, kind)
+
+
+def make_mesh_policy(mesh, batch_axes=("data",), model_axis="model"):
+    """Standard policy: batch dim -> batch_axes, heads/ff/vocab -> model."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    b = tuple(a for a in batch_axes if a in mesh.axis_names) or None
+    m = model_axis if model_axis in mesh.axis_names else None
+
+    bm = (b or ()) + ((m,) if m else ())
+    specs = {
+        # residual stream: sequence-parallel over the model axis (Megatron
+        # SP) — the remat carry stack is L x B x S x d, by far the largest
+        # training buffer; seq-sharding it cuts it by |model|.
+        "btd": [P(b, m, None)],
+        "bshd": [P(b, None, m, None)],
+        "bhqk": [P(b, m, None, None)],
+        "btf": [P(b, None, m)],
+        # MoE dispatch: experts on model if E divides, else tokens take both
+        # axes (granite's 40 experts don't divide a 16-way model axis)
+        "etd": [P(m, b, None), P(None, bm or None, None)],
+        "td": [P(bm or None, None)],     # flat dispatch intermediates
+        # expert weights gathered once per layer (loop-invariant hoist):
+        # E on model, d/ff replicated over data
+        "ew3": [P(m, None, None)],
+        "te": [P(bm or None, None)],     # router one-hot / cumsum
+        "blv": [P(b, None, m)],
+        # SSD chunked tensors: shard the chunk axis over "model"
+        "ssd_bhcl": [P(b, None, m, None)],
+        "ssd_bhcll": [P(b, None, m, None, None)],
+        "ssd_bchpn": [P(b, m, None, None, None)],
+        "ssd_bclhp": [P(b, m, None, None, None)],
+    }
+
+    def _fits(x, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if x.shape[dim] % n:
+                return False
+        return True
+
+    def policy(x, kind):
+        for spec in specs.get(kind, ()):
+            if x.ndim == len(spec) and _fits(x, spec):
+                return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return x
+
+    return policy

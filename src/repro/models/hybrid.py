@@ -1,0 +1,202 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every ``cfg.attn_every`` layers [arXiv:2411.15242].
+
+Faithful-enough simplification (noted in DESIGN.md): the shared block
+consumes concat([hidden, original_embedding]) (2*d_model) — Zamba2's
+"highway" input — runs GQA attention + an MLP, and projects back to d_model.
+Zamba2's per-invocation LoRA adapters on the shared block are modelled by the
+same LoRA machinery that EcoLoRA compresses (a pleasing coincidence: the
+paper's protocol applies unchanged).
+
+Caches: per-layer SSD/conv states (stacked over layers) + per-application KV
+caches (stacked over the n_apps shared-block invocations).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2 as m2
+from repro.models.layers import mlp, mlp_param_shapes, rms_norm
+from repro.models.lora import maybe_lora
+from repro.models.transformer import _repeat_kv, attention_core
+from repro.models.layers import apply_rope, gqa_decode
+
+Params = Dict[str, Any]
+
+
+def n_shared_apps(cfg) -> int:
+    return (cfg.num_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def hybrid_param_shapes(cfg) -> Dict[str, Any]:
+    d2 = 2 * cfg.d_model
+    hd = cfg.hd
+    shared = {
+        "ln1": (d2,),
+        "attn": {"wq": (d2, cfg.num_heads * hd), "wk": (d2, cfg.num_kv_heads * hd),
+                 "wv": (d2, cfg.num_kv_heads * hd), "wo": (cfg.num_heads * hd, cfg.d_model)},
+        "ln2": (d2,),
+        "ffn": mlp_param_shapes(d2, cfg.d_ff, cfg.mlp_act) | {"wd": (cfg.d_ff, cfg.d_model)},
+    }
+    layer = {"ln": (cfg.d_model,), "mixer": m2.mamba2_param_shapes(cfg)}
+    return {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "layers": jax.tree_util.tree_map(lambda s: (cfg.num_layers,) + s, layer,
+                                         is_leaf=lambda s: isinstance(s, tuple)),
+        "shared": shared,
+        "final_norm": (cfg.d_model,),
+        "unembed": (cfg.d_model, cfg.vocab_size),
+    }
+
+
+def hybrid_lora_shapes(cfg) -> Dict[str, Any]:
+    from repro.models.lora import lora_pair_shapes
+    r = cfg.lora_rank
+    d2 = 2 * cfg.d_model
+    hd = cfg.hd
+    lora: Dict[str, Any] = {}
+    mixer = {}
+    shapes = m2.mamba2_param_shapes(cfg)
+    for t in ("in_proj", "out_proj"):
+        if t in cfg.lora_targets:
+            mixer[t] = lora_pair_shapes(shapes[t][0], shapes[t][1], r)
+    if mixer:
+        lora["layers"] = jax.tree_util.tree_map(
+            lambda s: (cfg.num_layers,) + s,
+            {"mixer": mixer}, is_leaf=lambda s: isinstance(s, tuple))
+    attn = {}
+    for t, shp in (("wq", (d2, cfg.num_heads * hd)), ("wk", (d2, cfg.num_kv_heads * hd)),
+                   ("wv", (d2, cfg.num_kv_heads * hd)), ("wo", (cfg.num_heads * hd, cfg.d_model))):
+        if t in cfg.lora_targets:
+            attn[t] = lora_pair_shapes(shp[0], shp[1], r)
+    if attn:
+        lora["shared"] = {"attn": attn}
+    return lora
+
+
+def _shared_block(h, e, p, lora, cfg, positions, lora_scale):
+    """Full-sequence shared attention block. h, e: (B, S, d)."""
+    u = jnp.concatenate([h, e], axis=-1)
+    un = rms_norm(u, p["ln1"], cfg.norm_eps)
+    b, s, _ = un.shape
+    hd = cfg.hd
+    la = None if lora is None else lora.get("attn")
+    q = maybe_lora(un, p["attn"]["wq"], la, "wq", lora_scale).reshape(b, s, cfg.num_heads, hd)
+    k = maybe_lora(un, p["attn"]["wk"], la, "wk", lora_scale).reshape(b, s, cfg.num_kv_heads, hd)
+    v = maybe_lora(un, p["attn"]["wv"], la, "wv", lora_scale).reshape(b, s, cfg.num_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention_core(q, _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads),
+                       _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads))
+    h = h + maybe_lora(o.reshape(b, s, cfg.num_heads * hd), p["attn"]["wo"], la, "wo", lora_scale)
+    un2 = rms_norm(jnp.concatenate([h, e], axis=-1), p["ln2"], cfg.norm_eps)
+    h = h + mlp(un2, p["ffn"], cfg.mlp_act)
+    return h, {"k": k, "v": v}
+
+
+def hybrid_forward(params: Params, lora: Params, tokens: jnp.ndarray, cfg, *,
+                   remat: bool = True, collect_cache: bool = False):
+    lora_scale = cfg.lora_alpha / cfg.lora_rank
+    b, s = tokens.shape
+    e = params["embed"].astype(cfg.cdtype)[tokens]
+    h = e
+    positions = jnp.arange(s)
+    llayers = lora.get("layers", {})
+
+    def body(carry, xs):
+        hh = carry
+        lp, ll, idx = xs
+        is_shared = (idx % cfg.attn_every) == 0
+
+        def with_attn(hh):
+            out, kv = _shared_block(hh, e, params["shared"], lora.get("shared"),
+                                    cfg, positions, lora_scale)
+            return out, kv
+
+        def without(hh):
+            zkv = {"k": jnp.zeros((b, s, cfg.num_kv_heads, cfg.hd), cfg.cdtype),
+                   "v": jnp.zeros((b, s, cfg.num_kv_heads, cfg.hd), cfg.cdtype)}
+            return hh, zkv
+
+        hh, kv = jax.lax.cond(is_shared, with_attn, without, hh)
+        mix_in = rms_norm(hh, lp["ln"], cfg.norm_eps)
+        out, mcache = m2.mamba2_forward(mix_in, lp["mixer"], cfg,
+                                        ll.get("mixer") if ll else None, lora_scale)
+        hh = hh + out
+        ys = {"mamba": mcache}
+        if collect_cache:
+            ys["kv"] = kv
+        return hh, ys
+
+    bodyfn = jax.checkpoint(body) if remat else body
+    idxs = jnp.arange(cfg.num_layers)
+    h, caches = jax.lax.scan(bodyfn, h, (params["layers"], llayers, idxs))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, jnp.float32(0.0), (caches if collect_cache else None)
+
+
+def hybrid_cache_shapes(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    napps = n_shared_apps(cfg)
+    mc = m2.mamba2_cache_shapes(cfg, batch)
+    return {
+        "mamba": {k: (cfg.num_layers,) + v for k, v in mc.items()},
+        "kv": {"k": (napps, batch, seq, cfg.num_kv_heads, cfg.hd),
+               "v": (napps, batch, seq, cfg.num_kv_heads, cfg.hd)},
+    }
+
+
+def hybrid_decode(params: Params, lora: Params, token: jnp.ndarray, cache: Params,
+                  cache_pos, cfg):
+    """token: (B,1). cache per hybrid_cache_shapes."""
+    lora_scale = cfg.lora_alpha / cfg.lora_rank
+    b = token.shape[0]
+    e = params["embed"].astype(cfg.cdtype)[token]
+    h = e
+    llayers = lora.get("layers", {})
+    napps = n_shared_apps(cfg)
+
+    def shared_decode(hh, kvc):
+        u = jnp.concatenate([hh, e], axis=-1)
+        un = rms_norm(u, params["shared"]["ln1"], cfg.norm_eps)
+        la = (lora.get("shared") or {}).get("attn")
+        out, new_kv = gqa_decode(un, params["shared"]["attn"], la, kvc,
+                                 num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=cfg.hd, cache_pos=cache_pos,
+                                 rope_theta=cfg.rope_theta, lora_scale=lora_scale)
+        hh = hh + out
+        un2 = rms_norm(jnp.concatenate([hh, e], axis=-1), params["shared"]["ln2"], cfg.norm_eps)
+        hh = hh + mlp(un2, params["shared"]["ffn"], cfg.mlp_act)
+        return hh, new_kv
+
+    # loop layers; shared-block KV caches are indexed by application number.
+    new_kv = cache["kv"]
+    h_cur = h
+
+    def body(carry, xs):
+        hh, kvs = carry
+        lp, ll, mcache, idx = xs
+        is_shared = (idx % cfg.attn_every) == 0
+        app_idx = idx // cfg.attn_every
+
+        def with_attn(op):
+            hh, kvs = op
+            kvc = jax.tree_util.tree_map(lambda a: jax.lax.dynamic_index_in_dim(a, app_idx, 0, False), kvs)
+            out, nkv = shared_decode(hh, kvc)
+            kvs = jax.tree_util.tree_map(
+                lambda a, nv: jax.lax.dynamic_update_index_in_dim(a, nv, app_idx, 0), kvs, nkv)
+            return out, kvs
+
+        hh, kvs = jax.lax.cond(is_shared, with_attn, lambda op: op, (hh, kvs))
+        mix_in = rms_norm(hh, lp["ln"], cfg.norm_eps)
+        out, nmc = m2.mamba2_decode(mix_in, lp["mixer"], cfg, mcache,
+                                    ll.get("mixer") if ll else None, lora_scale)
+        return (hh + out, kvs), nmc
+
+    idxs = jnp.arange(cfg.num_layers)
+    (h_cur, new_kv), new_mamba = jax.lax.scan(
+        body, (h_cur, new_kv), (params["layers"], llayers, cache["mamba"], idxs))
+    h_out = rms_norm(h_cur, params["final_norm"], cfg.norm_eps)
+    return h_out, {"mamba": new_mamba, "kv": new_kv}

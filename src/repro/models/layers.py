@@ -1,0 +1,359 @@
+"""Core neural building blocks shared by every architecture family.
+
+All functions are pure: ``params`` are pytrees of jnp arrays, shapes carry a
+leading stacked-layer dim only where noted (scan-over-layers keeps compiled
+HLO small enough to lower 61-layer/671B configs on one CPU core).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+NEG_INF = -2.3819763e38  # min bf16; avoids nan from -inf * 0
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., in), w: (in, out)."""
+    return jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D) with D even; positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, cross-attention)
+# --------------------------------------------------------------------------
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def causal_mask(q_len: int, kv_len: int, window: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) bool mask; queries are the LAST q_len positions."""
+    q_pos = jnp.arange(q_len)[:, None] + (kv_len - q_len)
+    k_pos = jnp.arange(kv_len)[None, :]
+    m = k_pos <= q_pos
+    if window > 0:
+        m = m & (k_pos > q_pos - window)
+    return m
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B,Sq,H,D), k/v: (B,Skv,H,D). mask broadcastable to (B,H,Sq,Skv)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def gqa_attention(x: jnp.ndarray, p: Params, lora: Optional[Params], *,
+                  num_heads: int, num_kv_heads: int, head_dim: int,
+                  positions: jnp.ndarray, rope_theta: float,
+                  mask: Optional[jnp.ndarray],
+                  lora_scale: float = 0.0,
+                  kv_override: Optional[tuple] = None) -> jnp.ndarray:
+    """Standard multi-head GQA self-attention on a full sequence.
+
+    p: wq (d, H*hd), wk/wv (d, Hkv*hd), wo (H*hd, d); lora mirrors targeted
+    keys with (in, r)/(r, out) pairs. kv_override optionally supplies
+    precomputed (k, v) (used by cross-attention with conditioning tokens).
+    """
+    from repro.models.lora import maybe_lora
+    b, s, _ = x.shape
+    q = maybe_lora(x, p["wq"], lora, "wq", lora_scale).reshape(b, s, num_heads, head_dim)
+    if kv_override is None:
+        k = maybe_lora(x, p["wk"], lora, "wk", lora_scale).reshape(b, s, num_kv_heads, head_dim)
+        v = maybe_lora(x, p["wv"], lora, "wv", lora_scale).reshape(b, s, num_kv_heads, head_dim)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+    k = _repeat_kv(k, num_heads // num_kv_heads)
+    v = _repeat_kv(v, num_heads // num_kv_heads)
+    o = sdpa(q, k, v, mask)
+    return maybe_lora(o.reshape(b, s, num_heads * head_dim), p["wo"], lora, "wo", lora_scale)
+
+
+def gqa_decode(x: jnp.ndarray, p: Params, lora: Optional[Params], cache: Params, *,
+               num_heads: int, num_kv_heads: int, head_dim: int,
+               cache_pos: jnp.ndarray, rope_theta: float,
+               window: int = 0, lora_scale: float = 0.0,
+               use_kernel: bool = False) -> tuple:
+    """One-token decode with KV cache. x: (B, 1, d); cache k/v: (B, S, Hkv, hd).
+
+    Returns (out (B,1,d), new_cache).
+    """
+    from repro.models.lora import maybe_lora
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    q = maybe_lora(x, p["wq"], lora, "wq", lora_scale).reshape(b, 1, num_heads, head_dim)
+    k = maybe_lora(x, p["wk"], lora, "wk", lora_scale).reshape(b, 1, num_kv_heads, head_dim)
+    v = maybe_lora(x, p["wv"], lora, "wv", lora_scale).reshape(b, 1, num_kv_heads, head_dim)
+    pos = jnp.full((b, 1), cache_pos, dtype=jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+    kpos = jnp.arange(s_max)
+    valid = kpos <= cache_pos
+    # window may be a traced scalar (gemma3 per-layer local/global interleave)
+    w = jnp.asarray(window)
+    valid = valid & jnp.where(w > 0, kpos > cache_pos - w, True)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        o = kops.decode_attention(q, ck, cv, valid, num_heads // num_kv_heads)
+    else:
+        kk = _repeat_kv(ck, num_heads // num_kv_heads)
+        vv = _repeat_kv(cv, num_heads // num_kv_heads)
+        o = sdpa(q, kk.astype(q.dtype), vv.astype(q.dtype), valid[None, None, None, :])
+    out = maybe_lora(o.reshape(b, 1, num_heads * head_dim), p["wo"], lora, "wo", lora_scale)
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_decode_ring(x: jnp.ndarray, p: Params, lora: Optional[Params],
+                    cache: Params, *, num_heads: int, num_kv_heads: int,
+                    head_dim: int, cache_pos, rope_theta: float,
+                    window: int, lora_scale: float = 0.0) -> tuple:
+    """One-token decode against a RING-BUFFER KV cache of length W (sliding-
+    window layers keep only the last W tokens; gemma3 local layers).
+
+    cache k/v: (B, W, Hkv, hd); slot(abs) = abs % W; keys stored rope'd at
+    absolute positions so no re-rotation is needed.
+    """
+    from repro.models.lora import maybe_lora
+    b = x.shape[0]
+    W = cache["k"].shape[1]
+    q = maybe_lora(x, p["wq"], lora, "wq", lora_scale).reshape(b, 1, num_heads, head_dim)
+    k = maybe_lora(x, p["wk"], lora, "wk", lora_scale).reshape(b, 1, num_kv_heads, head_dim)
+    v = maybe_lora(x, p["wv"], lora, "wv", lora_scale).reshape(b, 1, num_kv_heads, head_dim)
+    pos = jnp.full((b, 1), cache_pos, dtype=jnp.int32)
+    q = apply_rope(q, pos, rope_theta)
+    k = apply_rope(k, pos, rope_theta)
+    slot = jnp.asarray(cache_pos) % W
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype),
+                                             slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype),
+                                             slot, axis=1)
+    # slots valid once pos+1 >= W; before that only slots <= pos
+    slots = jnp.arange(W)
+    valid = jnp.where(jnp.asarray(cache_pos) >= W - 1, True, slots <= cache_pos)
+    kk = _repeat_kv(ck, num_heads // num_kv_heads)
+    vv = _repeat_kv(cv, num_heads // num_kv_heads)
+    o = sdpa(q, kk.astype(q.dtype), vv.astype(q.dtype), valid[None, None, None, :])
+    out = maybe_lora(o.reshape(b, 1, num_heads * head_dim), p["wo"], lora, "wo", lora_scale)
+    return out, {"k": ck, "v": cv}
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp(x: jnp.ndarray, p: Params, act: str, lora: Optional[Params] = None,
+        lora_scale: float = 0.0) -> jnp.ndarray:
+    from repro.models import acts
+    from repro.models.lora import maybe_lora
+    if act == "swiglu":
+        g = maybe_lora(x, p["wg"], lora, "wg", lora_scale)
+        u = maybe_lora(x, p["wu"], lora, "wu", lora_scale)
+        h = jax.nn.silu(g) * u
+    elif act == "geglu":
+        g = maybe_lora(x, p["wg"], lora, "wg", lora_scale)
+        u = maybe_lora(x, p["wu"], lora, "wu", lora_scale)
+        h = jax.nn.gelu(g, approximate=True) * u
+    elif act == "sq_relu":  # nemotron-4: squared ReLU, no gate
+        h = jnp.square(jax.nn.relu(maybe_lora(x, p["wu"], lora, "wu", lora_scale)))
+    elif act == "gelu":
+        h = jax.nn.gelu(maybe_lora(x, p["wu"], lora, "wu", lora_scale), approximate=True)
+    else:
+        raise ValueError(f"unknown mlp act {act}")
+    return maybe_lora(acts.constrain(h, "btf"), p["wd"], lora, "wd", lora_scale)
+
+
+def mlp_param_shapes(d_model: int, d_ff: int, act: str) -> Dict[str, tuple]:
+    if act in ("swiglu", "geglu"):
+        return {"wg": (d_model, d_ff), "wu": (d_model, d_ff), "wd": (d_ff, d_model)}
+    return {"wu": (d_model, d_ff), "wd": (d_ff, d_model)}
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k router, shared experts, aux loss)
+# --------------------------------------------------------------------------
+
+def moe_block(x: jnp.ndarray, p: Params, *, num_experts: int, top_k: int,
+              act: str, num_shared: int = 0, capacity_factor: float = 1.25,
+              impl: str = "dense") -> tuple:
+    """Token-choice top-k MoE. Two interchangeable implementations:
+
+    * impl="dense": dispatch-einsum over all experts — FLOP cost is
+      E/topk x the routed compute, but every op is a plain einsum that GSPMD
+      shards perfectly (default; see EXPERIMENTS.md §Perf for the measured
+      trade-off);
+    * impl="capacity": GShard-style capacity gather/scatter — routed-only
+      FLOPs, but the sharded scatter forces involuntary resharding in the
+      current GSPMD/Shardy pipeline (kept for the §Perf experiment and for
+      single-device execution).
+    """
+    if impl == "dense":
+        return _moe_block_dense(x, p, num_experts=num_experts, top_k=top_k,
+                                act=act, num_shared=num_shared)
+    return _moe_block_capacity(x, p, num_experts=num_experts, top_k=top_k,
+                               act=act, num_shared=num_shared,
+                               capacity_factor=capacity_factor)
+
+
+def _router(xf, p, E, k):
+    logits = dense(xf.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+    me = jnp.mean(probs, axis=0)
+    one_hot_k = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot_k, axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return gate_vals, gate_idx, one_hot_k, aux
+
+
+def _moe_block_dense(x: jnp.ndarray, p: Params, *, num_experts: int,
+                     top_k: int, act: str, num_shared: int = 0) -> tuple:
+    from repro.models import acts
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gate_vals, gate_idx, one_hot_k, aux = _router(xf, p, num_experts, top_k)
+    comb = jnp.sum(one_hot_k * gate_vals[..., None], axis=1).astype(x.dtype)
+    h_in = acts.constrain(jnp.einsum("te,td->etd", comb != 0, xf), "etd")
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("etd,edf->etf", h_in, p["we_g"].astype(x.dtype))
+        u = jnp.einsum("etd,edf->etf", h_in, p["we_u"].astype(x.dtype))
+        hidden = (jax.nn.silu(g) if act == "swiglu"
+                  else jax.nn.gelu(g, approximate=True)) * u
+    else:
+        hidden = jnp.square(jax.nn.relu(
+            jnp.einsum("etd,edf->etf", h_in, p["we_u"].astype(x.dtype))))
+    eout = acts.constrain(
+        jnp.einsum("etf,efd->etd", hidden, p["we_d"].astype(x.dtype)), "etd")
+    out = jnp.einsum("etd,te->td", eout, comb)
+    if num_shared:
+        out = out + mlp(xf, {kk[7:]: v for kk, v in p.items()
+                             if kk.startswith("shared_")}, act)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_block_capacity(x: jnp.ndarray, p: Params, *, num_experts: int, top_k: int,
+              act: str, num_shared: int = 0,
+              capacity_factor: float = 1.25) -> tuple:
+    """Capacity-based gather/scatter MoE (token-choice top-k router).
+
+    Expert FLOPs are proportional to routed compute (E x C x d x ff with
+    C = ceil(topk*T/E * cf)) — a dense dispatch-einsum would cost E/topk x
+    more. Tokens beyond an expert's capacity are dropped (standard
+    Switch/GShard semantics; cf=1.25). Shardable on E over "model"; the
+    token->expert gather becomes the all-to-all on a real mesh.
+
+    x: (B, S, d). p: we_g/we_u: (E, d, ff), we_d: (E, ff, d), router: (d, E).
+    Returns (out, aux_loss).
+    """
+    from repro.models import acts
+    b, s, d = x.shape
+    T = b * s
+    E, k = num_experts, top_k
+    xf = x.reshape(T, d)
+    gate_vals, gate_idx, one_hot_k, aux = _router(xf, p, E, k)
+
+    # capacity rounded up to a 512 multiple so every dispatch intermediate
+    # stays shardable over (data x model) on 256-chip meshes
+    C = max(1, int(-(-k * T * capacity_factor // E)))
+    C = int(-(-C // 512) * 512) if C > 512 else C
+    PAD = 512
+    # position of each (token, slot) within its expert queue
+    flat_e = gate_idx.reshape(T * k)                       # (Tk,)
+    oh = acts.constrain(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), "te")
+    pos_in_e = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(T * k), flat_e]  # (Tk,)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, flat_e * C + pos_in_e, E * C)   # overflow -> dump rows
+
+    # dispatch: (E*C+PAD,) scatter of token ids and gates
+    token_of = jnp.full((E * C + PAD,), T, jnp.int32).at[slot].set(
+        jnp.arange(T * k, dtype=jnp.int32) // k)
+    gate_of = jnp.zeros((E * C + PAD,), jnp.float32).at[slot].set(
+        gate_vals.reshape(T * k))
+    token_of, gate_of = token_of[:E * C], gate_of[:E * C]
+
+    xpad = jnp.concatenate([xf, jnp.zeros((PAD, d), xf.dtype)], axis=0)
+    h_in = acts.constrain(xpad[token_of], "td")            # gather (no flops)
+    h_in = acts.constrain(h_in.reshape(E, C, d), "etd")
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", h_in, p["we_g"].astype(x.dtype))
+        u = jnp.einsum("ecd,edf->ecf", h_in, p["we_u"].astype(x.dtype))
+        hidden = (jax.nn.silu(g) if act == "swiglu"
+                  else jax.nn.gelu(g, approximate=True)) * u
+    else:
+        hidden = jnp.square(jax.nn.relu(
+            jnp.einsum("ecd,edf->ecf", h_in, p["we_u"].astype(x.dtype))))
+    eout = acts.constrain(
+        jnp.einsum("ecf,efd->ecd", hidden, p["we_d"].astype(x.dtype)), "etd")
+
+    # combine: scatter-add weighted expert outputs back to tokens
+    contrib = acts.constrain(
+        eout.reshape(E * C, d).astype(jnp.float32) * gate_of[:, None], "td")
+    out = acts.constrain(
+        jnp.zeros((T + PAD, d), jnp.float32).at[token_of].add(contrib), "td")
+    out = out[:T].astype(x.dtype)
+
+    if num_shared:
+        out = out + mlp(xf, {kk[7:]: v for kk, v in p.items()
+                             if kk.startswith("shared_")}, act)
+    return out.reshape(b, s, d), aux
+
+
+def moe_param_shapes(d_model: int, moe_ff: int, num_experts: int, act: str,
+                     num_shared: int, shared_ff: int) -> Dict[str, tuple]:
+    shapes = {"router": (d_model, num_experts)}
+    if act in ("swiglu", "geglu"):
+        shapes.update({"we_g": (num_experts, d_model, moe_ff),
+                       "we_u": (num_experts, d_model, moe_ff),
+                       "we_d": (num_experts, moe_ff, d_model)})
+    else:
+        shapes.update({"we_u": (num_experts, d_model, moe_ff),
+                       "we_d": (num_experts, moe_ff, d_model)})
+    if num_shared:
+        for k, v in mlp_param_shapes(d_model, shared_ff * num_shared, act).items():
+            shapes["shared_" + k] = v
+    return shapes

@@ -1,0 +1,107 @@
+"""LoRA parameter system (the objects EcoLoRA compresses and communicates).
+
+LoRA trees mirror the targeted weight leaves: for a target weight
+``W: (in, out)`` the tree holds ``{"a": (in, r), "b": (r, out)}`` and the
+effective projection is ``x @ W + (x @ a) @ b * (alpha / r)`` (Hu et al. 2022).
+``b`` is zero-initialised so step 0 is the base model. FFA-LoRA (Sun et al.
+2024) freezes ``a`` at its random init and trains only ``b``.
+
+The tree layout is STABLE and FLATTENABLE — `repro.core.segments` relies on
+`flatten_lora` producing a deterministic (name, array) ordering so round-robin
+segment boundaries are identical on every client and the server.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+def maybe_lora(x: jnp.ndarray, w: jnp.ndarray, lora: Optional[Params],
+               name: str, scale: float) -> jnp.ndarray:
+    """Apply ``x @ w`` plus the LoRA delta when ``lora[name]`` exists."""
+    y = jnp.einsum("...i,io->...o", x, w.astype(x.dtype))
+    if lora is not None and name in lora:
+        a = lora[name]["a"].astype(x.dtype)
+        b = lora[name]["b"].astype(x.dtype)
+        y = y + jnp.einsum("...r,ro->...o", jnp.einsum("...i,ir->...r", x, a), b) * scale
+    return y
+
+
+def lora_pair_shapes(in_dim: int, out_dim: int, rank: int) -> Dict[str, tuple]:
+    return {"a": (in_dim, rank), "b": (rank, out_dim)}
+
+
+def init_lora_pair(key, in_dim: int, out_dim: int, rank: int, dtype) -> Params:
+    # Kaiming-uniform a, zero b (standard LoRA init).
+    bound = 1.0 / np.sqrt(in_dim)
+    return {
+        "a": jax.random.uniform(key, (in_dim, rank), dtype, -bound, bound),
+        "b": jnp.zeros((rank, out_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# Tree flattening with deterministic ordering (protocol-critical)
+# --------------------------------------------------------------------------
+
+def flatten_lora(tree: Params, prefix: str = "") -> List[Tuple[str, jnp.ndarray]]:
+    """Deterministic (path, leaf) list, sorted by path at each level."""
+    out: List[Tuple[str, jnp.ndarray]] = []
+    for k in sorted(tree.keys()):
+        v = tree[k]
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.extend(flatten_lora(v, path))
+        else:
+            out.append((path, v))
+    return out
+
+
+def unflatten_lora(pairs: List[Tuple[str, jnp.ndarray]]) -> Params:
+    tree: Params = {}
+    for path, leaf in pairs:
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return tree
+
+
+def lora_size(tree: Params) -> int:
+    return sum(int(np.prod(l.shape)) for _, l in flatten_lora(tree))
+
+
+def split_ab(tree: Params) -> Tuple[Params, Params]:
+    """Split a LoRA tree into the A-leaves and B-leaves subtrees (the paper's
+    matrix-adaptive sparsification treats them with different schedules)."""
+    a_pairs, b_pairs = [], []
+    for path, leaf in flatten_lora(tree):
+        (a_pairs if path.endswith("/a") else b_pairs).append((path, leaf))
+    return unflatten_lora(a_pairs), unflatten_lora(b_pairs)
+
+
+def tree_map_lora(fn, *trees: Params) -> Params:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def zeros_like_lora(tree: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def freeze_a_mask(tree: Params) -> Params:
+    """FFA-LoRA gradient mask: 0 for every 'a' leaf, 1 for 'b' leaves."""
+    def walk(t):
+        out = {}
+        for k, v in t.items():
+            if isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = jnp.zeros_like(v) if k == "a" else jnp.ones_like(v)
+        return out
+    return walk(tree)

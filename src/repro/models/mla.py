@@ -1,0 +1,138 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437) in pure JAX.
+
+Prefill/train path expands the latent into per-head K/V. Decode path uses the
+*absorbed-matrix* formulation: the KV cache stores only the compressed latent
+``c_kv (B, S, kv_rank)`` plus the shared rope key ``k_rope (B, S, rope_dim)``;
+query up-projections are absorbed so attention scores are taken directly
+against the latent. This is the paper's memory trick adapted verbatim — it is
+what makes a 32k-context decode cache small (kv_rank + rope = 576 floats per
+token instead of 2 * H * head_dim = 32768).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NEG_INF, apply_rope, rms_norm
+from repro.models.lora import maybe_lora
+
+Params = Dict[str, Any]
+
+
+def mla_param_shapes(cfg) -> Dict[str, tuple]:
+    h, d = cfg.num_heads, cfg.d_model
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    shapes = {
+        "wkv_a": (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+        "kv_norm": (cfg.kv_lora_rank,),
+        "wkv_b": (cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+        "wo": (h * cfg.v_head_dim, d),
+    }
+    if cfg.q_lora_rank:
+        shapes.update({"wq_a": (d, cfg.q_lora_rank), "q_norm": (cfg.q_lora_rank,),
+                       "wq_b": (cfg.q_lora_rank, h * qk)})
+    else:
+        shapes["wq"] = (d, h * qk)
+    return shapes
+
+
+def _queries(x, p, lora, cfg, lora_scale):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = maybe_lora(x, p["wq_a"], lora, "wq_a", lora_scale)
+        q = maybe_lora(rms_norm(cq, p["q_norm"], cfg.norm_eps), p["wq_b"], lora, "wq_b", lora_scale)
+    else:
+        q = maybe_lora(x, p["wq"], lora, "wq", lora_scale)
+    q = q.reshape(b, s, h, qk)
+    return q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+
+
+def _latent(x, p, lora, cfg, lora_scale):
+    ckv = maybe_lora(x, p["wkv_a"], lora, "wkv_a", lora_scale)
+    c_kv = rms_norm(ckv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:]  # (b, s, rope_dim), shared across heads
+    return c_kv, k_rope
+
+
+def mla_attention(x: jnp.ndarray, p: Params, lora: Optional[Params], cfg, *,
+                  positions: jnp.ndarray, mask: Optional[jnp.ndarray],
+                  lora_scale: float = 0.0) -> jnp.ndarray:
+    """Full-sequence MLA. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _queries(x, p, lora, cfg, lora_scale)
+    c_kv, k_rope = _latent(x, p, lora, cfg, lora_scale)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    kv = maybe_lora(c_kv, p["wkv_b"], lora, "wkv_b", lora_scale)
+    kv = kv.reshape(b, s, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = kv[..., :cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return maybe_lora(o.reshape(b, s, h * cfg.v_head_dim), p["wo"], lora, "wo", lora_scale)
+
+
+def mla_prefill_cache(x, p, lora, cfg, lora_scale, positions) -> Params:
+    c_kv, k_rope = _latent(x, p, lora, cfg, lora_scale)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_decode(x: jnp.ndarray, p: Params, lora: Optional[Params], cfg, cache: Params, *,
+               cache_pos: jnp.ndarray, lora_scale: float = 0.0) -> Tuple[jnp.ndarray, Params]:
+    """Absorbed one-token decode. cache: c_kv (B, S, R), k_rope (B, S, rope)."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    s_max = cache["c_kv"].shape[1]
+    pos = jnp.full((b, 1), cache_pos, dtype=jnp.int32)
+
+    q_nope, q_rope = _queries(x, p, lora, cfg, lora_scale)  # (b,1,h,*)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_new, kr_new = _latent(x, p, lora, cfg, lora_scale)
+    kr_new = apply_rope(kr_new[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cache_pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), cache_pos, axis=1)
+
+    # absorb W_uk into q: q_abs (b, h, R). The absorbed matrix must include
+    # the LoRA delta on wkv_b (it is a lora_target on deepseek-v3).
+    wkv_b_eff = p["wkv_b"]
+    if lora is not None and "wkv_b" in lora:
+        wkv_b_eff = wkv_b_eff + (lora["wkv_b"]["a"] @ lora["wkv_b"]["b"]
+                                 ).astype(wkv_b_eff.dtype) * lora_scale
+    wkv_b = wkv_b_eff.reshape(cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., :cfg.qk_nope_dim]   # (R, h, dn)
+    w_uv = wkv_b[..., cfg.qk_nope_dim:]   # (R, h, dv)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs, c_kv.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(s_max)[None, None, :] <= cache_pos
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", probs, c_kv.astype(jnp.float32))  # (b,h,R)
+    o = jnp.einsum("bhr,rhd->bhd", lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = maybe_lora(o.reshape(b, 1, h * cfg.v_head_dim), p["wo"], lora, "wo", lora_scale)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_shapes(cfg, batch: int, seq: int) -> Dict[str, tuple]:
+    return {"c_kv": (batch, seq, cfg.kv_lora_rank),
+            "k_rope": (batch, seq, cfg.qk_rope_dim)}

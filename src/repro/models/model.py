@@ -1,0 +1,337 @@
+"""Top-level model API used by the trainer, the federated runtime, and the
+dry-run launcher.
+
+Public surface:
+  param_shapes(cfg) / lora_shapes(cfg)    -> nested shape trees
+  init_params(cfg, key) / init_lora(...)  -> materialised pytrees (small cfgs)
+  abstract_params(cfg) / abstract_lora    -> ShapeDtypeStruct trees (dry-run)
+  forward(params, lora, batch, cfg)       -> (logits-free) loss machinery
+  loss_fn / train_step pieces             -> chunked-vocab cross entropy
+  prefill / decode_step / cache_shapes    -> serving paths
+  input_specs(cfg, shape)                 -> ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import hybrid as hyb
+from repro.models import mamba2 as m2
+from repro.models import transformer as trf
+from repro.models.layers import mlp, rms_norm
+from repro.models.lora import init_lora_pair
+
+Params = Dict[str, Any]
+
+LOSS_CHUNK = 512  # sequence-chunked vocab projection (never materialise B*S*V)
+
+
+# --------------------------------------------------------------------------
+# shapes / init
+# --------------------------------------------------------------------------
+
+def _ssm_param_shapes(cfg) -> Dict[str, Any]:
+    layer = {"ln": (cfg.d_model,), "mixer": m2.mamba2_param_shapes(cfg)}
+    return {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "layers": jax.tree_util.tree_map(lambda s: (cfg.num_layers,) + s, layer,
+                                         is_leaf=lambda s: isinstance(s, tuple)),
+        "final_norm": (cfg.d_model,),
+        "unembed": (cfg.d_model, cfg.vocab_size),
+    }
+
+
+def _ssm_lora_shapes(cfg) -> Dict[str, Any]:
+    from repro.models.lora import lora_pair_shapes
+    shapes = m2.mamba2_param_shapes(cfg)
+    mixer = {t: lora_pair_shapes(shapes[t][0], shapes[t][1], cfg.lora_rank)
+             for t in ("in_proj", "out_proj") if t in cfg.lora_targets}
+    if not mixer:
+        return {}
+    return {"layers": jax.tree_util.tree_map(
+        lambda s: (cfg.num_layers,) + s, {"mixer": mixer},
+        is_leaf=lambda s: isinstance(s, tuple))}
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        return _ssm_param_shapes(cfg)
+    if cfg.family == "hybrid":
+        return hyb.hybrid_param_shapes(cfg)
+    return trf.trunk_param_shapes(cfg)
+
+
+def lora_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        return _ssm_lora_shapes(cfg)
+    if cfg.family == "hybrid":
+        return hyb.hybrid_lora_shapes(cfg)
+    return trf.trunk_lora_shapes(cfg)
+
+
+def _is_shape(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(i, int) for i in x)
+
+
+def abstract_tree(shapes: Dict[str, Any], dtype) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s, dtype), shapes, is_leaf=_is_shape)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(param_shapes(cfg), cfg.pdtype)
+
+
+def abstract_lora(cfg: ModelConfig):
+    return abstract_tree(lora_shapes(cfg), cfg.pdtype)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(shapes, is_leaf=_is_shape)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, shp in zip(keys, leaves):
+        if len(shp) >= 2:
+            fan_in = shp[-2]
+            out.append(jax.random.normal(k, shp, cfg.pdtype) / np.sqrt(fan_in))
+        else:
+            out.append(jnp.zeros(shp, cfg.pdtype))
+    params = jax.tree_util.tree_unflatten(treedef, out)
+    # mamba specials: dt_bias / A_log need sane ranges
+    def fix(p):
+        if "mixer" in str(type(p)):
+            return p
+        return p
+    def fix_mixers(tree):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k == "mixer":
+                    n = v["A_log"].shape
+                    v["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, n[-1], dtype=jnp.float32)
+                                         ).astype(cfg.pdtype) * jnp.ones(n, cfg.pdtype)
+                    v["dt_bias"] = jnp.full(v["dt_bias"].shape,
+                                            np.log(np.expm1(0.01)), cfg.pdtype)
+                    v["D"] = jnp.ones(v["D"].shape, cfg.pdtype)
+                else:
+                    fix_mixers(v)
+        return tree
+    return fix_mixers(params)
+
+
+def init_lora(cfg: ModelConfig, key) -> Params:
+    shapes = lora_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=_is_shape)
+    keys = jax.random.split(key, max(len(flat), 1))
+    out = []
+    for k, (path, shp) in zip(keys, flat):
+        last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if last == "a":
+            bound = 1.0 / np.sqrt(shp[-2])
+            out.append(jax.random.uniform(k, shp, cfg.pdtype, -bound, bound))
+        else:
+            out.append(jnp.zeros(shp, cfg.pdtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# trunk dispatch
+# --------------------------------------------------------------------------
+
+def _ssm_forward(params, lora, tokens, cfg, remat=True, collect_cache=False):
+    lora_scale = cfg.lora_alpha / cfg.lora_rank
+    h = params["embed"].astype(cfg.cdtype)[tokens]
+    llayers = lora.get("layers", {})
+
+    def body(carry, xs):
+        lp, ll = xs
+        out, mcache = m2.mamba2_forward(rms_norm(carry, lp["ln"], cfg.norm_eps),
+                                        lp["mixer"], cfg,
+                                        ll.get("mixer") if ll else None, lora_scale)
+        return carry + out, (mcache if collect_cache else 0)
+
+    bodyfn = jax.checkpoint(body) if remat else body
+    h, caches = jax.lax.scan(bodyfn, h, (params["layers"], llayers))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, jnp.float32(0.0), (caches if collect_cache else None)
+
+
+def trunk(params, lora, tokens, cfg, cond=None, remat=True, collect_cache=False):
+    if cfg.family == "ssm":
+        return _ssm_forward(params, lora, tokens, cfg, remat, collect_cache)
+    if cfg.family == "hybrid":
+        return hyb.hybrid_forward(params, lora, tokens, cfg, remat=remat,
+                                  collect_cache=collect_cache)
+    return trf.trunk_forward(params, lora, tokens, cfg, cond=cond, remat=remat,
+                             collect_cache=collect_cache)
+
+
+# --------------------------------------------------------------------------
+# chunked-vocab loss / logits
+# --------------------------------------------------------------------------
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_ce_loss(h: jnp.ndarray, labels: jnp.ndarray, params, cfg,
+                    mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h: (B, S, d) final hidden; labels: (B, S) next-token ids."""
+    w = unembed_matrix(params, cfg).astype(cfg.cdtype)
+    b, s, d = h.shape
+    chunk = min(LOSS_CHUNK, s)
+    if s % chunk:
+        chunk = s
+    nch = s // chunk
+    hc = h.reshape(b, nch, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nch, chunk).transpose(1, 0, 2)
+    mc = (mask.reshape(b, nch, chunk).transpose(1, 0, 2) if mask is not None
+          else jnp.ones_like(lc, jnp.float32))
+
+    @jax.checkpoint  # recompute the vocab projection in bwd, never stack it
+    def one(args):
+        from repro.models import acts
+        hh, ll, mm = args
+        logits = acts.constrain(
+            jnp.einsum("bsd,dv->bsv", hh, w).astype(jnp.float32), "blv")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mm), jnp.sum(mm)
+
+    if nch == 1:
+        tot, cnt = one((hc[0], lc[0], mc[0]))
+    else:
+        tot, cnt = jax.lax.map(one, (hc, lc, mc))
+        tot, cnt = jnp.sum(tot), jnp.sum(cnt)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(h: jnp.ndarray, params, cfg) -> jnp.ndarray:
+    w = unembed_matrix(params, cfg).astype(cfg.cdtype)
+    return jnp.einsum("bsd,dv->bsv", h[:, -1:], w).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def loss_fn(lora: Params, params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: ModelConfig, remat: bool = True) -> jnp.ndarray:
+    """Scalar loss; differentiable in ``lora`` only (base frozen)."""
+    h, aux, _ = trunk(params, lora, batch["tokens"], cfg,
+                      cond=batch.get("cond"), remat=remat)
+    loss = chunked_ce_loss(h, batch["labels"], params, cfg, batch.get("loss_mask"))
+    if cfg.use_mla and cfg.mtp_depth and "mtp" in params:
+        loss = loss + 0.3 * _mtp_loss(params, lora, batch, h, cfg)
+    return loss + cfg.router_aux_loss * aux
+
+
+def _mtp_loss(params, lora, batch, h, cfg):
+    """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+    [h_i ; emb(t_{i+1})]."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    emb_next = params["embed"].astype(cfg.cdtype)[labels]  # emb(t_{i+1})
+    u = jnp.concatenate([h, emb_next], axis=-1)
+    x = jnp.einsum("bsd,dk->bsk", u, params["mtp"]["proj"].astype(cfg.cdtype))
+    positions = jnp.arange(x.shape[1])
+    bp = jax.tree_util.tree_map(lambda a: a[0], params["mtp"]["block"])
+    x2, _, _ = trf._block_body(x, bp, {}, cfg, "mlp", positions, 0,
+                               (None, None, None), 0.0, False)
+    x2 = rms_norm(x2, params["mtp"]["norm"], cfg.norm_eps)
+    lab2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)  # t+2
+    return chunked_ce_loss(x2, lab2, params, cfg)
+
+
+def prefill(params: Params, lora: Params, batch: Dict[str, jnp.ndarray],
+            cfg: ModelConfig, remat: bool = True):
+    """Prefill: final hidden + populated caches + last-position logits."""
+    h, _, caches = trunk(params, lora, batch["tokens"], cfg,
+                         cond=batch.get("cond"), remat=remat, collect_cache=True)
+    if cfg.family == "ssm":
+        caches = {"layers": caches}
+    if cfg.family == "hybrid":
+        idx = jnp.arange(0, cfg.num_layers, cfg.attn_every)
+        caches = {"mamba": caches["mamba"], "kv": jax.tree_util.tree_map(
+            lambda a: a[idx], caches["kv"])}
+    return logits_last(h, params, cfg), caches
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    if cfg.family == "ssm":
+        mc = m2.mamba2_cache_shapes(cfg, batch)
+        return {"layers": {k: (cfg.num_layers,) + v for k, v in mc.items()}}
+    if cfg.family == "hybrid":
+        return hyb.hybrid_cache_shapes(cfg, batch, seq)
+    return trf.trunk_cache_shapes(cfg, batch, seq)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int):
+    def dt_for(path_leaf_shape):
+        return cfg.cdtype
+    shapes = cache_shapes(cfg, batch, seq)
+
+    def mk(path, s):
+        last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dt = jnp.float32 if last in ("ssd",) else cfg.cdtype
+        return jax.ShapeDtypeStruct(s, dt)
+    return jax.tree_util.tree_map_with_path(mk, shapes, is_leaf=_is_shape)
+
+
+def decode_step(params: Params, lora: Params, token: jnp.ndarray, cache: Params,
+                cache_pos, cfg: ModelConfig):
+    """One-token serve step. Returns (logits (B,1,V), new_cache)."""
+    if cfg.family == "ssm":
+        lora_scale = cfg.lora_alpha / cfg.lora_rank
+        h = params["embed"].astype(cfg.cdtype)[token]
+        llayers = lora.get("layers", {})
+
+        def body(carry, xs):
+            lp, ll, mcache = xs
+            out, nmc = m2.mamba2_decode(rms_norm(carry, lp["ln"], cfg.norm_eps),
+                                        lp["mixer"], cfg, mcache,
+                                        ll.get("mixer") if ll else None, lora_scale)
+            return carry + out, nmc
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], llayers, cache["layers"]))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return logits_last(h, params, cfg), {"layers": new_cache}
+    if cfg.family == "hybrid":
+        h, new_cache = hyb.hybrid_decode(params, lora, token, cache, cache_pos, cfg)
+        return logits_last(h, params, cfg), new_cache
+    h, new_cache = trf.trunk_decode(params, lora, token, cache, cache_pos, cfg)
+    return logits_last(h, params, cfg), new_cache
+
+
+# --------------------------------------------------------------------------
+# input specs (dry-run stand-ins; modality frontends are stubs per DESIGN.md)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": tok}
+    else:  # decode: one new token against a seq_len cache
+        specs = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.cross_attn_every and shape.kind != "decode":
+        specs["cond"] = jax.ShapeDtypeStruct((b, cfg.cond_tokens, cfg.cond_dim),
+                                             cfg.cdtype)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key) -> Dict[str, jnp.ndarray]:
+    """Concrete random batch for smoke tests / fedsim."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+           "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size)}
+    if cfg.cross_attn_every:
+        out["cond"] = jax.random.normal(k3, (batch, cfg.cond_tokens, cfg.cond_dim),
+                                        cfg.cdtype)
+    return out

@@ -1,0 +1,700 @@
+"""Attention-family transformer assembly (dense / moe / vlm / audio).
+
+Design constraints that shaped this file:
+  * scan-over-layers with stacked params — keeps compiled HLO size O(1) in
+    depth so 61-layer/671B configs lower on one CPU core;
+  * chunked attention (lax.map over query blocks, masks computed from
+    positions on the fly) — a 32k x 32k logits tensor would be ~1 GB/device
+    even sharded 256-way, so full-mask materialisation is never allowed;
+  * chunked MoE dispatch (lax.map over token blocks) — bounds the (E, T, d)
+    dispatch tensor;
+  * optional cross-attention, either every layer (musicgen text conditioning)
+    or grouped every k-th layer (llama-3.2-vision image layers);
+  * per-layer sliding-window/global mask interleave (gemma3 5:1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mla as mla_mod
+from repro.models.layers import (NEG_INF, apply_rope, mlp, mlp_param_shapes,
+                                 moe_block, moe_param_shapes, rms_norm)
+from repro.models.lora import lora_pair_shapes, maybe_lora
+
+Params = Dict[str, Any]
+
+Q_CHUNK = 1024       # query-block size for chunked attention
+MOE_CHUNK = 1024     # token-block size for chunked MoE dispatch
+
+
+# --------------------------------------------------------------------------
+# chunked attention core
+# --------------------------------------------------------------------------
+
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   q_start: int = 0, window=0, scale: Optional[float] = None,
+                   causal: bool = True, q_chunk: int = Q_CHUNK) -> jnp.ndarray:
+    """q: (B,Sq,H,Dq); k: (B,Skv,H,Dq); v: (B,Skv,H,Dv). Chunked over Sq.
+
+    ``window`` may be a traced scalar (0 => full attention) so gemma3's
+    local/global interleave stays inside one scanned layer body.
+    """
+    from repro.models import acts
+    b, sq, hh, dq = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dq)
+    kpos = jnp.arange(skv)
+
+    @jax.checkpoint  # recompute logits/probs in bwd — never stack them per chunk
+    def block(args):
+        qc, q0 = args  # qc: (B, C, H, Dq); q0: scalar start position
+        qpos = q0 + jnp.arange(qc.shape[1]) + q_start
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc, k).astype(jnp.float32) * scale
+        logits = acts.constrain(logits, "bhqk")
+        m = jnp.ones((qc.shape[1], skv), bool)
+        if causal:
+            m = m & (kpos[None, :] <= qpos[:, None])
+        w = jnp.asarray(window)
+        m = m & jnp.where(w > 0, kpos[None, :] > qpos[:, None] - w, True)
+        logits = jnp.where(m[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if sq <= q_chunk:
+        return block((q, jnp.int32(0)))
+    nblk = sq // q_chunk
+    assert sq % q_chunk == 0, f"seq {sq} % q_chunk {q_chunk} != 0"
+    qb = q.reshape(b, nblk, q_chunk, hh, dq).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nblk, dtype=jnp.int32) * q_chunk
+    out = jax.lax.map(block, (qb, starts))  # (nblk, B, C, H, Dv)
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hh, v.shape[-1])
+
+
+def _repeat_kv(x: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def gqa_self_attention(x: jnp.ndarray, p: Params, lora: Optional[Params], cfg, *,
+                       positions: jnp.ndarray, window=0,
+                       lora_scale: float = 0.0) -> Tuple[jnp.ndarray, Params]:
+    """Full-sequence GQA self-attention; also returns the layer KV cache."""
+    from repro.models import acts
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = maybe_lora(x, p["wq"], lora, "wq", lora_scale).reshape(b, s, cfg.num_heads, hd)
+    k = maybe_lora(x, p["wk"], lora, "wk", lora_scale).reshape(b, s, cfg.num_kv_heads, hd)
+    v = maybe_lora(x, p["wv"], lora, "wv", lora_scale).reshape(b, s, cfg.num_kv_heads, hd)
+    q = acts.constrain(apply_rope(q, positions, cfg.rope_theta), "bshd")
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = attention_core(q, acts.constrain(_repeat_kv(k, cfg.num_heads // cfg.num_kv_heads), "bshd"),
+                       acts.constrain(_repeat_kv(v, cfg.num_heads // cfg.num_kv_heads), "bshd"),
+                       window=window)
+    out = maybe_lora(o.reshape(b, s, cfg.num_heads * hd), p["wo"], lora, "wo", lora_scale)
+    return out, {"k": k, "v": v}
+
+
+def cross_attention(x: jnp.ndarray, p: Params, lora: Optional[Params], cfg,
+                    xk: jnp.ndarray, xv: jnp.ndarray,
+                    lora_scale: float = 0.0) -> jnp.ndarray:
+    """Cross-attn to conditioning KV. xk/xv: (B, Nc, Hkv, hd) precomputed."""
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = maybe_lora(x, p["wq"], lora, "wq", lora_scale).reshape(b, s, cfg.num_heads, hd)
+    o = attention_core(q, _repeat_kv(xk, cfg.num_heads // cfg.num_kv_heads),
+                       _repeat_kv(xv, cfg.num_heads // cfg.num_kv_heads), causal=False)
+    return maybe_lora(o.reshape(b, s, cfg.num_heads * hd), p["wo"], lora, "wo", lora_scale)
+
+
+def cross_kv(cond: jnp.ndarray, p: Params, lora: Optional[Params], cfg,
+             lora_scale: float = 0.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, nc, _ = cond.shape
+    hd = cfg.hd
+    k = maybe_lora(cond, p["wk"], lora, "wk", lora_scale).reshape(b, nc, cfg.num_kv_heads, hd)
+    v = maybe_lora(cond, p["wv"], lora, "wv", lora_scale).reshape(b, nc, cfg.num_kv_heads, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# chunked MoE
+# --------------------------------------------------------------------------
+
+def moe_chunked(x: jnp.ndarray, p: Params, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk over the SEQ dim (batch stays sharded on 'data') so the (E, C, d)
+    capacity-dispatch tensor is bounded: global budget ~32 GiB."""
+    b, s, d = x.shape
+    budget = 32 * 2**30
+    if cfg.moe_impl == "capacity":
+        # dispatch slots = topk * tokens * cf; bytes ~ slots * d * 2
+        per_tok = max(int(cfg.experts_per_token * 1.25 * b * d * 2), 1)
+    else:
+        per_tok = max(cfg.num_experts * b * d * 2, 1)
+    c = max(1, budget // per_tok)
+    c = min(c, s)
+    c = max(cc for cc in range(1, c + 1) if s % cc == 0)  # divisor of s
+    nch = s // c
+
+    # hoist the FSDP expert-weight all-gather OUT of the chunk loop: without
+    # this, every chunk iteration re-gathers the (E, d, ff) shards — 64
+    # re-gathers/layer on deepseek-v3 (measured in EXPERIMENTS.md §Perf)
+    from repro.models import acts
+    p = {kk: (acts.constrain(v, "ew3") if kk.startswith("we_") else v)
+         for kk, v in p.items()}
+
+    @jax.checkpoint
+    def one(xc):  # xc: (B, c, d)
+        return moe_block(xc, p, num_experts=cfg.num_experts,
+                         top_k=cfg.experts_per_token, act=cfg.mlp_act,
+                         num_shared=cfg.num_shared_experts,
+                         impl=cfg.moe_impl)
+
+    if nch == 1:
+        return one(x)
+    xc = x.reshape(b, nch, c, d).transpose(1, 0, 2, 3)
+    out, aux = jax.lax.map(one, xc)  # (nch, B, c, d)
+    return out.transpose(1, 0, 2, 3).reshape(b, s, d), jnp.mean(aux)
+
+
+# --------------------------------------------------------------------------
+# parameter shapes (attention families)
+# --------------------------------------------------------------------------
+
+def _attn_shapes(cfg) -> Dict[str, tuple]:
+    if cfg.use_mla:
+        return mla_mod.mla_param_shapes(cfg)
+    hd = cfg.hd
+    return {"wq": (cfg.d_model, cfg.num_heads * hd),
+            "wk": (cfg.d_model, cfg.num_kv_heads * hd),
+            "wv": (cfg.d_model, cfg.num_kv_heads * hd),
+            "wo": (cfg.num_heads * hd, cfg.d_model)}
+
+
+def _ffn_shapes(cfg, layer_kind: str) -> Dict[str, tuple]:
+    if layer_kind == "moe":
+        return moe_param_shapes(cfg.d_model, cfg.moe_d_ff, cfg.num_experts,
+                                cfg.mlp_act, cfg.num_shared_experts,
+                                cfg.moe_d_ff)
+    return mlp_param_shapes(cfg.d_model, cfg.d_ff, cfg.mlp_act)
+
+
+def _block_shapes(cfg, layer_kind: str, with_xattn: bool) -> Dict[str, Any]:
+    sh: Dict[str, Any] = {
+        "ln1": (cfg.d_model,),
+        "attn": _attn_shapes(cfg),
+        "ln2": (cfg.d_model,),
+        "ffn": _ffn_shapes(cfg, layer_kind),
+    }
+    if with_xattn:
+        sh["lnx"] = (cfg.d_model,)
+        sh["xattn"] = _attn_shapes(cfg)
+    return sh
+
+
+def _stack(shapes: Dict[str, Any], n: int) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(lambda s: (n,) + s, shapes,
+                                  is_leaf=lambda s: isinstance(s, tuple))
+
+
+def layer_plan(cfg) -> Dict[str, int]:
+    """How the depth axis is organised into scan groups."""
+    plan = {}
+    if cfg.num_experts:
+        plan["moe"] = cfg.num_layers - cfg.first_dense_layers
+        if cfg.first_dense_layers:
+            plan["dense"] = cfg.first_dense_layers
+    elif cfg.cross_attn_every > 1:
+        plan["xgroups"] = cfg.num_layers // cfg.cross_attn_every
+    elif cfg.swa_windowed_cache and cfg.sliding_window and cfg.global_attn_every:
+        k = cfg.global_attn_every
+        plan["swa_groups"] = cfg.num_layers // k
+        plan["swa_tail"] = cfg.num_layers % k   # trailing local layers
+    else:
+        plan["dense"] = cfg.num_layers
+    return plan
+
+
+def trunk_param_shapes(cfg) -> Dict[str, Any]:
+    shapes: Dict[str, Any] = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+    }
+    if not cfg.tie_embeddings:
+        shapes["unembed"] = (cfg.d_model, cfg.vocab_size)
+    plan = layer_plan(cfg)
+    xa_every_layer = cfg.cross_attn_every == 1
+    if "dense" in plan and cfg.num_experts == 0:
+        shapes["blocks"] = _stack(_block_shapes(cfg, "mlp", xa_every_layer), plan["dense"])
+    if cfg.num_experts:
+        shapes["moe_blocks"] = _stack(_block_shapes(cfg, "moe", False), plan["moe"])
+        if plan.get("dense"):
+            dense_cfg_ff = cfg.d_ff if cfg.d_ff else 4 * cfg.d_model
+            dsh = _block_shapes(cfg, "mlp", False)
+            dsh["ffn"] = mlp_param_shapes(cfg.d_model, dense_cfg_ff, cfg.mlp_act)
+            shapes["dense_blocks"] = _stack(dsh, plan["dense"])
+    if "xgroups" in plan:
+        g = plan["xgroups"]
+        k = cfg.cross_attn_every
+        shapes["self_blocks"] = _stack(_block_shapes(cfg, "mlp", False), g * (k - 1))
+        shapes["cross_blocks"] = _stack(_block_shapes(cfg, "mlp", True), g)
+    if "swa_groups" in plan:
+        g = plan["swa_groups"]
+        k = cfg.global_attn_every
+        n_local = g * (k - 1) + plan.get("swa_tail", 0)
+        shapes["local_blocks"] = _stack(_block_shapes(cfg, "mlp", False), n_local)
+        shapes["global_blocks"] = _stack(_block_shapes(cfg, "mlp", False), g)
+        shapes.pop("blocks", None)
+    if cfg.cross_attn_every:
+        shapes["cond_proj"] = (cfg.cond_dim, cfg.d_model)
+    if cfg.use_mla and cfg.mtp_depth:
+        mtp = _block_shapes(cfg, "mlp", False)
+        mtp["ffn"] = mlp_param_shapes(cfg.d_model, cfg.d_ff or 4 * cfg.d_model, cfg.mlp_act)
+        shapes["mtp"] = {"proj": (2 * cfg.d_model, cfg.d_model),
+                         "norm": (cfg.d_model,), "block": _stack(mtp, cfg.mtp_depth)}
+    return shapes
+
+
+def trunk_lora_shapes(cfg) -> Dict[str, Any]:
+    """LoRA tree parallel to trunk params, only for cfg.lora_targets leaves."""
+    r = cfg.lora_rank
+
+    def for_attn_block(attn_shapes: Dict[str, tuple], prefix: str) -> Dict[str, Any]:
+        out = {}
+        for name, shp in attn_shapes.items():
+            if name in cfg.lora_targets and len(shp) == 2:
+                out[name] = lora_pair_shapes(shp[0], shp[1], r)
+        return out
+
+    shapes = trunk_param_shapes(cfg)
+    lora: Dict[str, Any] = {}
+    for group in ("blocks", "moe_blocks", "dense_blocks", "self_blocks",
+                  "cross_blocks", "local_blocks", "global_blocks"):
+        if group not in shapes:
+            continue
+        n = shapes[group]["ln1"][0]
+        attn = {k: v[1:] for k, v in shapes[group]["attn"].items()
+                if isinstance(v, tuple)}
+        ltree: Dict[str, Any] = {"attn": for_attn_block(attn, group)}
+        if "xattn" in shapes[group]:
+            xa = {k: v[1:] for k, v in shapes[group]["xattn"].items() if isinstance(v, tuple)}
+            ltree["xattn"] = for_attn_block(xa, group)
+        ltree = {k: v for k, v in ltree.items() if v}
+        if ltree:
+            lora[group] = _stack(ltree, n)
+    return lora
+
+
+# --------------------------------------------------------------------------
+# execution: forward / prefill / decode
+# --------------------------------------------------------------------------
+
+def _layer_window(cfg, idx):
+    """Per-layer attention window (gemma3 local:global interleave)."""
+    if not cfg.sliding_window:
+        return 0
+    if not cfg.global_attn_every:
+        return cfg.sliding_window
+    is_global = ((idx + 1) % cfg.global_attn_every) == 0
+    return jnp.where(is_global, 0, cfg.sliding_window)
+
+
+def _self_attn(h, bp, bl, cfg, positions, window, lora_scale):
+    hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        s = hn.shape[1]
+        out = _mla_chunked(hn, bp["attn"], bl.get("attn"), cfg, positions, lora_scale)
+        cache = mla_mod.mla_prefill_cache(hn, bp["attn"], bl.get("attn"), cfg, lora_scale, positions)
+    else:
+        out, cache = gqa_self_attention(hn, bp["attn"], bl.get("attn"), cfg,
+                                        positions=positions, window=window,
+                                        lora_scale=lora_scale)
+    return out, cache
+
+
+def _mla_chunked(x, p, lora, cfg, positions, lora_scale):
+    """MLA full-seq == standard attention with concat(nope, rope) q/k dims."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = mla_mod._queries(x, p, lora, cfg, lora_scale)
+    c_kv, k_rope = mla_mod._latent(x, p, lora, cfg, lora_scale)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    kv = maybe_lora(c_kv, p["wkv_b"], lora, "wkv_b", lora_scale)
+    kv = kv.reshape(b, s, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope, v = kv[..., :cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, cfg.qk_rope_dim))], axis=-1)
+    o = attention_core(q, k, v, scale=1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim))
+    return maybe_lora(o.reshape(b, s, h * cfg.v_head_dim), p["wo"], lora, "wo", lora_scale)
+
+
+def _ffn(h, bp, bl, cfg, kind, lora_scale):
+    hn = rms_norm(h, bp["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        return moe_chunked(hn, bp["ffn"], cfg)
+    return mlp(hn, bp["ffn"], cfg.mlp_act, bl.get("ffn"), lora_scale), jnp.float32(0.0)
+
+
+def _block_body(h, bp, bl, cfg, kind, positions, window, cond_kv, lora_scale,
+                collect_cache: bool):
+    attn_out, cache = _self_attn(h, bp, bl, cfg, positions, window, lora_scale)
+    h = h + attn_out
+    if "xattn" in bp:
+        hx = rms_norm(h, bp["lnx"], cfg.norm_eps)
+        # per-layer cross KV from projected conditioning tokens
+        cond = cond_kv[2]
+        ck, cv = cross_kv(cond, bp["xattn"], bl.get("xattn"), cfg, lora_scale)
+        h = h + cross_attention(hx, bp["xattn"], bl.get("xattn"), cfg, ck, cv, lora_scale)
+        if collect_cache:
+            cache = dict(cache, xk=ck, xv=cv)
+    ffn_out, aux = _ffn(h, bp, bl, cfg, kind, lora_scale)
+    return h + ffn_out, aux, cache
+
+
+def _scan_blocks(h, blocks_p, blocks_l, cfg, kind, positions, cond, start_idx,
+                 lora_scale, remat, collect_cache=False):
+    n = jax.tree_util.tree_leaves(blocks_p)[0].shape[0]
+    idxs = start_idx + jnp.arange(n)
+
+    def body(carry, xs):
+        bp, bl, idx = xs
+        window = _layer_window(cfg, idx)
+        hh, aux, cache = _block_body(carry, bp, bl, cfg, kind, positions, window,
+                                     (None, None, cond), lora_scale, collect_cache)
+        return hh, (aux, cache if collect_cache else 0)
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, (auxs, caches) = jax.lax.scan(body, h, (blocks_p, blocks_l, idxs))
+    return h, jnp.sum(auxs), (caches if collect_cache else None)
+
+
+def trunk_forward(params: Params, lora: Params, tokens: jnp.ndarray, cfg, *,
+                  cond: Optional[jnp.ndarray] = None, remat: bool = True,
+                  collect_cache: bool = False):
+    """Returns (h_final (B,S,d) normalised, aux_loss, caches-or-None)."""
+    from repro.models import acts
+    lora_scale = cfg.lora_alpha / cfg.lora_rank
+    b, s = tokens.shape
+    h = acts.constrain(params["embed"].astype(cfg.cdtype)[tokens], "btd")
+    positions = jnp.arange(s)
+    cond_p = None
+    if cfg.cross_attn_every:
+        assert cond is not None, f"{cfg.name} requires conditioning embeddings"
+        cond_p = jnp.einsum("bnc,cd->bnd", cond.astype(cfg.cdtype),
+                            params["cond_proj"].astype(cfg.cdtype))
+
+    aux_total = jnp.float32(0.0)
+    caches: Dict[str, Any] = {}
+
+    if cfg.num_experts:
+        if "dense_blocks" in params:
+            h, aux, c = _scan_blocks(h, params["dense_blocks"], lora.get("dense_blocks", {}),
+                                     cfg, "mlp", positions, None, 0, lora_scale, remat,
+                                     collect_cache)
+            aux_total += aux
+            if collect_cache:
+                caches["dense_blocks"] = c
+        h, aux, c = _scan_blocks(h, params["moe_blocks"], lora.get("moe_blocks", {}),
+                                 cfg, "moe", positions, None, cfg.first_dense_layers,
+                                 lora_scale, remat, collect_cache)
+        aux_total += aux
+        if collect_cache:
+            caches["moe_blocks"] = c
+    elif "local_blocks" in params:
+        g = cfg.num_layers // cfg.global_attn_every
+        k = cfg.global_attn_every
+        tail = cfg.num_layers % cfg.global_attn_every
+        lp_all = params["local_blocks"]          # (g*(k-1)+tail, ...)
+        ll_all = lora.get("local_blocks", {})
+        take = lambda t, a, b: jax.tree_util.tree_map(lambda x: x[a:b], t)
+        lp_g = jax.tree_util.tree_map(
+            lambda a: a[: g * (k - 1)].reshape((g, k - 1) + a.shape[1:]), lp_all)
+        ll_g = jax.tree_util.tree_map(
+            lambda a: a[: g * (k - 1)].reshape((g, k - 1) + a.shape[1:]), ll_all)
+
+        def swa_group(carry, xs):
+            lpg, llg, gp, gl = xs
+            hh = carry
+
+            def inner(c2, xs2):
+                bp, bl = xs2
+                out, aux, cache = _block_body(c2, bp, bl, cfg, "mlp", positions,
+                                              cfg.sliding_window,
+                                              (None, None, None), lora_scale,
+                                              collect_cache)
+                return out, (aux, cache if collect_cache else 0)
+            hh, (auxs, lc) = jax.lax.scan(inner, hh, (lpg, llg))
+            out, auxx, gc = _block_body(hh, gp, gl, cfg, "mlp", positions, 0,
+                                        (None, None, None), lora_scale,
+                                        collect_cache)
+            return out, (jnp.sum(auxs) + auxx, (lc, gc) if collect_cache else 0)
+
+        gb = jax.checkpoint(swa_group) if remat else swa_group
+        h, (auxs, gc) = jax.lax.scan(
+            gb, h, (lp_g, ll_g, params["global_blocks"],
+                    lora.get("global_blocks", {})))
+        aux_total += jnp.sum(auxs)
+        lc_tail = None
+        if tail:
+            h, auxt, lc_tail = _scan_blocks(
+                h, take(lp_all, g * (k - 1), None),
+                take(ll_all, g * (k - 1), None) if ll_all else {},
+                cfg, "mlp", positions, None, 0, lora_scale, remat, collect_cache)
+            # tail layers are local: enforce window via _layer_window? the
+            # scan path uses _layer_window(cfg, idx) which needs global_every;
+            # tail indices never hit the global residue, so windows apply.
+            aux_total += auxt
+        if collect_cache:
+            lc, gcache = gc
+            local_c = jax.tree_util.tree_map(
+                lambda a: a.reshape((g * (k - 1),) + a.shape[2:]), lc)
+            if lc_tail is not None:
+                local_c = jax.tree_util.tree_map(
+                    lambda a, t: jnp.concatenate([a, t], 0), local_c, lc_tail)
+            # keep only the trailing window of local KV, in ring order
+            W = min(cfg.sliding_window, h.shape[1])
+            S = h.shape[1]
+
+            def to_ring(a):  # (L, B, S, Hkv, hd) -> (L, B, W, Hkv, hd)
+                lastw = a[:, :, S - W:]
+                offs = (jnp.arange(W) - (S - W)) % W
+                return jnp.take(lastw, offs, axis=2)
+            local_c = {kk: to_ring(vv) for kk, vv in local_c.items()}
+            caches["local_blocks"] = local_c
+            caches["global_blocks"] = gcache
+    elif cfg.cross_attn_every > 1:
+        g = cfg.num_layers // cfg.cross_attn_every
+        k = cfg.cross_attn_every
+        sp = params["self_blocks"]   # (g*(k-1), ...)
+        cp = params["cross_blocks"]  # (g, ...)
+        sl = lora.get("self_blocks", {})
+        cl = lora.get("cross_blocks", {})
+        sp_g = jax.tree_util.tree_map(lambda a: a.reshape((g, k - 1) + a.shape[1:]), sp)
+        sl_g = jax.tree_util.tree_map(lambda a: a.reshape((g, k - 1) + a.shape[1:]), sl)
+
+        def group_body(carry, xs):
+            spg, slg, cpg, clg = xs
+            hh = carry
+
+            def inner(c2, xs2):
+                bp, bl = xs2
+                out, aux, cache = _block_body(c2, bp, bl, cfg, "mlp", positions, 0,
+                                              (None, None, cond_p), lora_scale, collect_cache)
+                return out, (aux, cache if collect_cache else 0)
+            hh, (auxs, sc) = jax.lax.scan(inner, hh, (spg, slg))
+            out, auxx, cc = _block_body(hh, cpg, clg, cfg, "mlp", positions, 0,
+                                        (None, None, cond_p), lora_scale, collect_cache)
+            return out, (jnp.sum(auxs) + auxx,
+                         (sc, cc) if collect_cache else 0)
+
+        gb = jax.checkpoint(group_body) if remat else group_body
+        h, (auxs, gc) = jax.lax.scan(gb, h, (sp_g, sl_g, cp, cl))
+        aux_total += jnp.sum(auxs)
+        if collect_cache:
+            sc, cc = gc  # sc leaves: (g, k-1, ...) -> flatten depth axis
+            caches["self_blocks"] = jax.tree_util.tree_map(
+                lambda a: a.reshape((g * (k - 1),) + a.shape[2:]), sc)
+            caches["cross_blocks"] = cc
+    else:
+        h, aux, c = _scan_blocks(h, params["blocks"], lora.get("blocks", {}), cfg,
+                                 "mlp", positions, cond_p, 0, lora_scale, remat,
+                                 collect_cache)
+        aux_total += aux
+        if collect_cache:
+            caches["blocks"] = c
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux_total, (caches if collect_cache else None)
+
+
+# --------------------------------------------------------------------------
+# decode (one token, layered KV caches)
+# --------------------------------------------------------------------------
+
+def trunk_cache_shapes(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    plan = layer_plan(cfg)
+
+    def attn_cache(n):
+        if cfg.use_mla:
+            base = mla_mod.mla_cache_shapes(cfg, batch, seq)
+        else:
+            base = {"k": (batch, seq, cfg.num_kv_heads, cfg.hd),
+                    "v": (batch, seq, cfg.num_kv_heads, cfg.hd)}
+        return {k: (n,) + v for k, v in base.items()}
+
+    shapes: Dict[str, Any] = {}
+    if cfg.num_experts:
+        shapes["moe_blocks"] = attn_cache(plan["moe"])
+        if plan.get("dense"):
+            shapes["dense_blocks"] = attn_cache(plan["dense"])
+    elif "swa_groups" in plan:
+        g = plan["swa_groups"]
+        k = cfg.global_attn_every
+        n_local = g * (k - 1) + plan.get("swa_tail", 0)
+        W = min(cfg.sliding_window, seq)
+        shapes["local_blocks"] = {
+            "k": (n_local, batch, W, cfg.num_kv_heads, cfg.hd),
+            "v": (n_local, batch, W, cfg.num_kv_heads, cfg.hd)}
+        shapes["global_blocks"] = attn_cache(g)
+    elif cfg.cross_attn_every > 1:
+        g = plan["xgroups"]
+        k = cfg.cross_attn_every
+        shapes["self_blocks"] = attn_cache(g * (k - 1))
+        cb = attn_cache(g)
+        cb["xk"] = (g, batch, cfg.cond_tokens, cfg.num_kv_heads, cfg.hd)
+        cb["xv"] = (g, batch, cfg.cond_tokens, cfg.num_kv_heads, cfg.hd)
+        shapes["cross_blocks"] = cb
+    else:
+        c = attn_cache(cfg.num_layers)
+        if cfg.cross_attn_every == 1:
+            c["xk"] = (cfg.num_layers, batch, cfg.cond_tokens, cfg.num_kv_heads, cfg.hd)
+            c["xv"] = (cfg.num_layers, batch, cfg.cond_tokens, cfg.num_kv_heads, cfg.hd)
+        shapes["blocks"] = c
+    return shapes
+
+
+def _decode_block(h, bp, bl, cfg, kind, cache, cache_pos, window, lora_scale):
+    from repro.models.layers import gqa_decode
+    hn = rms_norm(h, bp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        out, new_attn = mla_mod.mla_decode(hn, bp["attn"], bl.get("attn"), cfg,
+                                           {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]},
+                                           cache_pos=cache_pos, lora_scale=lora_scale)
+        new_cache = dict(cache, **new_attn)
+    else:
+        out, new_attn = gqa_decode(hn, bp["attn"], bl.get("attn"),
+                                   {"k": cache["k"], "v": cache["v"]},
+                                   num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                                   head_dim=cfg.hd, cache_pos=cache_pos,
+                                   rope_theta=cfg.rope_theta, window=window,
+                                   lora_scale=lora_scale)
+        new_cache = dict(cache, **new_attn)
+    h = h + out
+    if "xattn" in bp and "xk" in cache:
+        hx = rms_norm(h, bp["lnx"], cfg.norm_eps)
+        h = h + cross_attention(hx, bp["xattn"], bl.get("xattn"), cfg,
+                                cache["xk"], cache["xv"], lora_scale)
+    ffn_out, _ = _ffn(h, bp, bl, cfg, kind, lora_scale)
+    return h + ffn_out, new_cache
+
+
+def _decode_scan(h, blocks_p, blocks_l, cfg, kind, cache, cache_pos, start_idx,
+                 lora_scale):
+    n = jax.tree_util.tree_leaves(blocks_p)[0].shape[0]
+    idxs = start_idx + jnp.arange(n)
+
+    def body(carry, xs):
+        bp, bl, lc, idx = xs
+        window = _layer_window(cfg, idx)
+        hh, new_cache = _decode_block(carry, bp, bl, cfg, kind, lc, cache_pos,
+                                      window, lora_scale)
+        return hh, new_cache
+
+    return jax.lax.scan(body, h, (blocks_p, blocks_l, cache, idxs))
+
+
+def trunk_decode(params: Params, lora: Params, token: jnp.ndarray, cache: Params,
+                 cache_pos, cfg):
+    """token: (B, 1) int32. Returns (h_final (B,1,d), new_cache)."""
+    lora_scale = cfg.lora_alpha / cfg.lora_rank
+    h = params["embed"].astype(cfg.cdtype)[token]
+    new_cache: Dict[str, Any] = {}
+
+    if cfg.num_experts:
+        if "dense_blocks" in params:
+            h, nc = _decode_scan(h, params["dense_blocks"], lora.get("dense_blocks", {}),
+                                 cfg, "mlp", cache["dense_blocks"], cache_pos, 0, lora_scale)
+            new_cache["dense_blocks"] = nc
+        h, nc = _decode_scan(h, params["moe_blocks"], lora.get("moe_blocks", {}),
+                             cfg, "moe", cache["moe_blocks"], cache_pos,
+                             cfg.first_dense_layers, lora_scale)
+        new_cache["moe_blocks"] = nc
+    elif "local_blocks" in params:
+        from repro.models.layers import gqa_decode_ring
+        g = cfg.num_layers // cfg.global_attn_every
+        k = cfg.global_attn_every
+        tail = cfg.num_layers % cfg.global_attn_every
+        nl_g = g * (k - 1)
+        take = lambda t, a, b: jax.tree_util.tree_map(lambda x: x[a:b], t)
+        regroup = lambda t: jax.tree_util.tree_map(
+            lambda a: a[:nl_g].reshape((g, k - 1) + a.shape[1:]), t)
+        lp_g = regroup(params["local_blocks"])
+        ll_g = regroup(lora.get("local_blocks", {}))
+        lc_g = regroup(cache["local_blocks"])
+
+        def local_decode(c2, xs2):
+            bp, bl, lc = xs2
+            hn = rms_norm(c2, bp["ln1"], cfg.norm_eps)
+            out, nkv = gqa_decode_ring(hn, bp["attn"], bl.get("attn"), lc,
+                                       num_heads=cfg.num_heads,
+                                       num_kv_heads=cfg.num_kv_heads,
+                                       head_dim=cfg.hd, cache_pos=cache_pos,
+                                       rope_theta=cfg.rope_theta,
+                                       window=cfg.sliding_window,
+                                       lora_scale=lora_scale)
+            hh = c2 + out
+            ffn_out, _ = _ffn(hh, bp, bl, cfg, "mlp", lora_scale)
+            return hh + ffn_out, nkv
+
+        def swa_group(carry, xs):
+            lpg, llg, lcg, gp, gl, gc = xs
+            hh, nlc = jax.lax.scan(local_decode, carry, (lpg, llg, lcg))
+            out, ngc = _decode_block(hh, gp, gl, cfg, "mlp", gc, cache_pos, 0,
+                                     lora_scale)
+            return out, (nlc, ngc)
+
+        h, (nlc, ngc) = jax.lax.scan(
+            swa_group, h, (lp_g, ll_g, lc_g, params["global_blocks"],
+                           lora.get("global_blocks", {}),
+                           cache["global_blocks"]))
+        new_local = jax.tree_util.tree_map(
+            lambda a: a.reshape((nl_g,) + a.shape[2:]), nlc)
+        if tail:
+            h, ntail = jax.lax.scan(
+                local_decode, h,
+                (take(params["local_blocks"], nl_g, None),
+                 take(lora.get("local_blocks", {}), nl_g, None),
+                 take(cache["local_blocks"], nl_g, None)))
+            new_local = jax.tree_util.tree_map(
+                lambda a, t: jnp.concatenate([a, t], 0), new_local, ntail)
+        new_cache["local_blocks"] = new_local
+        new_cache["global_blocks"] = ngc
+    elif cfg.cross_attn_every > 1:
+        g = cfg.num_layers // cfg.cross_attn_every
+        k = cfg.cross_attn_every
+        sp = jax.tree_util.tree_map(lambda a: a.reshape((g, k - 1) + a.shape[1:]),
+                                    params["self_blocks"])
+        sl = jax.tree_util.tree_map(lambda a: a.reshape((g, k - 1) + a.shape[1:]),
+                                    lora.get("self_blocks", {}))
+        sc = jax.tree_util.tree_map(lambda a: a.reshape((g, k - 1) + a.shape[1:]),
+                                    cache["self_blocks"])
+        cp, cl, cc = params["cross_blocks"], lora.get("cross_blocks", {}), cache["cross_blocks"]
+
+        def group_body(carry, xs):
+            spg, slg, scg, cpg, clg, ccg = xs
+            hh = carry
+
+            def inner(c2, xs2):
+                bp, bl, lc = xs2
+                out, nc2 = _decode_block(c2, bp, bl, cfg, "mlp", lc, cache_pos, 0, lora_scale)
+                return out, nc2
+            hh, nsc = jax.lax.scan(inner, hh, (spg, slg, scg))
+            hh, ncc = _decode_block(hh, cpg, clg, cfg, "mlp", ccg, cache_pos, 0, lora_scale)
+            return hh, (nsc, ncc)
+
+        h, (nsc, ncc) = jax.lax.scan(group_body, h, (sp, sl, sc, cp, cl, cc))
+        new_cache["self_blocks"] = jax.tree_util.tree_map(
+            lambda a: a.reshape((g * (k - 1),) + a.shape[2:]), nsc)
+        new_cache["cross_blocks"] = ncc
+    else:
+        h, nc = _decode_scan(h, params["blocks"], lora.get("blocks", {}), cfg,
+                             "mlp", cache["blocks"], cache_pos, 0, lora_scale)
+        new_cache["blocks"] = nc
+
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), new_cache

@@ -1,0 +1,87 @@
+"""Discrete-event network model replacing the paper's ns-3 setup (§4.3).
+
+The paper simulates four UL/DL scenarios (Konecny 2016 practical settings):
+0.2/1, 1/5, 2/10, 5/25 Mbps with 50 ms latency. We model each round as:
+
+  t_round = server_bcast + max_i (t_down_i + t_compute_i + t_up_i) + t_agg
+
+with per-message time = latency + bytes*8/bandwidth (store-and-forward,
+asymmetric UL/DL, like ns3-fl's point-to-point links). Effective throughput
+degradation vs theoretical bandwidth is modelled with an efficiency factor
+(TCP overheads; ns-3 shows ~0.85-0.95).
+
+This is host-side analytic simulation — the compute entries come either
+from measured jit step walltimes (fedsim) or a supplied FLOPs/s model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+
+@dataclass(frozen=True)
+class NetworkScenario:
+    name: str
+    uplink_mbps: float
+    downlink_mbps: float
+    latency_s: float = 0.05
+    efficiency: float = 0.9
+
+
+SCENARIOS = {
+    "0.2/1": NetworkScenario("0.2/1", 0.2, 1.0),
+    "1/5": NetworkScenario("1/5", 1.0, 5.0),
+    "2/10": NetworkScenario("2/10", 2.0, 10.0),
+    "5/25": NetworkScenario("5/25", 5.0, 25.0),
+}
+
+
+@dataclass
+class RoundTiming:
+    round_t: int
+    download_s: float
+    compute_s: float
+    upload_s: float
+    overhead_s: float  # compression/encoding CPU cost (paper: <3 s/round)
+
+    @property
+    def comm_s(self) -> float:
+        return self.download_s + self.upload_s
+
+    @property
+    def total_s(self) -> float:
+        return self.download_s + self.compute_s + self.upload_s + self.overhead_s
+
+
+class NetworkSimulator:
+    def __init__(self, scenario: NetworkScenario):
+        self.sc = scenario
+        self.timeline: List[RoundTiming] = []
+
+    def transfer_time(self, n_bytes: int, up: bool) -> float:
+        bw = (self.sc.uplink_mbps if up else self.sc.downlink_mbps) * 1e6 \
+            * self.sc.efficiency
+        return self.sc.latency_s + (n_bytes * 8.0) / bw
+
+    def round(self, round_t: int, per_client_down_bytes: Sequence[int],
+              per_client_up_bytes: Sequence[int],
+              per_client_compute_s: Sequence[float],
+              overhead_s: float = 0.0) -> RoundTiming:
+        """Synchronous FL round: the server waits for the slowest client."""
+        downs = [self.transfer_time(b, up=False) for b in per_client_down_bytes]
+        ups = [self.transfer_time(b, up=True) for b in per_client_up_bytes]
+        # the straggler defines the round; attribute its own split
+        totals = [d + c + u for d, c, u in zip(downs, per_client_compute_s, ups)]
+        i = max(range(len(totals)), key=lambda j: totals[j])
+        rt = RoundTiming(round_t, downs[i], per_client_compute_s[i], ups[i],
+                         overhead_s)
+        self.timeline.append(rt)
+        return rt
+
+    def totals(self) -> Dict[str, float]:
+        return {
+            "communication_s": sum(r.comm_s for r in self.timeline),
+            "computation_s": sum(r.compute_s for r in self.timeline),
+            "overhead_s": sum(r.overhead_s for r in self.timeline),
+            "total_s": sum(r.total_s for r in self.timeline),
+        }

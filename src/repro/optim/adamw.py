@@ -1,0 +1,67 @@
+"""AdamW in pure JAX (optax is not available offline).
+
+State and update are pytree-shaped like the trainable params (LoRA trees).
+Supports a gradient mask (FFA-LoRA freezes every 'a' leaf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+def init_state(params: Params) -> Params:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.float32(0.0)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def apply_updates(params: Params, grads: Params, state: Params, cfg: AdamWConfig,
+                  lr_scale: float = 1.0,
+                  mask: Optional[Params] = None) -> Tuple[Params, Params]:
+    """Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if cfg.grad_clip > 0:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    if mask is not None:
+        grads = jax.tree_util.tree_map(lambda g, m: g * m, grads, mask)
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g.astype(jnp.float32), state["m"], grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+
+    def upd(p, m, v):
+        u = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * lr_scale * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,52 @@
+"""Deliverable (f): per-architecture smoke tests — a REDUCED variant of each
+family (2 layers, d_model<=512, <=4 experts) runs one forward + one train
+step on CPU; asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_and_train_step(arch, rng_key):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = M.init_params(cfg, rng_key)
+    lora = M.init_lora(cfg, jax.random.PRNGKey(1))
+    batch = M.make_batch(cfg, 2, 32, jax.random.PRNGKey(2))
+
+    h, aux, _ = M.trunk(params, lora, batch["tokens"], cfg,
+                        cond=batch.get("cond"), remat=False)
+    assert h.shape == (2, 32, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+
+    loss, grads = jax.value_and_grad(M.loss_fn)(lora, params, batch, cfg, False)
+    assert jnp.isfinite(loss)
+    opt = adamw.init_state(lora)
+    lora2, _ = adamw.apply_updates(lora, grads, opt, adamw.AdamWConfig(lr=1e-3))
+    # at least one LoRA leaf must have moved
+    moved = any(bool(jnp.any(a != b)) for a, b in zip(
+        jax.tree_util.tree_leaves(lora), jax.tree_util.tree_leaves(lora2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_serve_decode_step(arch, rng_key):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, rng_key)
+    lora = M.init_lora(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    shapes = M.cache_shapes(cfg, B, S)
+    cache = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s, jnp.float32), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = M.decode_step(params, lora, tok, cache, 3, cfg)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert jax.tree_util.tree_structure(new_cache) == jax.tree_util.tree_structure(cache)

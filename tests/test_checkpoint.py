@@ -1,0 +1,41 @@
+"""Checkpoint round-trips (incl. bf16) and fed-state resume."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+
+def test_tree_roundtrip(tmp_path):
+    tree = {"w": np.random.default_rng(0).normal(size=(4, 5)).astype(np.float32),
+            "nested": {"b16": jnp.ones((3, 3), jnp.bfloat16),
+                       "i": np.arange(7),
+                       "meta": {"name": "x", "lr": 1e-3, "flag": True}}}
+    p = str(tmp_path / "t.ckpt")
+    n = ckpt.save(p, tree)
+    assert n > 0
+    out = ckpt.load(p)
+    np.testing.assert_allclose(out["w"], tree["w"])
+    assert out["nested"]["meta"] == {"name": "x", "lr": 1e-3, "flag": True}
+    assert np.asarray(out["nested"]["b16"]).dtype.name == "bfloat16"
+
+
+def test_fed_state_resume(tmp_path):
+    from repro.configs import get_config
+    from repro.data.synthetic import TaskConfig
+    from repro.fed.strategies import EcoLoRAConfig
+    from repro.fed.trainer import FedConfig, FederatedTrainer
+
+    cfg = get_config("llama2-7b").reduced()
+    tc = TaskConfig(vocab_size=128, seq_len=16, n_samples=64, seed=0)
+    fed = FedConfig(n_clients=6, clients_per_round=3, rounds=2, local_steps=1,
+                    local_batch=2, eco=EcoLoRAConfig(n_segments=2),
+                    pretrain_steps=2)
+    tr = FederatedTrainer(cfg, fed, tc)
+    tr.run(rounds=2)
+    p = str(tmp_path / "fed.ckpt")
+    ckpt.save_fed_state(p, tr)
+
+    tr2 = FederatedTrainer(cfg, fed, tc)
+    rnd = ckpt.load_fed_state(p, tr2)
+    assert rnd == 2
+    np.testing.assert_allclose(tr2.strategy.global_vec, tr.strategy.global_vec)

@@ -1,0 +1,55 @@
+"""Trip-count-aware HLO walker: parsing units (compile-free)."""
+from repro.launch.hlo_walk import _group_size, _wire_factor, parse, trip_count, walk
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %y = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %c2 = s32[] add(%c, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%c2, %y)
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%c, %lim), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  ROOT %ar = f32[8,8]{1,0} all-reduce(%r), replica_groups=[2,4]<=[8], to_apply=%add
+}
+"""
+
+
+def test_walk_multiplies_trip_counts():
+    t = walk(HLO, entry="main")
+    assert t["flops"] == 7 * 2 * 8 * 8 * 8  # dot inside while x trip count
+
+
+def test_collective_wire_model():
+    t = walk(HLO, entry="main")
+    # all-reduce of 8x8 f32 over groups of 4: 256 bytes x 2*(3/4)
+    assert abs(t["coll_all-reduce"] - 256 * 2 * 3 / 4) < 1e-6
+
+
+def test_group_size_formats():
+    assert _group_size("replica_groups=[2,256]<=[512]") == 256
+    assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert _wire_factor("reduce-scatter", "replica_groups=[1,4]<=[4]") == 3.0

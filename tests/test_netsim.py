@@ -1,0 +1,28 @@
+"""Network simulator (ns-3 replacement) behaviour."""
+from repro.netsim.network import SCENARIOS, NetworkSimulator
+
+
+def test_transfer_time_asymmetry():
+    sim = NetworkSimulator(SCENARIOS["1/5"])
+    up = sim.transfer_time(10**6, up=True)
+    down = sim.transfer_time(10**6, up=False)
+    assert up > down  # uplink slower (Konecny 2016)
+    assert up > 8 / (1e6 * 0.9)  # at least the serialization delay
+
+
+def test_round_straggler_semantics():
+    sim = NetworkSimulator(SCENARIOS["2/10"])
+    rt = sim.round(0, [1000, 10_000_000], [1000, 10_000_000], [0.1, 0.1])
+    # the big-transfer client defines the round
+    assert rt.upload_s > sim.transfer_time(1000, True)
+    totals = sim.totals()
+    assert totals["total_s"] == rt.total_s
+
+
+def test_worse_network_longer_rounds():
+    times = {}
+    for name in ("0.2/1", "1/5", "2/10", "5/25"):
+        sim = NetworkSimulator(SCENARIOS[name])
+        rt = sim.round(0, [5 * 10**6], [5 * 10**6], [1.0])
+        times[name] = rt.total_s
+    assert times["0.2/1"] > times["1/5"] > times["2/10"] > times["5/25"]

@@ -1,0 +1,56 @@
+"""Round-robin segment sharing (§3.3): properties via hypothesis."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,
+                                 segment_bounds, segment_id, segments_covered)
+
+
+@given(st.integers(1, 2000), st.integers(1, 16))
+def test_segment_bounds_partition(total, ns):
+    ns = min(ns, total)
+    b = segment_bounds(total, ns)
+    assert b[0][0] == 0 and b[-1][1] == total
+    for (s0, e0), (s1, e1) in zip(b, b[1:]):
+        assert e0 == s1 and e0 > s0
+    # equal sizes except the last
+    sizes = {e - s for s, e in b[:-1]}
+    assert len(sizes) <= 1
+
+
+@given(st.integers(0, 500), st.integers(0, 500), st.integers(1, 32))
+def test_schedule_is_round_robin(cid, t, ns):
+    assert segment_id(cid, t, ns) == (cid + t) % ns
+    # over ns consecutive rounds a client covers every segment
+    segs = {segment_id(cid, t + i, ns) for i in range(ns)}
+    assert segs == set(range(ns))
+
+
+@given(st.integers(2, 40), st.integers(1, 10), st.integers(0, 100))
+def test_coverage_when_enough_clients(n_clients, ns, t):
+    ns = min(ns, n_clients)
+    # paper requirement Ns <= Nt guarantees full coverage with CONSECUTIVE ids
+    assert segments_covered(list(range(n_clients)), t, ns)
+
+
+@settings(deadline=None)
+@given(st.integers(5, 50), st.integers(1, 5), st.integers(0, 20))
+def test_aggregation_weighted_mean(size, ns, t):
+    rng = np.random.default_rng(0)
+    ns = min(ns, 3)
+    global_vec = rng.normal(size=size).astype(np.float32)
+    ups = []
+    for cid in range(5):
+        seg = segment_id(cid, t, ns)
+        vals = extract_segment(np.full(size, cid + 1.0, np.float32), seg, ns)
+        ups.append(SegmentUpdate(cid, t, seg, vals, 10 * (cid + 1), 0.0))
+    out = aggregate_segments(ups, global_vec, ns)
+    bounds = segment_bounds(size, ns)
+    for seg, (s, e) in enumerate(bounds):
+        contributors = [(u.client_id, u.num_samples) for u in ups if u.seg_id == seg]
+        if not contributors:
+            assert np.allclose(out[s:e], global_vec[s:e])
+        else:
+            w = np.array([n for _, n in contributors], float)
+            expect = sum((c + 1.0) * wi for (c, _), wi in zip(contributors, w / w.sum()))
+            assert np.allclose(out[s:e], expect, atol=1e-5)

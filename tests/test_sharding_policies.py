@@ -1,0 +1,61 @@
+"""Sharding-policy rules (pure logic; no mesh devices needed)."""
+from types import SimpleNamespace
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.sharding import _spec_for, batch_pspecs, cache_pspecs, param_pspecs
+
+MESH = SimpleNamespace(shape={"data": 16, "model": 16},
+                       axis_names=("data", "model"))
+
+
+def test_weight_rules():
+    assert _spec_for("blocks/attn/wq", (16, 4096, 4096), MESH) == \
+        P(None, "data", "model")
+    assert _spec_for("blocks/attn/wo", (16, 4096, 4096), MESH) == \
+        P(None, "model", "data")
+    assert _spec_for("blocks/ln1", (16, 4096), MESH) == P(None, None)
+    # non-divisible dims stay unsharded (mamba2 vocab 50280)
+    assert _spec_for("embed", (50280, 768), MESH) == P(None, "data")
+
+
+def test_moe_expert_rules():
+    # deepseek: 256 experts divide the model axis
+    assert _spec_for("moe_blocks/ffn/we_g", (58, 256, 7168, 2048), MESH) == \
+        P(None, "model", "data", None)
+    # granite: 40 experts do not -> expert dim unsharded
+    assert _spec_for("moe_blocks/ffn/we_g", (32, 40, 1536, 512), MESH) == \
+        P(None, None, "data", None)
+
+
+def test_every_arch_param_tree_gets_specs():
+    import jax
+    for arch in ("llama3.2-1b", "deepseek-v3-671b", "mamba2-130m",
+                 "zamba2-1.2b", "gemma3-27b"):
+        cfg = get_config(arch)
+        specs = param_pspecs(cfg, MESH)
+        leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert leaves and all(isinstance(l, P) for l in leaves)
+
+
+def test_batch_sharding_rules():
+    cfg = get_config("llama3.2-1b")
+    train = batch_pspecs(cfg, INPUT_SHAPES["train_4k"], MESH)
+    assert train["tokens"] == P(("data",), None)
+    long = batch_pspecs(cfg, INPUT_SHAPES["long_500k"], MESH)
+    assert long["tokens"] == P(None, None)  # batch=1: unsharded
+
+
+def test_cache_seq_sharding_for_long_decode():
+    cfg = get_config("mamba2-130m")
+    specs = cache_pspecs(cfg, INPUT_SHAPES["long_500k"], MESH)
+    import jax
+    # ssm state: heads 24 don't divide 16 -> unsharded heads; batch unsharded
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert leaves
+    cfg2 = get_config("gemma3-27b")
+    specs2 = cache_pspecs(cfg2, INPUT_SHAPES["long_500k"], MESH)
+    kspec = specs2["blocks"]["k"]
+    assert kspec[2] == "data"  # batch-1 decode: cache seq takes the data axis

@@ -1,0 +1,74 @@
+"""Adaptive sparsification (§3.4): Eq. 4 schedule, Eqs. 5-6 residual
+feedback, contractive property (used by the §3.7 proof)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig, adaptive_k,
+                                 gini, sparsify_with_residual, topk_mask)
+
+
+@given(st.floats(0.0, 5.0), st.floats(0.0, 5.0))
+def test_adaptive_k_monotone_in_loss_drop(l0, drop):
+    cfg = SparsifyConfig()
+    k1 = adaptive_k(cfg, l0, l0, "a")            # no progress -> k_max
+    k2 = adaptive_k(cfg, l0, l0 - drop, "a")     # progress -> smaller k
+    assert k1 == cfg.k_max
+    assert cfg.k_min_a <= k2 <= k1 + 1e-9
+
+
+def test_b_more_aggressive_than_a():
+    cfg = SparsifyConfig()
+    kA = adaptive_k(cfg, 2.0, 0.5, "a")
+    kB = adaptive_k(cfg, 2.0, 0.5, "b")
+    assert kB <= kA  # smaller k_min AND larger gamma for B (§3.4)
+
+
+@settings(deadline=None)
+@given(st.integers(2, 500), st.floats(0.05, 1.0))
+def test_residual_conservation(n, k):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=n).astype(np.float32)
+    r = rng.normal(size=n).astype(np.float32) * 0.1
+    sparse, new_r, mask = sparsify_with_residual(x, r, k)
+    # Eq. 6: transmitted + residual == offered (nothing lost)
+    assert np.allclose(sparse + new_r, x + r, atol=1e-5)
+    assert (sparse[~mask] == 0).all()
+
+
+@settings(deadline=None)
+@given(st.integers(2, 500), st.floats(0.05, 0.99))
+def test_contractive_property(n, k):
+    """||C(x) - x||^2 <= (1 - delta) ||x||^2 with delta >= k (Assumption 3)."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=n).astype(np.float32)
+    mask = topk_mask(x, k)
+    cx = np.where(mask, x, 0.0)
+    lhs = np.sum((cx - x) ** 2)
+    keep_frac = mask.mean()
+    assert lhs <= (1 - k + 1.0 / n + 1e-6) * np.sum(x ** 2)
+    assert keep_frac >= k - 1.0 / n
+
+
+def test_everything_eventually_transmitted():
+    rng = np.random.default_rng(3)
+    n = 400
+    ab = np.concatenate([np.ones(200, bool), np.zeros(200, bool)])
+    sp = AdaptiveSparsifier(SparsifyConfig(k_max=0.3, k_min_a=0.1, k_min_b=0.05), ab)
+    sp.observe_loss(1.0)
+    vec = rng.normal(size=n).astype(np.float32)
+    total = np.zeros(n, np.float32)
+    s, m, _ = sp.compress(vec, (0, n))
+    total += s
+    for _ in range(60):
+        s, m, _ = sp.compress(np.zeros(n, np.float32), (0, n))
+        total += s
+    assert np.allclose(total, vec, atol=1e-4)
+    assert np.abs(sp.residual).max() < 1e-4
+
+
+def test_gini_matches_paper_directionally():
+    rng = np.random.default_rng(4)
+    dense = rng.normal(size=10000)
+    sparse = dense * (rng.random(10000) < 0.1)
+    assert gini(sparse) > gini(dense)
+    assert 0 <= gini(dense) <= 1

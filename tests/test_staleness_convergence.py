@@ -1,0 +1,52 @@
+"""Eq. 3 mixing + §3.7 convergence constants."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.convergence import ConvergenceConstants, contraction_delta_of_topk
+from repro.core.staleness import mix_models, mix_weight
+
+
+@given(st.floats(0.05, 3.0), st.integers(0, 100), st.integers(0, 100))
+def test_mix_weight_decays(beta, t, tau):
+    t, tau = max(t, tau), min(t, tau)
+    w = mix_weight(beta, t, tau)
+    assert 0 < w <= 1
+    if t > tau:
+        assert w < 1
+    assert w >= mix_weight(beta, t + 1, tau) - 1e-12
+
+
+def test_mix_models_endpoints():
+    g = np.ones(5, np.float32)
+    l = np.zeros(5, np.float32)
+    fresh = mix_models(g, l, beta=1.0, round_t=5, last_round=5)   # w_local = 1
+    np.testing.assert_allclose(fresh, l)
+    stale = mix_models(g, l, beta=5.0, round_t=100, last_round=0)  # w_local ~ 0
+    np.testing.assert_allclose(stale, g, atol=1e-4)
+
+
+@given(st.floats(0.55, 1.0), st.floats(0.1, 10.0))
+def test_admissible_eta_interval_nonempty(delta, L):
+    cc = ConvergenceConstants(L=L, G2=1.0, delta=delta, beta=0.5,
+                              n_segments=5, eta=1.0 / L)
+    lo, hi = cc.eta_interval
+    # (5-2d)/(6-4d) > 1 iff d > 1/2: the paper's interval is non-empty there
+    assert hi > lo
+
+
+def test_bound_decreases_in_T():
+    cc = ConvergenceConstants(L=1.0, G2=1.0, delta=0.9, beta=0.5,
+                              n_segments=5, eta=1.2)
+    assert cc.mu > 0
+    b10 = cc.bound(1.0, 10)
+    b100 = cc.bound(1.0, 100)
+    assert b100 < b10
+    # floor term persists (compression/staleness error)
+    floor = cc.eta * (2 * cc.eta * cc.L - 1) * cc.Delta / cc.mu
+    assert b100 >= floor > 0
+
+
+@given(st.floats(0.01, 1.0))
+def test_topk_delta(k):
+    assert 0 <= contraction_delta_of_topk(k) <= 1

@@ -1,0 +1,55 @@
+"""Windowed ring-buffer KV cache (beyond-paper serving optimization,
+EXPERIMENTS.md §Perf pair 2): decode must equal full-sequence forward."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+
+
+def _decode_vs_forward(cfg, T):
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    lora = M.init_lora(cfg, jax.random.PRNGKey(2))
+    lora = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jax.random.normal(key, x.shape, x.dtype), lora)
+    B = 2
+    batch = M.make_batch(cfg, B, T, jax.random.PRNGKey(3))
+    h, _, _ = M.trunk(params, lora, batch["tokens"], cfg, remat=False)
+    ref = M.logits_last(h, params, cfg)
+    pre = {k: (v[:, :T - 1] if k in ("tokens", "labels") else v)
+           for k, v in batch.items()}
+    _, caches = M.prefill(params, lora, pre, cfg, remat=False)
+    shapes = M.cache_shapes(cfg, B, T)
+    zeros = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s, jnp.float32), shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x))
+
+    def place(z, a):
+        if z.shape == a.shape:
+            return a.astype(z.dtype)
+        return jax.lax.dynamic_update_slice(z, a.astype(z.dtype), (0,) * z.ndim)
+    cache = jax.tree_util.tree_map(place, zeros, caches)
+    logits, _ = M.decode_step(params, lora, batch["tokens"][:, T - 1:T],
+                              cache, T - 1, cfg)
+    return float(jnp.max(jnp.abs(logits - ref)))
+
+
+@pytest.mark.parametrize("window,T", [(64, 33), (8, 21)])
+def test_windowed_decode_matches_forward(window, T):
+    cfg = get_config("gemma3-27b").reduced().replace(
+        swa_windowed_cache=True, num_layers=2, global_attn_every=2,
+        sliding_window=window)
+    err = _decode_vs_forward(cfg, T)
+    assert err < 2e-2, err
+
+
+def test_windowed_cache_is_smaller():
+    cfg = get_config("gemma3-27b")
+    base = M.cache_shapes(cfg, 1, 32768)
+    win = M.cache_shapes(cfg.replace(swa_windowed_cache=True), 1, 32768)
+    import numpy as np
+    size = lambda t: sum(int(np.prod(s)) for s in jax.tree_util.tree_leaves(
+        t, is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, int) for i in x)))
+    assert size(win) < 0.25 * size(base)

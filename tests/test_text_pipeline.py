@@ -1,0 +1,43 @@
+"""Tokenizer + text loader (the real-text data path)."""
+import numpy as np
+
+from repro.data.loader import TextDataset, epoch_batches
+from repro.data.tokenizer import BOS, EOS, PAD, SEP, ByteTokenizer
+
+
+def test_byte_roundtrip():
+    tok = ByteTokenizer()
+    for s in ("hello world", "françois 🙂", ""):
+        assert tok.decode(tok.encode(s, bos=False)) == s
+
+
+def test_merges_shrink_and_roundtrip():
+    corpus = ["the cat sat on the mat"] * 8 + ["the dog sat on the log"] * 8
+    tok = ByteTokenizer().train(corpus, num_merges=64)
+    plain = ByteTokenizer()
+    s = "the cat sat on the log"
+    assert len(tok.encode(s)) < len(plain.encode(s))
+    assert tok.decode(tok.encode(s, bos=False)) == s
+    assert tok.vocab_size > 256 + 4
+
+
+def test_instruction_batching_masks_prompt():
+    tok = ByteTokenizer()
+    ds = TextDataset.from_pairs(
+        tok, [("what is 2+2?", "four"), ("name a color", "blue")], seq_len=48)
+    b = ds.batch(np.array([0, 1]))
+    assert b["tokens"].shape == (2, 48)
+    assert b["labels"].shape == (2, 48)
+    # loss mask covers completion region only, nothing in the prompt
+    ids0, plen0 = ds.examples[0]
+    assert b["loss_mask"][0, : plen0 - 1].sum() == 0
+    assert b["loss_mask"][0].sum() > 0
+    # padding positions carry no loss
+    assert (b["loss_mask"][0][b["tokens"][0] == PAD][1:] == 0).all()
+
+
+def test_epoch_batches():
+    tok = ByteTokenizer()
+    ds = TextDataset.from_pairs(tok, [("q", "a")] * 10, seq_len=16)
+    batches = list(epoch_batches(ds, 3, np.random.default_rng(0)))
+    assert len(batches) == 3
