@@ -1,13 +1,28 @@
-"""Checkpointing: msgpack + zstd pytree serialisation, round-resumable
-federated state. (orbax is not available offline.)"""
+"""Checkpointing: msgpack + compressed pytree serialisation, round-resumable
+federated state. (orbax is not available offline.)
+
+Compression codec is zstd when the ``zstandard`` package is importable and
+zlib (stdlib) otherwise; the chosen codec is recorded in a 5-byte header
+(``ECK1`` magic + codec id) so either build can read the other's files.
+Headerless legacy files are treated as raw zstd streams.
+"""
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any, Dict, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # bare interpreter: fall back to stdlib zlib
+    zstd = None
+
+_MAGIC = b"ECK1"
+_CODEC_ZSTD = 1
+_CODEC_ZLIB = 2
 
 
 def _pack_leaf(x):
@@ -54,7 +69,12 @@ def save(path: str, tree: Any, level: int = 3) -> int:
     """Returns bytes written."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     raw = msgpack.packb(_encode(tree), use_bin_type=True)
-    comp = zstd.ZstdCompressor(level=level).compress(raw)
+    if zstd is not None:
+        comp = _MAGIC + bytes([_CODEC_ZSTD]) \
+            + zstd.ZstdCompressor(level=level).compress(raw)
+    else:
+        # zlib tops out at 9 (zstd levels go to 22)
+        comp = _MAGIC + bytes([_CODEC_ZLIB]) + zlib.compress(raw, min(level, 9))
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -64,7 +84,19 @@ def save(path: str, tree: Any, level: int = 3) -> int:
 
 def load(path: str) -> Any:
     with open(path, "rb") as f:
-        raw = zstd.ZstdDecompressor().decompress(f.read())
+        blob = f.read()
+    if blob[:4] == _MAGIC:
+        codec, payload = blob[4], blob[5:]
+    else:                                   # legacy headerless zstd file
+        codec, payload = _CODEC_ZSTD, blob
+    if codec == _CODEC_ZLIB:
+        raw = zlib.decompress(payload)
+    else:
+        if zstd is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed (pip install zstandard)")
+        raw = zstd.ZstdDecompressor().decompress(payload)
     return _decode(msgpack.unpackb(raw, raw=False))
 
 
@@ -77,6 +109,9 @@ def save_fed_state(path: str, trainer) -> int:
         "last_broadcast": st.last_broadcast,
         "client_views": trainer.client_views,
         "client_tau": list(st.client_tau),
+        "client_sync": list(st.client_sync),
+        "bcast_stats": [list(s) for s in st._bcast_stats],
+        "bcast_base": st._bcast_base,
         "client_vecs": {str(i): v for i, v in enumerate(st.client_vec)
                         if v is not None},
         "residuals": {str(i): c.sparsifier.residual
@@ -101,6 +136,11 @@ def load_fed_state(path: str, trainer) -> int:
     st.last_broadcast = state["last_broadcast"]
     trainer.client_views = state["client_views"]
     st.client_tau = list(state["client_tau"])
+    st.client_sync = [int(v) for v in state.get("client_sync",
+                                                [0] * st.n_clients)]
+    st._bcast_stats = [tuple(int(x) for x in s)
+                       for s in state.get("bcast_stats", [])]
+    st._bcast_base = int(state.get("bcast_base", 0))
     for k, v in state["client_vecs"].items():
         st.client_vec[int(k)] = v
     for k, v in state["residuals"].items():

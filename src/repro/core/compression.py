@@ -15,7 +15,8 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.golomb import EncodedSparse, decode_sparse, encode_sparse
-from repro.core.sparsify import AdaptiveSparsifier, SparsifyConfig, ab_mask_from_spec
+from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
+                                 ab_mask_from_spec, keep_count)
 
 
 @dataclass
@@ -65,18 +66,88 @@ class Compressor:
             return Packet(encoded=enc, slice_=(start, end),
                           k_used={"a": 1.0, "b": 1.0}, round_t=round_t)
         sparse, mask, ks = self.sparsifier.compress(values, (start, end))
+        return self.packetize(sparse, mask, ks, round_t, (start, end))
+
+    def packetize(self, sparse: np.ndarray, mask: np.ndarray,
+                  ks: Dict[str, float], round_t: int,
+                  slice_: Tuple[int, int]) -> Packet:
+        """Encode an already-sparsified dense-layout slice onto the wire
+        (shared by the serial path and the batched kernel path)."""
         k_eff = float(mask.mean()) if mask.size else 1.0
         enc = encode_sparse(sparse, k_eff)
         if not self.encoding:
             # ablation "w/o Encoding": positions cost 16 fixed bits each
             enc = EncodedSparse(positions=np.zeros(2 * enc.count, np.uint8),
                                 values_fp16=enc.values_fp16, m=enc.m,
-                                count=enc.count, dense_size=enc.dense_size)
-        return Packet(encoded=enc, slice_=(start, end), k_used=ks, round_t=round_t)
+                                count=enc.count, dense_size=enc.dense_size,
+                                idx_cache=enc.idx_cache)
+        return Packet(encoded=enc, slice_=slice_, k_used=ks, round_t=round_t)
 
     @staticmethod
     def decompress(packet: Packet) -> np.ndarray:
         return decode_sparse(packet.encoded)
+
+
+def compress_uplinks(comps, values_rows, slices, round_t: int,
+                     backend: str = "numpy",
+                     pad_to: Optional[int] = None) -> list:
+    """Compress K clients' uplink segment slices in one batched pass.
+
+    ``backend="numpy"`` is the serial reference (K independent
+    Compressor.compress calls). ``backend="pallas"`` stacks the slices into
+    one padded (K, L) array and runs a single fused sparsify+residual kernel
+    with per-client per-group exact keep counts — byte-identical packets,
+    one device dispatch instead of K numpy passes. Residual state is read
+    from and written back to each client's sparsifier either way.
+    """
+    if not comps:
+        return []
+    if backend != "pallas" or not comps[0].cfg.enabled:
+        return [c.compress(v, round_t, slice_=s)
+                for c, v, s in zip(comps, values_rows, slices)]
+
+    from repro.kernels import ops  # deferred: jax only needed on this path
+    K = len(comps)
+    # a round-independent width (pad_to = widest segment) keeps the jitted
+    # batched pass at ONE compilation for the whole run
+    lmax = max(max(e - s for s, e in slices), pad_to or 0)
+    x = np.zeros((K, lmax), np.float32)
+    res = np.zeros((K, lmax), np.float32)
+    ab = np.zeros((K, lmax), bool)
+    valid = np.zeros((K, lmax), bool)
+    keep_a = np.zeros(K, np.int32)
+    keep_b = np.zeros(K, np.int32)
+    for i, (c, v, (s, e)) in enumerate(zip(comps, values_rows, slices)):
+        sp = c.sparsifier
+        if sp.residual is None or sp.residual.size != sp.ab_mask.size:
+            sp.residual = np.zeros(sp.ab_mask.size, np.float32)
+        n = e - s
+        assert v.size == n
+        x[i, :n] = v
+        res[i, :n] = sp.residual[s:e]
+        seg_ab = sp.ab_mask[s:e]
+        ab[i, :n] = seg_ab
+        valid[i, :n] = True
+        ks = sp.current_k()
+        sp.last_k = ks
+        na = int(seg_ab.sum())
+        nb = n - na
+        if na:
+            keep_a[i] = keep_count(na, ks["a"])
+        if nb:
+            keep_b[i] = keep_count(nb, ks["b"])
+    sparse, new_res, mask = ops.sparsify_topk_batch(x, res, ab, valid,
+                                                    keep_a, keep_b)
+    sparse = np.asarray(sparse)
+    new_res = np.asarray(new_res)
+    mask = np.asarray(mask)
+    pkts = []
+    for i, (c, (s, e)) in enumerate(zip(comps, slices)):
+        n = e - s
+        c.sparsifier.residual[s:e] = new_res[i, :n]
+        pkts.append(c.packetize(sparse[i, :n], mask[i, :n],
+                                c.sparsifier.last_k, round_t, (s, e)))
+    return pkts
 
 
 @dataclass
@@ -96,9 +167,15 @@ class CommLedger:
         self.upload_dense_bytes += pkt.dense_bytes
 
     def log_download(self, pkt: Packet) -> None:
-        self.download_params += pkt.param_count
-        self.download_bytes += pkt.wire_bytes
-        self.download_dense_bytes += pkt.dense_bytes
+        self.log_download_stats(pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)
+
+    def log_download_stats(self, params: int, wire_bytes: int,
+                           dense_bytes: int) -> None:
+        """Bill a download whose packet is no longer materialised (replayed
+        broadcast catch-up for clients that skipped rounds)."""
+        self.download_params += params
+        self.download_bytes += wire_bytes
+        self.download_dense_bytes += dense_bytes
 
     def snapshot_round(self, round_t: int) -> None:
         self.per_round.append(dict(round=round_t,

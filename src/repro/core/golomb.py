@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -51,10 +51,13 @@ def encode_gaps(gaps: np.ndarray, m: int) -> np.ndarray:
     starts = np.concatenate([[0], np.cumsum(q + 1 + rem_len)[:-1]])
     # vectorised unary part: indices of 1-bits are starts[i] + arange(q[i])
     reps = q.astype(np.int64)
-    if reps.sum() > 0:
+    total_ones = int(reps.sum())
+    if total_ones > 0:
         base = np.repeat(starts, reps)
-        offs = np.concatenate([np.arange(n, dtype=np.int64) for n in reps if n > 0]) \
-            if reps.max() > 0 else np.zeros(0, np.int64)
+        # per-run ramps 0..reps[i]-1 without a python loop:
+        # global arange minus each run's own start offset
+        run_starts = np.repeat(np.cumsum(reps) - reps, reps)
+        offs = np.arange(total_ones, dtype=np.int64) - run_starts
         bits[base + offs] = 1
     # remainder bits (MSB first)
     rem_start = starts + q + 1
@@ -138,6 +141,10 @@ class EncodedSparse:
     m: int
     count: int
     dense_size: int
+    # NOT on the wire: the encoder's nonzero indices, kept so a same-process
+    # receiver skips the bit-walk decode (identical result; the round trip
+    # itself is property-tested in test_golomb)
+    idx_cache: Optional[np.ndarray] = None
 
     @property
     def wire_bits(self) -> int:
@@ -155,14 +162,18 @@ def encode_sparse(dense: np.ndarray, k_hint: float) -> EncodedSparse:
     m = golomb_parameter(max(k_hint, idx.size / max(dense.size, 1) or 1e-6))
     return EncodedSparse(positions=encode_gaps(gaps, m),
                          values_fp16=dense[idx].astype(np.float16),
-                         m=m, count=int(idx.size), dense_size=int(dense.size))
+                         m=m, count=int(idx.size), dense_size=int(dense.size),
+                         idx_cache=idx)
 
 
 def decode_sparse(enc: EncodedSparse) -> np.ndarray:
     if enc.positions.size == 0 and enc.count == enc.dense_size:
         return enc.values_fp16.astype(np.float32)  # dense packet
-    gaps = decode_gaps(enc.positions, enc.m, enc.count)
-    idx = np.cumsum(gaps + 1) - 1
+    if enc.idx_cache is not None:
+        idx = enc.idx_cache
+    else:
+        gaps = decode_gaps(enc.positions, enc.m, enc.count)
+        idx = np.cumsum(gaps + 1) - 1
     out = np.zeros(enc.dense_size, np.float32)
     out[idx] = enc.values_fp16.astype(np.float32)
     return out

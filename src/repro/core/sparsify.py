@@ -39,16 +39,54 @@ def adaptive_k(cfg: SparsifyConfig, loss0: float, loss_prev: float,
     return float(np.clip(k, k_min, cfg.k_max))
 
 
+def keep_count(n: int, k_frac: float) -> int:
+    """ceil(k*n) clamped to [1, n] — THE keep-count rule, shared by every
+    selection path (numpy reference, batched numpy, jax/Pallas) so the
+    serial and batched engines transmit identical byte counts."""
+    return max(1, min(int(n), int(np.ceil(float(k_frac) * int(n)))))
+
+
 def topk_mask(x: np.ndarray, k: float) -> np.ndarray:
-    """Boolean mask keeping the top ceil(k*n) magnitudes of x (flat)."""
+    """Boolean mask keeping EXACTLY the top keep_count(n, k) magnitudes of
+    x (flat). Magnitude ties break toward the lower index, so the selection
+    is deterministic and bit-identical to the batched kernel path
+    (repro.kernels.sparsify.topk_mask / grouped_topk_mask).
+
+    O(n): one partition finds the keep-th magnitude tau; entries above tau
+    are kept and the remaining slots go to tau-ties in index order."""
     n = x.size
-    keep = min(n, max(1, int(np.ceil(k * n))))
+    keep = keep_count(n, k)
     if keep >= n:
         return np.ones(n, bool)
-    thresh_idx = np.argpartition(np.abs(x), n - keep)[n - keep:]
-    mask = np.zeros(n, bool)
-    mask[thresh_idx] = True
-    return mask
+    mag = np.abs(x)
+    tau = np.partition(mag, n - keep)[n - keep]
+    gt = mag > tau
+    budget = keep - int(gt.sum())
+    eq = mag == tau
+    tie_rank = np.cumsum(eq) - 1
+    return gt | (eq & (tie_rank < budget))
+
+
+def batched_topk_mask(mag: np.ndarray, gm: np.ndarray, keep) -> np.ndarray:
+    """Vectorized exact top-``keep`` selection over a (K, L) batch of rows,
+    restricted to the entries where ``gm`` is True (group membership);
+    ``keep``: (K,) per-row counts (0 = keep none).
+
+    Same semantics as ``topk_mask`` row-by-row: exactly ``keep[i]`` entries
+    survive in row i, magnitude ties broken toward the lower index. One
+    descending sort finds the keep-th magnitude tau per row; entries > tau
+    are kept and the remaining slots go to tau-ties in index order.
+    """
+    mag = np.asarray(mag, np.float32)
+    gmag = np.where(gm, mag, -1.0).astype(np.float32)   # excluded sorts last
+    srt = -np.sort(-gmag, axis=-1)
+    kp = np.asarray(keep, np.int64)
+    tau = np.take_along_axis(srt, np.clip(kp - 1, 0, None)[:, None], axis=-1)
+    gt = gmag > tau
+    eq = gm & (gmag == tau)
+    budget = kp[:, None] - gt.sum(axis=-1, keepdims=True)
+    tie_rank = np.cumsum(eq, axis=-1) - 1
+    return (gt | (eq & (tie_rank < budget))) & (kp[:, None] > 0)
 
 
 def sparsify_with_residual(values: np.ndarray, residual: np.ndarray,

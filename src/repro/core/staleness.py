@@ -21,7 +21,21 @@ def mix_weight(beta: float, round_t: int, last_round: int) -> float:
     return float(np.exp(-beta * dt))
 
 
+def mix_models_batch(global_vecs: np.ndarray, local_vecs: np.ndarray,
+                     beta: float, round_t: int, last_rounds) -> np.ndarray:
+    """Vectorized Eq. 3 over a (K, N) batch of clients with per-client tau.
+
+    The blend runs in float64 and rounds once to float32 — the serial
+    ``mix_models`` delegates here so both round engines agree bitwise.
+    """
+    g = np.atleast_2d(np.asarray(global_vecs, np.float64))
+    l = np.atleast_2d(np.asarray(local_vecs, np.float64))
+    dt = np.maximum(np.int64(round_t) - np.asarray(last_rounds, np.int64), 0)
+    w = np.exp(-beta * dt.astype(np.float64)).reshape(-1, 1)
+    return ((1.0 - w) * g + w * l).astype(np.float32)
+
+
 def mix_models(global_vec: np.ndarray, local_vec: np.ndarray, beta: float,
                round_t: int, last_round: int) -> np.ndarray:
-    w_local = mix_weight(beta, round_t, last_round)
-    return ((1.0 - w_local) * global_vec + w_local * local_vec).astype(np.float32)
+    return mix_models_batch(global_vec[None, :], local_vec[None, :], beta,
+                            round_t, [last_round])[0]

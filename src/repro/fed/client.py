@@ -18,21 +18,17 @@ from repro.optim import adamw
 Params = Dict[str, Any]
 
 
-def make_local_trainer(cfg: ModelConfig, params: Params, opt_cfg: adamw.AdamWConfig,
-                       task: str = "lm", freeze_a: bool = False,
-                       dpo_beta: float = 0.1) -> Callable:
-    """Returns jitted fn(lora, opt_state, batches) -> (lora', opt_state', mean_loss).
-
-    ``batches`` leaves have a leading local-steps axis; training scans over it.
-    """
+def _make_local_train(cfg: ModelConfig, params: Params, opt_cfg: adamw.AdamWConfig,
+                      task: str = "lm", freeze_a: bool = False,
+                      dpo_beta: float = 0.1) -> Callable:
+    """Un-jitted fn(lora, opt_state, batches) -> (lora', opt_state', mean_loss);
+    the single- and batched-client trainers both wrap this."""
     if task == "dpo":
         from repro.fed.dpo import dpo_loss
         loss_fn = functools.partial(dpo_loss, params=params, cfg=cfg, beta=dpo_beta)
     else:
         def loss_fn(lora, batch):
             return M.loss_fn(lora, params, batch, cfg, remat=False)
-
-    mask = None
 
     def step(carry, batch):
         lora, opt_state = carry
@@ -41,12 +37,45 @@ def make_local_trainer(cfg: ModelConfig, params: Params, opt_cfg: adamw.AdamWCon
         lora, opt_state = adamw.apply_updates(lora, grads, opt_state, opt_cfg, mask=m)
         return (lora, opt_state), loss
 
-    @jax.jit
     def local_train(lora, opt_state, batches):
         (lora, opt_state), losses = jax.lax.scan(step, (lora, opt_state), batches)
         return lora, opt_state, jnp.mean(losses)
 
     return local_train
+
+
+def make_local_trainer(cfg: ModelConfig, params: Params, opt_cfg: adamw.AdamWConfig,
+                       task: str = "lm", freeze_a: bool = False,
+                       dpo_beta: float = 0.1) -> Callable:
+    """Returns jitted fn(lora, opt_state, batches) -> (lora', opt_state', mean_loss).
+
+    ``batches`` leaves have a leading local-steps axis; training scans over it.
+    """
+    return jax.jit(_make_local_train(cfg, params, opt_cfg, task=task,
+                                     freeze_a=freeze_a, dpo_beta=dpo_beta))
+
+
+def make_batched_local_trainer(cfg: ModelConfig, params: Params,
+                               opt_cfg: adamw.AdamWConfig, task: str = "lm",
+                               freeze_a: bool = False,
+                               dpo_beta: float = 0.1) -> Callable:
+    """Batched round engine: ONE jitted call trains all K sampled clients.
+
+    Returns jitted fn(loras, opt_states, batches) -> (loras', opt_states',
+    losses) where every leaf carries a leading client axis K (batches:
+    (K, steps, batch, ...); losses: (K,)). vmap turns the per-client scan
+    into batched matmuls, so the round costs one dispatch instead of K.
+    """
+    return jax.jit(jax.vmap(_make_local_train(cfg, params, opt_cfg, task=task,
+                                              freeze_a=freeze_a,
+                                              dpo_beta=dpo_beta)))
+
+
+def stack_client_states(template: Params, k: int) -> Params:
+    """Tile a per-client pytree (e.g. a fresh optimizer state) K times along
+    a new leading client axis for the batched trainer."""
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (k,) + jnp.shape(leaf)), template)
 
 
 def make_evaluator(cfg: ModelConfig, params: Params, task: str = "lm") -> Callable:

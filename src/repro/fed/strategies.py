@@ -14,11 +14,12 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.compression import CommLedger, Compressor, Packet
+from repro.core.compression import (CommLedger, Compressor, Packet,
+                                    compress_uplinks)
 from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,
                                  segment_bounds, segment_id)
 from repro.core.sparsify import SparsifyConfig
-from repro.core.staleness import mix_models
+from repro.core.staleness import mix_models, mix_models_batch
 
 
 @dataclass
@@ -39,11 +40,12 @@ class BaseStrategy:
     freeze_a = False
 
     def __init__(self, spec, vec_size: int, n_clients: int,
-                 eco: Optional[EcoLoRAConfig] = None):
+                 eco: Optional[EcoLoRAConfig] = None, backend: str = "numpy"):
         self.spec = spec
         self.size = vec_size
         self.n_clients = n_clients
         self.eco = eco if (eco and eco.enabled) else None
+        self.backend = backend
         self.global_vec = np.zeros(vec_size, np.float32)
         self.ledger = CommLedger()
         # per-client local state: (vector copy, last participation round)
@@ -54,6 +56,16 @@ class BaseStrategy:
         self.up_comp = [Compressor(spec, sp, encoding=enc) for _ in range(n_clients)]
         self.down_comp = Compressor(spec, sp, encoding=enc)
         self.last_broadcast = np.zeros(vec_size, np.float32)
+        # broadcast billing history: every round's wire cost, so a client
+        # idle for several rounds is billed for ALL broadcasts it missed.
+        # The catch-up PAYLOAD needs no history — a synced client's view is
+        # exactly last_broadcast, so client_download assigns it directly.
+        # Entries all clients have paid for are pruned; _bcast_base is the
+        # absolute broadcast index of _bcast_stats[0].
+        self._bcast_stats: List[Tuple[int, int, int]] = []  # (params, wire, dense)
+        self._bcast_base = 0
+        # number of broadcasts each client has applied (absolute count)
+        self.client_sync = [0] * n_clients
 
     # -- download ----------------------------------------------------------
     def broadcast(self, round_t: int) -> Tuple[Packet, np.ndarray]:
@@ -66,7 +78,35 @@ class BaseStrategy:
             pkt = self.down_comp.compress(delta, round_t)  # enabled=False -> dense
             applied = delta
         self.last_broadcast = self.last_broadcast + applied
+        self._bcast_stats.append((pkt.param_count, pkt.wire_bytes, pkt.dense_bytes))
+        # prune billing entries every client has already paid for
+        floor = min(self.client_sync)
+        if floor > self._bcast_base:
+            del self._bcast_stats[:floor - self._bcast_base]
+            self._bcast_base = floor
         return pkt, applied
+
+    def client_download(self, cid: int, round_t: int) -> np.ndarray:
+        """Bring client ``cid`` fully in sync: bill one wire packet per
+        broadcast it missed since it last participated, and return the
+        synced view (= the server's broadcast base, which is exactly what a
+        client holding every applied delta would have)."""
+        n = self._bcast_base + len(self._bcast_stats)
+        s = self.client_sync[cid]           # >= base: pruning stops at min
+        for i in range(s - self._bcast_base, len(self._bcast_stats)):
+            params, wire, dense = self._bcast_stats[i]
+            self.ledger.log_download_stats(params, wire, dense)
+        self.client_sync[cid] = n
+        return self.last_broadcast.copy()
+
+    def reset_broadcast_base(self, vec: np.ndarray) -> None:
+        """Re-anchor every endpoint at ``vec`` (FLoRA's per-round re-init:
+        the stacked-module download already delivered the new state)."""
+        self.global_vec = np.asarray(vec, np.float32).copy()
+        self.last_broadcast = self.global_vec.copy()
+        self._bcast_stats.clear()
+        self._bcast_base = 0
+        self.client_sync = [0] * self.n_clients
 
     def client_start(self, cid: int, round_t: int, global_view: np.ndarray
                      ) -> np.ndarray:
@@ -77,6 +117,26 @@ class BaseStrategy:
             start = mix_models(global_view, self.client_vec[cid],
                                self.eco.beta, round_t, self.client_tau[cid])
         return start
+
+    def client_start_batch(self, cids, round_t: int, global_views: np.ndarray
+                           ) -> np.ndarray:
+        """Vectorized Eq. 3 over the round's K sampled clients.
+        ``global_views``: (K, size). Returns (K, size) start vectors."""
+        if self.eco is None:
+            return np.array(global_views, np.float32, copy=True)
+        locals_ = np.array(global_views, np.float32, copy=True)
+        taus = np.full(len(cids), round_t, np.int64)
+        has_local = np.zeros(len(cids), bool)
+        for i, cid in enumerate(cids):
+            if self.client_vec[cid] is not None:
+                locals_[i] = self.client_vec[cid]
+                taus[i] = self.client_tau[cid]
+                has_local[i] = True
+        mixed = mix_models_batch(global_views, locals_, self.eco.beta,
+                                 round_t, taus)
+        # fresh clients start from the global view unmixed
+        return np.where(has_local[:, None], mixed,
+                        np.asarray(global_views, np.float32))
 
     # -- upload ------------------------------------------------------------
     def client_upload(self, cid: int, round_t: int, trained_vec: np.ndarray,
@@ -93,6 +153,36 @@ class BaseStrategy:
         pkt = comp.compress(update, round_t, slice_=bounds)
         recv = Compressor.decompress(pkt)
         return pkt, SegmentUpdate(cid, round_t, seg, recv, n_samples, loss)
+
+    def client_upload_batch(self, cids, round_t: int, trained_vecs: np.ndarray,
+                            start_vecs: np.ndarray, n_samples, losses
+                            ) -> List[Tuple[Packet, SegmentUpdate]]:
+        """Batched-engine uplink: extract every client's round-robin segment
+        and sparsify+encode them in one (K, seg) pass (see compress_uplinks).
+        Semantically identical to K client_upload calls."""
+        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
+        bounds_all = segment_bounds(self.size, ns)
+        comps, values, slices, segs = [], [], [], []
+        for i, cid in enumerate(cids):
+            self.client_vec[cid] = np.array(trained_vecs[i], np.float32, copy=True)
+            self.client_tau[cid] = round_t
+            seg = segment_id(cid, round_t, ns)
+            s, e = bounds_all[seg]
+            segs.append(seg)
+            slices.append((s, e))
+            values.append(np.asarray(trained_vecs[i] - start_vecs[i],
+                                     np.float32)[s:e])
+            comp = self.up_comp[cid]
+            comp.observe_loss(float(losses[i]))
+            comps.append(comp)
+        pkts = compress_uplinks(comps, values, slices, round_t,
+                                backend=self.backend,
+                                pad_to=max(e - s for s, e in bounds_all))
+        return [(pkt, SegmentUpdate(cid, round_t, seg,
+                                    Compressor.decompress(pkt),
+                                    int(n), float(l)))
+                for pkt, cid, seg, n, l
+                in zip(pkts, cids, segs, n_samples, losses)]
 
     # -- aggregate ----------------------------------------------------------
     def aggregate(self, round_t: int, updates: List[SegmentUpdate]) -> None:
@@ -130,8 +220,8 @@ class FLoRAStrategy(BaseStrategy):
     freeze_a = False
     merges_into_base = True
 
-    def __init__(self, spec, vec_size, n_clients, eco=None):
-        super().__init__(spec, vec_size, n_clients, eco)
+    def __init__(self, spec, vec_size, n_clients, eco=None, backend="numpy"):
+        super().__init__(spec, vec_size, n_clients, eco, backend=backend)
         self.server_client_vecs: Dict[int, np.ndarray] = {}
         self.round_participants: List[Tuple[int, int]] = []  # (cid, n_samples)
 
@@ -161,9 +251,14 @@ class FLoRAStrategy(BaseStrategy):
         # re-init semantics: no Eq. 3 mixing with pre-merge stale LoRA
         return np.array(global_view, copy=True)
 
+    def client_start_batch(self, cids, round_t: int, global_views: np.ndarray
+                           ) -> np.ndarray:
+        return np.array(global_views, np.float32, copy=True)
+
 
 def make_strategy(method: str, spec, vec_size: int, n_clients: int,
-                  eco: Optional[EcoLoRAConfig]) -> BaseStrategy:
+                  eco: Optional[EcoLoRAConfig],
+                  backend: str = "numpy") -> BaseStrategy:
     cls = {"fedit": BaseStrategy, "ffa_lora": FFALoRAStrategy,
            "flora": FLoRAStrategy, "dpo": BaseStrategy}[method]
-    return cls(spec, vec_size, n_clients, eco)
+    return cls(spec, vec_size, n_clients, eco, backend=backend)

@@ -19,8 +19,9 @@ from repro.configs.base import ModelConfig
 from repro.core.segments import tree_spec, tree_to_vector, vector_to_tree
 from repro.data.partition import dirichlet_partition, task_partition
 from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
-from repro.fed.client import (TimedCall, make_evaluator, make_local_trainer,
-                              stack_batches)
+from repro.fed.client import (TimedCall, make_batched_local_trainer,
+                              make_evaluator, make_local_trainer,
+                              stack_batches, stack_client_states)
 from repro.fed.strategies import BaseStrategy, EcoLoRAConfig, make_strategy
 from repro.models import model as M
 from repro.models.lora import flatten_lora, unflatten_lora
@@ -47,6 +48,8 @@ class FedConfig:
     compute_model_s: Optional[float] = None  # netsim compute time override
     pretrain_steps: int = 120                # "pretrained LLM" stand-in
     pretrain_lr: float = 3e-3
+    engine: str = "batched"            # batched (one vmapped call/round) | serial
+    backend: str = "numpy"             # uplink sparsify backend: numpy | pallas
 
 
 @dataclass
@@ -93,6 +96,39 @@ def _protovec_to_tree(vec: np.ndarray, template: Params, b_only: bool) -> Params
     return unflatten_lora(out)
 
 
+def _tree_to_protovec_batch(tree: Params, b_only: bool) -> np.ndarray:
+    """Batched _tree_to_protovec: leaves carry a leading client axis K;
+    returns the (K, size) protocol-vector matrix in protocol order."""
+    pairs = flatten_lora(tree)
+    if b_only:
+        pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
+    if not pairs:
+        return np.zeros((0, 0), np.float32)
+    return np.concatenate(
+        [np.asarray(l, np.float32).reshape(np.shape(l)[0], -1)
+         for _, l in pairs], axis=1)
+
+
+def _protovec_to_tree_batch(vecs: np.ndarray, template: Params,
+                            b_only: bool) -> Params:
+    """Batched _protovec_to_tree: (K, size) rows -> a tree whose every leaf
+    has a leading K axis (non-protocol leaves are tiled from the template)."""
+    k = vecs.shape[0]
+    out = []
+    off = 0
+    for path, leaf in flatten_lora(template):
+        shape = np.shape(leaf)
+        if b_only and not path.endswith("/b"):
+            out.append((path, jnp.broadcast_to(jnp.asarray(leaf), (k,) + shape)))
+            continue
+        n = int(np.prod(shape))
+        out.append((path, jnp.asarray(
+            vecs[:, off:off + n].reshape((k,) + shape), dtype=leaf.dtype)))
+        off += n
+    assert off == vecs.shape[1]
+    return unflatten_lora(out)
+
+
 def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
                            weight: float) -> Params:
     """FLoRA merge: base_W += weight * scale * (a @ b) for every LoRA pair."""
@@ -128,6 +164,12 @@ def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
 class FederatedTrainer:
     def __init__(self, cfg: ModelConfig, fed: FedConfig,
                  task_cfg: Optional[TaskConfig] = None):
+        if fed.engine not in ("batched", "serial"):
+            raise ValueError(f"unknown engine {fed.engine!r} "
+                             "(expected 'batched' or 'serial')")
+        if fed.backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown backend {fed.backend!r} "
+                             "(expected 'numpy' or 'pallas')")
         self.cfg = cfg
         self.fed = fed
         self.rng = np.random.default_rng(fed.seed)
@@ -158,17 +200,15 @@ class FederatedTrainer:
         self.spec = _split_ab_spec(tree_spec(self.lora0), self.b_only)
         vec0 = _tree_to_protovec(self.lora0, self.b_only)
         self.strategy = make_strategy(fed.method, self.spec, vec0.size,
-                                      fed.n_clients, fed.eco)
+                                      fed.n_clients, fed.eco,
+                                      backend=fed.backend)
         # global protocol vector starts at the (shared) init
         self.strategy.global_vec = vec0.copy()
         self.strategy.last_broadcast = vec0.copy()
         self.client_views = np.tile(vec0, (fed.n_clients, 1))
 
-        opt_cfg = adamw.AdamWConfig(lr=fed.lr)
-        task_kind = "dpo" if fed.method == "dpo" else "lm"
-        self.local_train = TimedCall(make_local_trainer(
-            cfg, self.params, opt_cfg, task=task_kind,
-            freeze_a=self.strategy.freeze_a, dpo_beta=fed.dpo_beta))
+        self.task_kind = "dpo" if fed.method == "dpo" else "lm"
+        self._build_trainers()
         self.evaluator = make_evaluator(cfg, self.params)
         if fed.method == "dpo":
             from repro.fed.dpo import preference_accuracy
@@ -181,8 +221,24 @@ class FederatedTrainer:
             self.eval_batch = self.task.eval_set(n=128, seed=fed.seed + 999)
         self.logs: List[RoundLog] = []
         self._opt_template = adamw.init_state(self.lora0)
+        self._opt_template_batch = None        # lazily tiled to (K, ...)
 
     # ------------------------------------------------------------------
+    def _build_trainers(self) -> None:
+        """(Re)compile the engine's local trainer (FLoRA re-invokes this
+        every round after merging into the base weights)."""
+        opt_cfg = adamw.AdamWConfig(lr=self.fed.lr)
+        kw = dict(task=self.task_kind, freeze_a=self.strategy.freeze_a,
+                  dpo_beta=self.fed.dpo_beta)
+        if self.fed.engine == "serial":
+            self.local_train = TimedCall(make_local_trainer(
+                self.cfg, self.params, opt_cfg, **kw))
+            self.batched_train = None
+        else:
+            self.batched_train = TimedCall(make_batched_local_trainer(
+                self.cfg, self.params, opt_cfg, **kw))
+            self.local_train = None
+
     def _vec_to_lora(self, vec: np.ndarray) -> Params:
         return _protovec_to_tree(vec, self.lora0, self.b_only)
 
@@ -207,65 +263,35 @@ class FederatedTrainer:
             up0, down0 = strat.ledger.upload_bytes, strat.ledger.download_bytes
             upp0, downp0 = strat.ledger.upload_params, strat.ledger.download_params
 
-            # ---- download: one broadcast, applied to each participant ----
+            # ---- download: one broadcast per round; every participant then
+            # catches up on ALL broadcasts it missed while idle (and is
+            # billed for each), so no client trains from a stale view ----
             t_over = time.perf_counter()
-            pkt, applied = strat.broadcast(t)
+            strat.broadcast(t)
             for cid in sampled:
-                strat.ledger.log_download(pkt)
-                self.client_views[cid] += applied
+                self.client_views[cid] = strat.client_download(cid, t)
 
             # ---- local training ----
-            updates = []
-            compute_s = []
-            for cid in sampled:
-                start_vec = strat.client_start(cid, t, self.client_views[cid])
-                lora = self._vec_to_lora(start_vec)
-                opt_state = self._opt_template
-                batches = stack_batches(self.task, self.parts[cid],
-                                        fed.local_steps, fed.local_batch, self.rng)
-                batches = {k: jnp.asarray(v) for k, v in batches.items()}
-                lora, opt_state, loss = self.local_train(lora, opt_state, batches)
-                compute_s.append(fed.compute_model_s or self.local_train.last_s)
-                trained_vec = _tree_to_protovec(jax.device_get(lora), self.b_only)
-                pkt_up, upd = strat.client_upload(cid, t, trained_vec, start_vec,
-                                                  self.parts[cid].size, float(loss))
-                strat.ledger.log_upload(pkt_up)
-                updates.append(upd)
+            if fed.engine == "serial":
+                updates, compute_s = self._train_round_serial(t, sampled)
+            else:
+                updates, compute_s = self._train_round_batched(t, sampled)
 
             # ---- aggregate + (FLoRA) merge into base ----
             strat.aggregate(t, updates)
             if getattr(strat, "merges_into_base", False):
-                w = np.array([u.num_samples for u in updates], np.float64)
-                w /= w.sum()
-                for u, wi in zip(updates, w):
-                    cvec = strat.server_client_vecs[u.client_id]
-                    self.params = merge_lora_into_params(
-                        self.params, self._vec_to_lora(cvec), self.cfg, float(wi))
-                    # the stacked module download (what Table 1's huge FLoRA
-                    # totals measure): every sampled client receives every
-                    # participant's module next round
-                    pkt_stack = strat.down_comp.compress(cvec, t)
-                    for _ in sampled:
-                        strat.ledger.log_download(pkt_stack)
-                # re-init: fresh LoRA each round (a random, b = 0 — an
-                # all-zero re-init would kill both LoRA gradients)
-                reinit = _tree_to_protovec(
-                    M.init_lora(self.cfg, jax.random.PRNGKey(fed.seed + 1000 + t)),
-                    self.b_only)
-                strat.global_vec = reinit.copy()
-                strat.last_broadcast = reinit.copy()
-                strat.server_client_vecs.clear()
-                self.client_views[:] = reinit[None, :]
-                self.local_train = TimedCall(make_local_trainer(
-                    self.cfg, self.params, adamw.AdamWConfig(lr=fed.lr),
-                    task="dpo" if fed.method == "dpo" else "lm",
-                    freeze_a=strat.freeze_a, dpo_beta=fed.dpo_beta))
-                self.evaluator = make_evaluator(self.cfg, self.params)
+                self._flora_merge_and_reinit(t, sampled, updates)
             overhead_s = time.perf_counter() - t_over - sum(compute_s)
 
-            # ---- eval / adaptive-k loss signal ----
-            gloss, metric = self.evaluate(strat.global_vec)
-            strat.observe_global_loss(gloss)
+            # ---- eval / adaptive-k loss signal (eval_every thins the
+            # cadence; stale rounds reuse the last signal) ----
+            n_rounds = rounds or fed.rounds
+            if t % max(fed.eval_every, 1) == 0 or t == n_rounds - 1 \
+                    or not self.logs:
+                gloss, metric = self.evaluate(strat.global_vec)
+                strat.observe_global_loss(gloss)
+            else:
+                gloss, metric = self.logs[-1].global_loss, self.logs[-1].metric
             strat.ledger.snapshot_round(t)
             self.logs.append(RoundLog(
                 t, gloss, metric,
@@ -276,6 +302,91 @@ class FederatedTrainer:
                 float(np.max(compute_s)) if compute_s else 0.0,
                 max(overhead_s, 0.0)))
         return self.logs
+
+    # ------------------------------------------------------------------
+    def _train_round_serial(self, t: int, sampled) -> tuple:
+        """Reference engine: K independent jitted train calls + K numpy
+        compression passes (the pre-batching code path, kept for parity
+        testing and as the readable specification)."""
+        fed = self.fed
+        strat = self.strategy
+        updates, compute_s = [], []
+        for cid in sampled:
+            start_vec = strat.client_start(cid, t, self.client_views[cid])
+            lora = self._vec_to_lora(start_vec)
+            opt_state = self._opt_template
+            batches = stack_batches(self.task, self.parts[cid],
+                                    fed.local_steps, fed.local_batch, self.rng)
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            lora, opt_state, loss = self.local_train(lora, opt_state, batches)
+            compute_s.append(fed.compute_model_s or self.local_train.last_s)
+            trained_vec = _tree_to_protovec(jax.device_get(lora), self.b_only)
+            pkt_up, upd = strat.client_upload(cid, t, trained_vec, start_vec,
+                                              self.parts[cid].size, float(loss))
+            strat.ledger.log_upload(pkt_up)
+            updates.append(upd)
+        return updates, compute_s
+
+    def _train_round_batched(self, t: int, sampled) -> tuple:
+        """Batched engine: stack the K clients along a leading axis and run
+        local training as ONE vmapped jitted call; Eq. 3 mixing, protocol
+        vector extraction, and uplink sparsification are vectorized too."""
+        fed = self.fed
+        strat = self.strategy
+        k = len(sampled)
+        start_vecs = strat.client_start_batch(sampled, t,
+                                              self.client_views[sampled])
+        # batch sampling stays serial numpy (same rng call order as the
+        # serial engine -> identical draws), only stacking is new
+        per_client = [stack_batches(self.task, self.parts[cid], fed.local_steps,
+                                    fed.local_batch, self.rng)
+                      for cid in sampled]
+        batches = {key: jnp.asarray(np.stack([b[key] for b in per_client]))
+                   for key in per_client[0]}
+        loras = _protovec_to_tree_batch(start_vecs, self.lora0, self.b_only)
+        if self._opt_template_batch is None or jax.tree_util.tree_leaves(
+                self._opt_template_batch)[0].shape[0] != k:
+            self._opt_template_batch = stack_client_states(self._opt_template, k)
+        loras, _, losses = self.batched_train(loras, self._opt_template_batch,
+                                              batches)
+        per_s = (fed.compute_model_s
+                 or self.batched_train.last_s / max(k, 1))
+        trained_vecs = _tree_to_protovec_batch(jax.device_get(loras),
+                                               self.b_only)
+        n_samples = [self.parts[cid].size for cid in sampled]
+        pairs = strat.client_upload_batch(sampled, t, trained_vecs, start_vecs,
+                                          n_samples, np.asarray(losses))
+        updates = []
+        for pkt_up, upd in pairs:
+            strat.ledger.log_upload(pkt_up)
+            updates.append(upd)
+        return updates, [per_s] * k
+
+    def _flora_merge_and_reinit(self, t: int, sampled, updates) -> None:
+        fed = self.fed
+        strat = self.strategy
+        w = np.array([u.num_samples for u in updates], np.float64)
+        w /= w.sum()
+        for u, wi in zip(updates, w):
+            cvec = strat.server_client_vecs[u.client_id]
+            self.params = merge_lora_into_params(
+                self.params, self._vec_to_lora(cvec), self.cfg, float(wi))
+            # the stacked module download (what Table 1's huge FLoRA
+            # totals measure): every sampled client receives every
+            # participant's module next round
+            pkt_stack = strat.down_comp.compress(cvec, t)
+            for _ in sampled:
+                strat.ledger.log_download(pkt_stack)
+        # re-init: fresh LoRA each round (a random, b = 0 — an
+        # all-zero re-init would kill both LoRA gradients)
+        reinit = _tree_to_protovec(
+            M.init_lora(self.cfg, jax.random.PRNGKey(fed.seed + 1000 + t)),
+            self.b_only)
+        strat.reset_broadcast_base(reinit)
+        strat.server_client_vecs.clear()
+        self.client_views[:] = reinit[None, :]
+        self._build_trainers()
+        self.evaluator = make_evaluator(self.cfg, self.params)
 
     # ------------------------------------------------------------------
     def rounds_to_metric(self, target: float) -> Optional[int]:

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import decode_attn as _da
 from repro.kernels import lora_matmul as _lm
@@ -29,16 +30,63 @@ def lora_matmul(x, w, a, b, scale: float, **kw):
 
 
 def sparsify_residual(x, residual, k_frac: float, **kw):
-    """Fused adaptive-top-k + residual (Eqs. 5-6). 1-D inputs, padded here."""
+    """Fused adaptive-top-k + residual (Eqs. 5-6). 1-D inputs, padded here.
+
+    Keeps EXACTLY keep_count(n, k_frac) entries — ties at the threshold
+    magnitude break toward the lower index, matching the numpy reference
+    ``repro.core.sparsify.topk_mask`` (the tau-form kernel alone would keep
+    every tie)."""
     n = x.shape[0]
     block = min(kw.pop("block", 1024), n)
     pad = (-n) % block
+    mask = _sp.topk_mask(x + residual, _sp.keep_count(n, k_frac))
     xp = jnp.pad(x, (0, pad))
     rp = jnp.pad(residual, (0, pad))
-    tau = _sp.topk_threshold(x + residual, k_frac)
-    s, nr = _sp.sparsify_residual(xp, rp, tau, block=block,
-                                  interpret=INTERPRET, **kw)
-    return s[:n], nr[:n]
+    mp = jnp.pad(mask, (0, pad))
+    s, nr = _sp.sparsify_residual_masked(xp[None, :], rp[None, :], mp[None, :],
+                                         block=block, interpret=INTERPRET, **kw)
+    return s[0, :n], nr[0, :n]
+
+
+def sparsify_topk_batch(x, residual, ab_mask, valid, keep_a, keep_b, **kw):
+    """Batched (K, L) fused sparsify+residual for one round's K clients.
+
+    ``ab_mask``/``valid``: (K, L) bool (A-matrix membership / non-padding);
+    ``keep_a``/``keep_b``: (K,) per-client exact keep counts (0 = group
+    absent). Returns (sparse, new_residual, mask), all (K, L); padding
+    positions are never kept and carry zero residual. Pad host-side to a
+    round-independent L so the jitted pass compiles once per run.
+
+    The SELECTION is a reduction and runs outside the elementwise kernel:
+    on a real accelerator the whole pass stays on device
+    (kernels.sparsify.topk_sparsify_batch); under CPU-interpret the
+    threshold pass uses the vectorized numpy selection instead, because
+    XLA:CPU's sort is far slower than np.sort and the result is identical.
+    """
+    k, n = x.shape
+    block = min(kw.pop("block", 1024), n)
+    pad = (-n) % block
+    wide = ((0, 0), (0, pad))
+    xp = np.pad(np.asarray(x, np.float32), wide)
+    rp = np.pad(np.asarray(residual, np.float32), wide)
+    ab = np.asarray(ab_mask, bool)
+    va = np.asarray(valid, bool)
+    gm_a = np.pad(ab & va, wide)
+    gm_b = np.pad(~ab & va, wide)
+    ka = np.asarray(keep_a, np.int32)
+    kb = np.asarray(keep_b, np.int32)
+    if not INTERPRET:
+        s, nr, mask = _sp.topk_sparsify_batch(xp, rp, gm_a, gm_b, ka, kb,
+                                              block=block, interpret=False,
+                                              **kw)
+    else:
+        from repro.core.sparsify import batched_topk_mask
+        mag = np.abs(xp + rp)
+        mask = batched_topk_mask(mag, gm_a, ka) | batched_topk_mask(mag, gm_b, kb)
+        s, nr = _sp.sparsify_residual_masked(xp, rp, mask, block=block,
+                                             interpret=True, **kw)
+    return (np.asarray(s)[:, :n], np.asarray(nr)[:, :n],
+            np.asarray(mask)[:, :n])
 
 
 def decode_attention(q, k, v, valid, n_rep: int, **kw):

@@ -6,9 +6,20 @@ R' = offered - sparse). Fused, each element is read once from HBM, thresheld
 in VREGs, and both outputs stream back — the op is purely memory-bound, so
 one pass is the roofline.
 
-The magnitude threshold tau is computed outside (jax.lax.top_k on a sampled
-subset or exact) — selection is a reduction, the elementwise pass is the
-volume work.
+Selection (which elements survive) is a reduction and happens outside the
+elementwise pass. Two selection front-ends feed the kernels:
+
+  * ``topk_threshold``: the k-th magnitude as a scalar tau, consumed by the
+    tau-form kernel with ``|offered| >= tau``. Cheap, but magnitude TIES at
+    tau keep more than ceil(k*n) entries.
+  * ``topk_mask``: an exact boolean mask keeping precisely ceil(k*n)
+    entries, ties broken toward the lower index — bit-identical to the
+    numpy reference ``repro.core.sparsify.topk_mask``. The mask-form kernel
+    applies it elementwise; this is what the batched round engine uses so
+    wire byte counts match the serial path exactly.
+
+The batched entry point ``sparsify_residual_masked`` runs one (K, L) grid
+over all K sampled clients' segment slices per round (see DESIGN.md).
 """
 from __future__ import annotations
 
@@ -26,6 +37,15 @@ def _kernel(x_ref, r_ref, tau_ref, s_ref, nr_ref):
     offered = x + r
     keep = jnp.abs(offered) >= tau
     sparse = jnp.where(keep, offered, 0.0)
+    s_ref[...] = sparse.astype(s_ref.dtype)
+    nr_ref[...] = (offered - sparse).astype(nr_ref.dtype)
+
+
+def _masked_kernel(x_ref, r_ref, m_ref, s_ref, nr_ref):
+    x = x_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    offered = x + r
+    sparse = jnp.where(m_ref[...], offered, 0.0)
     s_ref[...] = sparse.astype(s_ref.dtype)
     nr_ref[...] = (offered - sparse).astype(nr_ref.dtype)
 
@@ -59,11 +79,103 @@ def sparsify_residual(x: jnp.ndarray, residual: jnp.ndarray, tau: jnp.ndarray,
     )(x, residual, tau)
 
 
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sparsify_residual_masked(x: jnp.ndarray, residual: jnp.ndarray,
+                             mask: jnp.ndarray, *, block: int = 1024,
+                             interpret: bool = True):
+    """Mask-form fused pass over a (K, L) client batch (L % block == 0).
+    Returns (sparse, new_residual), both (K, L)."""
+    k, n = x.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    grid = (k, n // block)
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), x.dtype),
+            jax.ShapeDtypeStruct((k, n), residual.dtype),
+        ],
+        interpret=interpret,
+    )(x, residual, mask)
+
+
+# the ONE authoritative keep-count rule (ceil(k*n) clamped to [1, n]),
+# shared with the numpy reference so wire byte counts can't drift
+from repro.core.sparsify import keep_count  # noqa: E402,F401
+
+
+@functools.partial(jax.jit, static_argnames=("k_frac",))
 def topk_threshold(x: jnp.ndarray, k_frac: float) -> jnp.ndarray:
-    """Exact magnitude threshold keeping ceil(k*n) entries (host-side
-    reduction feeding the kernel)."""
-    n = x.shape[0]
-    keep = max(1, min(n, int(jnp.ceil(k_frac * n)) if not isinstance(k_frac, float)
-                      else int(-(-k_frac * n // 1))))
+    """Exact magnitude threshold: the keep_count(n, k)-th largest |x| (the
+    reduction feeding the tau-form kernel). ``k_frac`` is static — the keep
+    count is a Python int, so this is safe to call under jit."""
+    keep = keep_count(x.shape[0], k_frac)
     vals = jax.lax.top_k(jnp.abs(x.astype(jnp.float32)), keep)[0]
     return vals[-1:]
+
+
+def _exact_topk_mask(mag: jnp.ndarray, gm: jnp.ndarray, kp: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """Exact per-row top-``kp`` over the entries selected by ``gm``.
+
+    One single-operand sort finds the kp-th magnitude tau; everything
+    strictly above tau is kept, and the remaining ``kp - count(> tau)``
+    slots go to tau-TIES in increasing index order (a cumsum ranks them).
+    This reproduces the numpy reference's stable-argsort selection exactly
+    while sorting scalars instead of (value, index) pairs.
+    mag: (..., L) >= 0; gm: (..., L) bool; kp: (...,) int (0 = keep none).
+    """
+    gmag = jnp.where(gm, mag, -1.0)                 # excluded sorts last
+    srt = jax.lax.sort(gmag, dimension=gmag.ndim - 1, is_stable=False)
+    srt = srt[..., ::-1]
+    kp = jnp.asarray(kp)
+    tau = jnp.take_along_axis(srt, jnp.clip(kp - 1, 0)[..., None], axis=-1)
+    gt = gmag > tau
+    eq = gm & (gmag == tau)
+    budget = kp[..., None] - jnp.sum(gt, axis=-1, keepdims=True)
+    tie_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1) - 1
+    return (gt | (eq & (tie_rank < budget))) & (kp[..., None] > 0)
+
+
+def topk_mask(x: jnp.ndarray, keep) -> jnp.ndarray:
+    """Exact top-k mask: keeps precisely ``keep`` entries per row of |x|,
+    ties toward the lower index — identical selection to the numpy
+    reference ``repro.core.sparsify.topk_mask``. ``keep`` may be per-row
+    (one call covers K clients with different adaptive keep-rates)."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    return _exact_topk_mask(mag, jnp.ones(x.shape, bool), keep)
+
+
+def grouped_topk_mask(offered: jnp.ndarray, group_masks, keeps) -> jnp.ndarray:
+    """Union of per-group exact top-k masks over a (K, L) batch.
+
+    ``group_masks``: iterable of (K, L) bool arrays partitioning the valid
+    entries (EcoLoRA's A-matrix and B-matrix schedules); ``keeps``: matching
+    (K,) int arrays of per-row keep counts (0 = group absent in this row).
+    Entries outside every group (padding) are never kept.
+    """
+    mag = jnp.abs(offered.astype(jnp.float32))
+    out = jnp.zeros(offered.shape, bool)
+    for gm, kp in zip(group_masks, keeps):
+        out = out | _exact_topk_mask(mag, gm, kp)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def topk_sparsify_batch(x: jnp.ndarray, residual: jnp.ndarray,
+                        gm_a: jnp.ndarray, gm_b: jnp.ndarray,
+                        keep_a: jnp.ndarray, keep_b: jnp.ndarray,
+                        *, block: int = 1024, interpret: bool = True):
+    """One jitted pass for a whole round's uplink compression: the batched
+    (K, L) threshold/rank selection followed by the fused masked kernel.
+    Inputs must be pre-padded to L % block == 0 (pad with gm_a=gm_b=False).
+    Returns (sparse, new_residual, mask), all (K, L)."""
+    offered = x + residual
+    mask = grouped_topk_mask(offered, (gm_a, gm_b), (keep_a, keep_b))
+    sparse, new_res = sparsify_residual_masked(x, residual, mask,
+                                               block=block, interpret=interpret)
+    return sparse, new_res, mask

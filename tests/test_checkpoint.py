@@ -1,6 +1,7 @@
 """Checkpoint round-trips (incl. bf16) and fed-state resume."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import ckpt
 
@@ -19,6 +20,7 @@ def test_tree_roundtrip(tmp_path):
     assert np.asarray(out["nested"]["b16"]).dtype.name == "bfloat16"
 
 
+@pytest.mark.slow
 def test_fed_state_resume(tmp_path):
     from repro.configs import get_config
     from repro.data.synthetic import TaskConfig

@@ -50,3 +50,21 @@ def test_ledger_accumulates():
     assert led.download_params == 200
     assert led.total_params == 800
     assert led.total_bytes > 0
+
+
+def test_wire_decode_matches_idx_cache_shortcut():
+    """decode_sparse normally takes the same-process idx_cache shortcut;
+    the actual Golomb bit-walk must stay byte-exact with it (this is the
+    non-hypothesis guard — test_golomb covers it property-based in CI)."""
+    import dataclasses
+    from repro.core.golomb import decode_sparse, encode_sparse
+    rng = np.random.default_rng(11)
+    for n, k in ((64, 0.05), (1000, 0.2), (777, 0.9)):
+        dense = np.where(rng.random(n) < k, rng.normal(size=n), 0.0)
+        dense = dense.astype(np.float32)
+        enc = encode_sparse(dense, k)
+        wire = decode_sparse(dataclasses.replace(enc, idx_cache=None))
+        np.testing.assert_array_equal(wire, decode_sparse(enc))
+        np.testing.assert_array_equal(
+            wire, np.where(dense != 0,
+                           dense.astype(np.float16).astype(np.float32), 0.0))

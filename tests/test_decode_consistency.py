@@ -8,8 +8,12 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.models import model as M
 
+_HEAVY = {"deepseek-v3-671b", "zamba2-1.2b", "llama-3.2-vision-11b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY
+               else a for a in ASSIGNED_ARCHS]
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(arch):
     cfg = get_config(arch).reduced()
     key = jax.random.PRNGKey(1)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.data.synthetic import PreferenceTask, TaskConfig
@@ -28,6 +29,7 @@ def test_zero_lora_gives_log2_loss():
     np.testing.assert_allclose(float(loss), float(np.log(2)), rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_dpo_gradient_improves_preference():
     params, lora, batch = _setup()
     from repro.optim import adamw

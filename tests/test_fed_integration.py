@@ -22,6 +22,7 @@ def _run(method, eco, rounds=3, **kw):
     return tr
 
 
+@pytest.mark.slow
 def test_ecolora_reduces_upload():
     base = _run("fedit", None)
     eco = _run("fedit", EcoLoRAConfig(n_segments=2))
@@ -30,6 +31,7 @@ def test_ecolora_reduces_upload():
     assert led_e.upload_params < 0.7 * led_b.upload_params
 
 
+@pytest.mark.slow
 def test_ffa_freezes_a():
     tr = _run("ffa_lora", None)
     # protocol vector only covers /b leaves
@@ -48,6 +50,7 @@ def test_ffa_freezes_a():
                                        np.asarray(l1, np.float32))
 
 
+@pytest.mark.slow
 def test_metric_not_degraded_by_eco():
     base = _run("fedit", None, rounds=4)
     eco = _run("fedit", EcoLoRAConfig(

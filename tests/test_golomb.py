@@ -1,5 +1,8 @@
 """Lossless encoding (§3.5): exact round-trip + rate properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.golomb import (decode_gaps, decode_sparse, encode_gaps, encode_sparse,
@@ -20,12 +23,17 @@ def test_gap_roundtrip(gaps, m):
 @settings(deadline=None, max_examples=30)
 @given(st.integers(10, 3000), st.floats(0.02, 0.95), st.integers(0, 2**31 - 1))
 def test_sparse_roundtrip(n, k, seed):
+    import dataclasses
     rng = np.random.default_rng(seed)
     dense = np.where(rng.random(n) < k, rng.normal(size=n), 0.0).astype(np.float32)
     enc = encode_sparse(dense, k)
-    dec = decode_sparse(enc)
-    assert np.allclose(dec, dense.astype(np.float16).astype(np.float32), atol=1e-3)
+    # the real WIRE decode (bit-walk of the Golomb stream), not the
+    # same-process idx_cache shortcut
+    wire = decode_sparse(dataclasses.replace(enc, idx_cache=None))
+    assert np.allclose(wire, dense.astype(np.float16).astype(np.float32), atol=1e-3)
     assert enc.count == int((dense != 0).sum())
+    # and the shortcut must agree with the wire decode bit-for-bit
+    np.testing.assert_array_equal(decode_sparse(enc), wire)
 
 
 def test_paper_example_k_0p1():

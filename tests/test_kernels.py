@@ -41,6 +41,105 @@ def test_sparsify_kernel_sweep(n, kfrac):
     np.testing.assert_allclose(np.asarray(s + nr), np.asarray(x + r), atol=1e-5)
 
 
+def test_topk_threshold_jit_safe():
+    """topk_threshold must work as a nested call under jit (it used to call
+    int() on a traced keep count)."""
+    @jax.jit
+    def f(x):
+        return topk_threshold(x, 0.25)
+    x = jax.random.normal(jax.random.PRNGKey(0), (257,), jnp.float32)
+    tau = f(x)
+    mag = np.sort(np.abs(np.asarray(x)))[::-1]
+    keep = int(np.ceil(0.25 * 257))
+    np.testing.assert_allclose(np.asarray(tau)[0], mag[keep - 1])
+
+
+@pytest.mark.parametrize("kfrac", [0.05, 0.33, 0.9, 1.0])
+def test_topk_mask_tie_parity(kfrac):
+    """Tie-heavy input: the kernel-path exact mask keeps EXACTLY ceil(k*n)
+    entries and matches the numpy reference element-for-element (ties break
+    toward the lower index in both)."""
+    from repro.core.sparsify import topk_mask as np_topk_mask
+    from repro.kernels.sparsify import keep_count, topk_mask as jx_topk_mask
+    rng = np.random.default_rng(3)
+    n = 1024
+    x = np.round(rng.normal(size=n) * 3).astype(np.float32)  # massive ties
+    keep = keep_count(n, kfrac)
+    ref = np_topk_mask(x, kfrac)
+    got = np.asarray(jx_topk_mask(jnp.asarray(x), keep))
+    assert ref.sum() == got.sum() == keep
+    assert (ref == got).all()
+
+
+def test_sparsify_residual_exact_count_with_ties():
+    """ops.sparsify_residual keeps exactly ceil(k*n) even when the offered
+    vector is tie-heavy (the raw >=tau kernel would keep every tie)."""
+    from repro.core.sparsify import sparsify_with_residual
+    rng = np.random.default_rng(4)
+    n, kfrac = 512, 0.2
+    x = np.round(rng.normal(size=n)).astype(np.float32)
+    r = np.zeros(n, np.float32)
+    s, nr = ops.sparsify_residual(jnp.asarray(x), jnp.asarray(r), kfrac)
+    ref_s, ref_nr, ref_mask = sparsify_with_residual(x, r, kfrac)
+    assert ref_mask.sum() == int(np.ceil(kfrac * n))
+    np.testing.assert_allclose(np.asarray(s), ref_s, atol=0)
+    np.testing.assert_allclose(np.asarray(nr), ref_nr, atol=0)
+
+
+def test_device_selection_matches_numpy_selection():
+    """The on-device selection (grouped_topk_mask, used when interpret=False
+    on real accelerators) agrees with the vectorized numpy selection the
+    CPU-interpret path uses — tie-heavy input included."""
+    from repro.core.sparsify import batched_topk_mask
+    from repro.kernels.sparsify import grouped_topk_mask
+    rng = np.random.default_rng(7)
+    K, L = 5, 512
+    x = np.round(rng.normal(size=(K, L)) * 2).astype(np.float32)
+    ab = rng.random((K, L)) < 0.4
+    valid = np.ones((K, L), bool)
+    valid[:, 480:] = False
+    ka = rng.integers(1, 100, K).astype(np.int32)
+    kb = rng.integers(1, 100, K).astype(np.int32)
+    mag = np.abs(x)
+    ref = batched_topk_mask(mag, ab & valid, ka) \
+        | batched_topk_mask(mag, ~ab & valid, kb)
+    got = np.asarray(grouped_topk_mask(jnp.asarray(x),
+                                       (ab & valid, ~ab & valid), (ka, kb)))
+    assert (ref == got).all()
+
+
+def test_grouped_topk_batch_matches_per_client_numpy():
+    """The batched (K, seg) selection + fused kernel equals K independent
+    numpy group-wise sparsify passes, including padding rows and ties."""
+    from repro.core.sparsify import topk_mask as np_topk_mask
+    rng = np.random.default_rng(5)
+    K, L = 6, 640
+    x = np.round(rng.normal(size=(K, L)) * 2).astype(np.float32)
+    r = (np.round(rng.normal(size=(K, L))) * 0.5).astype(np.float32)
+    ab = rng.random((K, L)) < 0.5
+    valid = np.ones((K, L), bool)
+    valid[:, 600:] = False                  # ragged tails (padding)
+    ka = np.zeros(K, np.int32)
+    kb = np.zeros(K, np.int32)
+    ref_sparse = np.zeros((K, L), np.float32)
+    ref_res = np.zeros((K, L), np.float32)
+    offered = x + r
+    for i in range(K):
+        for grp, kf, karr in ((ab[i] & valid[i], 0.3, ka),
+                              (~ab[i] & valid[i], 0.6, kb)):
+            n = int(grp.sum())
+            karr[i] = min(n, max(1, int(np.ceil(kf * n))))
+            m = np_topk_mask(offered[i][grp], kf)
+            vals = np.where(m, offered[i][grp], 0.0).astype(np.float32)
+            ref_sparse[i][grp] = vals
+            ref_res[i][grp] = offered[i][grp] - vals
+    s, nr, mask = ops.sparsify_topk_batch(x, r, ab, valid, ka, kb)
+    np.testing.assert_allclose(s[valid], ref_sparse[valid], atol=0)
+    np.testing.assert_allclose(nr[valid], ref_res[valid], atol=0)
+    assert not mask[~valid].any()
+    assert int(mask.sum()) == int(ka.sum() + kb.sum())
+
+
 @pytest.mark.parametrize("b,s,hkv,nrep,d", [(2, 512, 4, 4, 64), (1, 1024, 2, 8, 128),
                                             (3, 256, 1, 1, 64), (2, 512, 8, 2, 32)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,5 +1,8 @@
 """Round-robin segment sharing (§3.3): properties via hypothesis."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,

@@ -1,6 +1,9 @@
 """Adaptive sparsification (§3.4): Eq. 4 schedule, Eqs. 5-6 residual
 feedback, contractive property (used by the §3.7 proof)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig, adaptive_k,

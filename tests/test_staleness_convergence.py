@@ -1,6 +1,8 @@
 """Eq. 3 mixing + §3.7 convergence constants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.convergence import ConvergenceConstants, contraction_delta_of_topk
