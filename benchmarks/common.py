@@ -46,10 +46,11 @@ def fed_config(method: str = "fedit", eco: EcoLoRAConfig | None = None,
     return FedConfig(**base)
 
 
-def run_fed(method: str, eco: EcoLoRAConfig | None, seed: int = 0, **kw):
+def run_fed(method: str, eco: EcoLoRAConfig | None, seed: int = 0,
+            transport=None, **kw):
     cfg = get_config(MODEL).reduced()
     fed = fed_config(method, eco, seed=seed, **kw)
-    tr = FederatedTrainer(cfg, fed, task_config(seed))
+    tr = FederatedTrainer(cfg, fed, task_config(seed), transport=transport)
     tr.run()
     return tr
 

@@ -8,7 +8,7 @@ from repro.core.sparsify import gini
 
 def main():
     tr = run_fed("fedit", None)
-    vec = tr.strategy.global_vec
+    vec = tr.server.global_vec
     ab = np.zeros(vec.size, bool)
     off = 0
     for path, shape, _ in tr.spec:

@@ -1,7 +1,14 @@
 """Figure 3 analogue: computation vs communication time under the paper's
-four UL/DL bandwidth scenarios (netsim replaces ns-3)."""
-from benchmarks.common import default_eco, emit, run_fed
+four UL/DL bandwidth scenarios (netsim replaces ns-3), plus the scenario
+axes the paper's straggler-bound rounds imply: heterogeneous per-client
+links and buffered-async (M-of-K) aggregation over a live SimTransport."""
+from benchmarks.common import default_eco, emit, fed_config, run_fed
+from repro.fed.transport import SimTransport
 from repro.netsim.network import SCENARIOS, NetworkSimulator
+
+_SIZES = fed_config()                  # one source for n_clients / K
+N_CLIENTS = _SIZES.n_clients
+K = _SIZES.clients_per_round
 
 
 def replay(tr, scenario):
@@ -15,8 +22,20 @@ def replay(tr, scenario):
     return sim.totals()
 
 
+def hetero_transport(round_mode="sync", min_uploads=None, dropout=0.0,
+                     seed=0):
+    """Clients spread uniformly over the paper's four link scenarios."""
+    names = list(SCENARIOS)
+    per_client = {cid: SCENARIOS[names[cid % len(names)]]
+                  for cid in range(N_CLIENTS)}
+    return SimTransport(SCENARIOS["1/5"], per_client=per_client,
+                        round_mode=round_mode, min_uploads=min_uploads,
+                        dropout=dropout, seed=seed)
+
+
 def main():
     out = {}
+    # ---- homogeneous scenarios: ledger replay (as in the paper's Fig. 3) ----
     runs = {"base": run_fed("fedit", None),
             "eco": run_fed("fedit", default_eco())}
     for name in SCENARIOS:
@@ -32,6 +51,38 @@ def main():
              "paper@1/5Mbps: 0.79")
         emit(f"fig3/{name}/total_reduction",
              round(1 - e["total_s"] / b["total_s"], 3), "paper@1/5Mbps: 0.65")
+
+    # ---- heterogeneous links, live transport: straggler-bound sync ----
+    tr_sync = run_fed("fedit", default_eco(), transport=hetero_transport())
+    t_sync = tr_sync.transport.totals()
+    out[("hetero", "sync")] = t_sync
+    emit("fig3/hetero_sync/comm_s", round(t_sync["communication_s"], 1),
+         "per-client scenarios, straggler-bound")
+
+    # ---- buffered async M-of-K over the same heterogeneous links ----
+    m = max(K // 2, 1)
+    tr_async = run_fed("fedit", default_eco(),
+                       transport=hetero_transport("buffered_async", m))
+    t_async = tr_async.transport.totals()
+    out[("hetero", "async")] = t_async
+    emit("fig3/hetero_async/comm_s", round(t_async["communication_s"], 1),
+         f"M-of-K aggregation, M={m} of {K}")
+    emit("fig3/hetero_async/late_uploads",
+         tr_async.transport.straggler_count(),
+         "stragglers absorbed next round")
+    emit("fig3/hetero_async/comm_reduction_vs_sync",
+         round(1 - t_async["communication_s"] / t_sync["communication_s"], 3),
+         "async stops waiting for slow links")
+
+    # ---- client dropout: rounds survive, traffic shrinks ----
+    tr_drop = run_fed("fedit", default_eco(),
+                      transport=hetero_transport(dropout=0.3, seed=1))
+    n_drop = sum(len(cids) for _, cids in tr_drop.transport.dropped)
+    out[("hetero", "dropout")] = tr_drop.transport.totals()
+    emit("fig3/hetero_dropout/dropped_clients", n_drop, "30% dropout")
+    emit("fig3/hetero_dropout/upload_MB",
+         round(tr_drop.server.ledger.upload_bytes / 1e6, 3),
+         f"sync run: {tr_sync.server.ledger.upload_bytes / 1e6:.3f}")
     return out
 
 

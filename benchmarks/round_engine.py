@@ -14,6 +14,7 @@ batched engine pays it once instead of K times.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks.common import FULL, MODEL, emit, get_config
@@ -24,25 +25,30 @@ from repro.fed.trainer import FedConfig, FederatedTrainer
 
 import numpy as np
 
-ROUNDS = 10 if FULL else 6
 WARMUP = 1
 
 
-def _fed(engine: str, backend: str) -> FedConfig:
+def _fed(engine: str, backend: str, quick: bool) -> FedConfig:
     return FedConfig(
         method="fedit",
         n_clients=100 if FULL else 20,
         clients_per_round=10,
-        rounds=ROUNDS,
-        local_steps=8,
+        rounds=_rounds(quick),
+        local_steps=4 if quick else 8,
         local_batch=1,                 # cross-device profile: many clients,
         lr=3e-3,                       # little data each
         eco=EcoLoRAConfig(n_segments=5, sparsify=SparsifyConfig()),
-        pretrain_steps=5,
+        pretrain_steps=2 if quick else 5,
         eval_every=1_000_000,          # isolate engine throughput from eval
         engine=engine,
         backend=backend,
     )
+
+
+def _rounds(quick: bool) -> int:
+    if quick:
+        return 3
+    return 10 if FULL else 6
 
 
 def _time_engine_rounds(tr: FederatedTrainer, rounds: int) -> list:
@@ -50,45 +56,47 @@ def _time_engine_rounds(tr: FederatedTrainer, rounds: int) -> list:
     training, uplink compression, aggregation — which is what the two
     engines implement differently. Eval is identical in both engines and
     amortized away by eval_every in real sweeps, so it stays outside the
-    timer."""
-    fed, strat = tr.fed, tr.strategy
+    timer. Driven through the endpoint message API."""
+    fed, srv, cl, tp = tr.fed, tr.server, tr.clients, tr.transport
     times = []
     for t in range(rounds):
         sampled = tr.rng.choice(fed.n_clients, size=fed.clients_per_round,
                                 replace=False)
         t0 = time.perf_counter()
-        strat.broadcast(t)
-        for cid in sampled:
-            tr.client_views[cid] += strat.client_download(cid, t)
-        if fed.engine == "serial":
-            updates, _ = tr._train_round_serial(t, sampled)
-        else:
-            updates, _ = tr._train_round_batched(t, sampled)
-        strat.aggregate(t, updates)
+        participants = tp.plan_round(t, sampled)
+        tp.on_broadcast(srv.begin_round(t))
+        for cid in participants:
+            dl = srv.sync_client(int(cid), t)
+            tp.on_download(dl)
+            cl.apply_download(int(cid), dl)
+        msgs, compute_s = cl.run_round(t, participants)
+        for msg in tp.dispatch_uploads(t, msgs, compute_s):
+            srv.receive(msg)
+        srv.end_round(t)
         times.append(time.perf_counter() - t0)
     return times
 
 
-def _run(engine: str, backend: str):
+def _run(engine: str, backend: str, quick: bool):
     cfg = get_config(MODEL).reduced()
     tc = TaskConfig(vocab_size=256, seq_len=8, n_samples=512, seed=0)
-    tr = FederatedTrainer(cfg, _fed(engine, backend), tc)
+    tr = FederatedTrainer(cfg, _fed(engine, backend, quick), tc)
     tr.run(rounds=WARMUP)              # compile + caches
     # min over rounds = steady-state rate (this 2-core CI box is noisy —
     # occasional rounds stall on scheduler hiccups)
-    per_round = _time_engine_rounds(tr, ROUNDS)
+    per_round = _time_engine_rounds(tr, _rounds(quick))
     return tr, 1.0 / min(per_round)
 
 
-def main() -> dict:
-    serial, rps_serial = _run("serial", "numpy")
-    batched, rps_batched = _run("batched", "pallas")
+def main(quick: bool = False) -> dict:
+    serial, rps_serial = _run("serial", "numpy", quick)
+    batched, rps_batched = _run("batched", "pallas", quick)
     speedup = rps_batched / rps_serial
 
     # parity: same seeds -> same protocol state and same wire traffic
-    gv_err = float(np.abs(serial.strategy.global_vec
-                          - batched.strategy.global_vec).max())
-    led_s, led_b = serial.strategy.ledger, batched.strategy.ledger
+    gv_err = float(np.abs(serial.server.global_vec
+                          - batched.server.global_vec).max())
+    led_s, led_b = serial.server.ledger, batched.server.ledger
     bytes_equal = (led_s.upload_bytes == led_b.upload_bytes
                    and led_s.download_bytes == led_b.download_bytes)
 
@@ -100,9 +108,19 @@ def main() -> dict:
     emit("round_engine/ledger_bytes_equal", bytes_equal)
     assert gv_err <= 1e-5, f"engine parity broken: max err {gv_err}"
     assert bytes_equal, "engine parity broken: ledger bytes differ"
+    if quick:
+        # CI smoke: the batched engine must stay ahead of the serial
+        # reference (a lenient floor — shared CI boxes are noisy; the full
+        # profile targets >=3x)
+        assert speedup >= 1.2, \
+            f"engine throughput regression: batched/serial = {speedup:.2f}x"
     return {"serial_rps": rps_serial, "batched_rps": rps_batched,
             "speedup": speedup}
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke profile: fewer rounds, asserts the "
+                         "batched engine stays faster than serial")
+    main(quick=ap.parse_args().quick)

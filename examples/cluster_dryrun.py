@@ -16,10 +16,13 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--segments", type=int, default=5,
+                    help="EcoLoRA Ns for the federated-round estimate")
+    ap.add_argument("--local-steps", type=int, default=4)
     args = ap.parse_args()
 
     from repro.launch.dryrun import run_one  # sets XLA_FLAGS on import
-    from repro.launch.roofline import analyze, what_would_help
+    from repro.launch.roofline import analyze, count_params, what_would_help
 
     res = run_one(args.arch, args.shape, multi_pod=args.multi_pod)
     if res["status"] != "ok":
@@ -35,6 +38,35 @@ def main():
           f"(LoRA-ideal {r.lora_flops_ratio:.2f})")
     print(f"  peak memory: {r.peak_gib:.2f} GiB/device")
     print(f"  next lever: {what_would_help(r)}")
+
+    # federated-round estimate: this arch's LoRA segment over the paper's
+    # four UL/DL scenarios, through the same netsim the transports use.
+    # One stand-in client per scenario makes the round heterogeneous: the
+    # slowest link is the straggler that bounds a synchronous round.
+    from repro.configs import get_config
+    from repro.netsim.network import SCENARIOS, NetworkSimulator
+
+    lora_p = count_params(get_config(args.arch))["lora"]
+    seg_bytes = 2 * lora_p // args.segments        # fp16 round-robin segment
+    step_s = max(r.compute_s, r.memory_s, r.collective_s)
+    compute_s = args.local_steps * step_s
+    print(f"\nfederated round estimate (LoRA {lora_p/1e6:.2f}M params, "
+          f"Ns={args.segments} -> {seg_bytes/1e6:.2f} MB/segment, "
+          f"{args.local_steps} local steps @ {step_s:.3e} s):")
+    for name, sc in SCENARIOS.items():
+        sim = NetworkSimulator(sc)
+        rt = sim.round(0, [seg_bytes], [seg_bytes], [compute_s])
+        print(f"  {name:>6} Mbps: {rt.total_s:8.2f} s/round "
+              f"(comm {rt.comm_s:.2f} s)")
+    het = NetworkSimulator(
+        SCENARIOS["5/25"],
+        per_client={i: sc for i, sc in enumerate(SCENARIOS.values())})
+    cids = list(range(len(SCENARIOS)))
+    rt = het.round(0, [seg_bytes] * len(cids), [seg_bytes] * len(cids),
+                   [compute_s] * len(cids), client_ids=cids)
+    print(f"  heterogeneous {len(cids)}-client sync round: "
+          f"{rt.total_s:.2f} s (straggler-bound; see fed.transport."
+          f"SimTransport buffered_async for the M-of-K alternative)")
 
 
 if __name__ == "__main__":

@@ -2,9 +2,15 @@
 decoder with EcoLoRA for a few hundred aggregate optimizer steps.
 
     PYTHONPATH=src python examples/fed_finetune.py [--rounds 25]
+    # simulate the paper's 1/5 Mbps links, 20% dropout, async 3-of-6 rounds:
+    PYTHONPATH=src python examples/fed_finetune.py \
+        --scenario 1/5 --dropout 0.2 --async-m 3
 
-Prints per-round eval + the final communication ledger, and writes a
-round-resumable checkpoint.
+Prints per-round eval + the final communication ledger (plus simulated
+wall-clock when a network scenario is selected), and writes a
+round-resumable checkpoint. The trainer is a thin driver over the
+Protocol/Endpoint/Transport API (DESIGN.md §6): pass a different
+``Transport`` to deploy the same endpoints against a real network.
 """
 import argparse
 import os
@@ -17,6 +23,8 @@ from repro.configs.base import ModelConfig
 from repro.data.synthetic import TaskConfig
 from repro.fed.strategies import EcoLoRAConfig
 from repro.fed.trainer import FedConfig, FederatedTrainer
+from repro.fed.transport import SimTransport
+from repro.netsim.network import SCENARIOS
 
 # ~126M params: 12L x d768 x ff3072, vocab 8192 (runs on CPU)
 MODEL_100M = ModelConfig(
@@ -26,10 +34,27 @@ MODEL_100M = ModelConfig(
     param_dtype="float32", compute_dtype="float32")
 
 
+def make_transport(ap, args):
+    if args.scenario is None:
+        if args.dropout or args.async_m:
+            ap.error("--dropout/--async-m need a network: pass --scenario")
+        return None                    # InMemoryTransport: instant delivery
+    return SimTransport(
+        SCENARIOS[args.scenario], dropout=args.dropout,
+        round_mode="buffered_async" if args.async_m else "sync",
+        min_uploads=args.async_m, seed=0)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--out", default="results/fed_finetune.ckpt")
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
+                    help="simulate this UL/DL link (default: in-memory)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="per-round client dropout probability")
+    ap.add_argument("--async-m", type=int, default=None,
+                    help="buffered-async: aggregate after the first M uploads")
     args = ap.parse_args()
 
     tc = TaskConfig(vocab_size=4096, seq_len=64, n_samples=2048, seed=0)
@@ -39,7 +64,8 @@ def main():
     # total optimizer steps = rounds x clients/round x local steps
     print(f"total federated optimizer steps: "
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")
-    tr = FederatedTrainer(MODEL_100M, fed, tc)
+    tr = FederatedTrainer(MODEL_100M, fed, tc,
+                          transport=make_transport(ap, args))
     for lg in tr.run():
         print(f"round {lg.round_t:3d} | loss {lg.global_loss:.4f} | "
               f"acc {lg.metric:.3f} | up {lg.upload_bytes/1e6:.2f} MB | "
@@ -47,6 +73,13 @@ def main():
     s = tr.summary()
     print("\nledger:", {k: round(v, 3) if isinstance(v, float) else v
                         for k, v in s.items()})
+    if args.scenario is not None:
+        t = tr.transport.totals()
+        print(f"simulated wall-clock @ {args.scenario} Mbps: "
+              f"comm {t['communication_s']:.1f}s + "
+              f"compute {t['computation_s']:.1f}s = {t['total_s']:.1f}s; "
+              f"late uploads {tr.transport.straggler_count()}, "
+              f"dropped {sum(len(c) for _, c in tr.transport.dropped)}")
     n = ckpt.save_fed_state(args.out, tr)
     print(f"checkpoint: {args.out} ({n/1e6:.2f} MB)")
 

@@ -101,28 +101,37 @@ def load(path: str) -> Any:
 
 
 def save_fed_state(path: str, trainer) -> int:
-    """Round-resumable federated state (global vec, client state, ledger)."""
-    st = trainer.strategy
+    """Round-resumable federated state (global vec, client state, ledger).
+
+    Server-side state comes from the ServerEndpoint, client-side state
+    (local vectors, staleness clocks, uplink residuals) from the
+    ClientRuntime; the on-disk key layout is unchanged from the pre-endpoint
+    trainer, so old checkpoints keep loading. Transport state (simulated
+    clock, event log, buffered_async in-flight stragglers) is NOT persisted:
+    a checkpoint boundary acts like a round deadline — in-flight uploads
+    are dropped, the same rule as at the end of a run (DESIGN.md §6).
+    """
+    srv, cl = trainer.server, trainer.clients
     state = {
         "round": len(trainer.logs),
-        "global_vec": st.global_vec,
-        "last_broadcast": st.last_broadcast,
-        "client_views": trainer.client_views,
-        "client_tau": list(st.client_tau),
-        "client_sync": list(st.client_sync),
-        "bcast_stats": [list(s) for s in st._bcast_stats],
-        "bcast_base": st._bcast_base,
-        "client_vecs": {str(i): v for i, v in enumerate(st.client_vec)
+        "global_vec": srv.global_vec,
+        "last_broadcast": srv.last_broadcast,
+        "client_views": cl.views,
+        "client_tau": list(cl.client_tau),
+        "client_sync": list(srv.client_sync),
+        "bcast_stats": [list(s) for s in srv._bcast_stats],
+        "bcast_base": srv._bcast_base,
+        "client_vecs": {str(i): v for i, v in enumerate(cl.local_vecs)
                         if v is not None},
         "residuals": {str(i): c.sparsifier.residual
-                      for i, c in enumerate(st.up_comp)
+                      for i, c in enumerate(cl.up_comps)
                       if c.sparsifier.residual is not None},
-        "down_residual": st.down_comp.sparsifier.residual,
+        "down_residual": srv.down_comp.sparsifier.residual,
         "ledger": {
-            "upload_params": st.ledger.upload_params,
-            "download_params": st.ledger.download_params,
-            "upload_bytes": st.ledger.upload_bytes,
-            "download_bytes": st.ledger.download_bytes,
+            "upload_params": srv.ledger.upload_params,
+            "download_params": srv.ledger.download_params,
+            "upload_bytes": srv.ledger.upload_bytes,
+            "download_bytes": srv.ledger.download_bytes,
         },
     }
     return save(path, state)
@@ -131,22 +140,22 @@ def save_fed_state(path: str, trainer) -> int:
 def load_fed_state(path: str, trainer) -> int:
     """Restores state in place; returns the resume round."""
     state = load(path)
-    st = trainer.strategy
-    st.global_vec = state["global_vec"]
-    st.last_broadcast = state["last_broadcast"]
-    trainer.client_views = state["client_views"]
-    st.client_tau = list(state["client_tau"])
-    st.client_sync = [int(v) for v in state.get("client_sync",
-                                                [0] * st.n_clients)]
-    st._bcast_stats = [tuple(int(x) for x in s)
-                       for s in state.get("bcast_stats", [])]
-    st._bcast_base = int(state.get("bcast_base", 0))
+    srv, cl = trainer.server, trainer.clients
+    srv.global_vec = state["global_vec"]
+    srv.last_broadcast = state["last_broadcast"]
+    cl.views = np.asarray(state["client_views"], np.float32)
+    cl.client_tau = list(state["client_tau"])
+    srv.client_sync = [int(v) for v in state.get("client_sync",
+                                                 [0] * srv.n_clients)]
+    srv._bcast_stats = [tuple(int(x) for x in s)
+                        for s in state.get("bcast_stats", [])]
+    srv._bcast_base = int(state.get("bcast_base", 0))
     for k, v in state["client_vecs"].items():
-        st.client_vec[int(k)] = v
+        cl.local_vecs[int(k)] = v
     for k, v in state["residuals"].items():
-        st.up_comp[int(k)].sparsifier.residual = v
+        cl.up_comps[int(k)].sparsifier.residual = v
     if state["down_residual"] is not None:
-        st.down_comp.sparsifier.residual = state["down_residual"]
+        srv.down_comp.sparsifier.residual = state["down_residual"]
     for k, v in state["ledger"].items():
-        setattr(st.ledger, k, int(v))
+        setattr(srv.ledger, k, int(v))
     return int(state["round"])

@@ -1,0 +1,332 @@
+"""Federation endpoints: the deployable API surface (DESIGN.md §6).
+
+``ServerEndpoint`` owns the authoritative global protocol vector, the
+broadcast-sync cursors (per-client catch-up billing for missed broadcasts),
+the traffic ledger, and an ``AggregationPolicy``. ``ClientRuntime`` hosts
+the simulated client population: per-client local vectors and staleness
+clocks (Eq. 3 mixing), the serial/batched local-training engines, and the
+per-client uplink compressor residuals (Eq. 6). The two sides only exchange
+typed messages (``BroadcastMsg`` / ``DownloadMsg`` / ``UploadMsg``) — a
+``Transport`` decides when/whether each message arrives.
+
+This replaces both the old ``BaseStrategy`` god-object and the
+``fed.server.Server`` facade (which under-billed downloads by never running
+broadcast catch-up); there is exactly one round implementation now.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import CommLedger, Compressor
+from repro.core.segments import SegmentUpdate
+from repro.core.staleness import mix_models, mix_models_batch
+from repro.fed.client import (TimedCall, make_batched_local_trainer,
+                              make_local_trainer, stack_batches,
+                              stack_client_states)
+from repro.fed.protocol import BroadcastMsg, DownloadMsg, UploadMsg, WireProtocol
+from repro.fed.strategies import AggregationPolicy
+from repro.optim import adamw
+
+Params = Dict[str, Any]
+
+
+class ServerEndpoint:
+    """Aggregator endpoint: global state + sync cursors + ledger + policy."""
+
+    def __init__(self, policy: AggregationPolicy, protocol: WireProtocol,
+                 n_clients: int):
+        self.policy = policy
+        self.protocol = protocol
+        self.n_clients = n_clients
+        self.global_vec = np.zeros(protocol.size, np.float32)
+        self.last_broadcast = np.zeros(protocol.size, np.float32)
+        self.ledger = CommLedger()
+        self.down_comp = protocol.make_downlink_compressor()
+        # broadcast billing history: every round's wire cost, so a client
+        # idle for several rounds is billed for ALL broadcasts it missed.
+        # The catch-up PAYLOAD needs no history — a synced client's view is
+        # exactly last_broadcast, so sync_client assigns it directly.
+        # Entries all clients have paid for are pruned; _bcast_base is the
+        # absolute broadcast index of _bcast_stats[0].
+        self._bcast_stats: List[Tuple[int, int, int]] = []  # (params, wire, dense)
+        self._bcast_base = 0
+        # number of broadcasts each client has applied (absolute count)
+        self.client_sync = [0] * n_clients
+        self.pending: List[SegmentUpdate] = []
+        self.round_t = 0
+
+    # -- round lifecycle ----------------------------------------------------
+    def begin_round(self, round_t: Optional[int] = None) -> BroadcastMsg:
+        """Server -> clients: compressed delta of global vs last broadcast."""
+        t = self.round_t if round_t is None else round_t
+        self.round_t = t
+        eco = self.protocol.eco
+        delta = self.global_vec - self.last_broadcast
+        if eco and eco.compress_download:
+            pkt = self.down_comp.compress(delta, t)
+            applied = Compressor.decompress(pkt)
+        else:
+            pkt = self.down_comp.compress(delta, t)  # enabled=False -> dense
+            applied = delta
+        self.last_broadcast = self.last_broadcast + applied
+        self._bcast_stats.append((pkt.param_count, pkt.wire_bytes,
+                                  pkt.dense_bytes))
+        # prune billing entries every client has already paid for
+        floor = min(self.client_sync)
+        if floor > self._bcast_base:
+            del self._bcast_stats[:floor - self._bcast_base]
+            self._bcast_base = floor
+        return BroadcastMsg(t, pkt, self.protocol.n_segments)
+
+    def sync_client(self, cid: int, round_t: int) -> DownloadMsg:
+        """Bring client ``cid`` fully in sync: bill one wire packet per
+        broadcast it missed since it last participated, and ship the synced
+        view (= the server's broadcast base, which is exactly what a client
+        holding every applied delta would have)."""
+        n = self._bcast_base + len(self._bcast_stats)
+        s = self.client_sync[cid]           # >= base: pruning stops at min
+        billed_p = billed_w = 0
+        for i in range(s - self._bcast_base, len(self._bcast_stats)):
+            params, wire, dense = self._bcast_stats[i]
+            self.ledger.log_download_stats(params, wire, dense)
+            billed_p += params
+            billed_w += wire
+        missed = n - s
+        self.client_sync[cid] = n
+        return DownloadMsg(cid, round_t, self.last_broadcast.copy(),
+                           missed, billed_w, billed_p)
+
+    def receive(self, msg: UploadMsg) -> None:
+        """Ingest one uplink message: decompress, bill, queue for aggregate.
+        Late messages (a buffered-async transport delivering last round's
+        stragglers) are valid — their segment id derives from the SENDING
+        round, so they land in the segment they were trained for."""
+        values = Compressor.decompress(msg.packet)
+        seg = self.protocol.segment_for(msg.client_id, msg.round_t)
+        self.pending.append(SegmentUpdate(msg.client_id, msg.round_t, seg,
+                                          values, msg.num_samples,
+                                          msg.local_loss))
+        self.ledger.log_upload(msg.packet)
+
+    def end_round(self, round_t: int) -> List[SegmentUpdate]:
+        """Aggregate everything received this round; returns the updates
+        (the FLoRA driver needs them for the merge)."""
+        updates, self.pending = self.pending, []
+        self.global_vec = self.policy.aggregate(round_t, updates,
+                                                self.global_vec,
+                                                self.protocol.n_segments)
+        self.round_t = round_t + 1
+        return updates
+
+    def snapshot(self, round_t: int) -> None:
+        self.ledger.snapshot_round(round_t)
+
+    # -- state management ---------------------------------------------------
+    def reset_broadcast_base(self, vec: np.ndarray) -> None:
+        """Re-anchor every endpoint at ``vec`` (FLoRA's per-round re-init:
+        the stacked-module download already delivered the new state)."""
+        self.global_vec = np.asarray(vec, np.float32).copy()
+        self.last_broadcast = self.global_vec.copy()
+        self._bcast_stats.clear()
+        self._bcast_base = 0
+        self.client_sync = [0] * self.n_clients
+
+    def observe_global_loss(self, loss: float) -> None:
+        self.down_comp.observe_loss(loss)
+
+
+class ClientRuntime:
+    """Client-side endpoint hosting the full simulated client population.
+
+    Owns everything that is client state in a real deployment: the local
+    (possibly stale) model vectors + participation clocks for Eq. 3 mixing,
+    the uplink compressors (their sparsification residuals, Eq. 6), the
+    current synced views, and the jit-compiled local-training engines
+    (serial reference or batched vmap)."""
+
+    def __init__(self, cfg, protocol: WireProtocol, fed, task, parts,
+                 params: Params, lora0: Params, rng, *, task_kind: str,
+                 freeze_a: bool, mixing: bool, init_vec: np.ndarray):
+        self.cfg = cfg
+        self.protocol = protocol
+        self.fed = fed
+        self.task = task
+        self.parts = parts
+        self.params = params
+        self.lora0 = lora0
+        self.rng = rng
+        self.task_kind = task_kind
+        self.freeze_a = freeze_a
+        # Eq. 3 mixing applies when EcoLoRA is on and the policy keeps local
+        # state across rounds (FLoRA re-inits, so it opts out)
+        self.mixing = mixing
+        self.local_vecs: List[Optional[np.ndarray]] = [None] * fed.n_clients
+        self.client_tau = [0] * fed.n_clients
+        self.views = np.tile(np.asarray(init_vec, np.float32),
+                             (fed.n_clients, 1))
+        self.up_comps = protocol.make_uplink_compressors(fed.n_clients)
+        self._opt_template = adamw.init_state(lora0)
+        self._opt_template_batch = None        # lazily tiled to (K, ...)
+        self.rebuild_engines()
+
+    # -- engines ------------------------------------------------------------
+    def rebuild_engines(self) -> None:
+        """(Re)compile the engine's local trainer (the FLoRA driver re-invokes
+        this every round after merging into the base weights)."""
+        opt_cfg = adamw.AdamWConfig(lr=self.fed.lr)
+        kw = dict(task=self.task_kind, freeze_a=self.freeze_a,
+                  dpo_beta=self.fed.dpo_beta)
+        if self.fed.engine == "serial":
+            self.local_train = TimedCall(make_local_trainer(
+                self.cfg, self.params, opt_cfg, **kw))
+            self.batched_train = None
+        else:
+            self.batched_train = TimedCall(make_batched_local_trainer(
+                self.cfg, self.params, opt_cfg, **kw))
+            self.local_train = None
+
+    # -- downlink -----------------------------------------------------------
+    def apply_download(self, cid: int, msg: DownloadMsg) -> None:
+        self.views[cid] = msg.view
+
+    def reset_views(self, vec: np.ndarray) -> None:
+        self.views[:] = np.asarray(vec, np.float32)[None, :]
+
+    # -- Eq. 3 mixing ---------------------------------------------------------
+    def client_start(self, cid: int, round_t: int, global_view: np.ndarray
+                     ) -> np.ndarray:
+        """Eq. 3 mixing of downloaded global with the client's stale local."""
+        if self.local_vecs[cid] is None or not self._mix_active():
+            return np.array(global_view, copy=True)
+        return mix_models(global_view, self.local_vecs[cid],
+                          self.protocol.eco.beta, round_t,
+                          self.client_tau[cid])
+
+    def client_start_batch(self, cids, round_t: int, global_views: np.ndarray
+                           ) -> np.ndarray:
+        """Vectorized Eq. 3 over the round's K sampled clients.
+        ``global_views``: (K, size). Returns (K, size) start vectors."""
+        if not self._mix_active():
+            return np.array(global_views, np.float32, copy=True)
+        locals_ = np.array(global_views, np.float32, copy=True)
+        taus = np.full(len(cids), round_t, np.int64)
+        has_local = np.zeros(len(cids), bool)
+        for i, cid in enumerate(cids):
+            if self.local_vecs[cid] is not None:
+                locals_[i] = self.local_vecs[cid]
+                taus[i] = self.client_tau[cid]
+                has_local[i] = True
+        mixed = mix_models_batch(global_views, locals_,
+                                 self.protocol.eco.beta, round_t, taus)
+        # fresh clients start from the global view unmixed
+        return np.where(has_local[:, None], mixed,
+                        np.asarray(global_views, np.float32))
+
+    def _mix_active(self) -> bool:
+        return self.mixing and self.protocol.eco is not None
+
+    # -- uplink ---------------------------------------------------------------
+    def make_upload(self, cid: int, round_t: int, trained_vec: np.ndarray,
+                    start_vec: np.ndarray, n_samples: int, loss: float
+                    ) -> UploadMsg:
+        self.local_vecs[cid] = np.array(trained_vec, copy=True)
+        self.client_tau[cid] = round_t
+        seg = self.protocol.segment_for(cid, round_t)
+        s, e = self.protocol.bounds[seg]
+        update = (trained_vec - start_vec)[s:e]
+        comp = self.up_comps[cid]
+        comp.observe_loss(loss)
+        pkt = comp.compress(update, round_t, slice_=(s, e))
+        return UploadMsg(cid, round_t, pkt, n_samples, loss)
+
+    def make_uploads_batch(self, cids, round_t: int, trained_vecs: np.ndarray,
+                           start_vecs: np.ndarray, n_samples, losses
+                           ) -> List[UploadMsg]:
+        """Batched-engine uplink: extract every client's round-robin segment
+        and sparsify+encode them in one (K, seg) pass. Semantically identical
+        to K make_upload calls."""
+        bounds_all = self.protocol.bounds
+        comps, values, slices = [], [], []
+        for i, cid in enumerate(cids):
+            self.local_vecs[cid] = np.array(trained_vecs[i], np.float32,
+                                            copy=True)
+            self.client_tau[cid] = round_t
+            seg = self.protocol.segment_for(cid, round_t)
+            s, e = bounds_all[seg]
+            slices.append((s, e))
+            values.append(np.asarray(trained_vecs[i] - start_vecs[i],
+                                     np.float32)[s:e])
+            comp = self.up_comps[cid]
+            comp.observe_loss(float(losses[i]))
+            comps.append(comp)
+        pkts = self.protocol.compress_uplinks_batch(comps, values, slices,
+                                                    round_t)
+        return [UploadMsg(int(cid), round_t, pkt, int(n), float(l))
+                for pkt, cid, n, l in zip(pkts, cids, n_samples, losses)]
+
+    # -- the round ------------------------------------------------------------
+    def run_round(self, round_t: int, participants
+                  ) -> Tuple[List[UploadMsg], List[float]]:
+        """Train every participant locally and produce its UploadMsg."""
+        participants = np.asarray(participants, dtype=np.int64)
+        if participants.size == 0:
+            return [], []
+        if self.fed.engine == "serial":
+            return self._round_serial(round_t, participants)
+        return self._round_batched(round_t, participants)
+
+    def _round_serial(self, t: int, sampled) -> Tuple[List[UploadMsg], List[float]]:
+        """Reference engine: K independent jitted train calls + K numpy
+        compression passes (the pre-batching code path, kept for parity
+        testing and as the readable specification)."""
+        fed = self.fed
+        msgs, compute_s = [], []
+        for cid in sampled:
+            start_vec = self.client_start(cid, t, self.views[cid])
+            lora = self.protocol.vec_to_tree(start_vec, self.lora0)
+            opt_state = self._opt_template
+            batches = stack_batches(self.task, self.parts[cid],
+                                    fed.local_steps, fed.local_batch, self.rng)
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            lora, opt_state, loss = self.local_train(lora, opt_state, batches)
+            compute_s.append(fed.compute_model_s or self.local_train.last_s)
+            trained_vec = self.protocol.tree_to_vec(jax.device_get(lora))
+            msgs.append(self.make_upload(int(cid), t, trained_vec, start_vec,
+                                         self.parts[cid].size, float(loss)))
+        return msgs, compute_s
+
+    def _round_batched(self, t: int, sampled) -> Tuple[List[UploadMsg], List[float]]:
+        """Batched engine: stack the K clients along a leading axis and run
+        local training as ONE vmapped jitted call; Eq. 3 mixing, protocol
+        vector extraction, and uplink sparsification are vectorized too."""
+        fed = self.fed
+        k = len(sampled)
+        start_vecs = self.client_start_batch(sampled, t, self.views[sampled])
+        # batch sampling stays serial numpy (same rng call order as the
+        # serial engine -> identical draws), only stacking is new
+        per_client = [stack_batches(self.task, self.parts[cid], fed.local_steps,
+                                    fed.local_batch, self.rng)
+                      for cid in sampled]
+        batches = {key: jnp.asarray(np.stack([b[key] for b in per_client]))
+                   for key in per_client[0]}
+        loras = self.protocol.vec_to_tree_batch(start_vecs, self.lora0)
+        if self._opt_template_batch is None or jax.tree_util.tree_leaves(
+                self._opt_template_batch)[0].shape[0] != k:
+            self._opt_template_batch = stack_client_states(self._opt_template, k)
+        loras, _, losses = self.batched_train(loras, self._opt_template_batch,
+                                              batches)
+        per_s = (fed.compute_model_s
+                 or self.batched_train.last_s / max(k, 1))
+        trained_vecs = self.protocol.tree_to_vec_batch(jax.device_get(loras))
+        n_samples = [self.parts[cid].size for cid in sampled]
+        msgs = self.make_uploads_batch(sampled, t, trained_vecs, start_vecs,
+                                       n_samples, np.asarray(losses))
+        return msgs, [per_s] * k
+
+    def observe_global_loss(self, loss: float) -> None:
+        for c in self.up_comps:
+            c.observe_loss(loss)

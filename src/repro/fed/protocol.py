@@ -1,0 +1,194 @@
+"""Wire protocol: the single serialization/billing contract both endpoints
+speak (DESIGN.md §6).
+
+``WireProtocol`` owns everything server and clients must agree on without
+metadata exchange:
+
+  * the protocol-vector layout — the deterministic flattening of the LoRA
+    tree (optionally restricted to /b leaves for FFA-LoRA), single and
+    batched (leading client axis K);
+  * the round-robin segment schedule (paper §3.3): ``segment_for`` and the
+    shared segment bounds;
+  * the compression pipeline: per-endpoint ``Compressor`` construction from
+    one ``EcoLoRAConfig`` so uplink/downlink sparsify+encode settings (and
+    therefore exact wire bytes) exist exactly once.
+
+The typed messages below are the wire contract: every payload that crosses
+a ``Transport`` is one of ``BroadcastMsg`` / ``DownloadMsg`` / ``UploadMsg``,
+and every billed byte is a ``Packet`` inside one of them (``DownloadMsg``
+carries the pre-summed catch-up bill for replayed broadcast packets).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import Compressor, Packet, compress_uplinks
+from repro.core.segments import segment_bounds, segment_id, tree_spec
+from repro.core.sparsify import SparsifyConfig
+from repro.models.lora import flatten_lora, unflatten_lora
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# wire messages
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BroadcastMsg:
+    """Server -> all clients, once per round: the compressed global delta."""
+    round_t: int
+    packet: Packet
+    segment_schedule: int     # Ns (clients derive their segment id from it)
+
+
+@dataclass
+class DownloadMsg:
+    """Server -> one client on sync: the client's caught-up view.
+
+    In a real deployment the client replays the ``n_missed`` broadcast
+    packets it skipped; the simulation short-circuits to the resulting view
+    but bills exactly those packets (``wire_bytes``/``param_count`` are the
+    summed catch-up cost, already logged in the server ledger).
+    """
+    client_id: int
+    round_t: int
+    view: np.ndarray
+    n_missed: int
+    wire_bytes: int
+    param_count: int
+
+
+@dataclass
+class UploadMsg:
+    """Client -> server: one compressed round-robin segment update."""
+    client_id: int
+    round_t: int
+    packet: Packet
+    num_samples: int
+    local_loss: float
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+
+class WireProtocol:
+    """The shared contract: vector layout + segment schedule + compressors."""
+
+    def __init__(self, full_spec, eco, backend: str = "numpy",
+                 b_only: bool = False):
+        self.full_spec = list(full_spec)
+        self.b_only = b_only
+        self.spec = ([s for s in self.full_spec if s[0].endswith("/b")]
+                     if b_only else list(self.full_spec))
+        self.size = sum(int(np.prod(shape)) if shape else 1
+                        for _, shape, _ in self.spec)
+        # eco normalized exactly like the strategies did: disabled == absent
+        self.eco = eco if (eco and eco.enabled) else None
+        self.backend = backend
+
+    @classmethod
+    def for_method(cls, method: str, lora_template: Params, eco,
+                   backend: str = "numpy") -> "WireProtocol":
+        return cls(tree_spec(lora_template), eco, backend=backend,
+                   b_only=(method == "ffa_lora"))
+
+    # -- segment schedule ---------------------------------------------------
+    @property
+    def n_segments(self) -> int:
+        return (self.eco.n_segments
+                if self.eco and self.eco.round_robin else 1)
+
+    @property
+    def bounds(self) -> List[Tuple[int, int]]:
+        return segment_bounds(self.size, self.n_segments)
+
+    @property
+    def max_segment_len(self) -> int:
+        return max(e - s for s, e in self.bounds)
+
+    def segment_for(self, client_id: int, round_t: int) -> int:
+        return segment_id(client_id, round_t, self.n_segments)
+
+    # -- compressor pipeline ------------------------------------------------
+    def _sparsify_cfg(self) -> SparsifyConfig:
+        return self.eco.sparsify if self.eco else SparsifyConfig(enabled=False)
+
+    def _encoding(self) -> bool:
+        return self.eco.encoding if self.eco else True
+
+    def make_uplink_compressors(self, n: int) -> List[Compressor]:
+        sp, enc = self._sparsify_cfg(), self._encoding()
+        return [Compressor(self.spec, sp, encoding=enc) for _ in range(n)]
+
+    def make_downlink_compressor(self) -> Compressor:
+        return Compressor(self.spec, self._sparsify_cfg(),
+                          encoding=self._encoding())
+
+    def compress_uplinks_batch(self, comps, values_rows, slices,
+                               round_t: int) -> list:
+        """One (K, seg) sparsify+encode pass (fused on backend='pallas')."""
+        return compress_uplinks(comps, values_rows, slices, round_t,
+                                backend=self.backend,
+                                pad_to=self.max_segment_len)
+
+    # -- tree <-> protocol vector ------------------------------------------
+    def tree_to_vec(self, tree: Params) -> np.ndarray:
+        pairs = flatten_lora(tree)
+        if self.b_only:
+            pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
+        return np.concatenate([np.asarray(l, np.float32).reshape(-1)
+                               for p, l in pairs]) \
+            if pairs else np.zeros(0, np.float32)
+
+    def vec_to_tree(self, vec: np.ndarray, template: Params) -> Params:
+        """Write the protocol vector back into a copy of ``template``."""
+        out = []
+        off = 0
+        for path, leaf in flatten_lora(template):
+            if self.b_only and not path.endswith("/b"):
+                out.append((path, leaf))
+                continue
+            n = int(np.prod(np.shape(leaf)))
+            out.append((path, jnp.asarray(
+                vec[off:off + n].reshape(np.shape(leaf)), dtype=leaf.dtype)))
+            off += n
+        assert off == vec.size
+        return unflatten_lora(out)
+
+    def tree_to_vec_batch(self, tree: Params) -> np.ndarray:
+        """Batched tree_to_vec: leaves carry a leading client axis K;
+        returns the (K, size) protocol-vector matrix in protocol order."""
+        pairs = flatten_lora(tree)
+        if self.b_only:
+            pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
+        if not pairs:
+            return np.zeros((0, 0), np.float32)
+        return np.concatenate(
+            [np.asarray(l, np.float32).reshape(np.shape(l)[0], -1)
+             for _, l in pairs], axis=1)
+
+    def vec_to_tree_batch(self, vecs: np.ndarray, template: Params) -> Params:
+        """Batched vec_to_tree: (K, size) rows -> a tree whose every leaf
+        has a leading K axis (non-protocol leaves are tiled from the
+        template)."""
+        k = vecs.shape[0]
+        out = []
+        off = 0
+        for path, leaf in flatten_lora(template):
+            shape = np.shape(leaf)
+            if self.b_only and not path.endswith("/b"):
+                out.append((path, jnp.broadcast_to(jnp.asarray(leaf),
+                                                   (k,) + shape)))
+                continue
+            n = int(np.prod(shape))
+            out.append((path, jnp.asarray(
+                vecs[:, off:off + n].reshape((k,) + shape), dtype=leaf.dtype)))
+            off += n
+        assert off == vecs.shape[1]
+        return unflatten_lora(out)

@@ -1,25 +1,26 @@
-"""Aggregation strategies: FedIT, FFA-LoRA, FLoRA — each usable plain or
+"""Aggregation policies: FedIT, FFA-LoRA, FLoRA — each usable plain or
 wrapped with EcoLoRA (round-robin segments + adaptive sparsify + Golomb).
 
-All strategies operate on the protocol-ordered LoRA vector (see
-repro.core.segments). Uploads/downloads transmit *updates* (deltas) with
-error feedback — consistent with §3.4's reading of LoRA params as updates
-and with the Sattler et al. (2019) STC lineage the paper builds on; see
-DESIGN.md.
+A policy is PURE AGGREGATION: given the round's decompressed
+``SegmentUpdate``s and the current global protocol vector, produce the next
+global vector (plus a few capability flags the driver consults). Everything
+else that used to live here — broadcast deltas, per-client sync cursors, the
+ledger, Eq. 3 mixing, uplink compression — belongs to the endpoints
+(``repro.fed.endpoints``) and the shared ``WireProtocol``; see DESIGN.md §6.
+
+Updates are *deltas* with error feedback — consistent with §3.4's reading of
+LoRA params as updates and with the Sattler et al. (2019) STC lineage the
+paper builds on; see DESIGN.md §3.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.compression import (CommLedger, Compressor, Packet,
-                                    compress_uplinks)
-from repro.core.segments import (SegmentUpdate, aggregate_segments, extract_segment,
-                                 segment_bounds, segment_id)
+from repro.core.segments import SegmentUpdate, aggregate_segments, segment_bounds
 from repro.core.sparsify import SparsifyConfig
-from repro.core.staleness import mix_models, mix_models_batch
 
 
 @dataclass
@@ -33,170 +34,28 @@ class EcoLoRAConfig:
     compress_download: bool = True
 
 
-class BaseStrategy:
+class AggregationPolicy:
     """FedIT (Zhang et al. 2024): FedAvg over the full LoRA vector."""
 
     name = "fedit"
-    freeze_a = False
+    freeze_a = False                # FFA-LoRA trains B only
+    merges_into_base = False        # FLoRA folds LoRA into the base weights
+    client_mixing = True            # Eq. 3 staleness mixing on clients
 
-    def __init__(self, spec, vec_size: int, n_clients: int,
-                 eco: Optional[EcoLoRAConfig] = None, backend: str = "numpy"):
-        self.spec = spec
-        self.size = vec_size
-        self.n_clients = n_clients
-        self.eco = eco if (eco and eco.enabled) else None
-        self.backend = backend
-        self.global_vec = np.zeros(vec_size, np.float32)
-        self.ledger = CommLedger()
-        # per-client local state: (vector copy, last participation round)
-        self.client_vec = [None] * n_clients
-        self.client_tau = [0] * n_clients
-        sp = (eco.sparsify if self.eco else SparsifyConfig(enabled=False))
-        enc = eco.encoding if self.eco else True
-        self.up_comp = [Compressor(spec, sp, encoding=enc) for _ in range(n_clients)]
-        self.down_comp = Compressor(spec, sp, encoding=enc)
-        self.last_broadcast = np.zeros(vec_size, np.float32)
-        # broadcast billing history: every round's wire cost, so a client
-        # idle for several rounds is billed for ALL broadcasts it missed.
-        # The catch-up PAYLOAD needs no history — a synced client's view is
-        # exactly last_broadcast, so client_download assigns it directly.
-        # Entries all clients have paid for are pruned; _bcast_base is the
-        # absolute broadcast index of _bcast_stats[0].
-        self._bcast_stats: List[Tuple[int, int, int]] = []  # (params, wire, dense)
-        self._bcast_base = 0
-        # number of broadcasts each client has applied (absolute count)
-        self.client_sync = [0] * n_clients
-
-    # -- download ----------------------------------------------------------
-    def broadcast(self, round_t: int) -> Tuple[Packet, np.ndarray]:
-        """Server -> clients: compressed delta of global vs last broadcast."""
-        delta = self.global_vec - self.last_broadcast
-        if self.eco and self.eco.compress_download:
-            pkt = self.down_comp.compress(delta, round_t)
-            applied = Compressor.decompress(pkt)
-        else:
-            pkt = self.down_comp.compress(delta, round_t)  # enabled=False -> dense
-            applied = delta
-        self.last_broadcast = self.last_broadcast + applied
-        self._bcast_stats.append((pkt.param_count, pkt.wire_bytes, pkt.dense_bytes))
-        # prune billing entries every client has already paid for
-        floor = min(self.client_sync)
-        if floor > self._bcast_base:
-            del self._bcast_stats[:floor - self._bcast_base]
-            self._bcast_base = floor
-        return pkt, applied
-
-    def client_download(self, cid: int, round_t: int) -> np.ndarray:
-        """Bring client ``cid`` fully in sync: bill one wire packet per
-        broadcast it missed since it last participated, and return the
-        synced view (= the server's broadcast base, which is exactly what a
-        client holding every applied delta would have)."""
-        n = self._bcast_base + len(self._bcast_stats)
-        s = self.client_sync[cid]           # >= base: pruning stops at min
-        for i in range(s - self._bcast_base, len(self._bcast_stats)):
-            params, wire, dense = self._bcast_stats[i]
-            self.ledger.log_download_stats(params, wire, dense)
-        self.client_sync[cid] = n
-        return self.last_broadcast.copy()
-
-    def reset_broadcast_base(self, vec: np.ndarray) -> None:
-        """Re-anchor every endpoint at ``vec`` (FLoRA's per-round re-init:
-        the stacked-module download already delivered the new state)."""
-        self.global_vec = np.asarray(vec, np.float32).copy()
-        self.last_broadcast = self.global_vec.copy()
-        self._bcast_stats.clear()
-        self._bcast_base = 0
-        self.client_sync = [0] * self.n_clients
-
-    def client_start(self, cid: int, round_t: int, global_view: np.ndarray
-                     ) -> np.ndarray:
-        """Eq. 3 mixing of downloaded global with the client's stale local."""
-        if self.client_vec[cid] is None or self.eco is None:
-            start = np.array(global_view, copy=True)
-        else:
-            start = mix_models(global_view, self.client_vec[cid],
-                               self.eco.beta, round_t, self.client_tau[cid])
-        return start
-
-    def client_start_batch(self, cids, round_t: int, global_views: np.ndarray
-                           ) -> np.ndarray:
-        """Vectorized Eq. 3 over the round's K sampled clients.
-        ``global_views``: (K, size). Returns (K, size) start vectors."""
-        if self.eco is None:
-            return np.array(global_views, np.float32, copy=True)
-        locals_ = np.array(global_views, np.float32, copy=True)
-        taus = np.full(len(cids), round_t, np.int64)
-        has_local = np.zeros(len(cids), bool)
-        for i, cid in enumerate(cids):
-            if self.client_vec[cid] is not None:
-                locals_[i] = self.client_vec[cid]
-                taus[i] = self.client_tau[cid]
-                has_local[i] = True
-        mixed = mix_models_batch(global_views, locals_, self.eco.beta,
-                                 round_t, taus)
-        # fresh clients start from the global view unmixed
-        return np.where(has_local[:, None], mixed,
-                        np.asarray(global_views, np.float32))
-
-    # -- upload ------------------------------------------------------------
-    def client_upload(self, cid: int, round_t: int, trained_vec: np.ndarray,
-                      start_vec: np.ndarray, n_samples: int, loss: float
-                      ) -> Tuple[Packet, SegmentUpdate]:
-        self.client_vec[cid] = np.array(trained_vec, copy=True)
-        self.client_tau[cid] = round_t
-        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
-        seg = segment_id(cid, round_t, ns)
-        bounds = segment_bounds(self.size, ns)[seg]
-        update = (trained_vec - start_vec)[bounds[0]:bounds[1]]
-        comp = self.up_comp[cid]
-        comp.observe_loss(loss)
-        pkt = comp.compress(update, round_t, slice_=bounds)
-        recv = Compressor.decompress(pkt)
-        return pkt, SegmentUpdate(cid, round_t, seg, recv, n_samples, loss)
-
-    def client_upload_batch(self, cids, round_t: int, trained_vecs: np.ndarray,
-                            start_vecs: np.ndarray, n_samples, losses
-                            ) -> List[Tuple[Packet, SegmentUpdate]]:
-        """Batched-engine uplink: extract every client's round-robin segment
-        and sparsify+encode them in one (K, seg) pass (see compress_uplinks).
-        Semantically identical to K client_upload calls."""
-        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
-        bounds_all = segment_bounds(self.size, ns)
-        comps, values, slices, segs = [], [], [], []
-        for i, cid in enumerate(cids):
-            self.client_vec[cid] = np.array(trained_vecs[i], np.float32, copy=True)
-            self.client_tau[cid] = round_t
-            seg = segment_id(cid, round_t, ns)
-            s, e = bounds_all[seg]
-            segs.append(seg)
-            slices.append((s, e))
-            values.append(np.asarray(trained_vecs[i] - start_vecs[i],
-                                     np.float32)[s:e])
-            comp = self.up_comp[cid]
-            comp.observe_loss(float(losses[i]))
-            comps.append(comp)
-        pkts = compress_uplinks(comps, values, slices, round_t,
-                                backend=self.backend,
-                                pad_to=max(e - s for s, e in bounds_all))
-        return [(pkt, SegmentUpdate(cid, round_t, seg,
-                                    Compressor.decompress(pkt),
-                                    int(n), float(l)))
-                for pkt, cid, seg, n, l
-                in zip(pkts, cids, segs, n_samples, losses)]
-
-    # -- aggregate ----------------------------------------------------------
-    def aggregate(self, round_t: int, updates: List[SegmentUpdate]) -> None:
-        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
-        delta = aggregate_segments(updates, np.zeros(self.size, np.float32), ns)
-        self.global_vec = self.global_vec + delta
-
-    def observe_global_loss(self, loss: float) -> None:
-        self.down_comp.observe_loss(loss)
-        for c in self.up_comp:
-            c.observe_loss(loss)
+    def aggregate(self, round_t: int, updates: List[SegmentUpdate],
+                  global_vec: np.ndarray, n_segments: int) -> np.ndarray:
+        """Server-side Eq. 2 over the round's segment updates."""
+        delta = aggregate_segments(updates,
+                                   np.zeros(global_vec.size, np.float32),
+                                   n_segments)
+        return global_vec + delta
 
 
-class FFALoRAStrategy(BaseStrategy):
+class FedITPolicy(AggregationPolicy):
+    pass
+
+
+class FFALoRAPolicy(AggregationPolicy):
     """FFA-LoRA (Sun et al. 2024): A frozen at shared random init; only B
     trained/aggregated — the protocol vector is the B-subvector."""
 
@@ -204,7 +63,7 @@ class FFALoRAStrategy(BaseStrategy):
     freeze_a = True
 
 
-class FLoRAStrategy(BaseStrategy):
+class FLoRAPolicy(AggregationPolicy):
     """FLoRA (Wang et al. 2024): stacking aggregation. Server keeps each
     participant's full LoRA (round-robin segments update the per-client copy
     it holds), stacks [B_1..B_K][A_1;..;A_K] — the global delta is the exact
@@ -212,53 +71,49 @@ class FLoRAStrategy(BaseStrategy):
     re-initialise fresh LoRA every round. The download per round is the
     stacked modules, K_t x LoRA-size: Table 1's huge 'Total Param.' column.
 
-    The trainer performs the merge/reinit (it owns the base params); this
-    class tracks per-client vectors and the stacking wire multiplier.
+    The driver performs the merge/reinit (it owns the base params); this
+    policy tracks per-client vectors and skips Eq. 3 mixing (re-init
+    semantics: no blending with pre-merge stale LoRA).
     """
 
     name = "flora"
-    freeze_a = False
     merges_into_base = True
+    client_mixing = False
 
-    def __init__(self, spec, vec_size, n_clients, eco=None, backend="numpy"):
-        super().__init__(spec, vec_size, n_clients, eco, backend=backend)
+    def __init__(self):
         self.server_client_vecs: Dict[int, np.ndarray] = {}
         self.round_participants: List[Tuple[int, int]] = []  # (cid, n_samples)
 
-    def aggregate(self, round_t: int, updates: List[SegmentUpdate]) -> None:
+    def aggregate(self, round_t: int, updates: List[SegmentUpdate],
+                  global_vec: np.ndarray, n_segments: int) -> np.ndarray:
         # round-robin segments update the SERVER'S copy of each client's LoRA
-        ns = self.eco.n_segments if (self.eco and self.eco.round_robin) else 1
-        bounds = segment_bounds(self.size, ns)
+        bounds = segment_bounds(global_vec.size, n_segments)
         self.round_participants = []
         for u in updates:
             vec = self.server_client_vecs.setdefault(
-                u.client_id, np.zeros(self.size, np.float32))
+                u.client_id, np.zeros(global_vec.size, np.float32))
             s, e = bounds[u.seg_id]
             vec[s:e] += u.values  # delta-transmission: accumulate
             self.round_participants.append((u.client_id, u.num_samples))
         # the broadcastable "global" = weighted average (clients use it for
-        # Eq. 3 mixing); the exact stacked product is merged by the trainer.
-        if self.round_participants:
-            w = np.array([n for _, n in self.round_participants], np.float64)
-            w /= w.sum()
-            self.global_vec = np.sum(
-                [wi * self.server_client_vecs[cid]
-                 for (cid, _), wi in zip(self.round_participants, w)], axis=0
-            ).astype(np.float32)
-
-    def client_start(self, cid: int, round_t: int, global_view: np.ndarray
-                     ) -> np.ndarray:
-        # re-init semantics: no Eq. 3 mixing with pre-merge stale LoRA
-        return np.array(global_view, copy=True)
-
-    def client_start_batch(self, cids, round_t: int, global_views: np.ndarray
-                           ) -> np.ndarray:
-        return np.array(global_views, np.float32, copy=True)
+        # Eq. 3 mixing); the exact stacked product is merged by the driver.
+        if not self.round_participants:
+            return global_vec
+        w = np.array([n for _, n in self.round_participants], np.float64)
+        w /= w.sum()
+        return np.sum(
+            [wi * self.server_client_vecs[cid]
+             for (cid, _), wi in zip(self.round_participants, w)], axis=0
+        ).astype(np.float32)
 
 
-def make_strategy(method: str, spec, vec_size: int, n_clients: int,
-                  eco: Optional[EcoLoRAConfig],
-                  backend: str = "numpy") -> BaseStrategy:
-    cls = {"fedit": BaseStrategy, "ffa_lora": FFALoRAStrategy,
-           "flora": FLoRAStrategy, "dpo": BaseStrategy}[method]
-    return cls(spec, vec_size, n_clients, eco, backend=backend)
+POLICIES = {"fedit": FedITPolicy, "ffa_lora": FFALoRAPolicy,
+            "flora": FLoRAPolicy, "dpo": FedITPolicy}
+ALLOWED_METHODS = tuple(POLICIES)
+
+
+def make_policy(method: str) -> AggregationPolicy:
+    if method not in POLICIES:
+        raise ValueError(f"unknown method {method!r} "
+                         f"(expected one of {sorted(POLICIES)})")
+    return POLICIES[method]()

@@ -1,14 +1,17 @@
 """Federated fine-tuning driver (the paper's experimental loop, §4.1).
 
 100 clients, 10 sampled/round, 40 rounds, Dirichlet(0.5) non-IID — at
-reduced model scale. Drives any strategy (FedIT / FFA-LoRA / FLoRA / DPO),
-optionally wrapped with EcoLoRA, logs exact communication traffic, and feeds
-a NetworkSimulator for Figure-3-style timing.
+reduced model scale. ``FederatedTrainer`` is now a THIN driver: it wires a
+``ServerEndpoint`` and a ``ClientRuntime`` (repro.fed.endpoints) over a
+``Transport`` (repro.fed.transport) and owns only what neither endpoint
+can — the base model weights, the eval loop, and the FLoRA merge. All
+serialization/billing lives in ``WireProtocol``; all aggregation policy in
+``repro.fed.strategies``. See DESIGN.md §6.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -16,18 +19,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.segments import tree_spec, tree_to_vector, vector_to_tree
 from repro.data.partition import dirichlet_partition, task_partition
 from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
-from repro.fed.client import (TimedCall, make_batched_local_trainer,
-                              make_evaluator, make_local_trainer,
-                              stack_batches, stack_client_states)
-from repro.fed.strategies import BaseStrategy, EcoLoRAConfig, make_strategy
+from repro.fed.client import make_evaluator
+from repro.fed.endpoints import ClientRuntime, ServerEndpoint
+from repro.fed.protocol import WireProtocol
+from repro.fed.strategies import (ALLOWED_METHODS, EcoLoRAConfig, make_policy)
+from repro.fed.transport import InMemoryTransport, Transport
 from repro.models import model as M
-from repro.models.lora import flatten_lora, unflatten_lora
-from repro.optim import adamw
 
 Params = Dict[str, Any]
+
+_PARTITIONS = ("dirichlet", "task")
+_ENGINES = ("batched", "serial")
+_BACKENDS = ("numpy", "pallas")
 
 
 @dataclass
@@ -51,6 +56,20 @@ class FedConfig:
     engine: str = "batched"            # batched (one vmapped call/round) | serial
     backend: str = "numpy"             # uplink sparsify backend: numpy | pallas
 
+    def __post_init__(self):
+        if self.method not in ALLOWED_METHODS:
+            raise ValueError(f"unknown method {self.method!r} "
+                             f"(expected one of {sorted(ALLOWED_METHODS)})")
+        if self.partition not in _PARTITIONS:
+            raise ValueError(f"unknown partition {self.partition!r} "
+                             f"(expected one of {sorted(_PARTITIONS)})")
+        if self.engine not in _ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             "(expected 'batched' or 'serial')")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             "(expected 'numpy' or 'pallas')")
+
 
 @dataclass
 class RoundLog:
@@ -65,80 +84,10 @@ class RoundLog:
     overhead_s: float
 
 
-def _split_ab_spec(spec, b_only: bool):
-    if not b_only:
-        return spec
-    return [s for s in spec if s[0].endswith("/b")]
-
-
-def _tree_to_protovec(tree: Params, b_only: bool) -> np.ndarray:
-    pairs = flatten_lora(tree)
-    if b_only:
-        pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
-    return np.concatenate([np.asarray(l, np.float32).reshape(-1) for p, l in pairs]) \
-        if pairs else np.zeros(0, np.float32)
-
-
-def _protovec_to_tree(vec: np.ndarray, template: Params, b_only: bool) -> Params:
-    """Write the protocol vector back into a copy of ``template``."""
-    pairs = flatten_lora(template)
-    out = []
-    off = 0
-    for path, leaf in pairs:
-        if b_only and not path.endswith("/b"):
-            out.append((path, leaf))
-            continue
-        n = int(np.prod(np.shape(leaf)))
-        out.append((path, jnp.asarray(vec[off:off + n].reshape(np.shape(leaf)),
-                                      dtype=leaf.dtype)))
-        off += n
-    assert off == vec.size
-    return unflatten_lora(out)
-
-
-def _tree_to_protovec_batch(tree: Params, b_only: bool) -> np.ndarray:
-    """Batched _tree_to_protovec: leaves carry a leading client axis K;
-    returns the (K, size) protocol-vector matrix in protocol order."""
-    pairs = flatten_lora(tree)
-    if b_only:
-        pairs = [(p, l) for p, l in pairs if p.endswith("/b")]
-    if not pairs:
-        return np.zeros((0, 0), np.float32)
-    return np.concatenate(
-        [np.asarray(l, np.float32).reshape(np.shape(l)[0], -1)
-         for _, l in pairs], axis=1)
-
-
-def _protovec_to_tree_batch(vecs: np.ndarray, template: Params,
-                            b_only: bool) -> Params:
-    """Batched _protovec_to_tree: (K, size) rows -> a tree whose every leaf
-    has a leading K axis (non-protocol leaves are tiled from the template)."""
-    k = vecs.shape[0]
-    out = []
-    off = 0
-    for path, leaf in flatten_lora(template):
-        shape = np.shape(leaf)
-        if b_only and not path.endswith("/b"):
-            out.append((path, jnp.broadcast_to(jnp.asarray(leaf), (k,) + shape)))
-            continue
-        n = int(np.prod(shape))
-        out.append((path, jnp.asarray(
-            vecs[:, off:off + n].reshape((k,) + shape), dtype=leaf.dtype)))
-        off += n
-    assert off == vecs.shape[1]
-    return unflatten_lora(out)
-
-
 def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
                            weight: float) -> Params:
     """FLoRA merge: base_W += weight * scale * (a @ b) for every LoRA pair."""
     scale = cfg.lora_alpha / cfg.lora_rank
-
-    def walk(p_node, l_node):
-        if isinstance(l_node, dict) and "a" in l_node and "b" in l_node \
-                and not isinstance(l_node["a"], dict):
-            return None  # handled by parent
-        return None
 
     # align trees: lora mirrors params structure at group/attn/target level
     def apply(p_node, l_node):
@@ -163,13 +112,8 @@ def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
 
 class FederatedTrainer:
     def __init__(self, cfg: ModelConfig, fed: FedConfig,
-                 task_cfg: Optional[TaskConfig] = None):
-        if fed.engine not in ("batched", "serial"):
-            raise ValueError(f"unknown engine {fed.engine!r} "
-                             "(expected 'batched' or 'serial')")
-        if fed.backend not in ("numpy", "pallas"):
-            raise ValueError(f"unknown backend {fed.backend!r} "
-                             "(expected 'numpy' or 'pallas')")
+                 task_cfg: Optional[TaskConfig] = None,
+                 transport: Optional[Transport] = None):
         self.cfg = cfg
         self.fed = fed
         self.rng = np.random.default_rng(fed.seed)
@@ -196,19 +140,31 @@ class FederatedTrainer:
             self.parts = dirichlet_partition(cats, fed.n_clients,
                                              fed.dirichlet_alpha, fed.seed)
 
-        self.b_only = (fed.method == "ffa_lora")
-        self.spec = _split_ab_spec(tree_spec(self.lora0), self.b_only)
-        vec0 = _tree_to_protovec(self.lora0, self.b_only)
-        self.strategy = make_strategy(fed.method, self.spec, vec0.size,
-                                      fed.n_clients, fed.eco,
-                                      backend=fed.backend)
+        # ---- the three federation layers: protocol, endpoints, transport ----
+        self.protocol = WireProtocol.for_method(fed.method, self.lora0,
+                                                fed.eco, backend=fed.backend)
+        self.policy = make_policy(fed.method)
+        vec0 = self.protocol.tree_to_vec(self.lora0)
+        self.server = ServerEndpoint(self.policy, self.protocol,
+                                     fed.n_clients)
         # global protocol vector starts at the (shared) init
-        self.strategy.global_vec = vec0.copy()
-        self.strategy.last_broadcast = vec0.copy()
-        self.client_views = np.tile(vec0, (fed.n_clients, 1))
-
+        self.server.global_vec = vec0.copy()
+        self.server.last_broadcast = vec0.copy()
         self.task_kind = "dpo" if fed.method == "dpo" else "lm"
-        self._build_trainers()
+        self.clients = ClientRuntime(
+            cfg, self.protocol, fed, self.task, self.parts, self.params,
+            self.lora0, self.rng, task_kind=self.task_kind,
+            freeze_a=self.policy.freeze_a, mixing=self.policy.client_mixing,
+            init_vec=vec0)
+        self.transport = transport if transport is not None \
+            else InMemoryTransport()
+        if self.transport.round_mode == "buffered_async" \
+                and self.policy.merges_into_base:
+            raise ValueError("buffered_async transport is not supported for "
+                             "merge-into-base policies (flora)")
+
+        self.spec = self.protocol.spec
+        self.b_only = self.protocol.b_only
         self.evaluator = make_evaluator(cfg, self.params)
         if fed.method == "dpo":
             from repro.fed.dpo import preference_accuracy
@@ -220,32 +176,22 @@ class FederatedTrainer:
         else:
             self.eval_batch = self.task.eval_set(n=128, seed=fed.seed + 999)
         self.logs: List[RoundLog] = []
-        self._opt_template = adamw.init_state(self.lora0)
-        self._opt_template_batch = None        # lazily tiled to (K, ...)
+
+    @property
+    def client_views(self) -> np.ndarray:
+        return self.clients.views
+
+    @client_views.setter
+    def client_views(self, value) -> None:
+        self.clients.views = np.asarray(value, np.float32)
 
     # ------------------------------------------------------------------
-    def _build_trainers(self) -> None:
-        """(Re)compile the engine's local trainer (FLoRA re-invokes this
-        every round after merging into the base weights)."""
-        opt_cfg = adamw.AdamWConfig(lr=self.fed.lr)
-        kw = dict(task=self.task_kind, freeze_a=self.strategy.freeze_a,
-                  dpo_beta=self.fed.dpo_beta)
-        if self.fed.engine == "serial":
-            self.local_train = TimedCall(make_local_trainer(
-                self.cfg, self.params, opt_cfg, **kw))
-            self.batched_train = None
-        else:
-            self.batched_train = TimedCall(make_batched_local_trainer(
-                self.cfg, self.params, opt_cfg, **kw))
-            self.local_train = None
-
     def _vec_to_lora(self, vec: np.ndarray) -> Params:
-        return _protovec_to_tree(vec, self.lora0, self.b_only)
+        return self.protocol.vec_to_tree(vec, self.lora0)
 
     def evaluate(self, vec: np.ndarray):
         lora = self._vec_to_lora(vec)
         if self.fed.method == "dpo":
-            from repro.fed.dpo import dpo_loss  # loss for Eq. 4 signal
             batch = {k: jnp.asarray(v) for k, v in self.eval_batch.items()}
             acc = float(self._pref_acc(lora, batch))
             loss = 1.0 - acc  # monotone signal for the adaptive schedule
@@ -254,138 +200,92 @@ class FederatedTrainer:
         loss, acc = self.evaluator(lora, batch)
         return float(loss), float(acc)
 
+    def observe_global_loss(self, loss: float) -> None:
+        """Feed the Eq. 4 adaptive-k signal to both endpoints' compressors."""
+        self.server.observe_global_loss(loss)
+        self.clients.observe_global_loss(loss)
+
     def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
         fed = self.fed
-        strat = self.strategy
-        for t in range(rounds or fed.rounds):
+        srv, cl, tp = self.server, self.clients, self.transport
+        n_rounds = rounds or fed.rounds
+        for t in range(n_rounds):
             sampled = self.rng.choice(fed.n_clients, size=fed.clients_per_round,
                                       replace=False)
-            up0, down0 = strat.ledger.upload_bytes, strat.ledger.download_bytes
-            upp0, downp0 = strat.ledger.upload_params, strat.ledger.download_params
+            participants = tp.plan_round(t, sampled)
+            led = srv.ledger
+            up0, down0 = led.upload_bytes, led.download_bytes
+            upp0, downp0 = led.upload_params, led.download_params
 
-            # ---- download: one broadcast per round; every participant then
+            # ---- downlink: one broadcast per round; every participant then
             # catches up on ALL broadcasts it missed while idle (and is
             # billed for each), so no client trains from a stale view ----
             t_over = time.perf_counter()
-            strat.broadcast(t)
-            for cid in sampled:
-                self.client_views[cid] = strat.client_download(cid, t)
+            tp.on_broadcast(srv.begin_round(t))
+            for cid in participants:
+                dl = srv.sync_client(int(cid), t)
+                tp.on_download(dl)
+                cl.apply_download(int(cid), dl)
 
-            # ---- local training ----
-            if fed.engine == "serial":
-                updates, compute_s = self._train_round_serial(t, sampled)
-            else:
-                updates, compute_s = self._train_round_batched(t, sampled)
+            # ---- local training -> typed uploads over the transport ----
+            msgs, compute_s = cl.run_round(t, participants)
+            for msg in tp.dispatch_uploads(t, msgs, compute_s):
+                srv.receive(msg)
 
             # ---- aggregate + (FLoRA) merge into base ----
-            strat.aggregate(t, updates)
-            if getattr(strat, "merges_into_base", False):
-                self._flora_merge_and_reinit(t, sampled, updates)
+            updates = srv.end_round(t)
+            if self.policy.merges_into_base:
+                self._flora_merge_and_reinit(t, participants, updates)
             overhead_s = time.perf_counter() - t_over - sum(compute_s)
+            tp.finish_round(t, max(overhead_s, 0.0))
 
             # ---- eval / adaptive-k loss signal (eval_every thins the
             # cadence; stale rounds reuse the last signal) ----
-            n_rounds = rounds or fed.rounds
             if t % max(fed.eval_every, 1) == 0 or t == n_rounds - 1 \
                     or not self.logs:
-                gloss, metric = self.evaluate(strat.global_vec)
-                strat.observe_global_loss(gloss)
+                gloss, metric = self.evaluate(srv.global_vec)
+                self.observe_global_loss(gloss)
             else:
                 gloss, metric = self.logs[-1].global_loss, self.logs[-1].metric
-            strat.ledger.snapshot_round(t)
+            srv.snapshot(t)
             self.logs.append(RoundLog(
                 t, gloss, metric,
-                strat.ledger.upload_bytes - up0,
-                strat.ledger.download_bytes - down0,
-                strat.ledger.upload_params - upp0,
-                strat.ledger.download_params - downp0,
-                float(np.max(compute_s)) if compute_s else 0.0,
+                led.upload_bytes - up0,
+                led.download_bytes - down0,
+                led.upload_params - upp0,
+                led.download_params - downp0,
+                float(np.max(compute_s)) if len(compute_s) else 0.0,
                 max(overhead_s, 0.0)))
         return self.logs
 
     # ------------------------------------------------------------------
-    def _train_round_serial(self, t: int, sampled) -> tuple:
-        """Reference engine: K independent jitted train calls + K numpy
-        compression passes (the pre-batching code path, kept for parity
-        testing and as the readable specification)."""
+    def _flora_merge_and_reinit(self, t: int, participants, updates) -> None:
         fed = self.fed
-        strat = self.strategy
-        updates, compute_s = [], []
-        for cid in sampled:
-            start_vec = strat.client_start(cid, t, self.client_views[cid])
-            lora = self._vec_to_lora(start_vec)
-            opt_state = self._opt_template
-            batches = stack_batches(self.task, self.parts[cid],
-                                    fed.local_steps, fed.local_batch, self.rng)
-            batches = {k: jnp.asarray(v) for k, v in batches.items()}
-            lora, opt_state, loss = self.local_train(lora, opt_state, batches)
-            compute_s.append(fed.compute_model_s or self.local_train.last_s)
-            trained_vec = _tree_to_protovec(jax.device_get(lora), self.b_only)
-            pkt_up, upd = strat.client_upload(cid, t, trained_vec, start_vec,
-                                              self.parts[cid].size, float(loss))
-            strat.ledger.log_upload(pkt_up)
-            updates.append(upd)
-        return updates, compute_s
-
-    def _train_round_batched(self, t: int, sampled) -> tuple:
-        """Batched engine: stack the K clients along a leading axis and run
-        local training as ONE vmapped jitted call; Eq. 3 mixing, protocol
-        vector extraction, and uplink sparsification are vectorized too."""
-        fed = self.fed
-        strat = self.strategy
-        k = len(sampled)
-        start_vecs = strat.client_start_batch(sampled, t,
-                                              self.client_views[sampled])
-        # batch sampling stays serial numpy (same rng call order as the
-        # serial engine -> identical draws), only stacking is new
-        per_client = [stack_batches(self.task, self.parts[cid], fed.local_steps,
-                                    fed.local_batch, self.rng)
-                      for cid in sampled]
-        batches = {key: jnp.asarray(np.stack([b[key] for b in per_client]))
-                   for key in per_client[0]}
-        loras = _protovec_to_tree_batch(start_vecs, self.lora0, self.b_only)
-        if self._opt_template_batch is None or jax.tree_util.tree_leaves(
-                self._opt_template_batch)[0].shape[0] != k:
-            self._opt_template_batch = stack_client_states(self._opt_template, k)
-        loras, _, losses = self.batched_train(loras, self._opt_template_batch,
-                                              batches)
-        per_s = (fed.compute_model_s
-                 or self.batched_train.last_s / max(k, 1))
-        trained_vecs = _tree_to_protovec_batch(jax.device_get(loras),
-                                               self.b_only)
-        n_samples = [self.parts[cid].size for cid in sampled]
-        pairs = strat.client_upload_batch(sampled, t, trained_vecs, start_vecs,
-                                          n_samples, np.asarray(losses))
-        updates = []
-        for pkt_up, upd in pairs:
-            strat.ledger.log_upload(pkt_up)
-            updates.append(upd)
-        return updates, [per_s] * k
-
-    def _flora_merge_and_reinit(self, t: int, sampled, updates) -> None:
-        fed = self.fed
-        strat = self.strategy
-        w = np.array([u.num_samples for u in updates], np.float64)
-        w /= w.sum()
-        for u, wi in zip(updates, w):
-            cvec = strat.server_client_vecs[u.client_id]
-            self.params = merge_lora_into_params(
-                self.params, self._vec_to_lora(cvec), self.cfg, float(wi))
-            # the stacked module download (what Table 1's huge FLoRA
-            # totals measure): every sampled client receives every
-            # participant's module next round
-            pkt_stack = strat.down_comp.compress(cvec, t)
-            for _ in sampled:
-                strat.ledger.log_download(pkt_stack)
+        srv = self.server
+        if updates:
+            w = np.array([u.num_samples for u in updates], np.float64)
+            w /= w.sum()
+            for u, wi in zip(updates, w):
+                cvec = self.policy.server_client_vecs[u.client_id]
+                self.params = merge_lora_into_params(
+                    self.params, self._vec_to_lora(cvec), self.cfg, float(wi))
+                # the stacked module download (what Table 1's huge FLoRA
+                # totals measure): every sampled client receives every
+                # participant's module next round
+                pkt_stack = srv.down_comp.compress(cvec, t)
+                for cid in participants:
+                    srv.ledger.log_download(pkt_stack)
+                    self.transport.on_stacked_download(int(cid), t,
+                                                       pkt_stack.wire_bytes)
         # re-init: fresh LoRA each round (a random, b = 0 — an
         # all-zero re-init would kill both LoRA gradients)
-        reinit = _tree_to_protovec(
-            M.init_lora(self.cfg, jax.random.PRNGKey(fed.seed + 1000 + t)),
-            self.b_only)
-        strat.reset_broadcast_base(reinit)
-        strat.server_client_vecs.clear()
-        self.client_views[:] = reinit[None, :]
-        self._build_trainers()
+        reinit = self.protocol.tree_to_vec(
+            M.init_lora(self.cfg, jax.random.PRNGKey(fed.seed + 1000 + t)))
+        srv.reset_broadcast_base(reinit)
+        self.policy.server_client_vecs.clear()
+        self.clients.reset_views(reinit)
+        self.clients.params = self.params
+        self.clients.rebuild_engines()
         self.evaluator = make_evaluator(self.cfg, self.params)
 
     # ------------------------------------------------------------------
@@ -396,7 +296,7 @@ class FederatedTrainer:
         return None
 
     def summary(self) -> Dict[str, Any]:
-        led = self.strategy.ledger
+        led = self.server.ledger
         return {
             "method": self.fed.method,
             "ecolora": bool(self.fed.eco and self.fed.eco.enabled),

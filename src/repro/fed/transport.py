@@ -1,0 +1,214 @@
+"""Transports: when (and whether) federation messages arrive (DESIGN.md §6).
+
+The endpoints only produce/consume typed messages; a ``Transport`` decides
+delivery. ``InMemoryTransport`` is today's simulator behaviour — everything
+arrives instantly, byte-identical ledger to the pre-refactor trainer.
+``SimTransport`` wraps the discrete-event ``NetworkSimulator`` and adds the
+scenario axis the paper's §4.3 evaluation implies:
+
+  * per-client ``NetworkScenario``s (heterogeneous UL/DL bandwidth);
+  * message-level event timestamps (a ``MessageEvent`` per broadcast /
+    download / upload with start/end times on a global clock);
+  * client dropout (a sampled client never participates this round);
+  * a ``buffered_async`` round mode: the server aggregates after the first
+    M of K uploads arrive; stragglers are buffered and delivered at the
+    next round's aggregation — their segment id derives from the SENDING
+    round, so the existing staleness/residual machinery absorbs them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fed.protocol import BroadcastMsg, DownloadMsg, UploadMsg
+from repro.netsim.network import (SCENARIOS, NetworkScenario, NetworkSimulator,
+                                  RoundTiming)
+
+
+@dataclass
+class MessageEvent:
+    """One wire message on the simulated clock."""
+    kind: str                 # "broadcast" | "download" | "upload"
+    client_id: int            # -1 for the broadcast fan-out
+    round_t: int              # round the message was sent
+    wire_bytes: int
+    t_start: float
+    t_end: float
+    delivered_round: int      # round the aggregator consumed it (uploads)
+
+
+class Transport:
+    """Delivery contract between ServerEndpoint and ClientRuntime."""
+
+    round_mode = "sync"
+
+    def plan_round(self, round_t: int, sampled) -> np.ndarray:
+        """Which of the sampled clients actually participate this round."""
+        return np.asarray(sampled)
+
+    def on_broadcast(self, msg: BroadcastMsg) -> None:
+        pass
+
+    def on_download(self, msg: DownloadMsg) -> None:
+        pass
+
+    def dispatch_uploads(self, round_t: int, msgs: Sequence[UploadMsg],
+                         compute_s: Sequence[float]) -> List[UploadMsg]:
+        """Returns the uploads the server sees BEFORE this round's aggregate
+        (possibly including stragglers buffered from earlier rounds)."""
+        return list(msgs)
+
+    def on_stacked_download(self, cid: int, round_t: int,
+                            wire_bytes: int) -> None:
+        """An out-of-band per-client download outside the broadcast stream
+        (FLoRA's stacked modules). Billed by the caller; the transport only
+        accounts delivery time."""
+        pass
+
+    def finish_round(self, round_t: int, overhead_s: float = 0.0) -> None:
+        """Close the round's timing entry (overhead = host-side CPU cost)."""
+        pass
+
+
+class InMemoryTransport(Transport):
+    """Instant lossless delivery — the pre-refactor simulator semantics."""
+
+
+class SimTransport(Transport):
+    """Network-simulated delivery over (optionally heterogeneous) links."""
+
+    def __init__(self, scenario: NetworkScenario = SCENARIOS["1/5"],
+                 per_client: Optional[Dict[int, NetworkScenario]] = None,
+                 dropout: float = 0.0, round_mode: str = "sync",
+                 min_uploads: Optional[int] = None, seed: int = 0):
+        if round_mode not in ("sync", "buffered_async"):
+            raise ValueError(f"unknown round_mode {round_mode!r} "
+                             "(expected 'sync' or 'buffered_async')")
+        if round_mode == "buffered_async" and (min_uploads is None
+                                               or min_uploads < 1):
+            raise ValueError("buffered_async needs min_uploads >= 1 (the M "
+                             "in M-of-K aggregation)")
+        if not 0.0 <= dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {dropout}")
+        self.sim = NetworkSimulator(scenario, per_client=per_client)
+        self.dropout = dropout
+        self.round_mode = round_mode
+        self.min_uploads = min_uploads
+        self.rng = np.random.default_rng(seed)
+        self.clock = 0.0
+        self.events: List[MessageEvent] = []
+        self.dropped: List[Tuple[int, List[int]]] = []   # (round, client ids)
+        self._late: List[UploadMsg] = []                 # straggler buffer
+        self._down_s: Dict[int, float] = {}              # cid -> downlink time
+        self._extra_down_s: Dict[int, float] = {}        # stacked modules
+        self._pending_timing: Optional[RoundTiming] = None
+        self._round_total = 0.0
+
+    # -- planning -----------------------------------------------------------
+    def plan_round(self, round_t: int, sampled) -> np.ndarray:
+        sampled = np.asarray(sampled)
+        if self.dropout <= 0.0:
+            return sampled
+        keep = self.rng.random(sampled.size) >= self.dropout
+        if not keep.all():
+            self.dropped.append((round_t, sampled[~keep].tolist()))
+        return sampled[keep]
+
+    # -- downlink -----------------------------------------------------------
+    def on_broadcast(self, msg: BroadcastMsg) -> None:
+        # fan-out bytes are billed per client in the catch-up DownloadMsg;
+        # the broadcast event only marks the round boundary on the clock
+        self.events.append(MessageEvent("broadcast", -1, msg.round_t,
+                                        msg.packet.wire_bytes, self.clock,
+                                        self.clock, msg.round_t))
+
+    def on_download(self, msg: DownloadMsg) -> None:
+        t_down = self.sim.transfer_time(msg.wire_bytes, up=False,
+                                        cid=msg.client_id)
+        self._down_s[msg.client_id] = t_down
+        self.events.append(MessageEvent("download", msg.client_id,
+                                        msg.round_t, msg.wire_bytes,
+                                        self.clock, self.clock + t_down,
+                                        msg.round_t))
+
+    # -- uplink -------------------------------------------------------------
+    def dispatch_uploads(self, round_t: int, msgs: Sequence[UploadMsg],
+                         compute_s: Sequence[float]) -> List[UploadMsg]:
+        delivered, self._late = list(self._late), []
+        arrivals = []
+        for m, c in zip(msgs, compute_s):
+            t_down = self._down_s.get(m.client_id, 0.0)
+            t_up = self.sim.transfer_time(m.packet.wire_bytes, up=True,
+                                          cid=m.client_id)
+            arrivals.append((t_down + c + t_up, m, t_down, c, t_up))
+        arrivals.sort(key=lambda a: a[0])
+        if self.round_mode == "sync" or not arrivals:
+            arrived, late = arrivals, []
+        else:
+            m_need = min(self.min_uploads, len(arrivals))
+            arrived, late = arrivals[:m_need], arrivals[m_need:]
+        for total, m, t_down, c, t_up in arrived:
+            self.events.append(MessageEvent(
+                "upload", m.client_id, round_t, m.packet.wire_bytes,
+                self.clock + t_down + c, self.clock + total, round_t))
+            delivered.append(m)
+        for total, m, t_down, c, t_up in late:
+            # still in flight at the cutoff: consumed next round
+            self.events.append(MessageEvent(
+                "upload", m.client_id, round_t, m.packet.wire_bytes,
+                self.clock + t_down + c, self.clock + total, round_t + 1))
+            self._late.append(m)
+        if arrived:
+            # the round ends at the last CONSUMED arrival (sync: straggler;
+            # buffered_async: the M-th upload) — attribute its own split
+            total, _, t_down, c, t_up = arrived[-1]
+            self._pending_timing = RoundTiming(round_t, t_down, c, t_up, 0.0)
+            self._round_total = total
+        else:
+            self._pending_timing = RoundTiming(round_t, 0.0, 0.0, 0.0, 0.0)
+            self._round_total = 0.0
+        self._down_s = {}
+        return delivered
+
+    def on_stacked_download(self, cid: int, round_t: int,
+                            wire_bytes: int) -> None:
+        """FLoRA's per-participant stacked-module downlink: packets to one
+        client serialize on its link; clients download in parallel, so the
+        round extends by the slowest client's stacked total."""
+        t_down = self.sim.transfer_time(wire_bytes, up=False, cid=cid)
+        start = self.clock + self._round_total \
+            + self._extra_down_s.get(cid, 0.0)
+        self._extra_down_s[cid] = self._extra_down_s.get(cid, 0.0) + t_down
+        self.events.append(MessageEvent("download", cid, round_t, wire_bytes,
+                                        start, start + t_down, round_t))
+
+    def finish_round(self, round_t: int, overhead_s: float = 0.0) -> None:
+        rt = self._pending_timing or RoundTiming(round_t, 0.0, 0.0, 0.0, 0.0)
+        rt.overhead_s = overhead_s
+        if self._extra_down_s:
+            extra = max(self._extra_down_s.values())
+            rt.download_s += extra
+            self._round_total += extra
+            self._extra_down_s = {}
+        self.sim.timeline.append(rt)
+        self.clock += self._round_total + overhead_s
+        self._pending_timing = None
+        self._round_total = 0.0
+
+    # -- reporting ----------------------------------------------------------
+    def totals(self) -> Dict[str, float]:
+        return self.sim.totals()
+
+    @property
+    def timeline(self) -> List[RoundTiming]:
+        return self.sim.timeline
+
+    def straggler_count(self) -> int:
+        """Uploads consumed a round after they were sent. Messages still in
+        the late buffer (the final round's in-flight stragglers) were never
+        delivered and don't count."""
+        return sum(1 for e in self.events
+                   if e.kind == "upload" and e.delivered_round > e.round_t) \
+            - len(self._late)

@@ -100,6 +100,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # newer jaxlibs return a one-element list of property dicts
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     coll = hlo_mod.collective_bytes(hlo_text)
     stats = hlo_mod.fusion_stats(hlo_text)

@@ -16,7 +16,7 @@ from measured jit step walltimes (fedsim) or a supplied FLOPs/s model.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 
 @dataclass(frozen=True)
@@ -54,22 +54,44 @@ class RoundTiming:
 
 
 class NetworkSimulator:
-    def __init__(self, scenario: NetworkScenario):
+    def __init__(self, scenario: NetworkScenario,
+                 per_client: Optional[Dict[int, NetworkScenario]] = None):
+        """``per_client`` maps client id -> its own link scenario
+        (heterogeneous networks); unlisted clients use ``scenario``."""
         self.sc = scenario
+        self.per_client = dict(per_client or {})
         self.timeline: List[RoundTiming] = []
 
-    def transfer_time(self, n_bytes: int, up: bool) -> float:
-        bw = (self.sc.uplink_mbps if up else self.sc.downlink_mbps) * 1e6 \
-            * self.sc.efficiency
-        return self.sc.latency_s + (n_bytes * 8.0) / bw
+    def scenario_for(self, cid: Optional[int] = None) -> NetworkScenario:
+        if cid is None:
+            return self.sc
+        return self.per_client.get(int(cid), self.sc)
+
+    def transfer_time(self, n_bytes: int, up: bool,
+                      cid: Optional[int] = None) -> float:
+        sc = self.scenario_for(cid)
+        bw = (sc.uplink_mbps if up else sc.downlink_mbps) * 1e6 \
+            * sc.efficiency
+        return sc.latency_s + (n_bytes * 8.0) / bw
 
     def round(self, round_t: int, per_client_down_bytes: Sequence[int],
               per_client_up_bytes: Sequence[int],
               per_client_compute_s: Sequence[float],
-              overhead_s: float = 0.0) -> RoundTiming:
-        """Synchronous FL round: the server waits for the slowest client."""
-        downs = [self.transfer_time(b, up=False) for b in per_client_down_bytes]
-        ups = [self.transfer_time(b, up=True) for b in per_client_up_bytes]
+              overhead_s: float = 0.0,
+              client_ids: Optional[Sequence[int]] = None) -> RoundTiming:
+        """Synchronous FL round: the server waits for the slowest client.
+        An empty round (every sampled client dropped out) costs nothing but
+        the server-side overhead."""
+        if len(per_client_compute_s) == 0:
+            rt = RoundTiming(round_t, 0.0, 0.0, 0.0, overhead_s)
+            self.timeline.append(rt)
+            return rt
+        cids = (list(client_ids) if client_ids is not None
+                else [None] * len(per_client_compute_s))
+        downs = [self.transfer_time(b, up=False, cid=c)
+                 for b, c in zip(per_client_down_bytes, cids)]
+        ups = [self.transfer_time(b, up=True, cid=c)
+               for b, c in zip(per_client_up_bytes, cids)]
         # the straggler defines the round; attribute its own split
         totals = [d + c + u for d, c, u in zip(downs, per_client_compute_s, ups)]
         i = max(range(len(totals)), key=lambda j: totals[j])

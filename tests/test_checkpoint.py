@@ -40,4 +40,4 @@ def test_fed_state_resume(tmp_path):
     tr2 = FederatedTrainer(cfg, fed, tc)
     rnd = ckpt.load_fed_state(p, tr2)
     assert rnd == 2
-    np.testing.assert_allclose(tr2.strategy.global_vec, tr.strategy.global_vec)
+    np.testing.assert_allclose(tr2.server.global_vec, tr.server.global_vec)

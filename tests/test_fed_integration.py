@@ -26,7 +26,7 @@ def _run(method, eco, rounds=3, **kw):
 def test_ecolora_reduces_upload():
     base = _run("fedit", None)
     eco = _run("fedit", EcoLoRAConfig(n_segments=2))
-    led_b, led_e = base.strategy.ledger, eco.strategy.ledger
+    led_b, led_e = base.server.ledger, eco.server.ledger
     assert led_e.upload_bytes < 0.7 * led_b.upload_bytes
     assert led_e.upload_params < 0.7 * led_b.upload_params
 
@@ -39,7 +39,7 @@ def test_ffa_freezes_a():
     # A leaves unchanged from init in trained clients
     import jax
     lora0 = tr.lora0
-    start = tr.strategy.client_start(0, 0, tr.client_views[0])
+    start = tr.clients.client_start(0, 0, tr.client_views[0])
     lora_t = tr._vec_to_lora(start)
     for (p0, l0), (p1, l1) in zip(
             jax.tree_util.tree_leaves_with_path(lora0),

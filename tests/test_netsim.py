@@ -19,6 +19,16 @@ def test_round_straggler_semantics():
     assert totals["total_s"] == rt.total_s
 
 
+def test_empty_round_zero_timing():
+    """All sampled clients dropped out: the round costs only the overhead
+    (the old max() over an empty sequence raised)."""
+    sim = NetworkSimulator(SCENARIOS["1/5"])
+    rt = sim.round(0, [], [], [], overhead_s=0.25)
+    assert rt.download_s == rt.compute_s == rt.upload_s == 0.0
+    assert rt.total_s == 0.25
+    assert sim.totals()["total_s"] == 0.25
+
+
 def test_worse_network_longer_rounds():
     times = {}
     for name in ("0.2/1", "1/5", "2/10", "5/25"):

@@ -5,10 +5,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core.compression import CommLedger
 from repro.core.sparsify import SparsifyConfig
 from repro.data.synthetic import TaskConfig
-from repro.fed.strategies import BaseStrategy, EcoLoRAConfig
+from repro.fed.endpoints import ServerEndpoint
+from repro.fed.protocol import WireProtocol
+from repro.fed.strategies import EcoLoRAConfig, FedITPolicy
 from repro.fed.trainer import FedConfig, FederatedTrainer
 
 CFG = get_config("llama2-7b").reduced()
@@ -42,14 +43,14 @@ def test_batched_matches_serial(method, eco):
     (with the pallas uplink backend) over >= 3 rounds."""
     a = _run(method, eco, "serial", "numpy")
     b = _run(method, eco, "batched", "pallas")
-    np.testing.assert_allclose(a.strategy.global_vec, b.strategy.global_vec,
+    np.testing.assert_allclose(a.server.global_vec, b.server.global_vec,
                                atol=1e-6)
     for la, lb in zip(a.logs, b.logs):
         assert la.upload_bytes == lb.upload_bytes, la.round_t
         assert la.download_bytes == lb.download_bytes, la.round_t
         assert la.upload_params == lb.upload_params, la.round_t
         assert la.download_params == lb.download_params, la.round_t
-    led_a, led_b = a.strategy.ledger, b.strategy.ledger
+    led_a, led_b = a.server.ledger, b.server.ledger
     assert led_a.upload_bytes == led_b.upload_bytes
     assert led_a.download_bytes == led_b.download_bytes
 
@@ -59,75 +60,79 @@ def test_batched_matches_serial_quick():
     eco = EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig())
     a = _run("fedit", eco, "serial", "numpy")
     b = _run("fedit", eco, "batched", "pallas")
-    np.testing.assert_allclose(a.strategy.global_vec, b.strategy.global_vec,
+    np.testing.assert_allclose(a.server.global_vec, b.server.global_vec,
                                atol=1e-6)
-    assert a.strategy.ledger.total_bytes == b.strategy.ledger.total_bytes
+    assert a.server.ledger.total_bytes == b.server.ledger.total_bytes
 
 
 # ---------------------------------------------------------------------------
 # broadcast catch-up for clients that skip rounds
 # ---------------------------------------------------------------------------
 
-def _toy_strategy(size=32, n_clients=3):
+def _toy_server(size=32, n_clients=3):
     spec = [("x/a", (size // 2,), np.float32), ("x/b", (size // 2,), np.float32)]
-    return BaseStrategy(spec, size, n_clients, eco=None)
+    proto = WireProtocol(spec, eco=None)
+    return ServerEndpoint(FedITPolicy(), proto, n_clients)
 
 
 def test_skipped_client_receives_cumulative_delta():
     """A client sampled at rounds 0 and 5 must receive every broadcast it
     missed in between — the pre-fix code applied only the round-5 delta,
     leaving the client on a permanently corrupted view."""
-    st = _toy_strategy()
-    vec0 = np.arange(st.size, dtype=np.float32)
-    st.global_vec = vec0.copy()
-    st.last_broadcast = vec0.copy()
+    srv = _toy_server()
+    size = srv.protocol.size
+    vec0 = np.arange(size, dtype=np.float32)
+    srv.global_vec = vec0.copy()
+    srv.last_broadcast = vec0.copy()
     views = {0: vec0.copy(), 1: vec0.copy()}
 
     for t in range(6):
-        st.broadcast(t)
+        srv.begin_round(t)
         # client 1 participates every round; client 0 only at rounds 0 and 5
-        views[1] = st.client_download(1, t)
+        views[1] = srv.sync_client(1, t).view
         if t in (0, 5):
-            views[0] = st.client_download(0, t)
+            views[0] = srv.sync_client(0, t).view
         # the server model advances every round
-        st.global_vec = st.global_vec + np.float32(t + 1)
+        srv.global_vec = srv.global_vec + np.float32(t + 1)
 
-    np.testing.assert_allclose(views[0], st.last_broadcast)
-    np.testing.assert_allclose(views[1], st.last_broadcast)
+    np.testing.assert_allclose(views[0], srv.last_broadcast)
+    np.testing.assert_allclose(views[1], srv.last_broadcast)
 
 
 def test_skipped_client_billed_for_missed_packets():
-    st = _toy_strategy()
-    st.global_vec = np.ones(st.size, np.float32)
+    srv = _toy_server()
+    srv.global_vec = np.ones(srv.protocol.size, np.float32)
     per_round_bytes = []
     for t in range(4):
-        pkt, _ = st.broadcast(t)
-        per_round_bytes.append(pkt.wire_bytes)
-        st.client_download(1, t)           # client 1 always in sync
-        st.global_vec = st.global_vec + 1.0
-    led0 = st.ledger.download_bytes
-    st.client_download(0, 3)               # client 0 returns after 4 rounds
+        bc = srv.begin_round(t)
+        per_round_bytes.append(bc.packet.wire_bytes)
+        srv.sync_client(1, t)              # client 1 always in sync
+        srv.global_vec = srv.global_vec + 1.0
+    led0 = srv.ledger.download_bytes
+    dl = srv.sync_client(0, 3)             # client 0 returns after 4 rounds
     # it pays for ALL four broadcast packets, not just the last
-    assert st.ledger.download_bytes - led0 == sum(per_round_bytes)
+    assert srv.ledger.download_bytes - led0 == sum(per_round_bytes)
+    assert dl.n_missed == 4
+    assert dl.wire_bytes == sum(per_round_bytes)
 
 
 def test_broadcast_billing_history_pruned():
     """Billing entries every client has paid for are dropped — state stays
     O(1) vectors regardless of round count."""
-    st = _toy_strategy(n_clients=2)
-    st.global_vec = np.ones(st.size, np.float32)
+    srv = _toy_server(n_clients=2)
+    srv.global_vec = np.ones(srv.protocol.size, np.float32)
     for t in range(50):
-        st.broadcast(t)
-        st.client_download(0, t)
-        st.client_download(1, t)           # everyone in sync every round
-        st.global_vec = st.global_vec + 1.0
+        srv.begin_round(t)
+        srv.sync_client(0, t)
+        srv.sync_client(1, t)              # everyone in sync every round
+        srv.global_vec = srv.global_vec + 1.0
     # only the newest (not-yet-pruned) entry may remain
-    assert len(st._bcast_stats) <= 1
-    assert st._bcast_base >= 49
+    assert len(srv._bcast_stats) <= 1
+    assert srv._bcast_base >= 49
     # catch-up across a prune boundary still exact
-    st.broadcast(50)
-    view = st.client_download(0, 50)
-    np.testing.assert_allclose(view, st.last_broadcast)
+    srv.begin_round(50)
+    view = srv.sync_client(0, 50).view
+    np.testing.assert_allclose(view, srv.last_broadcast)
 
 
 class _ScriptedRng:
@@ -161,7 +166,7 @@ def test_trainer_returning_client_in_sync(engine, backend):
     tr.rng = _ScriptedRng(tr.rng, schedule, fed.n_clients,
                           fed.clients_per_round)
     tr.run()
-    np.testing.assert_allclose(tr.client_views[0], tr.strategy.last_broadcast,
+    np.testing.assert_allclose(tr.client_views[0], tr.server.last_broadcast,
                                atol=1e-5)
 
 

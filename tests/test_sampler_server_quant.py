@@ -1,4 +1,4 @@
-"""Client samplers, Server facade, quantization baseline."""
+"""Client samplers, server endpoint message path, quantization baseline."""
 import numpy as np
 
 from repro.core.quantize import QuantConfig, dequantize, quantization_error, quantize, wire_bytes
@@ -36,28 +36,33 @@ def test_quantize_roundtrip_error_decreases_with_bits():
     assert wire_bytes(10_000, QuantConfig(bits=4)) < wire_bytes(10_000, QuantConfig(bits=8))
 
 
-def test_server_facade_round():
+def test_server_endpoint_round():
+    """The unified endpoint replaces the old Server facade: one round over
+    the message API aggregates uploads AND bills the per-client broadcast
+    catch-up the facade used to skip."""
     import jax.numpy as jnp
+    from repro.core.compression import Compressor
     from repro.core.segments import segment_bounds, segment_id, tree_spec
-    from repro.fed.server import Server, UploadMsg
-    from repro.fed.strategies import BaseStrategy, EcoLoRAConfig
+    from repro.fed.endpoints import ServerEndpoint
+    from repro.fed.protocol import UploadMsg, WireProtocol
+    from repro.fed.strategies import EcoLoRAConfig, make_policy
 
     tree = {"l": {"a": jnp.zeros((40,)), "b": jnp.zeros((40,))}}
-    spec = tree_spec(tree)
-    strat = BaseStrategy(spec, 80, n_clients=4, eco=EcoLoRAConfig(n_segments=2))
-    srv = Server(strat)
-    bc = srv.begin_round()
+    proto = WireProtocol(tree_spec(tree), eco=EcoLoRAConfig(n_segments=2))
+    srv = ServerEndpoint(make_policy("fedit"), proto, n_clients=4)
+    bc = srv.begin_round(0)
     assert bc.segment_schedule == 2
-    # two clients upload complementary segments
+    # two clients upload complementary segments through the message path
+    up_comps = proto.make_uplink_compressors(2)
     for cid in (0, 1):
+        dl = srv.sync_client(cid, 0)       # facade bug: this was never billed
         seg = segment_id(cid, 0, 2)
         s, e = segment_bounds(80, 2)[seg]
         vec = np.zeros(80, np.float32); vec[s:e] = cid + 1.0
-        start = np.zeros(80, np.float32)
-        pkt, _ = strat.client_upload(cid, 0, vec, start, 10, 1.0)
-        # replay through the server message path
-        srv._pending = []  # client_upload didn't register; use receive
+        pkt = up_comps[cid].compress(vec[s:e] - dl.view[s:e], 0, slice_=(s, e))
         srv.receive(UploadMsg(cid, 0, pkt, 10, 1.0))
-        srv.strategy.aggregate(0, srv._pending)
-        srv._pending = []
-    assert np.abs(srv.global_vector).sum() > 0
+    srv.end_round(0)
+    assert np.abs(srv.global_vec).sum() > 0
+    # downloads were billed (the old Server facade left these at 0)
+    assert srv.ledger.download_bytes > 0
+    assert srv.ledger.upload_bytes > 0

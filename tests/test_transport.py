@@ -1,0 +1,151 @@
+"""SimTransport scenarios: heterogeneous links, dropout, buffered-async
+M-of-K aggregation, and message-level event timestamps."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+from repro.fed.transport import InMemoryTransport, SimTransport
+from repro.netsim.network import SCENARIOS, NetworkSimulator
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+
+
+def _run(transport, rounds=3, **kw):
+    base = dict(method="fedit", n_clients=8, clients_per_round=4,
+                rounds=rounds, local_steps=2, local_batch=4, lr=3e-3,
+                eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+                pretrain_steps=5, compute_model_s=0.05)
+    base.update(kw)
+    tr = FederatedTrainer(CFG, FedConfig(**base), TC, transport=transport)
+    tr.run()
+    return tr
+
+
+def test_sim_sync_transport_is_protocol_transparent():
+    """A lossless sync SimTransport only adds timing — the protocol state
+    and ledger are bitwise those of InMemoryTransport."""
+    a = _run(InMemoryTransport())
+    b = _run(SimTransport(SCENARIOS["1/5"]))
+    np.testing.assert_array_equal(a.server.global_vec, b.server.global_vec)
+    assert a.server.ledger.total_bytes == b.server.ledger.total_bytes
+    # and it produced a timed round per federation round
+    assert len(b.transport.timeline) == len(b.logs)
+    assert b.transport.totals()["communication_s"] > 0
+
+
+def test_message_events_timestamped():
+    tr = _run(SimTransport(SCENARIOS["1/5"]), rounds=2)
+    ev = tr.transport.events
+    kinds = {e.kind for e in ev}
+    assert kinds == {"broadcast", "download", "upload"}
+    assert all(e.t_end >= e.t_start >= 0.0 for e in ev)
+    # the clock advances monotonically across rounds
+    starts = [e.t_start for e in ev if e.kind == "broadcast"]
+    assert starts == sorted(starts) and starts[1] > starts[0]
+
+
+def test_dropout_clients_skip_round():
+    full = _run(SimTransport(SCENARIOS["1/5"], seed=3))
+    lossy = _run(SimTransport(SCENARIOS["1/5"], dropout=0.5, seed=3))
+    assert lossy.transport.dropped, "expected at least one dropped client"
+    n_up_full = sum(1 for e in full.transport.events if e.kind == "upload")
+    n_up_lossy = sum(1 for e in lossy.transport.events if e.kind == "upload")
+    assert n_up_lossy < n_up_full
+    assert lossy.server.ledger.upload_bytes < full.server.ledger.upload_bytes
+    # run still completes every round and keeps a finite model
+    assert len(lossy.logs) == 3
+    assert np.isfinite(lossy.server.global_vec).all()
+
+
+def test_dropout_survives_empty_rounds():
+    tr = _run(SimTransport(SCENARIOS["1/5"], dropout=0.95, seed=0), rounds=4)
+    assert len(tr.logs) == 4
+    assert np.isfinite(tr.server.global_vec).all()
+
+
+def test_buffered_async_m_of_k():
+    """buffered_async aggregates after the first M of K uploads; stragglers
+    land at the NEXT round's aggregation, and each round is faster than the
+    straggler-bound synchronous round."""
+    # clients 0-3 on slow links, 4-7 on fast ones: the M-of-K cutoff skips
+    # the slow stragglers whenever a fast client is sampled
+    het = {i: SCENARIOS["0.2/1"] for i in range(4)}
+    sync = _run(SimTransport(SCENARIOS["5/25"], per_client=het, seed=1))
+    asy = _run(SimTransport(SCENARIOS["5/25"], per_client=het,
+                            round_mode="buffered_async",
+                            min_uploads=2, seed=1))
+    assert asy.transport.straggler_count() > 0
+    # round 1 consumes round-0 stragglers alongside its own on-time uploads
+    consumed_r1 = [e for e in asy.transport.events
+                   if e.kind == "upload" and e.delivered_round == 1]
+    assert any(e.round_t == 0 for e in consumed_r1)
+    assert any(e.round_t == 1 for e in consumed_r1)
+    # M-of-K cuts the wait for the slowest clients (compare the simulated
+    # network+compute legs; overhead_s is measured host walltime and noisy)
+    for rt_async, rt_sync in zip(asy.transport.timeline,
+                                 sync.transport.timeline):
+        assert rt_async.comm_s + rt_async.compute_s \
+            <= rt_sync.comm_s + rt_sync.compute_s + 1e-9
+    assert (asy.transport.totals()["communication_s"]
+            < sync.transport.totals()["communication_s"])
+    assert np.isfinite(asy.server.global_vec).all()
+
+
+def test_heterogeneous_per_client_links():
+    slow, fast = SCENARIOS["0.2/1"], SCENARIOS["5/25"]
+    sim = NetworkSimulator(fast, per_client={7: slow})
+    assert sim.transfer_time(10**6, up=True, cid=7) \
+        > sim.transfer_time(10**6, up=True, cid=3)
+    # the slow client is the straggler and defines the round
+    rt = sim.round(0, [10**5, 10**5], [10**5, 10**5], [0.1, 0.1],
+                   client_ids=[3, 7])
+    assert abs(rt.upload_s - sim.transfer_time(10**5, True, cid=7)) < 1e-12
+
+    tr = _run(SimTransport(fast, per_client={i: slow for i in range(4)},
+                           seed=2))
+    # some rounds sample a slow client: their upload leg dominates
+    up_times = [rt.upload_s for rt in tr.transport.timeline]
+    assert max(up_times) > min(up_times)
+
+
+def test_flora_stacked_downloads_timed():
+    """FLoRA's per-participant stacked-module downlink must reach the
+    transport: billed bytes stay byte-identical to InMemoryTransport AND the
+    simulated timeline accounts the stacked packets' delivery time."""
+    a = _run(InMemoryTransport(), method="flora")
+    b = _run(SimTransport(SCENARIOS["1/5"]), method="flora")
+    assert a.server.ledger.download_bytes == b.server.ledger.download_bytes
+    ev_down = [e for e in b.transport.events if e.kind == "download"]
+    k, rounds = b.fed.clients_per_round, len(b.logs)
+    # K sync catch-ups per round PLUS K stacked modules per participant
+    assert len(ev_down) > k * rounds
+    assert all(rt.download_s > 0 for rt in b.transport.timeline)
+    # the stacked modules dominate the downlink leg vs a fedit run
+    fedit = _run(SimTransport(SCENARIOS["1/5"]))
+    assert (sum(rt.download_s for rt in b.transport.timeline)
+            > sum(rt.download_s for rt in fedit.transport.timeline))
+
+
+def test_sim_transport_validation():
+    with pytest.raises(ValueError, match="round_mode"):
+        SimTransport(round_mode="fire_and_forget")
+    with pytest.raises(ValueError, match="min_uploads"):
+        SimTransport(round_mode="buffered_async")
+    with pytest.raises(ValueError, match="min_uploads"):
+        SimTransport(round_mode="buffered_async", min_uploads=-1)
+    with pytest.raises(ValueError, match="dropout"):
+        SimTransport(dropout=1.5)
+
+
+def test_async_rejected_for_flora():
+    with pytest.raises(ValueError, match="flora"):
+        FederatedTrainer(
+            CFG, FedConfig(method="flora", n_clients=8, clients_per_round=4,
+                           rounds=1, pretrain_steps=0),
+            TC, transport=SimTransport(round_mode="buffered_async",
+                                       min_uploads=2))
