@@ -60,8 +60,7 @@ def _time_engine_rounds(tr: FederatedTrainer, rounds: int) -> list:
     fed, srv, cl, tp = tr.fed, tr.server, tr.clients, tr.transport
     times = []
     for t in range(rounds):
-        sampled = tr.rng.choice(fed.n_clients, size=fed.clients_per_round,
-                                replace=False)
+        sampled = tr.sampler.sample(t)
         t0 = time.perf_counter()
         participants = tp.plan_round(t, sampled)
         tp.on_broadcast(srv.begin_round(t))

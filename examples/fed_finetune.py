@@ -55,6 +55,10 @@ def main():
                     help="per-round client dropout probability")
     ap.add_argument("--async-m", type=int, default=None,
                     help="buffered-async: aggregate after the first M uploads")
+    ap.add_argument("--resume", action="store_true",
+                    help="load --out and continue at the checkpointed round "
+                         "(schedule, ledger and adaptive-k pick up exactly "
+                         "where the interrupted run left off)")
     args = ap.parse_args()
 
     tc = TaskConfig(vocab_size=4096, seq_len=64, n_samples=2048, seed=0)
@@ -66,6 +70,11 @@ def main():
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")
     tr = FederatedTrainer(MODEL_100M, fed, tc,
                           transport=make_transport(ap, args))
+    if args.resume:
+        if not os.path.exists(args.out):
+            ap.error(f"--resume: no checkpoint at {args.out}")
+        rnd = ckpt.load_fed_state(args.out, tr)
+        print(f"resuming at round {rnd} from {args.out}")
     for lg in tr.run():
         print(f"round {lg.round_t:3d} | loss {lg.global_loss:.4f} | "
               f"acc {lg.metric:.3f} | up {lg.upload_bytes/1e6:.2f} MB | "

@@ -100,62 +100,158 @@ def load(path: str) -> Any:
     return _decode(msgpack.unpackb(raw, raw=False))
 
 
-def save_fed_state(path: str, trainer) -> int:
-    """Round-resumable federated state (global vec, client state, ledger).
+def _pack_rng_state(rng) -> Dict[str, Any]:
+    """np.random.Generator bit-generator state; 128-bit PCG64 words exceed
+    msgpack's int range, so they travel as decimal strings."""
+    st = rng.bit_generator.state
+    return {"bit_generator": st["bit_generator"],
+            "state": {k: str(v) for k, v in st["state"].items()},
+            "has_uint32": int(st["has_uint32"]),
+            "uinteger": int(st["uinteger"])}
 
-    Server-side state comes from the ServerEndpoint, client-side state
-    (local vectors, staleness clocks, uplink residuals) from the
-    ClientRuntime; the on-disk key layout is unchanged from the pre-endpoint
-    trainer, so old checkpoints keep loading. Transport state (simulated
-    clock, event log, buffered_async in-flight stragglers) is NOT persisted:
-    a checkpoint boundary acts like a round deadline — in-flight uploads
-    are dropped, the same rule as at the end of a run (DESIGN.md §6).
+
+def _unpack_rng_state(rng, d: Dict[str, Any]) -> None:
+    rng.bit_generator.state = {
+        "bit_generator": d["bit_generator"],
+        "state": {k: int(v) for k, v in d["state"].items()},
+        "has_uint32": int(d["has_uint32"]),
+        "uinteger": int(d["uinteger"])}
+
+
+def _sparsifier_state(sp) -> Dict[str, Any]:
+    """Adaptive-k schedule state + residual shards for one compressor.
+    Persisting loss0/loss_prev/last_k is what keeps the Eq. 4 keep-rates
+    (and therefore exact wire bytes) identical across a resume — without it
+    every compressor restarts at k_max."""
+    st = {"loss0": sp.loss0, "loss_prev": sp.loss_prev,
+          "last_k": {k: float(v) for k, v in sp.last_k.items()},
+          "shards": {f"{s}:{e}": arr for (s, e), arr in sp._shards.items()}}
+    if sp._legacy_residual is not None:
+        st["legacy"] = sp._legacy_residual
+    return st
+
+
+def _restore_sparsifier(sp, st: Dict[str, Any]) -> None:
+    sp.loss0 = None if st["loss0"] is None else float(st["loss0"])
+    sp.loss_prev = None if st["loss_prev"] is None else float(st["loss_prev"])
+    sp.last_k = {k: float(v) for k, v in st["last_k"].items()}
+    sp._shards = {tuple(int(x) for x in key.split(":")):
+                  np.asarray(arr, np.float32)
+                  for key, arr in st["shards"].items()}
+    sp._legacy_residual = (np.asarray(st["legacy"], np.float32)
+                           if st.get("legacy") is not None else None)
+
+
+def save_fed_state(path: str, trainer) -> int:
+    """Round-resumable federated state (format 2, DESIGN.md §7).
+
+    Server-side state comes from the ServerEndpoint (global vec, prefix-sum
+    billing cursors, ledger, downlink schedule state), client-side state
+    from the ClientRuntime (sparse view store, staleness clocks, per-segment
+    uplink residual shards, adaptive-k schedules), plus the driver's resume
+    round, batch-RNG stream and last eval signal — everything needed for a
+    resumed run to be BITWISE identical to an uninterrupted one (the
+    resume-parity suite pins this). The on-disk layout is sparse: O(active)
+    vectors, not O(n_clients). ``load_fed_state`` still reads the legacy
+    dense (format 1) layout. Transport state (simulated clock, event log,
+    buffered_async in-flight stragglers) is NOT persisted: a checkpoint
+    boundary acts like a round deadline — in-flight uploads are dropped,
+    the same rule as at the end of a run (DESIGN.md §6).
     """
     srv, cl = trainer.server, trainer.clients
+    pool = cl.up_comps
     state = {
-        "round": len(trainer.logs),
+        "format": 2,
+        "round": int(trainer.start_round),
         "global_vec": srv.global_vec,
         "last_broadcast": srv.last_broadcast,
-        "client_views": cl.views,
+        "view_store": cl.view_store.state(),
         "client_tau": list(cl.client_tau),
-        "client_sync": list(srv.client_sync),
-        "bcast_stats": [list(s) for s in srv._bcast_stats],
-        "bcast_base": srv._bcast_base,
-        "client_vecs": {str(i): v for i, v in enumerate(cl.local_vecs)
-                        if v is not None},
-        "residuals": {str(i): c.sparsifier.residual
-                      for i, c in enumerate(cl.up_comps)
-                      if c.sparsifier.residual is not None},
-        "down_residual": srv.down_comp.sparsifier.residual,
+        "client_sync": np.asarray(srv.client_sync, np.int64),
+        "client_cum": np.asarray(srv._client_cum, np.int64),
+        "cum_stats": np.asarray(srv._cum_stats, np.int64),
+        "bcast_count": int(srv._bcast_count),
+        "client_vecs": {str(i): v for i, v in sorted(cl.local_vecs.items())},
+        "uplink": {"pool": pool.state(),
+                   "comps": {str(cid): _sparsifier_state(c.sparsifier)
+                             for cid, c in sorted(pool.active().items())}},
+        "downlink": _sparsifier_state(srv.down_comp.sparsifier),
         "ledger": {
             "upload_params": srv.ledger.upload_params,
             "download_params": srv.ledger.download_params,
             "upload_bytes": srv.ledger.upload_bytes,
             "download_bytes": srv.ledger.download_bytes,
         },
+        "last_eval": (None if trainer._last_eval is None
+                      else [float(x) for x in trainer._last_eval]),
+        "rng_state": _pack_rng_state(trainer.rng),
     }
+    vecs = getattr(trainer.policy, "server_client_vecs", None)
+    if vecs is not None:
+        state["policy_client_vecs"] = {str(cid): v
+                                       for cid, v in sorted(vecs.items())}
     return save(path, state)
 
 
 def load_fed_state(path: str, trainer) -> int:
-    """Restores state in place; returns the resume round."""
+    """Restores state in place; returns (and sets on the trainer) the resume
+    round, so the next ``trainer.run()`` continues at the checkpointed
+    round instead of replaying from 0."""
     state = load(path)
     srv, cl = trainer.server, trainer.clients
+    n = srv.n_clients
     srv.global_vec = state["global_vec"]
     srv.last_broadcast = state["last_broadcast"]
-    cl.views = np.asarray(state["client_views"], np.float32)
-    cl.client_tau = list(state["client_tau"])
-    srv.client_sync = [int(v) for v in state.get("client_sync",
-                                                 [0] * srv.n_clients)]
-    srv._bcast_stats = [tuple(int(x) for x in s)
-                        for s in state.get("bcast_stats", [])]
-    srv._bcast_base = int(state.get("bcast_base", 0))
+    cl.client_tau = [int(v) for v in state["client_tau"]]
+    srv.client_sync = np.asarray(state.get("client_sync", np.zeros(n)),
+                                 np.int64).copy()
     for k, v in state["client_vecs"].items():
-        cl.local_vecs[int(k)] = v
-    for k, v in state["residuals"].items():
-        cl.up_comps[int(k)].sparsifier.residual = v
-    if state["down_residual"] is not None:
-        srv.down_comp.sparsifier.residual = state["down_residual"]
+        cl.local_vecs[int(k)] = np.asarray(v, np.float32)
+
+    if int(state.get("format", 1)) >= 2:
+        cl.view_store.load_state(state["view_store"])
+        srv._client_cum = np.asarray(state["client_cum"], np.int64).copy()
+        srv._cum_stats = np.asarray(state["cum_stats"], np.int64).copy()
+        srv._bcast_count = int(state["bcast_count"])
+        up = state["uplink"]
+        cl.up_comps.load_state(up["pool"])
+        for k, st in up["comps"].items():
+            _restore_sparsifier(cl.up_comps[int(k)].sparsifier, st)
+        _restore_sparsifier(srv.down_comp.sparsifier, state["downlink"])
+        if state.get("rng_state") is not None:
+            _unpack_rng_state(trainer.rng, state["rng_state"])
+        le = state.get("last_eval")
+        trainer._last_eval = None if le is None else tuple(le)
+        pol = state.get("policy_client_vecs")
+        if pol is not None and hasattr(trainer.policy, "server_client_vecs"):
+            trainer.policy.server_client_vecs = {
+                int(cid): np.asarray(v, np.float32) for cid, v in pol.items()}
+    else:
+        # ---- legacy dense (format 1) layout ----
+        cl.views = np.asarray(state["client_views"], np.float32)
+        # rebuild prefix-sum billing from the (pruned) broadcast stats list:
+        # absolute offsets are unknowable, but billing only ever uses
+        # differences, so anchor the pruned base at zero
+        stats = np.asarray(state.get("bcast_stats", []),
+                           np.int64).reshape(-1, 3)
+        base = int(state.get("bcast_base", 0))
+        srv._bcast_count = base + len(stats)
+        cums = np.vstack([np.zeros((1, 3), np.int64),
+                          np.cumsum(stats, axis=0)])
+        srv._cum_stats = cums[-1].copy()
+        for cid in range(n):
+            i = min(max(int(srv.client_sync[cid]) - base, 0), len(stats))
+            srv._client_cum[cid] = cums[i]
+        for k, v in state.get("residuals", {}).items():
+            cl.up_comps[int(k)].sparsifier.residual = v
+        if state.get("down_residual") is not None:
+            srv.down_comp.sparsifier.residual = state["down_residual"]
+        # format 1 never persisted adaptive-k or RNG state — resumes from a
+        # legacy checkpoint restart the schedule at k_max (the bug this
+        # format exists to fix)
     for k, v in state["ledger"].items():
         setattr(srv.ledger, k, int(v))
-    return int(state["round"])
+    rnd = int(state["round"])
+    trainer.start_round = rnd
+    srv.round_t = rnd
+    return rnd

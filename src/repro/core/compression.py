@@ -43,13 +43,21 @@ class Packet:
 
 
 class Compressor:
-    """Sparsify+encode with residual feedback for one endpoint direction."""
+    """Sparsify+encode with residual feedback for one endpoint direction.
 
-    def __init__(self, spec, cfg: SparsifyConfig, encoding: bool = True):
+    ``ab_mask`` is read-only shared knowledge of the vector layout; pass a
+    precomputed one to share it across a client population instead of paying
+    O(vector) per compressor (see ``CompressorPool``).
+    """
+
+    def __init__(self, spec, cfg: SparsifyConfig, encoding: bool = True,
+                 ab_mask: Optional[np.ndarray] = None):
         self.spec = spec
         self.cfg = cfg
         self.encoding = encoding
-        self.sparsifier = AdaptiveSparsifier(cfg, ab_mask_from_spec(spec))
+        if ab_mask is None:
+            ab_mask = ab_mask_from_spec(spec)
+        self.sparsifier = AdaptiveSparsifier(cfg, ab_mask)
 
     def observe_loss(self, loss: float) -> None:
         self.sparsifier.observe_loss(loss)
@@ -119,12 +127,10 @@ def compress_uplinks(comps, values_rows, slices, round_t: int,
     keep_b = np.zeros(K, np.int32)
     for i, (c, v, (s, e)) in enumerate(zip(comps, values_rows, slices)):
         sp = c.sparsifier
-        if sp.residual is None or sp.residual.size != sp.ab_mask.size:
-            sp.residual = np.zeros(sp.ab_mask.size, np.float32)
         n = e - s
         assert v.size == n
         x[i, :n] = v
-        res[i, :n] = sp.residual[s:e]
+        res[i, :n] = sp.residual_shard(s, e)
         seg_ab = sp.ab_mask[s:e]
         ab[i, :n] = seg_ab
         valid[i, :n] = True
@@ -144,10 +150,66 @@ def compress_uplinks(comps, values_rows, slices, round_t: int,
     pkts = []
     for i, (c, (s, e)) in enumerate(zip(comps, slices)):
         n = e - s
-        c.sparsifier.residual[s:e] = new_res[i, :n]
+        c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
         pkts.append(c.packetize(sparse[i, :n], mask[i, :n],
                                 c.sparsifier.last_k, round_t, (s, e)))
     return pkts
+
+
+class CompressorPool:
+    """Lazy per-client uplink compressors: O(participants) objects for an
+    arbitrarily large population.
+
+    A compressor is built on a client's first upload. The adaptive-k schedule
+    (Eq. 4) must still see the global-loss history broadcast to everyone, so
+    the pool records the FIRST and LATEST global loss: replaying a sequence
+    of ``observe_loss`` calls on a fresh sparsifier sets ``loss0`` to the
+    first value and ``loss_prev`` to the last, which is exactly what seeding
+    those two fields at creation reproduces — bitwise identical to an eager
+    list of ``n_clients`` compressors.
+    """
+
+    def __init__(self, factory):
+        self._factory = factory
+        self._comps: Dict[int, Compressor] = {}
+        self._first_gloss: Optional[float] = None
+        self._last_gloss: Optional[float] = None
+
+    def __getitem__(self, cid: int) -> Compressor:
+        c = self._comps.get(cid)
+        if c is None:
+            c = self._comps[cid] = self._factory()
+            if self._first_gloss is not None:
+                c.sparsifier.loss0 = self._first_gloss
+                c.sparsifier.loss_prev = self._last_gloss
+        return c
+
+    def __len__(self) -> int:
+        return len(self._comps)
+
+    def active(self) -> Dict[int, Compressor]:
+        """Clients that have ever uploaded (insertion-ordered)."""
+        return self._comps
+
+    def observe_global_loss(self, loss: float) -> None:
+        loss = float(loss)
+        if self._first_gloss is None:
+            self._first_gloss = loss
+        self._last_gloss = loss
+        for c in self._comps.values():
+            c.observe_loss(loss)
+
+    def residual_nbytes(self) -> int:
+        return sum(c.sparsifier.residual_nbytes()
+                   for c in self._comps.values())
+
+    def state(self) -> dict:
+        return {"first_gloss": self._first_gloss,
+                "last_gloss": self._last_gloss}
+
+    def load_state(self, state: dict) -> None:
+        self._first_gloss = state.get("first_gloss")
+        self._last_gloss = state.get("last_gloss")
 
 
 @dataclass

@@ -108,12 +108,22 @@ class AdaptiveSparsifier:
 
     ``ab_mask`` marks which vector entries belong to LoRA 'a' leaves (True)
     vs 'b' leaves (False) so the two matrix groups use their own schedules.
+
+    Residual state (Eq. 6) is stored as per-slice SHARDS allocated on first
+    touch: a client only accumulates residual in the round-robin segments it
+    has actually uploaded, so an uplink sparsifier costs O(segments touched)
+    instead of one full protocol vector. Slices requested over a sparsifier's
+    lifetime must not overlap (they are the fixed segment partition, or the
+    full vector for the downlink); a full dense vector loaded from a legacy
+    checkpoint seeds shards lazily via ``_legacy_residual``.
     """
     cfg: SparsifyConfig
     ab_mask: np.ndarray           # bool, True where entry is from an A matrix
     loss0: Optional[float] = None
-    residual: Optional[np.ndarray] = None
+    loss_prev: Optional[float] = None
     last_k: Dict[str, float] = field(default_factory=dict)
+    _shards: Dict[Tuple[int, int], np.ndarray] = field(default_factory=dict)
+    _legacy_residual: Optional[np.ndarray] = None
 
     def observe_loss(self, loss: float) -> None:
         if self.loss0 is None:
@@ -122,9 +132,59 @@ class AdaptiveSparsifier:
 
     def current_k(self) -> Dict[str, float]:
         l0 = self.loss0 if self.loss0 is not None else 0.0
-        lp = getattr(self, "loss_prev", l0)
+        lp = self.loss_prev if self.loss_prev is not None else l0
         return {"a": adaptive_k(self.cfg, l0, lp, "a"),
                 "b": adaptive_k(self.cfg, l0, lp, "b")}
+
+    # -- residual shards ----------------------------------------------------
+    def residual_shard(self, start: int, end: int) -> np.ndarray:
+        """The [start, end) residual shard, zero-allocated on first touch
+        (seeded from a legacy dense vector if one was loaded). The returned
+        array IS the state — callers update it in place."""
+        key = (start, end)
+        arr = self._shards.get(key)
+        if arr is None:
+            if self._legacy_residual is not None:
+                arr = np.array(self._legacy_residual[start:end], np.float32)
+            else:
+                arr = np.zeros(end - start, np.float32)
+            self._shards[key] = arr
+            if self._legacy_residual is not None and \
+                    sum(a.size for a in self._shards.values()) \
+                    >= self._legacy_residual.size:
+                # every span is sharded (slices are a disjoint partition):
+                # the dense legacy vector has nothing left to seed — drop it
+                # so resumed-from-format-1 runs shed the O(vector) footprint
+                self._legacy_residual = None
+        return arr
+
+    @property
+    def residual(self) -> Optional[np.ndarray]:
+        """Dense materialisation (None if never touched) — checkpoint legacy
+        layout and tests; hot paths use ``residual_shard``."""
+        if not self._shards and self._legacy_residual is None:
+            return None
+        out = (np.array(self._legacy_residual, np.float32)
+               if self._legacy_residual is not None
+               else np.zeros(self.ab_mask.size, np.float32))
+        for (s, e), arr in self._shards.items():
+            out[s:e] = arr
+        return out
+
+    @residual.setter
+    def residual(self, value: Optional[np.ndarray]) -> None:
+        self._shards = {}
+        self._legacy_residual = (None if value is None
+                                 else np.array(value, np.float32))
+
+    def residual_nbytes(self) -> int:
+        n = sum(a.nbytes for a in self._shards.values())
+        if self._legacy_residual is not None:
+            # spans already sharded were seeded FROM the legacy vector —
+            # don't count them twice
+            covered = 4 * sum(a.size for a in self._shards.values())
+            n += max(self._legacy_residual.nbytes - covered, 0)
+        return int(n)
 
     def compress(self, values: np.ndarray,
                  slice_: Optional[Tuple[int, int]] = None
@@ -133,26 +193,22 @@ class AdaptiveSparsifier:
         protocol vector). Returns (sparse_dense_layout, mask, k_used)."""
         if not self.cfg.enabled:
             return values.astype(np.float32), np.ones(values.size, bool), {"a": 1.0, "b": 1.0}
-        if self.residual is None or self.residual.size != self.ab_mask.size:
-            self.residual = np.zeros(self.ab_mask.size, np.float32)
         start, end = slice_ if slice_ is not None else (0, self.ab_mask.size)
         assert values.size == end - start
         ks = self.current_k()
         self.last_k = ks
         seg_ab = self.ab_mask[start:end]
-        res = self.residual[start:end]
+        res = self.residual_shard(start, end)
 
         sparse = np.zeros_like(values, dtype=np.float32)
-        new_res = np.array(res, copy=True)
         mask = np.zeros(values.size, bool)
         for grp, sel in (("a", seg_ab), ("b", ~seg_ab)):
             if not sel.any():
                 continue
             sp, nr, mk = sparsify_with_residual(values[sel], res[sel], ks[grp])
             sparse[sel] = sp
-            new_res[sel] = nr
+            res[sel] = nr
             mask[sel] = mk
-        self.residual[start:end] = new_res
         return sparse, mask, ks
 
 

@@ -28,6 +28,7 @@ from repro.fed.client import (TimedCall, make_batched_local_trainer,
                               make_local_trainer, stack_batches,
                               stack_client_states)
 from repro.fed.protocol import BroadcastMsg, DownloadMsg, UploadMsg, WireProtocol
+from repro.fed.state_store import make_view_store
 from repro.fed.strategies import AggregationPolicy
 from repro.optim import adamw
 
@@ -46,16 +47,19 @@ class ServerEndpoint:
         self.last_broadcast = np.zeros(protocol.size, np.float32)
         self.ledger = CommLedger()
         self.down_comp = protocol.make_downlink_compressor()
-        # broadcast billing history: every round's wire cost, so a client
-        # idle for several rounds is billed for ALL broadcasts it missed.
-        # The catch-up PAYLOAD needs no history — a synced client's view is
-        # exactly last_broadcast, so sync_client assigns it directly.
-        # Entries all clients have paid for are pruned; _bcast_base is the
-        # absolute broadcast index of _bcast_stats[0].
-        self._bcast_stats: List[Tuple[int, int, int]] = []  # (params, wire, dense)
-        self._bcast_base = 0
+        # broadcast catch-up billing as cumulative prefix sums (DESIGN.md
+        # §7): a client idle for several rounds owes every broadcast it
+        # missed, but the catch-up PAYLOAD needs no history — a synced
+        # client's view is exactly last_broadcast, so sync_client assigns it
+        # directly — and the BILL is the difference between today's
+        # cumulative (params, wire, dense) totals and the cumulative totals
+        # captured at the client's last sync. O(1) per sync and per
+        # broadcast, bounded memory even for clients that never participate.
+        self._bcast_count = 0
+        self._cum_stats = np.zeros(3, np.int64)      # params, wire, dense
         # number of broadcasts each client has applied (absolute count)
-        self.client_sync = [0] * n_clients
+        self.client_sync = np.zeros(n_clients, np.int64)
+        self._client_cum = np.zeros((n_clients, 3), np.int64)
         self.pending: List[SegmentUpdate] = []
         self.round_t = 0
 
@@ -73,32 +77,25 @@ class ServerEndpoint:
             pkt = self.down_comp.compress(delta, t)  # enabled=False -> dense
             applied = delta
         self.last_broadcast = self.last_broadcast + applied
-        self._bcast_stats.append((pkt.param_count, pkt.wire_bytes,
-                                  pkt.dense_bytes))
-        # prune billing entries every client has already paid for
-        floor = min(self.client_sync)
-        if floor > self._bcast_base:
-            del self._bcast_stats[:floor - self._bcast_base]
-            self._bcast_base = floor
+        self._cum_stats += (pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)
+        self._bcast_count += 1
         return BroadcastMsg(t, pkt, self.protocol.n_segments)
 
     def sync_client(self, cid: int, round_t: int) -> DownloadMsg:
         """Bring client ``cid`` fully in sync: bill one wire packet per
-        broadcast it missed since it last participated, and ship the synced
+        broadcast it missed since it last participated (as a prefix-sum
+        difference — O(1) however long it was idle), and ship the synced
         view (= the server's broadcast base, which is exactly what a client
         holding every applied delta would have)."""
-        n = self._bcast_base + len(self._bcast_stats)
-        s = self.client_sync[cid]           # >= base: pruning stops at min
-        billed_p = billed_w = 0
-        for i in range(s - self._bcast_base, len(self._bcast_stats)):
-            params, wire, dense = self._bcast_stats[i]
-            self.ledger.log_download_stats(params, wire, dense)
-            billed_p += params
-            billed_w += wire
-        missed = n - s
+        n = self._bcast_count
+        billed_p, billed_w, billed_d = (
+            self._cum_stats - self._client_cum[cid]).tolist()
+        self.ledger.log_download_stats(billed_p, billed_w, billed_d)
+        missed = n - int(self.client_sync[cid])
         self.client_sync[cid] = n
+        self._client_cum[cid] = self._cum_stats
         return DownloadMsg(cid, round_t, self.last_broadcast.copy(),
-                           missed, billed_w, billed_p)
+                           missed, billed_w, billed_p, bcast_version=n)
 
     def receive(self, msg: UploadMsg) -> None:
         """Ingest one uplink message: decompress, bill, queue for aggregate.
@@ -131,12 +128,19 @@ class ServerEndpoint:
         the stacked-module download already delivered the new state)."""
         self.global_vec = np.asarray(vec, np.float32).copy()
         self.last_broadcast = self.global_vec.copy()
-        self._bcast_stats.clear()
-        self._bcast_base = 0
-        self.client_sync = [0] * self.n_clients
+        self._bcast_count = 0
+        self._cum_stats[:] = 0
+        self.client_sync[:] = 0
+        self._client_cum[:] = 0
 
     def observe_global_loss(self, loss: float) -> None:
         self.down_comp.observe_loss(loss)
+
+    def cursor_nbytes(self) -> int:
+        """Bytes of per-client billing cursors (O(n_clients) ints — the
+        small-constant state that remains per-population)."""
+        return int(self.client_sync.nbytes + self._client_cum.nbytes
+                   + self._cum_stats.nbytes)
 
 
 class ClientRuntime:
@@ -146,7 +150,12 @@ class ClientRuntime:
     (possibly stale) model vectors + participation clocks for Eq. 3 mixing,
     the uplink compressors (their sparsification residuals, Eq. 6), the
     current synced views, and the jit-compiled local-training engines
-    (serial reference or batched vmap)."""
+    (serial reference or batched vmap). All per-client vectors live in
+    O(active) structures — a copy-on-write ``ViewStore``, a lazy
+    ``CompressorPool`` with per-segment residual shards, and a dict of
+    locally-trained vectors — so the population can scale to 10k+ clients
+    while only the sampled K per round cost vector-sized memory
+    (DESIGN.md §7)."""
 
     def __init__(self, cfg, protocol: WireProtocol, fed, task, parts,
                  params: Params, lora0: Params, rng, *, task_kind: str,
@@ -164,11 +173,14 @@ class ClientRuntime:
         # Eq. 3 mixing applies when EcoLoRA is on and the policy keeps local
         # state across rounds (FLoRA re-inits, so it opts out)
         self.mixing = mixing
-        self.local_vecs: List[Optional[np.ndarray]] = [None] * fed.n_clients
+        self.local_vecs: Dict[int, np.ndarray] = {}
         self.client_tau = [0] * fed.n_clients
-        self.views = np.tile(np.asarray(init_vec, np.float32),
-                             (fed.n_clients, 1))
-        self.up_comps = protocol.make_uplink_compressors(fed.n_clients)
+        # O(active) copy-on-write view store + lazy per-client compressors
+        # (DESIGN.md §7); "dense" keeps the legacy materialised matrix for
+        # parity pins and scale benchmarks.
+        self.view_store = make_view_store(
+            getattr(fed, "state_store", "cow"), fed.n_clients, init_vec)
+        self.up_comps = protocol.make_uplink_pool()
         self._opt_template = adamw.init_state(lora0)
         self._opt_template_batch = None        # lazily tiled to (K, ...)
         self.rebuild_engines()
@@ -190,19 +202,37 @@ class ClientRuntime:
             self.local_train = None
 
     # -- downlink -----------------------------------------------------------
+    @property
+    def views(self) -> np.ndarray:
+        """Dense (n_clients, size) materialisation of the view store —
+        O(n_clients x vector); tests and the legacy checkpoint layout only.
+        Hot paths go through ``self.view_store`` directly."""
+        return self.view_store.materialize()
+
+    @views.setter
+    def views(self, value) -> None:
+        self.view_store.load_dense(np.asarray(value, np.float32))
+
     def apply_download(self, cid: int, msg: DownloadMsg) -> None:
-        self.views[cid] = msg.view
+        self.view_store.set_synced(cid, msg.view, msg.bcast_version)
 
     def reset_views(self, vec: np.ndarray) -> None:
-        self.views[:] = np.asarray(vec, np.float32)[None, :]
+        self.view_store.reset(vec)
+
+    def state_nbytes(self) -> int:
+        """Bytes of O(active) client state: views + uplink residual shards
+        (the quantities benchmarks/scale_clients.py pins)."""
+        return self.view_store.nbytes() + self.up_comps.residual_nbytes() \
+            + sum(v.nbytes for v in self.local_vecs.values())
 
     # -- Eq. 3 mixing ---------------------------------------------------------
     def client_start(self, cid: int, round_t: int, global_view: np.ndarray
                      ) -> np.ndarray:
         """Eq. 3 mixing of downloaded global with the client's stale local."""
-        if self.local_vecs[cid] is None or not self._mix_active():
+        local = self.local_vecs.get(cid)
+        if local is None or not self._mix_active():
             return np.array(global_view, copy=True)
-        return mix_models(global_view, self.local_vecs[cid],
+        return mix_models(global_view, local,
                           self.protocol.eco.beta, round_t,
                           self.client_tau[cid])
 
@@ -216,8 +246,9 @@ class ClientRuntime:
         taus = np.full(len(cids), round_t, np.int64)
         has_local = np.zeros(len(cids), bool)
         for i, cid in enumerate(cids):
-            if self.local_vecs[cid] is not None:
-                locals_[i] = self.local_vecs[cid]
+            local = self.local_vecs.get(int(cid))
+            if local is not None:
+                locals_[i] = local
                 taus[i] = self.client_tau[cid]
                 has_local[i] = True
         mixed = mix_models_batch(global_views, locals_,
@@ -252,6 +283,7 @@ class ClientRuntime:
         bounds_all = self.protocol.bounds
         comps, values, slices = [], [], []
         for i, cid in enumerate(cids):
+            cid = int(cid)
             self.local_vecs[cid] = np.array(trained_vecs[i], np.float32,
                                             copy=True)
             self.client_tau[cid] = round_t
@@ -286,7 +318,7 @@ class ClientRuntime:
         fed = self.fed
         msgs, compute_s = [], []
         for cid in sampled:
-            start_vec = self.client_start(cid, t, self.views[cid])
+            start_vec = self.client_start(cid, t, self.view_store.view(int(cid)))
             lora = self.protocol.vec_to_tree(start_vec, self.lora0)
             opt_state = self._opt_template
             batches = stack_batches(self.task, self.parts[cid],
@@ -305,7 +337,8 @@ class ClientRuntime:
         vector extraction, and uplink sparsification are vectorized too."""
         fed = self.fed
         k = len(sampled)
-        start_vecs = self.client_start_batch(sampled, t, self.views[sampled])
+        start_vecs = self.client_start_batch(sampled, t,
+                                             self.view_store.views_for(sampled))
         # batch sampling stays serial numpy (same rng call order as the
         # serial engine -> identical draws), only stacking is new
         per_client = [stack_batches(self.task, self.parts[cid], fed.local_steps,
@@ -328,5 +361,4 @@ class ClientRuntime:
         return msgs, [per_s] * k
 
     def observe_global_loss(self, loss: float) -> None:
-        for c in self.up_comps:
-            c.observe_loss(loss)
+        self.up_comps.observe_global_loss(loss)

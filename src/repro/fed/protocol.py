@@ -26,9 +26,10 @@ from typing import Any, Dict, List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import Compressor, Packet, compress_uplinks
+from repro.core.compression import (Compressor, CompressorPool, Packet,
+                                    compress_uplinks)
 from repro.core.segments import segment_bounds, segment_id, tree_spec
-from repro.core.sparsify import SparsifyConfig
+from repro.core.sparsify import SparsifyConfig, ab_mask_from_spec
 from repro.models.lora import flatten_lora, unflatten_lora
 
 Params = Dict[str, Any]
@@ -61,6 +62,7 @@ class DownloadMsg:
     n_missed: int
     wire_bytes: int
     param_count: int
+    bcast_version: int = 0    # absolute broadcast count the view reflects
 
 
 @dataclass
@@ -124,7 +126,17 @@ class WireProtocol:
 
     def make_uplink_compressors(self, n: int) -> List[Compressor]:
         sp, enc = self._sparsify_cfg(), self._encoding()
-        return [Compressor(self.spec, sp, encoding=enc) for _ in range(n)]
+        ab = ab_mask_from_spec(self.spec)       # shared, read-only
+        return [Compressor(self.spec, sp, encoding=enc, ab_mask=ab)
+                for _ in range(n)]
+
+    def make_uplink_pool(self) -> CompressorPool:
+        """Lazily-populated per-client compressors: O(participants) state
+        even for a 10k+ client population (DESIGN.md §7)."""
+        sp, enc = self._sparsify_cfg(), self._encoding()
+        ab = ab_mask_from_spec(self.spec)       # shared, read-only
+        return CompressorPool(
+            lambda: Compressor(self.spec, sp, encoding=enc, ab_mask=ab))
 
     def make_downlink_compressor(self) -> Compressor:
         return Compressor(self.spec, self._sparsify_cfg(),

@@ -1,10 +1,16 @@
 """Client sampling policies (§4.1: 10 of 100 uniformly; plus availability /
 weighted variants for the cross-device setting the paper motivates —
-low-bandwidth clients exist, EcoLoRA is what lets them participate)."""
+low-bandwidth clients exist, EcoLoRA is what lets them participate).
+
+Every round's draw is derived from ``(seed, round_t)`` alone — samplers keep
+NO mutable stream state, so a run resumed from a checkpoint at round N
+replays exactly the participant schedule the uninterrupted run would have
+drawn (the resume-parity contract, DESIGN.md §7).
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -14,14 +20,14 @@ class UniformSampler:
     n_clients: int
     per_round: int
     seed: int = 0
-    _rng: np.random.Generator = field(init=False, repr=False, default=None)
 
-    def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+    def _rng(self, round_t: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed, round_t))
 
     def sample(self, round_t: int) -> np.ndarray:
-        return self._rng.choice(self.n_clients, size=self.per_round,
-                                replace=False)
+        return self._rng(round_t).choice(
+            self.n_clients, size=min(self.per_round, self.n_clients),
+            replace=False)
 
 
 @dataclass
@@ -30,30 +36,47 @@ class WeightedSampler(UniformSampler):
     weights: Optional[Sequence[float]] = None
 
     def sample(self, round_t: int) -> np.ndarray:
+        if self.weights is None:
+            return super().sample(round_t)
         w = np.asarray(self.weights, float)
         p = w / w.sum()
-        return self._rng.choice(self.n_clients, size=self.per_round,
-                                replace=False, p=p)
+        return self._rng(round_t).choice(
+            self.n_clients, size=min(self.per_round, self.n_clients),
+            replace=False, p=p)
 
 
 @dataclass
 class AvailabilitySampler(UniformSampler):
     """Cross-device realism: each client is online with probability
-    ``availability[i]``; rounds sample only from the online set (and may be
-    short — the paper's Ns <= Nt coverage requirement is checked upstream)."""
+    ``availability[i]``; rounds sample only from the online set and may be
+    SHORT (fewer than ``per_round`` participants when too few clients are
+    up) — the round loop handles short rounds, and the paper's Ns <= Nt
+    coverage requirement is checked upstream."""
     availability: Optional[Sequence[float]] = None
 
     def sample(self, round_t: int) -> np.ndarray:
+        rng = self._rng(round_t)
+        if self.availability is None:
+            return rng.choice(self.n_clients,
+                              size=min(self.per_round, self.n_clients),
+                              replace=False)
         avail = np.asarray(self.availability, float)
-        online = np.flatnonzero(self._rng.random(self.n_clients) < avail)
-        if online.size == 0:
-            online = np.arange(self.n_clients)
+        online = np.flatnonzero(rng.random(self.n_clients) < avail)
         take = min(self.per_round, online.size)
-        return self._rng.choice(online, size=take, replace=False)
+        if take == 0:
+            return np.zeros(0, np.int64)
+        return rng.choice(online, size=take, replace=False)
+
+
+SAMPLERS = {"uniform": UniformSampler, "weighted": WeightedSampler,
+            "availability": AvailabilitySampler}
 
 
 def make_sampler(kind: str, n_clients: int, per_round: int, seed: int = 0,
                  **kw):
-    cls = {"uniform": UniformSampler, "weighted": WeightedSampler,
-           "availability": AvailabilitySampler}[kind]
+    try:
+        cls = SAMPLERS[kind]
+    except KeyError:
+        raise ValueError(f"unknown sampler {kind!r} "
+                         f"(expected one of {sorted(SAMPLERS)})") from None
     return cls(n_clients, per_round, seed, **kw)

@@ -1,0 +1,230 @@
+"""O(active) client-view storage (DESIGN.md §7).
+
+``ClientRuntime`` used to materialise a dense ``(n_clients, protocol_size)``
+views matrix even though at any instant only the K sampled clients deviate
+from the server's broadcast base: a view is only ever READ right after
+``sync_client`` delivered it, and at that moment it *is* ``last_broadcast``.
+``CowViewStore`` exploits that: every client that has never synced shares one
+``default`` vector (the init / FLoRA-reinit base), and every synced client
+holds a reference into a refcounted ``{broadcast_version: vector}`` table —
+the K participants of a round all point at the SAME vector. Memory is
+O(K + deviations) vectors instead of O(n_clients), where a "deviation" is a
+client whose last sync predates the current broadcast base (its vector stays
+alive until it resyncs).
+
+``DenseViewStore`` keeps the legacy materialised matrix behind the same API
+(selected with ``FedConfig.state_store="dense"``) so scale benchmarks and
+parity tests can pin the two bitwise-identical.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class ViewStore:
+    """Per-client protocol-vector views, copy-on-write or dense."""
+
+    kind = "abstract"
+
+    def view(self, cid: int) -> np.ndarray:
+        """Read-only view vector for one client (do NOT mutate)."""
+        raise NotImplementedError
+
+    def views_for(self, cids) -> np.ndarray:
+        """(K, size) float32 copy of the given clients' views."""
+        return np.stack([np.asarray(self.view(int(c)), np.float32)
+                         for c in cids])
+
+    def set_synced(self, cid: int, vec: np.ndarray, version: int) -> None:
+        """Client ``cid`` applied every broadcast up to ``version``; its view
+        is now ``vec`` (== the server's broadcast base at that version, so
+        all participants of a round share one vector)."""
+        raise NotImplementedError
+
+    def reset(self, vec: np.ndarray) -> None:
+        """Re-anchor every client at ``vec`` (init / FLoRA re-init)."""
+        raise NotImplementedError
+
+    def materialize(self) -> np.ndarray:
+        """Dense (n_clients, size) matrix — O(n_clients*size); tests and the
+        legacy checkpoint layout only."""
+        raise NotImplementedError
+
+    def load_dense(self, mat: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def nbytes(self) -> int:
+        raise NotImplementedError
+
+    def state(self) -> dict:
+        """Checkpointable representation (sparse for the COW store)."""
+        raise NotImplementedError
+
+    def load_state(self, state: dict) -> None:
+        """Restore from ``state()`` output of EITHER store kind."""
+        raise NotImplementedError
+
+
+class CowViewStore(ViewStore):
+    """Copy-on-write views against the shared broadcast base."""
+
+    kind = "cow"
+
+    def __init__(self, n_clients: int, default_vec: np.ndarray):
+        self.n_clients = n_clients
+        self._default = np.array(default_vec, np.float32)
+        self._vers: Dict[int, int] = {}          # cid -> version tag
+        self._bases: Dict[int, np.ndarray] = {}  # version tag -> shared vec
+        self._refs: Dict[int, int] = {}          # version tag -> #clients
+        self._next_override = -1                 # private (non-shared) tags
+
+    def view(self, cid: int) -> np.ndarray:
+        v = self._vers.get(cid)
+        return self._default if v is None else self._bases[v]
+
+    def _release(self, cid: int) -> None:
+        v = self._vers.pop(cid, None)
+        if v is None:
+            return
+        self._refs[v] -= 1
+        if self._refs[v] == 0:
+            del self._refs[v]
+            del self._bases[v]
+
+    def _attach(self, cid: int, vec: np.ndarray, tag: int) -> None:
+        self._release(cid)
+        if tag not in self._bases:
+            self._bases[tag] = np.asarray(vec, np.float32)
+            self._refs[tag] = 0
+        self._refs[tag] += 1
+        self._vers[cid] = tag
+
+    def set_synced(self, cid: int, vec: np.ndarray, version: int) -> None:
+        self._attach(cid, vec, version)
+
+    def set_override(self, cid: int, vec: np.ndarray) -> None:
+        """Per-client private view (legacy dense loads only)."""
+        self._attach(cid, np.array(vec, np.float32), self._next_override)
+        self._next_override -= 1
+
+    def reset(self, vec: np.ndarray) -> None:
+        self._default = np.array(vec, np.float32)
+        self._vers.clear()
+        self._bases.clear()
+        self._refs.clear()
+
+    def materialize(self) -> np.ndarray:
+        out = np.tile(self._default, (self.n_clients, 1))
+        for cid, v in self._vers.items():
+            out[cid] = self._bases[v]
+        return out
+
+    def load_dense(self, mat: np.ndarray) -> None:
+        mat = np.asarray(mat, np.float32)
+        assert mat.shape == (self.n_clients, self._default.size)
+        # rows equal to the default collapse back onto the shared vector
+        for cid in range(self.n_clients):
+            if np.array_equal(mat[cid], self._default):
+                self._release(cid)
+            else:
+                self.set_override(cid, mat[cid])
+
+    def nbytes(self) -> int:
+        return int(self._default.nbytes
+                   + sum(b.nbytes for b in self._bases.values()))
+
+    def n_deviations(self) -> int:
+        return len(self._bases)
+
+    def state(self) -> dict:
+        return {"kind": self.kind,
+                "default": self._default,
+                "bases": {str(tag): vec for tag, vec in self._bases.items()},
+                "vers": {str(cid): int(tag)
+                         for cid, tag in self._vers.items()}}
+
+    def load_state(self, state: dict) -> None:
+        if state.get("kind") != "cow":
+            self.load_dense(np.asarray(state["dense"], np.float32))
+            return
+        self._default = np.asarray(state["default"], np.float32)
+        self._vers.clear()
+        self._bases.clear()
+        self._refs.clear()
+        self._bases = {int(tag): np.asarray(vec, np.float32)
+                       for tag, vec in state["bases"].items()}
+        self._refs = {tag: 0 for tag in self._bases}
+        for cid, tag in state["vers"].items():
+            self._vers[int(cid)] = int(tag)
+            self._refs[int(tag)] += 1
+        self._next_override = min([-1] + [t for t in self._bases if t < 0]) - 1
+
+
+class DenseViewStore(ViewStore):
+    """Legacy materialised (n_clients, size) matrix behind the store API."""
+
+    kind = "dense"
+
+    def __init__(self, n_clients: int, default_vec: np.ndarray):
+        self.n_clients = n_clients
+        self._mat = np.tile(np.asarray(default_vec, np.float32),
+                            (n_clients, 1))
+
+    def view(self, cid: int) -> np.ndarray:
+        return self._mat[cid]
+
+    def views_for(self, cids) -> np.ndarray:
+        return self._mat[np.asarray(cids, np.int64)].copy()
+
+    def set_synced(self, cid: int, vec: np.ndarray, version: int) -> None:
+        self._mat[cid] = vec
+
+    def reset(self, vec: np.ndarray) -> None:
+        self._mat[:] = np.asarray(vec, np.float32)[None, :]
+
+    def materialize(self) -> np.ndarray:
+        return self._mat.copy()
+
+    def load_dense(self, mat: np.ndarray) -> None:
+        self._mat = np.array(mat, np.float32)
+
+    def nbytes(self) -> int:
+        return int(self._mat.nbytes)
+
+    def n_deviations(self) -> int:
+        return self.n_clients
+
+    def state(self) -> dict:
+        return {"kind": self.kind, "dense": self._mat}
+
+    def load_state(self, state: dict) -> None:
+        if state.get("kind") == "cow":
+            self.load_dense(_state_to_dense(state, self.n_clients))
+        else:
+            self.load_dense(state["dense"])
+
+
+def _state_to_dense(state: dict, n_clients: int) -> np.ndarray:
+    """Materialise a COW store checkpoint into a dense matrix."""
+    default = np.asarray(state["default"], np.float32)
+    out = np.tile(default, (n_clients, 1))
+    bases = {int(tag): np.asarray(vec, np.float32)
+             for tag, vec in state["bases"].items()}
+    for cid, tag in state["vers"].items():
+        out[int(cid)] = bases[int(tag)]
+    return out
+
+
+VIEW_STORES = {"cow": CowViewStore, "dense": DenseViewStore}
+
+
+def make_view_store(kind: str, n_clients: int,
+                    default_vec: np.ndarray) -> ViewStore:
+    try:
+        cls = VIEW_STORES[kind]
+    except KeyError:
+        raise ValueError(f"unknown state_store {kind!r} "
+                         f"(expected one of {sorted(VIEW_STORES)})") from None
+    return cls(n_clients, default_vec)

@@ -24,6 +24,8 @@ from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
 from repro.fed.client import make_evaluator
 from repro.fed.endpoints import ClientRuntime, ServerEndpoint
 from repro.fed.protocol import WireProtocol
+from repro.fed.sampler import SAMPLERS, make_sampler
+from repro.fed.state_store import VIEW_STORES
 from repro.fed.strategies import (ALLOWED_METHODS, EcoLoRAConfig, make_policy)
 from repro.fed.transport import InMemoryTransport, Transport
 from repro.models import model as M
@@ -55,6 +57,9 @@ class FedConfig:
     pretrain_lr: float = 3e-3
     engine: str = "batched"            # batched (one vmapped call/round) | serial
     backend: str = "numpy"             # uplink sparsify backend: numpy | pallas
+    sampler: str = "uniform"           # uniform | weighted | availability
+    sampler_kw: Optional[Dict[str, Any]] = None  # extra sampler args
+    state_store: str = "cow"           # cow (O(active)) | dense (legacy)
 
     def __post_init__(self):
         if self.method not in ALLOWED_METHODS:
@@ -69,6 +74,12 @@ class FedConfig:
         if self.backend not in _BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'numpy' or 'pallas')")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"unknown sampler {self.sampler!r} "
+                             f"(expected one of {sorted(SAMPLERS)})")
+        if self.state_store not in VIEW_STORES:
+            raise ValueError(f"unknown state_store {self.state_store!r} "
+                             f"(expected one of {sorted(VIEW_STORES)})")
 
 
 @dataclass
@@ -140,6 +151,14 @@ class FederatedTrainer:
             self.parts = dirichlet_partition(cats, fed.n_clients,
                                              fed.dirichlet_alpha, fed.seed)
 
+        # participant sampling: stateless (seed, round_t)-derived draws so a
+        # resumed run replays the uninterrupted run's schedule exactly
+        skw = dict(fed.sampler_kw or {})
+        if fed.sampler == "weighted" and "weights" not in skw:
+            skw["weights"] = [int(p.size) for p in self.parts]
+        self.sampler = make_sampler(fed.sampler, fed.n_clients,
+                                    fed.clients_per_round, fed.seed, **skw)
+
         # ---- the three federation layers: protocol, endpoints, transport ----
         self.protocol = WireProtocol.for_method(fed.method, self.lora0,
                                                 fed.eco, backend=fed.backend)
@@ -176,6 +195,11 @@ class FederatedTrainer:
         else:
             self.eval_batch = self.task.eval_set(n=128, seed=fed.seed + 999)
         self.logs: List[RoundLog] = []
+        # round the next run() call starts at (load_fed_state sets this to
+        # the checkpoint's resume round) and the last eval signal, persisted
+        # so eval_every-thinned rounds reuse the same value after a resume
+        self.start_round = 0
+        self._last_eval: Optional[tuple] = None
 
     @property
     def client_views(self) -> np.ndarray:
@@ -205,13 +229,19 @@ class FederatedTrainer:
         self.server.observe_global_loss(loss)
         self.clients.observe_global_loss(loss)
 
-    def run(self, rounds: Optional[int] = None) -> List[RoundLog]:
+    def run(self, rounds: Optional[int] = None,
+            start_round: Optional[int] = None) -> List[RoundLog]:
+        """Run rounds ``[start_round, n_rounds)``. ``start_round`` defaults
+        to ``self.start_round`` — 0 for a fresh trainer, the restored round
+        after ``ckpt.load_fed_state`` — so a resumed run continues the
+        absolute round numbering (segment schedule, ledger, eval cadence)
+        instead of replaying from 0."""
         fed = self.fed
         srv, cl, tp = self.server, self.clients, self.transport
         n_rounds = rounds or fed.rounds
-        for t in range(n_rounds):
-            sampled = self.rng.choice(fed.n_clients, size=fed.clients_per_round,
-                                      replace=False)
+        t0 = self.start_round if start_round is None else start_round
+        for t in range(t0, n_rounds):
+            sampled = self.sampler.sample(t)
             participants = tp.plan_round(t, sampled)
             led = srv.ledger
             up0, down0 = led.upload_bytes, led.download_bytes
@@ -240,13 +270,15 @@ class FederatedTrainer:
             tp.finish_round(t, max(overhead_s, 0.0))
 
             # ---- eval / adaptive-k loss signal (eval_every thins the
-            # cadence; stale rounds reuse the last signal) ----
+            # cadence; stale rounds reuse the last signal — persisted, so
+            # the cadence survives a checkpoint resume) ----
             if t % max(fed.eval_every, 1) == 0 or t == n_rounds - 1 \
-                    or not self.logs:
+                    or self._last_eval is None:
                 gloss, metric = self.evaluate(srv.global_vec)
                 self.observe_global_loss(gloss)
+                self._last_eval = (gloss, metric)
             else:
-                gloss, metric = self.logs[-1].global_loss, self.logs[-1].metric
+                gloss, metric = self._last_eval
             srv.snapshot(t)
             self.logs.append(RoundLog(
                 t, gloss, metric,
@@ -256,6 +288,7 @@ class FederatedTrainer:
                 led.download_params - downp0,
                 float(np.max(compute_s)) if len(compute_s) else 0.0,
                 max(overhead_s, 0.0)))
+            self.start_round = t + 1
         return self.logs
 
     # ------------------------------------------------------------------

@@ -20,6 +20,104 @@ def test_tree_roundtrip(tmp_path):
     assert np.asarray(out["nested"]["b16"]).dtype.name == "bfloat16"
 
 
+def test_view_store_state_cross_kind_roundtrip():
+    """A checkpoint written by either store kind loads into either kind."""
+    from repro.fed.state_store import CowViewStore, DenseViewStore
+
+    rng = np.random.default_rng(0)
+    src_cow = CowViewStore(4, np.zeros(8, np.float32))
+    src_cow.set_synced(1, rng.standard_normal(8).astype(np.float32), 3)
+    src_cow.set_synced(2, rng.standard_normal(8).astype(np.float32), 5)
+    src_dense = DenseViewStore(4, np.zeros(8, np.float32))
+    src_dense.load_dense(rng.standard_normal((4, 8)).astype(np.float32))
+    for src in (src_cow, src_dense):
+        for dst_cls in (CowViewStore, DenseViewStore):
+            dst = dst_cls(4, np.ones(8, np.float32))
+            dst.load_state(src.state())
+            np.testing.assert_array_equal(dst.materialize(),
+                                          src.materialize())
+
+
+def test_legacy_residual_released_once_fully_sharded():
+    """A dense residual loaded from a format-1 checkpoint seeds shards
+    lazily and is DROPPED once every span is sharded — resumed runs must
+    not keep O(full vector) per client (nor double-count it)."""
+    from repro.core.sparsify import AdaptiveSparsifier, SparsifyConfig
+
+    sp = AdaptiveSparsifier(SparsifyConfig(), np.zeros(100, bool))
+    dense = np.arange(100, dtype=np.float32)
+    sp.residual = dense                        # legacy load path
+    assert sp.residual_nbytes() == 400
+    np.testing.assert_array_equal(sp.residual_shard(0, 50), dense[:50])
+    assert sp._legacy_residual is not None
+    assert sp.residual_nbytes() == 400         # seeded span not double-counted
+    np.testing.assert_array_equal(sp.residual_shard(50, 100), dense[50:])
+    assert sp._legacy_residual is None         # fully sharded: legacy freed
+    assert sp.residual_nbytes() == 400
+    np.testing.assert_array_equal(sp.residual, dense)
+
+
+def test_legacy_dense_fed_state_loads(tmp_path):
+    """A format-1 checkpoint (dense client_views matrix, bcast_stats list,
+    full residual vectors) still loads: views land in the COW store, the
+    pruned stats list is rebuilt into prefix sums, and dense residuals seed
+    the per-segment shards lazily."""
+    from repro.configs import get_config
+    from repro.data.synthetic import TaskConfig
+    from repro.fed.strategies import EcoLoRAConfig
+    from repro.fed.trainer import FedConfig, FederatedTrainer
+
+    cfg = get_config("llama2-7b").reduced()
+    tc = TaskConfig(vocab_size=128, seq_len=16, n_samples=64, seed=0)
+    fed = FedConfig(n_clients=4, clients_per_round=2, rounds=2, local_steps=1,
+                    local_batch=2, eco=EcoLoRAConfig(n_segments=2),
+                    pretrain_steps=0)
+    tr = FederatedTrainer(cfg, fed, tc)
+    size = tr.protocol.size
+    rng = np.random.default_rng(7)
+    views = rng.standard_normal((4, size)).astype(np.float32)
+    gvec = rng.standard_normal(size).astype(np.float32)
+    res1 = rng.standard_normal(size).astype(np.float32)
+    legacy = {                                  # exactly what format 1 wrote
+        "round": 3,
+        "global_vec": gvec,
+        "last_broadcast": gvec.copy(),
+        "client_views": views,
+        "client_tau": [0, 1, 2, 0],
+        "client_sync": [3, 2, 3, 1],
+        "bcast_stats": [[10, 20, 30], [1, 2, 3]],   # pruned: base = 1
+        "bcast_base": 1,
+        "client_vecs": {"1": views[1] + 1.0},
+        "residuals": {"1": res1},
+        "down_residual": None,
+        "ledger": {"upload_params": 5, "download_params": 6,
+                   "upload_bytes": 7, "download_bytes": 8},
+    }
+    p = str(tmp_path / "legacy.ckpt")
+    ckpt.save(p, legacy)
+
+    assert ckpt.load_fed_state(p, tr) == 3
+    assert tr.start_round == 3
+    np.testing.assert_array_equal(tr.server.global_vec, gvec)
+    np.testing.assert_array_equal(tr.clients.views, views)
+    # prefix sums rebuilt from the pruned stats list (anchored at the base)
+    srv = tr.server
+    assert srv._bcast_count == 3
+    np.testing.assert_array_equal(srv._cum_stats, [11, 22, 33])
+    np.testing.assert_array_equal(srv._client_cum[0], [11, 22, 33])  # sync 3
+    np.testing.assert_array_equal(srv._client_cum[1], [10, 20, 30])  # sync 2
+    np.testing.assert_array_equal(srv._client_cum[3], [0, 0, 0])     # sync 1
+    # a client at the floor owes both surviving packets
+    dl = srv.sync_client(3, 3)
+    assert dl.wire_bytes == 22 and dl.param_count == 11
+    # dense residual seeds shards lazily and materialises back bitwise
+    np.testing.assert_array_equal(
+        tr.clients.up_comps[1].sparsifier.residual, res1)
+    half = tr.clients.up_comps[1].sparsifier.residual_shard(0, size // 2)
+    np.testing.assert_array_equal(half, res1[:size // 2])
+    assert tr.server.ledger.upload_bytes == 7
+
+
 @pytest.mark.slow
 def test_fed_state_resume(tmp_path):
     from repro.configs import get_config

@@ -18,23 +18,21 @@ TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
 ROUNDS = 3
 
 
-def _make_trainer(method, engine, backend="numpy"):
+def _make_trainer(method, engine, backend="numpy", **kw):
     fed = FedConfig(method=method, n_clients=8, clients_per_round=4,
                     rounds=ROUNDS, local_steps=2, local_batch=4, lr=3e-3,
                     eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
-                    pretrain_steps=5, engine=engine, backend=backend)
+                    pretrain_steps=5, engine=engine, backend=backend, **kw)
     return FederatedTrainer(CFG, fed, TC)
 
 
 def _drive_via_message_api(tr, rounds):
     """Replicate the round loop through ONLY the public endpoint/transport
     message API (what an external deployment would write)."""
-    fed = tr.fed
     srv, cl, tp = tr.server, tr.clients, tr.transport
     per_round = []
     for t in range(rounds):
-        sampled = tr.rng.choice(fed.n_clients, size=fed.clients_per_round,
-                                replace=False)
+        sampled = tr.sampler.sample(t)
         participants = tp.plan_round(t, sampled)
         up0, down0 = srv.ledger.upload_bytes, srv.ledger.download_bytes
         tp.on_broadcast(srv.begin_round(t))
@@ -109,6 +107,54 @@ def test_download_billing_not_undercounted():
 
 
 # ---------------------------------------------------------------------------
+# client-state store parity (ISSUE 3 tentpole): the O(active) COW store must
+# be byte-identical on the wire and bitwise on global_vec vs the dense store
+# ---------------------------------------------------------------------------
+
+def test_state_store_cow_vs_dense_bitwise():
+    a = _make_trainer("fedit", "batched", state_store="cow")
+    b = _make_trainer("fedit", "batched", state_store="dense")
+    a.run()
+    b.run()
+    np.testing.assert_array_equal(a.server.global_vec, b.server.global_vec)
+    led_a, led_b = a.server.ledger, b.server.ledger
+    assert led_a.upload_bytes == led_b.upload_bytes
+    assert led_a.download_bytes == led_b.download_bytes
+    assert led_a.upload_params == led_b.upload_params
+    assert led_a.download_params == led_b.download_params
+    for la, lb in zip(a.logs, b.logs):
+        assert la.upload_bytes == lb.upload_bytes, la.round_t
+        assert la.download_bytes == lb.download_bytes, la.round_t
+    # identical dense materialisation, at a fraction of the memory
+    np.testing.assert_array_equal(a.clients.views, b.clients.views)
+    assert a.clients.view_store.nbytes() < b.clients.view_store.nbytes()
+
+
+def test_cow_store_tracks_dense_shadow():
+    """Every round the COW store's materialisation must equal a dense shadow
+    maintained directly from the DownloadMsgs (the store is pure
+    bookkeeping — it may never change what a client would train from)."""
+    tr = _make_trainer("fedit", "batched")
+    srv, cl, tp = tr.server, tr.clients, tr.transport
+    shadow = cl.views.copy()
+    for t in range(ROUNDS):
+        participants = tp.plan_round(t, tr.sampler.sample(t))
+        tp.on_broadcast(srv.begin_round(t))
+        for cid in participants:
+            dl = srv.sync_client(int(cid), t)
+            tp.on_download(dl)
+            cl.apply_download(int(cid), dl)
+            shadow[int(cid)] = dl.view
+        msgs, compute_s = cl.run_round(t, participants)
+        for msg in tp.dispatch_uploads(t, msgs, compute_s):
+            srv.receive(msg)
+        srv.end_round(t)
+        np.testing.assert_array_equal(cl.views, shadow)
+    # only the sampled participants ever deviate from the shared base
+    assert cl.view_store.n_deviations() <= ROUNDS * tr.fed.clients_per_round
+
+
+# ---------------------------------------------------------------------------
 # config validation (satellite: make_strategy KeyError -> ValueError)
 # ---------------------------------------------------------------------------
 
@@ -122,6 +168,8 @@ def test_make_policy_unknown_method():
     {"partition": "iid"},
     {"engine": "threaded"},
     {"backend": "cuda"},
+    {"sampler": "round_robin"},
+    {"state_store": "sparse_matrix"},
 ])
 def test_fed_config_validation(kw):
     with pytest.raises(ValueError, match="unknown"):

@@ -1,0 +1,148 @@
+"""Resume-parity suite (ISSUE 3): running 2N rounds straight must be BITWISE
+identical to N rounds + save_fed_state/load_fed_state + N rounds — ledger
+bytes, adaptive-k schedule state, participant schedule, and global_vec. This
+pins the three resume bugs fixed together: adaptive-k state lost on load,
+run() replaying the round/segment schedule from 0, and history-dependent
+participant sampling. Plus the prefix-sum broadcast-billing equivalence for
+a client idle over many rounds.
+"""
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.strategies import EcoLoRAConfig, FedITPolicy
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+N = 2
+
+
+def _fed(**kw):
+    base = dict(method="fedit", n_clients=8, clients_per_round=3,
+                rounds=2 * N, local_steps=1, local_batch=2, lr=3e-3,
+                eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+                pretrain_steps=2)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _k_state(tr):
+    """Adaptive-k schedule state of every compressor that exists."""
+    out = {}
+    for cid, c in tr.clients.up_comps.active().items():
+        sp = c.sparsifier
+        out[cid] = (sp.loss0, sp.loss_prev, dict(sp.last_k))
+    sp = tr.server.down_comp.sparsifier
+    out["down"] = (sp.loss0, sp.loss_prev, dict(sp.last_k))
+    return out
+
+
+def test_resume_parity_bitwise(tmp_path):
+    full = FederatedTrainer(CFG, _fed(), TC)
+    full.run()                                    # rounds 0..2N-1 straight
+
+    first = FederatedTrainer(CFG, _fed(), TC)
+    first.run(rounds=N)                           # rounds 0..N-1
+    p = str(tmp_path / "mid.ckpt")
+    ckpt.save_fed_state(p, first)
+
+    resumed = FederatedTrainer(CFG, _fed(), TC)
+    assert ckpt.load_fed_state(p, resumed) == N
+    assert resumed.start_round == N
+    resumed.run()                                 # continues at round N
+
+    # the second leg covered exactly rounds N..2N-1 (no schedule replay)
+    assert [lg.round_t for lg in resumed.logs] == list(range(N, 2 * N))
+
+    # participant schedule: (seed, round)-derived draws replay exactly
+    for t in range(2 * N):
+        np.testing.assert_array_equal(full.sampler.sample(t),
+                                      resumed.sampler.sample(t))
+
+    # global protocol state: bitwise
+    np.testing.assert_array_equal(full.server.global_vec,
+                                  resumed.server.global_vec)
+    np.testing.assert_array_equal(full.server.last_broadcast,
+                                  resumed.server.last_broadcast)
+    np.testing.assert_array_equal(full.clients.views, resumed.clients.views)
+
+    # ledger: byte-identical totals AND per-round deltas over the second leg
+    la, lb = full.server.ledger, resumed.server.ledger
+    assert (la.upload_bytes, la.download_bytes, la.upload_params,
+            la.download_params) == (lb.upload_bytes, lb.download_bytes,
+                                    lb.upload_params, lb.download_params)
+    for lga, lgb in zip(full.logs[N:], resumed.logs):
+        assert lga.round_t == lgb.round_t
+        assert lga.upload_bytes == lgb.upload_bytes, lga.round_t
+        assert lga.download_bytes == lgb.download_bytes, lga.round_t
+        assert lga.global_loss == lgb.global_loss, lga.round_t
+
+    # adaptive-k schedule: identical loss anchors and last keep-rates —
+    # the pre-fix behaviour restarted every compressor at k_max
+    assert _k_state(full) == _k_state(resumed)
+
+
+def test_adaptive_k_state_round_trips(tmp_path):
+    """save -> load restores loss0/loss_prev/last_k for uplink AND downlink
+    compressors and the residual shards, bitwise."""
+    tr = FederatedTrainer(CFG, _fed(), TC)
+    tr.run(rounds=N)
+    p = str(tmp_path / "k.ckpt")
+    ckpt.save_fed_state(p, tr)
+
+    tr2 = FederatedTrainer(CFG, _fed(), TC)
+    ckpt.load_fed_state(p, tr2)
+    assert _k_state(tr) == _k_state(tr2)
+    a_act, b_act = tr.clients.up_comps.active(), tr2.clients.up_comps.active()
+    assert sorted(a_act) == sorted(b_act)
+    for cid, c in a_act.items():
+        sa, sb = c.sparsifier._shards, b_act[cid].sparsifier._shards
+        assert sorted(sa) == sorted(sb)
+        for key in sa:
+            np.testing.assert_array_equal(sa[key], sb[key])
+    np.testing.assert_array_equal(
+        tr.server.down_comp.sparsifier.residual,
+        tr2.server.down_comp.sparsifier.residual)
+
+
+def test_run_without_resume_still_starts_at_zero():
+    tr = FederatedTrainer(CFG, _fed(), TC)
+    tr.run(rounds=N)
+    assert [lg.round_t for lg in tr.logs] == list(range(N))
+
+
+# ---------------------------------------------------------------------------
+# prefix-sum broadcast billing == per-packet sum, O(1) for long-idle clients
+# ---------------------------------------------------------------------------
+
+def test_prefix_sum_billing_equals_per_packet_sum():
+    from repro.fed.endpoints import ServerEndpoint
+    from repro.fed.protocol import WireProtocol
+
+    spec = [("x/a", (64,), np.float32), ("x/b", (64,), np.float32)]
+    proto = WireProtocol(spec, eco=EcoLoRAConfig(n_segments=1))
+    srv = ServerEndpoint(FedITPolicy(), proto, n_clients=2)
+    rng = np.random.default_rng(0)
+    stats = []
+    for t in range(300):
+        srv.global_vec = (srv.global_vec + rng.standard_normal(
+            proto.size).astype(np.float32))
+        bc = srv.begin_round(t)
+        stats.append((bc.packet.param_count, bc.packet.wire_bytes))
+        srv.sync_client(0, t)              # client 1 idle for all 300 rounds
+    w0, p0 = srv.ledger.download_bytes, srv.ledger.download_params
+    dl = srv.sync_client(1, 299)
+    assert dl.n_missed == 300
+    # the O(1) prefix-sum bill equals the sum over every missed packet
+    assert dl.param_count == sum(s[0] for s in stats)
+    assert dl.wire_bytes == sum(s[1] for s in stats)
+    assert srv.ledger.download_params - p0 == dl.param_count
+    assert srv.ledger.download_bytes - w0 == dl.wire_bytes
+    # and a second sync owes nothing
+    w1 = srv.ledger.download_bytes
+    dl2 = srv.sync_client(1, 299)
+    assert dl2.n_missed == 0 and dl2.wire_bytes == 0
+    assert srv.ledger.download_bytes == w1

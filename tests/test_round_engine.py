@@ -116,39 +116,35 @@ def test_skipped_client_billed_for_missed_packets():
     assert dl.wire_bytes == sum(per_round_bytes)
 
 
-def test_broadcast_billing_history_pruned():
-    """Billing entries every client has paid for are dropped — state stays
-    O(1) vectors regardless of round count."""
-    srv = _toy_server(n_clients=2)
+def test_broadcast_billing_memory_bounded():
+    """Catch-up billing is cumulative prefix sums: no per-round history
+    accumulates, even when one client NEVER participates (the case that
+    defeated the old pruned-list scheme, whose floor stopped at the
+    laggard's cursor)."""
+    srv = _toy_server(n_clients=3)
     srv.global_vec = np.ones(srv.protocol.size, np.float32)
-    for t in range(50):
+    for t in range(200):
         srv.begin_round(t)
-        srv.sync_client(0, t)
-        srv.sync_client(1, t)              # everyone in sync every round
+        srv.sync_client(0, t)              # client 2 never syncs
+        srv.sync_client(1, t)
         srv.global_vec = srv.global_vec + 1.0
-    # only the newest (not-yet-pruned) entry may remain
-    assert len(srv._bcast_stats) <= 1
-    assert srv._bcast_base >= 49
-    # catch-up across a prune boundary still exact
-    srv.begin_round(50)
-    view = srv.sync_client(0, 50).view
+    assert not hasattr(srv, "_bcast_stats")      # the unbounded list is gone
+    assert srv._cum_stats.shape == (3,)          # O(1) per-population totals
+    assert srv._bcast_count == 200
+    # catch-up after 200 idle rounds is still exact, in O(1)
+    srv.begin_round(200)
+    view = srv.sync_client(2, 200).view
     np.testing.assert_allclose(view, srv.last_broadcast)
 
 
-class _ScriptedRng:
-    """Wraps a Generator; overrides only the round-sampling choice calls."""
+class _ScriptedSampler:
+    """Replays a fixed per-round participant schedule."""
 
-    def __init__(self, real, schedule, n_clients, k):
-        self._real = real
-        self._schedule = list(schedule)
-        self._n = n_clients
-        self._k = k
+    def __init__(self, schedule):
+        self._schedule = [np.asarray(s, np.int64) for s in schedule]
 
-    def choice(self, a, size=None, replace=True):
-        if isinstance(a, (int, np.integer)) and a == self._n \
-                and size == self._k and self._schedule:
-            return np.asarray(self._schedule.pop(0))
-        return self._real.choice(a, size=size, replace=replace)
+    def sample(self, round_t):
+        return self._schedule[round_t]
 
 
 @pytest.mark.parametrize("engine,backend", [("serial", "numpy"),
@@ -163,8 +159,7 @@ def test_trainer_returning_client_in_sync(engine, backend):
                     pretrain_steps=2, engine=engine, backend=backend)
     tr = FederatedTrainer(CFG, fed, TC)
     schedule = [[0, 1], [1, 2], [2, 3], [3, 4], [4, 5], [0, 2]]
-    tr.rng = _ScriptedRng(tr.rng, schedule, fed.n_clients,
-                          fed.clients_per_round)
+    tr.sampler = _ScriptedSampler(schedule)
     tr.run()
     np.testing.assert_allclose(tr.client_views[0], tr.server.last_broadcast,
                                atol=1e-5)

@@ -23,6 +23,27 @@ def test_availability_sampler():
     s = make_sampler("availability", 20, 8, availability=avail)
     got = s.sample(0)
     assert (got < 4).all()
+    # short round: fewer online clients than the per-round quota
+    assert got.size <= 4
+
+
+def test_make_sampler_unknown_kind_raises_value_error():
+    import pytest
+    with pytest.raises(ValueError, match="uniform"):
+        make_sampler("round_robin", 10, 2)
+
+
+def test_sampler_draws_derive_from_seed_and_round():
+    """Per-round draws are (seed, round_t) functions with no stream state:
+    two sampler instances agree round-by-round regardless of call history —
+    the property that lets a resumed run replay the participant schedule."""
+    a = make_sampler("uniform", 100, 10, seed=3)
+    b = make_sampler("uniform", 100, 10, seed=3)
+    for t in (5, 1, 7):                   # out of order, interleaved
+        np.testing.assert_array_equal(a.sample(t), b.sample(t))
+    np.testing.assert_array_equal(a.sample(2), a.sample(2))  # replayable
+    assert not np.array_equal(make_sampler("uniform", 100, 10, seed=4).sample(5),
+                              a.sample(5))
 
 
 def test_quantize_roundtrip_error_decreases_with_bits():
