@@ -11,7 +11,7 @@ import time
 
 ALL = ["fig2_gini", "table1_comm_params", "table2_dpo", "fig3_network_time",
        "table3_ablation", "table4_compression", "table5_topk", "table6_noniid",
-       "table7_quantization", "kernels_micro", "round_engine"]
+       "table7_quantization", "kernels_micro", "round_engine", "codec_sweep"]
 
 
 def main() -> None:

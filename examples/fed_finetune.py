@@ -5,6 +5,9 @@ decoder with EcoLoRA for a few hundred aggregate optimizer steps.
     # simulate the paper's 1/5 Mbps links, 20% dropout, async 3-of-6 rounds:
     PYTHONPATH=src python examples/fed_finetune.py \
         --scenario 1/5 --dropout 0.2 --async-m 3
+    # A/B a non-default codec stack (per-direction "stage+stage" specs):
+    PYTHONPATH=src python examples/fed_finetune.py \
+        --uplink-codec adaptive+fp16+raw+zlib --downlink-codec adaptive+int8+golomb
 
 Prints per-round eval + the final communication ledger (plus simulated
 wall-clock when a network scenario is selected), and writes a
@@ -20,6 +23,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.checkpoint import ckpt
 from repro.configs.base import ModelConfig
+from repro.core.codec import CodecConfig, CodecSpec
 from repro.data.synthetic import TaskConfig
 from repro.fed.strategies import EcoLoRAConfig
 from repro.fed.trainer import FedConfig, FederatedTrainer
@@ -59,12 +63,27 @@ def main():
                     help="load --out and continue at the checkpointed round "
                          "(schedule, ledger and adaptive-k pick up exactly "
                          "where the interrupted run left off)")
+    ap.add_argument("--uplink-codec", default=None, metavar="SPEC",
+                    help="uplink codec stack, e.g. adaptive+fp16+golomb, "
+                         "fixed0.3+int8+raw+zlib (default: the paper stack)")
+    ap.add_argument("--downlink-codec", default=None, metavar="SPEC",
+                    help="downlink codec stack (same grammar)")
     args = ap.parse_args()
 
+    codec = None
+    if args.uplink_codec or args.downlink_codec:
+        codec = CodecConfig(
+            uplink=CodecSpec.parse(args.uplink_codec or
+                                   "adaptive+fp16+golomb"),
+            downlink=CodecSpec.parse(args.downlink_codec or
+                                     "adaptive+fp16+golomb"))
+        print(f"codec: uplink={codec.uplink.tag} "
+              f"downlink={codec.downlink.tag}")
     tc = TaskConfig(vocab_size=4096, seq_len=64, n_samples=2048, seed=0)
     fed = FedConfig(n_clients=24, clients_per_round=6, rounds=args.rounds,
                     local_steps=2, local_batch=4, lr=2e-3,
-                    eco=EcoLoRAConfig(n_segments=3), pretrain_steps=60)
+                    eco=EcoLoRAConfig(n_segments=3), pretrain_steps=60,
+                    codec=codec)
     # total optimizer steps = rounds x clients/round x local steps
     print(f"total federated optimizer steps: "
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import os
 import zlib
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import msgpack
 import numpy as np
@@ -118,50 +118,29 @@ def _unpack_rng_state(rng, d: Dict[str, Any]) -> None:
         "uinteger": int(d["uinteger"])}
 
 
-def _sparsifier_state(sp) -> Dict[str, Any]:
-    """Adaptive-k schedule state + residual shards for one compressor.
-    Persisting loss0/loss_prev/last_k is what keeps the Eq. 4 keep-rates
-    (and therefore exact wire bytes) identical across a resume — without it
-    every compressor restarts at k_max."""
-    st = {"loss0": sp.loss0, "loss_prev": sp.loss_prev,
-          "last_k": {k: float(v) for k, v in sp.last_k.items()},
-          "shards": {f"{s}:{e}": arr for (s, e), arr in sp._shards.items()}}
-    if sp._legacy_residual is not None:
-        st["legacy"] = sp._legacy_residual
-    return st
-
-
-def _restore_sparsifier(sp, st: Dict[str, Any]) -> None:
-    sp.loss0 = None if st["loss0"] is None else float(st["loss0"])
-    sp.loss_prev = None if st["loss_prev"] is None else float(st["loss_prev"])
-    sp.last_k = {k: float(v) for k, v in st["last_k"].items()}
-    sp._shards = {tuple(int(x) for x in key.split(":")):
-                  np.asarray(arr, np.float32)
-                  for key, arr in st["shards"].items()}
-    sp._legacy_residual = (np.asarray(st["legacy"], np.float32)
-                           if st.get("legacy") is not None else None)
-
-
 def save_fed_state(path: str, trainer) -> int:
-    """Round-resumable federated state (format 2, DESIGN.md §7).
+    """Round-resumable federated state (format 3, DESIGN.md §7-8).
 
     Server-side state comes from the ServerEndpoint (global vec, prefix-sum
-    billing cursors, ledger, downlink schedule state), client-side state
-    from the ClientRuntime (sparse view store, staleness clocks, per-segment
-    uplink residual shards, adaptive-k schedules), plus the driver's resume
-    round, batch-RNG stream and last eval signal — everything needed for a
-    resumed run to be BITWISE identical to an uninterrupted one (the
-    resume-parity suite pins this). The on-disk layout is sparse: O(active)
-    vectors, not O(n_clients). ``load_fed_state`` still reads the legacy
-    dense (format 1) layout. Transport state (simulated clock, event log,
-    buffered_async in-flight stragglers) is NOT persisted: a checkpoint
-    boundary acts like a round deadline — in-flight uploads are dropped,
-    the same rule as at the end of a run (DESIGN.md §6).
+    billing cursors, ledger, downlink codec state), client-side state from
+    the ClientRuntime (sparse view store, staleness clocks, per-client
+    uplink codec pipelines), plus the driver's resume round, batch-RNG
+    stream and last eval signal — everything needed for a resumed run to be
+    BITWISE identical to an uninterrupted one (the resume-parity suite pins
+    this). Compression state crosses the boundary through the uniform
+    ``CodecPipeline.state()/restore()`` API — the checkpoint layer knows
+    NOTHING about stage internals, so new codec stages checkpoint for free.
+    The on-disk layout is sparse: O(active) vectors, not O(n_clients).
+    ``load_fed_state`` still reads the legacy dense (format 1) and
+    per-sparsifier (format 2) layouts. Transport state (simulated clock,
+    event log, buffered_async in-flight stragglers) is NOT persisted: a
+    checkpoint boundary acts like a round deadline — in-flight uploads are
+    dropped, the same rule as at the end of a run (DESIGN.md §6).
     """
     srv, cl = trainer.server, trainer.clients
     pool = cl.up_comps
     state = {
-        "format": 2,
+        "format": 3,
         "round": int(trainer.start_round),
         "global_vec": srv.global_vec,
         "last_broadcast": srv.last_broadcast,
@@ -173,9 +152,9 @@ def save_fed_state(path: str, trainer) -> int:
         "bcast_count": int(srv._bcast_count),
         "client_vecs": {str(i): v for i, v in sorted(cl.local_vecs.items())},
         "uplink": {"pool": pool.state(),
-                   "comps": {str(cid): _sparsifier_state(c.sparsifier)
+                   "comps": {str(cid): c.pipeline.state()
                              for cid, c in sorted(pool.active().items())}},
-        "downlink": _sparsifier_state(srv.down_comp.sparsifier),
+        "downlink": srv.down_comp.pipeline.state(),
         "ledger": {
             "upload_params": srv.ledger.upload_params,
             "download_params": srv.ledger.download_params,
@@ -188,8 +167,20 @@ def save_fed_state(path: str, trainer) -> int:
     }
     vecs = getattr(trainer.policy, "server_client_vecs", None)
     if vecs is not None:
+        # INSERTION order preserved: it doubles as the policy's LRU order
+        # (merge-on-evict cap), so a resumed capped run evicts the same
+        # clients an uninterrupted one would
         state["policy_client_vecs"] = {str(cid): v
-                                       for cid, v in sorted(vecs.items())}
+                                       for cid, v in vecs.items()}
+        samples = getattr(trainer.policy, "_last_samples", None)
+        if samples:
+            state["policy_last_samples"] = {str(cid): int(n)
+                                            for cid, n in samples.items()}
+        if getattr(trainer.policy, "evicted_vec", None) is not None:
+            state["policy_evicted"] = {
+                "vec": trainer.policy.evicted_vec,
+                "samples": int(trainer.policy.evicted_samples),
+                "count": int(trainer.policy.evicted_count)}
     return save(path, state)
 
 
@@ -208,24 +199,45 @@ def load_fed_state(path: str, trainer) -> int:
     for k, v in state["client_vecs"].items():
         cl.local_vecs[int(k)] = np.asarray(v, np.float32)
 
-    if int(state.get("format", 1)) >= 2:
+    fmt = int(state.get("format", 1))
+    if fmt >= 2:
         cl.view_store.load_state(state["view_store"])
         srv._client_cum = np.asarray(state["client_cum"], np.int64).copy()
         srv._cum_stats = np.asarray(state["cum_stats"], np.int64).copy()
         srv._bcast_count = int(state["bcast_count"])
         up = state["uplink"]
         cl.up_comps.load_state(up["pool"])
-        for k, st in up["comps"].items():
-            _restore_sparsifier(cl.up_comps[int(k)].sparsifier, st)
-        _restore_sparsifier(srv.down_comp.sparsifier, state["downlink"])
+        if fmt >= 3:
+            # format 3: whole codec pipelines through the uniform
+            # state()/restore() API — stage internals never surface here
+            for k, st in up["comps"].items():
+                cl.up_comps[int(k)].pipeline.restore(st)
+            srv.down_comp.pipeline.restore(state["downlink"])
+        else:
+            # format 2 persisted bare sparsifier dicts — exactly the
+            # TopKSparsify stage's state shape, so its restore hook reads
+            # them (one parser for both formats)
+            for k, st in up["comps"].items():
+                cl.up_comps[int(k)].pipeline.sparsify.restore(st)
+            srv.down_comp.pipeline.sparsify.restore(state["downlink"])
         if state.get("rng_state") is not None:
             _unpack_rng_state(trainer.rng, state["rng_state"])
         le = state.get("last_eval")
         trainer._last_eval = None if le is None else tuple(le)
         pol = state.get("policy_client_vecs")
         if pol is not None and hasattr(trainer.policy, "server_client_vecs"):
+            # dict order round-trips through msgpack: LRU order restored
             trainer.policy.server_client_vecs = {
                 int(cid): np.asarray(v, np.float32) for cid, v in pol.items()}
+        samples = state.get("policy_last_samples")
+        if samples is not None and hasattr(trainer.policy, "_last_samples"):
+            trainer.policy._last_samples = {int(cid): int(n)
+                                            for cid, n in samples.items()}
+        ev = state.get("policy_evicted")
+        if ev is not None and hasattr(trainer.policy, "evicted_vec"):
+            trainer.policy.evicted_vec = np.asarray(ev["vec"], np.float32)
+            trainer.policy.evicted_samples = int(ev["samples"])
+            trainer.policy.evicted_count = int(ev["count"])
     else:
         # ---- legacy dense (format 1) layout ----
         cl.views = np.asarray(state["client_views"], np.float32)

@@ -4,10 +4,15 @@
   staleness    - exponential-decay global/local mixing (Eq. 3)
   sparsify     - adaptive top-k with residual feedback (§3.4, Eqs. 4-6)
   golomb       - lossless gap/Golomb position coding (§3.5)
-  compression  - the composed wire pipeline + traffic ledger
+  codec        - the composable codec stack (stages, pipelines, Packet)
+  compression  - thin per-endpoint pipeline holders + traffic ledger
   convergence  - §3.7 constants (mu, Delta) and the T^{-1/2} bound
 """
-from repro.core.compression import CommLedger, Compressor, Packet
+from repro.core.codec import (Codec, CodecConfig, CodecPipeline, CodecSpec,
+                              GolombPositions, Packet, Quantize,
+                              RawPositions, TopKSparsify, ZlibEntropy,
+                              build_pipeline, decode_packet)
+from repro.core.compression import CommLedger, Compressor
 from repro.core.convergence import ConvergenceConstants, contraction_delta_of_topk
 from repro.core.golomb import (decode_sparse, encode_sparse, expected_bits_per_position,
                                golomb_parameter)

@@ -1,0 +1,632 @@
+"""Composable codec stack: ONE pluggable compression pipeline for both
+wire directions (uplink segment updates AND the downlink broadcast).
+
+EcoLoRA §3.4-3.5 describe a fixed stack — adaptive top-k sparsification,
+fp16 value transmission, Golomb position coding — but the design space is
+wider (FLASC varies sparsity per direction; CELLM layers quantization and
+low-rank choices per link). This module expresses the stack as CONFIG, not
+code forks:
+
+  * a ``Codec`` stage protocol: ``encode``/``decode`` over a ``Carrier``,
+    exact per-section ``wire_bits`` accounting, and a uniform
+    ``state()``/``restore()`` pair so checkpointing never needs to know a
+    stage's internals;
+  * concrete stages — ``TopKSparsify`` (fixed or adaptive-k Eq. 4,
+    matrix-adaptive via ``ab_mask``, numpy or fused-Pallas backend),
+    ``Quantize`` (fp16 or int8+per-chunk scales), position coders
+    (``GolombPositions``, ``RawPositions``) and an optional ``ZlibEntropy``
+    tail stage;
+  * ``CodecPipeline``: an ordered stage stack built declaratively from a
+    ``CodecSpec`` (``build_pipeline``), producing codec-tagged ``Packet``s;
+  * ``decode_packet``: STATELESS decode driven entirely by the packet's
+    recorded stage stack — a receiver needs no pipeline instance, which is
+    what makes ``Packet`` a self-describing wire contract.
+
+The default spec (adaptive top-k + fp16 + Golomb) is pinned byte-identical
+to the pre-codec-stack ``Compressor``: same section sizes, same 64-bit
+header, same Golomb parameter choice — tests/test_codec.py holds the ledger
+bytes to the pre-refactor values.
+"""
+from __future__ import annotations
+
+import warnings
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.golomb import (decode_gaps, encode_gaps, golomb_parameter)
+from repro.core.quantize import QuantConfig, dequantize, quantize
+from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
+                                 keep_count)
+
+HEADER_BITS = 64      # fixed per-packet framing (round, slice, codec tag id)
+
+
+# ---------------------------------------------------------------------------
+# wire data model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Section:
+    """One named byte-stream inside a packet with its exact wire cost."""
+    data: np.ndarray
+    wire_bits: int
+
+
+@dataclass
+class Packet:
+    """One direction's wire message for a round — the codec-tagged wire
+    contract (re-exported by ``repro.fed.protocol``).
+
+    ``codec`` names the pipeline that produced the packet; ``stack`` is the
+    ordered list of stage names actually applied, which is all
+    ``decode_packet`` needs — decoding is stateless, so any endpoint can
+    decode any packet without holding the sender's pipeline.
+    ``local`` carries same-process shortcuts (e.g. the encoder's nonzero
+    indices) that are NOT on the wire and never billed.
+    """
+    codec: str
+    stack: List[str]
+    sections: Dict[str, Section]
+    count: int                    # transmitted parameter count
+    dense_size: int               # dense length of the encoded slice
+    slice_: Tuple[int, int]       # [start, end) within the protocol vector
+    k_used: Dict[str, float]
+    round_t: int
+    meta: Dict[str, Any] = field(default_factory=dict)
+    local: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def wire_bits(self) -> int:
+        return int(sum(s.wire_bits for s in self.sections.values())
+                   + HEADER_BITS)
+
+    @property
+    def wire_bytes(self) -> int:
+        return (self.wire_bits + 7) // 8
+
+    @property
+    def dense_bytes(self) -> int:
+        """What the same payload would cost uncompressed (fp16 dense)."""
+        return 2 * (self.slice_[1] - self.slice_[0])
+
+    @property
+    def param_count(self) -> int:
+        """Transmitted parameter count (the paper's Tables 1/2 unit)."""
+        return self.count
+
+
+@dataclass
+class Carrier:
+    """The in-flight representation threaded through a pipeline's stages.
+
+    Encode direction: ``dense`` starts as the full dense-layout slice; a
+    sparsify stage moves it into (``idx``, ``values``); value/position
+    stages serialize those into ``sections``. Decode runs the same stages in
+    reverse and ends with ``dense`` reconstructed.
+    """
+    dense_size: int
+    slice_: Tuple[int, int]
+    round_t: int
+    dense: Optional[np.ndarray] = None
+    idx: Optional[np.ndarray] = None        # None = dense transmission
+    values: Optional[np.ndarray] = None     # float32 payload values
+    k_eff: float = 1.0                      # realised keep-rate (mask mean)
+    k_used: Dict[str, float] = field(
+        default_factory=lambda: {"a": 1.0, "b": 1.0})
+    sections: Dict[str, Section] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+    local: Dict[str, Any] = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# stage protocol
+# ---------------------------------------------------------------------------
+
+class Codec:
+    """One stage of a pipeline.
+
+    ``encode`` is an instance method (it may consult/update stage state —
+    residuals, loss schedules); ``decode`` is a CLASSMETHOD operating only
+    on the carrier + packet content, so the receive path needs no stage
+    instances. ``state()``/``restore()`` are the uniform checkpoint hooks:
+    a stage with no state returns None and is skipped on disk.
+    """
+
+    name = "codec"
+
+    def encode(self, car: Carrier) -> None:
+        raise NotImplementedError
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        raise NotImplementedError
+
+    def observe_loss(self, loss: float) -> None:
+        pass
+
+    def state(self) -> Optional[Dict[str, Any]]:
+        return None
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        pass
+
+
+class TopKSparsify(Codec):
+    """Adaptive/fixed top-k sparsification with residual feedback
+    (Eqs. 4-6); the only stateful stage (residual shards + loss schedule).
+
+    ``mode``: "adaptive" follows the Eq. 4 global-loss schedule with
+    per-matrix (A/B) k_min/gamma via ``ab_mask``; "fixed" keeps a constant
+    fraction ``k``; a disabled ``SparsifyConfig`` makes the stage a dense
+    pass-through (the stage still exists so its state slots — e.g. a
+    checkpointed loss history — stay uniform across configs).
+
+    ``backend="pallas"`` routes the whole slice through the fused
+    sparsify+residual kernel (``repro.kernels.ops.sparsify_topk_batch`` with
+    a single-row batch) — the same selection rule as the numpy reference, so
+    wire bytes are identical; this is what serves the downlink broadcast
+    when the trainer runs the Pallas backend.
+    """
+
+    name = "topk"
+
+    def __init__(self, cfg: SparsifyConfig, ab_mask: np.ndarray,
+                 mode: str = "adaptive", k: float = 0.1,
+                 backend: str = "numpy"):
+        self.cfg = cfg
+        self.mode = mode
+        self.backend = backend
+        fixed = float(k) if mode == "fixed" else None
+        self.sparsifier = AdaptiveSparsifier(cfg, ab_mask, fixed_k=fixed)
+
+    @property
+    def enabled(self) -> bool:
+        return self.cfg.enabled
+
+    def observe_loss(self, loss: float) -> None:
+        self.sparsifier.observe_loss(loss)
+
+    def encode(self, car: Carrier) -> None:
+        if not self.cfg.enabled:
+            return                       # dense pass-through
+        if self.backend == "pallas":
+            sparse, mask, ks = self._compress_pallas(car)
+        else:
+            sparse, mask, ks = self.sparsifier.compress(car.dense, car.slice_)
+        self.apply_sparsified(car, sparse, mask, ks)
+
+    def _compress_pallas(self, car: Carrier):
+        """Single-row fused kernel pass over the full slice (the downlink
+        broadcast path; the uplink batches K rows via compress_uplinks)."""
+        from repro.kernels import ops   # deferred: jax only on this path
+        sp = self.sparsifier
+        start, end = car.slice_
+        n = end - start
+        res = sp.residual_shard(start, end)
+        seg_ab = sp.ab_mask[start:end]
+        ks = sp.current_k()
+        sp.last_k = ks
+        na = int(seg_ab.sum())
+        nb = n - na
+        keep_a = keep_count(na, ks["a"]) if na else 0
+        keep_b = keep_count(nb, ks["b"]) if nb else 0
+        sparse, new_res, mask = ops.sparsify_grouped(
+            np.asarray(car.dense, np.float32), res, seg_ab, keep_a, keep_b)
+        res[:] = np.asarray(new_res)
+        return np.asarray(sparse), np.asarray(mask), ks
+
+    @staticmethod
+    def apply_sparsified(car: Carrier, sparse: np.ndarray, mask: np.ndarray,
+                         ks: Dict[str, float]) -> None:
+        """Fold an already-sparsified dense-layout slice into the carrier
+        (shared by encode and the batched-kernel uplink path)."""
+        idx = np.flatnonzero(sparse)
+        car.idx = idx
+        car.values = np.asarray(sparse, np.float32)[idx]
+        car.k_eff = float(mask.mean()) if mask.size else 1.0
+        car.k_used = dict(ks)
+        car.dense = None
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        if car.idx is None:
+            car.dense = np.asarray(car.values, np.float32)
+            return
+        out = np.zeros(car.dense_size, np.float32)
+        out[car.idx] = car.values
+        car.dense = out
+
+    # -- uniform checkpoint hooks ------------------------------------------
+    def state(self) -> Dict[str, Any]:
+        sp = self.sparsifier
+        st = {"loss0": sp.loss0, "loss_prev": sp.loss_prev,
+              "last_k": {k: float(v) for k, v in sp.last_k.items()},
+              "shards": {f"{s}:{e}": arr
+                         for (s, e), arr in sp._shards.items()}}
+        if sp._legacy_residual is not None:
+            st["legacy"] = sp._legacy_residual
+        return st
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        sp = self.sparsifier
+        sp.loss0 = None if st["loss0"] is None else float(st["loss0"])
+        sp.loss_prev = (None if st["loss_prev"] is None
+                        else float(st["loss_prev"]))
+        sp.last_k = {k: float(v) for k, v in st["last_k"].items()}
+        sp._shards = {tuple(int(x) for x in key.split(":")):
+                      np.asarray(arr, np.float32)
+                      for key, arr in st["shards"].items()}
+        sp._legacy_residual = (np.asarray(st["legacy"], np.float32)
+                               if st.get("legacy") is not None else None)
+
+
+class Quantize(Codec):
+    """Value quantization: fp16 (the paper's choice, lossless on the ledger
+    contract — 16 bits/value) or int8 (8 bits/value + one fp32 scale per
+    ``chunk`` values, deterministic symmetric rounding so the wire bytes are
+    reproducible)."""
+
+    name = "quantize"
+
+    def __init__(self, mode: str = "fp16", chunk: int = 2048):
+        self.mode = mode
+        self.chunk = int(chunk)
+
+    def encode(self, car: Carrier) -> None:
+        values = car.values if car.values is not None else \
+            np.asarray(car.dense, np.float32)
+        if car.values is None:
+            car.values = values          # dense transmission: all entries
+        if self.mode == "fp16":
+            car.sections["values"] = Section(values.astype(np.float16),
+                                             16 * values.size)
+            return
+        # int8: the QSGD-style quantizer (core/quantize.py) in deterministic
+        # mode, so wire bytes are reproducible across encode calls
+        codes, scales = quantize(values, self._qcfg())
+        car.sections["values"] = Section(codes.astype(np.int8),
+                                         8 * values.size)
+        car.sections["scales"] = Section(scales, 32 * scales.size)
+        car.meta["quant_chunk"] = self.chunk
+
+    def _qcfg(self) -> QuantConfig:
+        return QuantConfig(bits=8, stochastic=False, per_chunk=self.chunk)
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        vals = car.sections["values"].data
+        if "scales" not in car.sections:
+            car.values = np.asarray(vals, np.float16).astype(np.float32)
+            return
+        chunk = int(pkt.meta["quant_chunk"])
+        cfg = QuantConfig(bits=8, stochastic=False, per_chunk=chunk)
+        car.values = dequantize(np.asarray(vals, np.int8),
+                                np.asarray(car.sections["scales"].data,
+                                           np.float32), cfg).astype(np.float32)
+
+
+class GolombPositions(Codec):
+    """Lossless position coding (paper §3.5): gap deltas + Golomb with
+    m* = ceil(-1/log2(1-k)) — the optimal prefix code for geometric gaps.
+    Skipped entirely for dense transmissions (no positions on the wire)."""
+
+    name = "golomb"
+
+    def encode(self, car: Carrier) -> None:
+        if car.idx is None:
+            return
+        gaps = np.diff(car.idx, prepend=-1) - 1
+        m = golomb_parameter(max(car.k_eff,
+                                 car.idx.size / max(car.dense_size, 1)
+                                 or 1e-6))
+        packed = encode_gaps(gaps, m)
+        car.sections["positions"] = Section(packed, 8 * packed.size)
+        car.meta["m"] = int(m)
+        car.local["idx_cache"] = car.idx
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        if "positions" not in car.sections:
+            car.idx = None
+            return
+        idx = pkt.local.get("idx_cache")
+        if idx is None:                  # true wire path: bit-walk decode
+            gaps = decode_gaps(car.sections["positions"].data,
+                               int(pkt.meta["m"]), pkt.count)
+            idx = np.cumsum(gaps + 1) - 1
+        car.idx = idx
+
+
+class RawPositions(Codec):
+    """Fixed-width positions — the paper's "w/o Encoding" ablation baseline
+    (16 bits/position) and the honest fallback for codecs that skip entropy
+    coding. ``bits=None`` sizes the word to the slice (16 when the dense
+    size fits uint16, else 32); ``bits=16`` pins the legacy ablation's
+    billing regardless of slice size."""
+
+    name = "rawpos"
+
+    def __init__(self, bits: Optional[int] = None):
+        self.bits = bits
+
+    def encode(self, car: Carrier) -> None:
+        if car.idx is None:
+            return
+        width = self.bits or (16 if car.dense_size <= 1 << 16 else 32)
+        dtype = np.uint16 if car.dense_size <= 1 << 16 else np.uint32
+        car.sections["positions"] = Section(car.idx.astype(dtype),
+                                            width * car.idx.size)
+        car.local["idx_cache"] = car.idx
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        if "positions" not in car.sections:
+            car.idx = None
+            return
+        car.idx = np.asarray(car.sections["positions"].data).astype(np.int64)
+
+
+class ZlibEntropy(Codec):
+    """Optional lossless tail stage: DEFLATE over the concatenated section
+    bytes. Wins when the upstream coder leaves structure on the table (raw
+    positions, int8 codes); usually loses a few bytes against an already
+    near-entropy Golomb stream."""
+
+    name = "zlib"
+
+    def __init__(self, level: int = 6):
+        self.level = int(level)
+
+    def encode(self, car: Carrier) -> None:
+        if not car.sections:
+            return
+        layout = []
+        blobs = []
+        for name, sec in car.sections.items():
+            raw = np.ascontiguousarray(sec.data)
+            layout.append([name, raw.dtype.str, list(raw.shape),
+                           int(sec.wire_bits)])
+            blobs.append(raw.tobytes())
+        comp = zlib.compress(b"".join(blobs), self.level)
+        car.meta["zlib_layout"] = layout
+        car.sections = {"zlib": Section(
+            np.frombuffer(comp, np.uint8), 8 * len(comp))}
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        if "zlib" not in car.sections:
+            return
+        raw = zlib.decompress(
+            np.asarray(car.sections["zlib"].data, np.uint8).tobytes())
+        sections = {}
+        off = 0
+        for name, dtype, shape, wire_bits in pkt.meta["zlib_layout"]:
+            dt = np.dtype(dtype)
+            n = int(np.prod(shape)) if shape else 1
+            arr = np.frombuffer(raw[off:off + n * dt.itemsize], dt) \
+                .reshape(shape).copy()
+            sections[name] = Section(arr, int(wire_bits))
+            off += n * dt.itemsize
+        # splice the inflated sections into the CARRIER (never the packet:
+        # decoding must not change what the packet bills) so upstream
+        # decoders see them
+        car.sections = dict(car.sections, **sections)
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+STAGE_DECODERS = {cls.name: cls for cls in
+                  (TopKSparsify, Quantize, GolombPositions, RawPositions,
+                   ZlibEntropy)}
+
+
+class CodecPipeline:
+    """An ordered codec stack for one endpoint-direction.
+
+    Encode runs the stages in order over a ``Carrier`` and seals the result
+    into a codec-tagged ``Packet``; decode is the module-level
+    ``decode_packet`` (stateless, packet-driven). The pipeline also exposes
+    the uniform ``state()/restore()`` aggregate over its stages — the whole
+    checkpoint surface for compression state.
+    """
+
+    def __init__(self, stages: List[Codec], tag: str):
+        self.stages = list(stages)
+        self.tag = tag
+
+    # -- stage access -------------------------------------------------------
+    @property
+    def sparsify(self) -> Optional[TopKSparsify]:
+        for st in self.stages:
+            if isinstance(st, TopKSparsify):
+                return st
+        return None
+
+    def observe_loss(self, loss: float) -> None:
+        for st in self.stages:
+            st.observe_loss(loss)
+
+    # -- encode -------------------------------------------------------------
+    def encode(self, values: np.ndarray, round_t: int,
+               slice_: Optional[Tuple[int, int]] = None) -> Packet:
+        start, end = slice_ if slice_ is not None else (0, values.size)
+        car = Carrier(dense_size=int(values.size), slice_=(start, end),
+                      round_t=round_t, dense=np.asarray(values, np.float32))
+        for st in self.stages:
+            st.encode(car)
+        return self._seal(car)
+
+    def encode_sparsified(self, sparse: np.ndarray, mask: np.ndarray,
+                          ks: Dict[str, float], round_t: int,
+                          slice_: Tuple[int, int]) -> Packet:
+        """Seal an already-sparsified dense-layout slice (the batched
+        (K, seg) kernel path did the selection; the remaining stages still
+        run here so every packet crosses the same pipeline)."""
+        car = Carrier(dense_size=int(sparse.size), slice_=tuple(slice_),
+                      round_t=round_t)
+        TopKSparsify.apply_sparsified(car, sparse, mask, ks)
+        for st in self.stages:
+            if isinstance(st, TopKSparsify):
+                continue
+            st.encode(car)
+        return self._seal(car)
+
+    def _seal(self, car: Carrier) -> Packet:
+        count = int(car.idx.size if car.idx is not None else
+                    (car.values.size if car.values is not None
+                     else car.dense_size))
+        return Packet(codec=self.tag,
+                      stack=[st.name for st in self.stages],
+                      sections=car.sections, count=count,
+                      dense_size=car.dense_size, slice_=car.slice_,
+                      k_used=dict(car.k_used), round_t=car.round_t,
+                      meta=car.meta, local=car.local)
+
+    # -- uniform checkpoint hooks ------------------------------------------
+    def state(self) -> Dict[str, Any]:
+        stages = {}
+        for i, st in enumerate(self.stages):
+            s = st.state()
+            if s is not None:
+                stages[f"{i}:{st.name}"] = s
+        return {"tag": self.tag, "stages": stages}
+
+    def restore(self, st: Dict[str, Any]) -> None:
+        tag = st.get("tag")
+        if tag is not None and tag != self.tag:
+            warnings.warn(
+                f"restoring codec state written by pipeline {tag!r} into "
+                f"{self.tag!r}: only stages matching by position+name are "
+                "restored (the rest start fresh)", RuntimeWarning,
+                stacklevel=2)
+        for key, sub in st.get("stages", {}).items():
+            i, name = key.split(":", 1)
+            i = int(i)
+            if i < len(self.stages) and self.stages[i].name == name:
+                self.stages[i].restore(sub)
+
+
+def decode_packet(pkt: Packet) -> np.ndarray:
+    """Stateless decode of any codec-tagged packet: run the recorded stage
+    stack in reverse. The wire contract is the packet itself — sections,
+    meta, and the ``stack`` tag list fully determine the decode. The packet
+    is never mutated (decoding must not change its billed bytes): stages
+    work on the carrier's own section view."""
+    car = Carrier(dense_size=pkt.dense_size, slice_=pkt.slice_,
+                  round_t=pkt.round_t, sections=dict(pkt.sections))
+    for name in reversed(pkt.stack):
+        STAGE_DECODERS[name].decode(car, pkt)
+    return car.dense
+
+
+# ---------------------------------------------------------------------------
+# declarative configuration
+# ---------------------------------------------------------------------------
+
+_SPARSIFY_MODES = ("adaptive", "fixed", "none")
+_QUANT_MODES = ("fp16", "int8")
+_POSITION_CODERS = ("golomb", "raw")
+_ENTROPY_STAGES = ("none", "zlib")
+
+
+@dataclass(frozen=True)
+class CodecSpec:
+    """Declarative description of one direction's pipeline."""
+    sparsify: str = "adaptive"     # adaptive | fixed | none
+    k: float = 0.1                 # keep-rate when sparsify == "fixed"
+    quantize: str = "fp16"         # fp16 | int8
+    quant_chunk: int = 2048        # int8 scale granularity
+    positions: str = "golomb"      # golomb | raw
+    entropy: str = "none"          # none | zlib
+    zlib_level: int = 6
+
+    def validate(self) -> None:
+        if self.sparsify not in _SPARSIFY_MODES:
+            raise ValueError(f"unknown sparsify mode {self.sparsify!r} "
+                             f"(expected one of {_SPARSIFY_MODES})")
+        if self.quantize not in _QUANT_MODES:
+            raise ValueError(f"unknown quantize mode {self.quantize!r} "
+                             f"(expected one of {_QUANT_MODES})")
+        if self.positions not in _POSITION_CODERS:
+            raise ValueError(f"unknown position coder {self.positions!r} "
+                             f"(expected one of {_POSITION_CODERS})")
+        if self.entropy not in _ENTROPY_STAGES:
+            raise ValueError(f"unknown entropy stage {self.entropy!r} "
+                             f"(expected one of {_ENTROPY_STAGES})")
+        if not 0.0 < self.k <= 1.0:
+            raise ValueError(f"fixed keep-rate k must be in (0, 1], "
+                             f"got {self.k}")
+
+    @property
+    def tag(self) -> str:
+        parts = [f"topk[{self.sparsify}]" if self.sparsify != "none"
+                 else "dense", self.quantize, self.positions]
+        if self.entropy != "none":
+            parts.append(self.entropy)
+        return "+".join(parts)
+
+    @classmethod
+    def parse(cls, text: str) -> "CodecSpec":
+        """Parse a "+"-joined stage string, e.g. "adaptive+fp16+golomb",
+        "fixed0.3+int8+raw+zlib", "none+fp16+golomb" — the CLI/benchmark
+        shorthand for a spec."""
+        parts = text.strip().split("+")
+        if len(parts) not in (3, 4):
+            raise ValueError(
+                f"codec spec {text!r} must be sparsify+quantize+positions"
+                "[+zlib]")
+        sparsify, quant, pos = parts[:3]
+        kw: Dict[str, Any] = {}
+        if sparsify.startswith("fixed") and sparsify != "fixed":
+            kw["k"] = float(sparsify[len("fixed"):])
+            sparsify = "fixed"
+        spec = cls(sparsify=sparsify, quantize=quant, positions=pos,
+                   entropy=parts[3] if len(parts) == 4 else "none", **kw)
+        spec.validate()
+        return spec
+
+
+@dataclass(frozen=True)
+class CodecConfig:
+    """Independent per-direction pipeline specs (FLASC-style asymmetry:
+    the uplink and downlink need not share sparsity, value width, or
+    position coding)."""
+    uplink: CodecSpec = field(default_factory=CodecSpec)
+    downlink: CodecSpec = field(default_factory=CodecSpec)
+
+    def validate(self) -> None:
+        self.uplink.validate()
+        self.downlink.validate()
+
+
+def build_pipeline(spec: CodecSpec, sparsify_cfg: SparsifyConfig,
+                   ab_mask: np.ndarray, backend: str = "numpy",
+                   legacy_raw_bits: Optional[int] = None) -> CodecPipeline:
+    """Construct the pipeline a ``CodecSpec`` describes.
+
+    ``sparsify_cfg`` supplies the Eq. 4 schedule parameters for the
+    adaptive mode (and the enabled flag for "none" — the TopKSparsify stage
+    always exists so compression state stays uniform across configs).
+    ``legacy_raw_bits`` pins RawPositions at a fixed width (the pre-codec
+    ``encoding=False`` ablation billed 16 bits/position unconditionally).
+    """
+    spec.validate()
+    if spec.sparsify == "none":
+        sparsify_cfg = SparsifyConfig(enabled=False)
+    stages: List[Codec] = [
+        TopKSparsify(sparsify_cfg, ab_mask, mode=spec.sparsify, k=spec.k,
+                     backend=backend),
+        Quantize(mode=spec.quantize, chunk=spec.quant_chunk),
+    ]
+    if spec.positions == "golomb":
+        stages.append(GolombPositions())
+    else:
+        stages.append(RawPositions(bits=legacy_raw_bits))
+    if spec.entropy == "zlib":
+        stages.append(ZlibEntropy(level=spec.zlib_level))
+    return CodecPipeline(stages, spec.tag)

@@ -1,11 +1,14 @@
 """End-to-end EcoLoRA compression pipeline (segment -> sparsify -> encode).
 
-One ``Compressor`` per endpoint-direction (each client's uplink, the server's
-downlink) because the sparsification residual (Eq. 6) is endpoint state.
-
-The pipeline measures EXACT wire bytes (Golomb bitstream + fp16 values +
-fixed header) — these are the numbers behind the paper's Tables 1/2/4 and
-the netsim's transfer times.
+Since the codec-stack redesign the actual pipeline lives in
+``repro.core.codec`` (composable ``Codec`` stages sealed into codec-tagged
+``Packet``s). ``Compressor`` is now a THIN holder of one ``CodecPipeline``
+per endpoint-direction (each client's uplink, the server's downlink) —
+kept because the sparsification residual (Eq. 6) is endpoint state and a
+large body of callers/tests speak this API. Its default pipeline is pinned
+byte-identical to the pre-codec-stack wire format (fp16 values + Golomb
+positions + 64-bit header) — the numbers behind the paper's Tables 1/2/4
+and the netsim's transfer times.
 """
 from __future__ import annotations
 
@@ -14,86 +17,70 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.golomb import EncodedSparse, decode_sparse, encode_sparse
+from repro.core.codec import (CodecPipeline, CodecSpec, GolombPositions,
+                              Packet, Quantize, RawPositions, TopKSparsify,
+                              build_pipeline, decode_packet)
 from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
                                  ab_mask_from_spec, keep_count)
 
-
-@dataclass
-class Packet:
-    """One direction's wire message for a round."""
-    encoded: EncodedSparse
-    slice_: Tuple[int, int]       # [start, end) within the protocol vector
-    k_used: Dict[str, float]
-    round_t: int
-
-    @property
-    def wire_bytes(self) -> int:
-        return self.encoded.wire_bytes
-
-    @property
-    def dense_bytes(self) -> int:
-        """What the same payload would cost uncompressed (fp16 dense)."""
-        return 2 * (self.slice_[1] - self.slice_[0])
-
-    @property
-    def param_count(self) -> int:
-        """Transmitted parameter count (the paper's Tables 1/2 unit)."""
-        return self.encoded.count
+__all__ = ["Compressor", "CompressorPool", "CommLedger", "Packet",
+           "compress_uplinks"]
 
 
 class Compressor:
-    """Sparsify+encode with residual feedback for one endpoint direction.
+    """Thin pipeline holder for one endpoint direction.
 
     ``ab_mask`` is read-only shared knowledge of the vector layout; pass a
     precomputed one to share it across a client population instead of paying
-    O(vector) per compressor (see ``CompressorPool``).
+    O(vector) per compressor (see ``CompressorPool``). Pass ``pipeline`` to
+    wrap an explicit codec stack; the default (built from the legacy
+    ``cfg``/``encoding`` knobs) reproduces the pre-codec-stack wire bytes
+    exactly: adaptive top-k + fp16 + Golomb, with ``encoding=False`` mapping
+    to the 16-bit fixed-width position ablation.
     """
 
     def __init__(self, spec, cfg: SparsifyConfig, encoding: bool = True,
-                 ab_mask: Optional[np.ndarray] = None):
+                 ab_mask: Optional[np.ndarray] = None,
+                 pipeline: Optional[CodecPipeline] = None):
         self.spec = spec
         self.cfg = cfg
         self.encoding = encoding
-        if ab_mask is None:
-            ab_mask = ab_mask_from_spec(spec)
-        self.sparsifier = AdaptiveSparsifier(cfg, ab_mask)
+        if pipeline is None:
+            if ab_mask is None:
+                ab_mask = ab_mask_from_spec(spec)
+            stages = [TopKSparsify(cfg, ab_mask),
+                      Quantize(mode="fp16"),
+                      GolombPositions() if encoding
+                      else RawPositions(bits=16)]
+            tag = CodecSpec(sparsify="adaptive" if cfg.enabled else "none",
+                            positions="golomb" if encoding else "raw").tag
+            pipeline = CodecPipeline(stages, tag)
+        self.pipeline = pipeline
+
+    @property
+    def sparsifier(self) -> AdaptiveSparsifier:
+        """The sparsify stage's state (residual shards + Eq. 4 schedule) —
+        the pre-codec-stack attribute the checkpoint/test surface uses."""
+        return self.pipeline.sparsify.sparsifier
 
     def observe_loss(self, loss: float) -> None:
-        self.sparsifier.observe_loss(loss)
+        self.pipeline.observe_loss(loss)
 
     def compress(self, values: np.ndarray, round_t: int,
                  slice_: Optional[Tuple[int, int]] = None) -> Packet:
-        start, end = slice_ if slice_ is not None else (0, values.size)
-        if not self.cfg.enabled:
-            # dense fp16 transmission (baselines): no positions on the wire
-            enc = EncodedSparse(positions=np.zeros(0, np.uint8),
-                                values_fp16=values.astype(np.float16),
-                                m=1, count=int(values.size),
-                                dense_size=int(values.size))
-            return Packet(encoded=enc, slice_=(start, end),
-                          k_used={"a": 1.0, "b": 1.0}, round_t=round_t)
-        sparse, mask, ks = self.sparsifier.compress(values, (start, end))
-        return self.packetize(sparse, mask, ks, round_t, (start, end))
+        return self.pipeline.encode(values, round_t, slice_=slice_)
 
     def packetize(self, sparse: np.ndarray, mask: np.ndarray,
                   ks: Dict[str, float], round_t: int,
                   slice_: Tuple[int, int]) -> Packet:
         """Encode an already-sparsified dense-layout slice onto the wire
         (shared by the serial path and the batched kernel path)."""
-        k_eff = float(mask.mean()) if mask.size else 1.0
-        enc = encode_sparse(sparse, k_eff)
-        if not self.encoding:
-            # ablation "w/o Encoding": positions cost 16 fixed bits each
-            enc = EncodedSparse(positions=np.zeros(2 * enc.count, np.uint8),
-                                values_fp16=enc.values_fp16, m=enc.m,
-                                count=enc.count, dense_size=enc.dense_size,
-                                idx_cache=enc.idx_cache)
-        return Packet(encoded=enc, slice_=slice_, k_used=ks, round_t=round_t)
+        return self.pipeline.encode_sparsified(sparse, mask, ks, round_t,
+                                               slice_)
 
     @staticmethod
     def decompress(packet: Packet) -> np.ndarray:
-        return decode_sparse(packet.encoded)
+        return decode_packet(packet)
 
 
 def compress_uplinks(comps, values_rows, slices, round_t: int,
@@ -105,12 +92,16 @@ def compress_uplinks(comps, values_rows, slices, round_t: int,
     Compressor.compress calls). ``backend="pallas"`` stacks the slices into
     one padded (K, L) array and runs a single fused sparsify+residual kernel
     with per-client per-group exact keep counts — byte-identical packets,
-    one device dispatch instead of K numpy passes. Residual state is read
-    from and written back to each client's sparsifier either way.
+    one device dispatch instead of K numpy passes; the remaining pipeline
+    stages (quantize, position coding, entropy) still run per packet, so the
+    kernel path composes with any codec stack that starts with a
+    ``TopKSparsify`` stage. Residual state is read from and written back to
+    each client's sparsifier either way.
     """
     if not comps:
         return []
-    if backend != "pallas" or not comps[0].cfg.enabled:
+    sp_stage = comps[0].pipeline.sparsify
+    if backend != "pallas" or sp_stage is None or not sp_stage.enabled:
         return [c.compress(v, round_t, slice_=s)
                 for c, v, s in zip(comps, values_rows, slices)]
 

@@ -8,6 +8,11 @@ k=0.1 -> ~4.8 bits/position vs 16 fixed, a ~3.3x compression per position.
 Implementation is vectorised numpy bit-packing (encode) and an index-walk
 decode; both exact (round-trip tested property-based). ``expected_bits`` is
 the analytic rate used by the netsim when simulating very large tensors.
+
+The codec stack's ``GolombPositions`` stage (`core/codec.py`) encodes
+through ``encode_gaps``/``decode_gaps``/``golomb_parameter`` directly;
+``EncodedSparse``/``encode_sparse``/``decode_sparse`` remain the standalone
+single-tensor helpers (benchmarks, property tests).
 """
 from __future__ import annotations
 

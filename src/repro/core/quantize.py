@@ -1,16 +1,19 @@
-"""Quantization baseline (beyond-paper comparison).
+"""Uniform quantization: QSGD-style baseline AND the codec stack's int8
+value stage.
 
 The paper's related work (§2.3) contrasts sparsification against
 quantization (signSGD, ternary, natural compression) and argues
 sparsification compresses further with less degradation. We implement the
-standard uniform stochastic quantizer (QSGD-style) so the claim is testable
-in OUR harness — `benchmarks/table7_quantization.py` runs EcoLoRA vs 8/4/2
--bit quantized FedIT at matched protocols.
+standard uniform stochastic quantizer so the claim is testable in OUR
+harness — `benchmarks/table7_quantization.py` runs EcoLoRA vs 8/4/2-bit
+quantized FedIT at matched protocols — and the codec stack's ``Quantize``
+stage (`core/codec.py`) reuses the same math in DETERMINISTIC mode
+(``stochastic=False``, no rng) so int8 wire bytes are reproducible.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -22,9 +25,11 @@ class QuantConfig:
     per_chunk: int = 2048   # scale granularity
 
 
-def quantize(x: np.ndarray, cfg: QuantConfig, rng: np.random.Generator
+def quantize(x: np.ndarray, cfg: QuantConfig,
+             rng: Optional[np.random.Generator] = None
              ) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (codes int, scales float32 per chunk). Symmetric uniform."""
+    """Returns (codes int, scales float32 per chunk). Symmetric uniform.
+    ``rng`` is only needed for stochastic rounding."""
     n = x.size
     nchunks = -(-n // cfg.per_chunk)
     pad = nchunks * cfg.per_chunk - n
@@ -34,6 +39,8 @@ def quantize(x: np.ndarray, cfg: QuantConfig, rng: np.random.Generator
     scales = np.where(scales == 0, 1.0, scales)
     y = xp / scales[:, None]
     if cfg.stochastic:
+        if rng is None:
+            raise ValueError("stochastic quantization needs an rng")
         y = np.floor(y + rng.random(y.shape))
     else:
         y = np.rint(y)

@@ -108,6 +108,10 @@ class AdaptiveSparsifier:
 
     ``ab_mask`` marks which vector entries belong to LoRA 'a' leaves (True)
     vs 'b' leaves (False) so the two matrix groups use their own schedules.
+    ``fixed_k`` pins BOTH groups at one constant keep-rate (the codec
+    stack's ``sparsify="fixed"`` mode — FLASC-style static sparsity); the
+    loss history is still recorded so switching a checkpointed run back to
+    the adaptive schedule keeps its Eq. 4 signal.
 
     Residual state (Eq. 6) is stored as per-slice SHARDS allocated on first
     touch: a client only accumulates residual in the round-robin segments it
@@ -122,6 +126,7 @@ class AdaptiveSparsifier:
     loss0: Optional[float] = None
     loss_prev: Optional[float] = None
     last_k: Dict[str, float] = field(default_factory=dict)
+    fixed_k: Optional[float] = None
     _shards: Dict[Tuple[int, int], np.ndarray] = field(default_factory=dict)
     _legacy_residual: Optional[np.ndarray] = None
 
@@ -131,6 +136,8 @@ class AdaptiveSparsifier:
         self.loss_prev = float(loss)
 
     def current_k(self) -> Dict[str, float]:
+        if self.fixed_k is not None:
+            return {"a": self.fixed_k, "b": self.fixed_k}
         l0 = self.loss0 if self.loss0 is not None else 0.0
         lp = self.loss_prev if self.loss_prev is not None else l0
         return {"a": adaptive_k(self.cfg, l0, lp, "a"),

@@ -70,12 +70,13 @@ class ServerEndpoint:
         self.round_t = t
         eco = self.protocol.eco
         delta = self.global_vec - self.last_broadcast
-        if eco and eco.compress_download:
-            pkt = self.down_comp.compress(delta, t)
+        pkt = self.down_comp.compress(delta, t)
+        if (self.protocol.codec is not None) or (eco and eco.compress_download):
+            # lossy downlink pipeline: the broadcast base advances by what
+            # the clients actually decode, so views never drift
             applied = Compressor.decompress(pkt)
         else:
-            pkt = self.down_comp.compress(delta, t)  # enabled=False -> dense
-            applied = delta
+            applied = delta                  # legacy dense/uncompressed path
         self.last_broadcast = self.last_broadcast + applied
         self._cum_stats += (pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)
         self._bcast_count += 1

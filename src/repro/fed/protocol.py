@@ -9,24 +9,34 @@ metadata exchange:
     batched (leading client axis K);
   * the round-robin segment schedule (paper §3.3): ``segment_for`` and the
     shared segment bounds;
-  * the compression pipeline: per-endpoint ``Compressor`` construction from
-    one ``EcoLoRAConfig`` so uplink/downlink sparsify+encode settings (and
-    therefore exact wire bytes) exist exactly once.
+  * the compression pipeline: per-endpoint codec-stack construction
+    (``repro.core.codec``) from ONE ``CodecConfig`` — independent
+    ``uplink``/``downlink`` specs — so each direction's sparsify/quantize/
+    position-coding settings (and therefore exact wire bytes) exist exactly
+    once. Without an explicit ``CodecConfig`` the legacy ``EcoLoRAConfig``
+    knobs map onto the default stack, pinned byte-identical to the
+    pre-codec-stack wire format.
 
 The typed messages below are the wire contract: every payload that crosses
 a ``Transport`` is one of ``BroadcastMsg`` / ``DownloadMsg`` / ``UploadMsg``,
-and every billed byte is a ``Packet`` inside one of them (``DownloadMsg``
-carries the pre-summed catch-up bill for replayed broadcast packets).
+and every billed byte is a codec-tagged ``Packet`` inside one of them
+(``Packet.codec``/``Packet.stack`` name the pipeline that produced it, and
+``decode_packet`` needs nothing else — the packet IS the contract;
+``DownloadMsg`` carries the pre-summed catch-up bill for replayed broadcast
+packets).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compression import (Compressor, CompressorPool, Packet,
+from repro.core.codec import (CodecConfig, CodecSpec, Packet,  # noqa: F401
+                              build_pipeline, decode_packet)
+from repro.core.compression import (Compressor, CompressorPool,
                                     compress_uplinks)
 from repro.core.segments import segment_bounds, segment_id, tree_spec
 from repro.core.sparsify import SparsifyConfig, ab_mask_from_spec
@@ -83,7 +93,8 @@ class WireProtocol:
     """The shared contract: vector layout + segment schedule + compressors."""
 
     def __init__(self, full_spec, eco, backend: str = "numpy",
-                 b_only: bool = False):
+                 b_only: bool = False,
+                 codec: Optional[CodecConfig] = None):
         self.full_spec = list(full_spec)
         self.b_only = b_only
         self.spec = ([s for s in self.full_spec if s[0].endswith("/b")]
@@ -93,12 +104,16 @@ class WireProtocol:
         # eco normalized exactly like the strategies did: disabled == absent
         self.eco = eco if (eco and eco.enabled) else None
         self.backend = backend
+        if codec is not None:
+            codec.validate()
+        self.codec = codec
 
     @classmethod
     def for_method(cls, method: str, lora_template: Params, eco,
-                   backend: str = "numpy") -> "WireProtocol":
+                   backend: str = "numpy",
+                   codec: Optional[CodecConfig] = None) -> "WireProtocol":
         return cls(tree_spec(lora_template), eco, backend=backend,
-                   b_only=(method == "ffa_lora"))
+                   b_only=(method == "ffa_lora"), codec=codec)
 
     # -- segment schedule ---------------------------------------------------
     @property
@@ -117,30 +132,66 @@ class WireProtocol:
     def segment_for(self, client_id: int, round_t: int) -> int:
         return segment_id(client_id, round_t, self.n_segments)
 
-    # -- compressor pipeline ------------------------------------------------
+    # -- codec pipeline -----------------------------------------------------
     def _sparsify_cfg(self) -> SparsifyConfig:
         return self.eco.sparsify if self.eco else SparsifyConfig(enabled=False)
 
     def _encoding(self) -> bool:
         return self.eco.encoding if self.eco else True
 
+    def codec_spec(self, direction: str) -> CodecSpec:
+        """The declarative pipeline spec for one direction. An explicit
+        ``CodecConfig`` wins; otherwise the legacy ``EcoLoRAConfig`` knobs
+        map onto the default stack (adaptive top-k + fp16 + Golomb, with
+        ``encoding=False`` as the 16-bit raw-position ablation) — pinned
+        byte-identical to the pre-codec-stack wire format."""
+        if self.codec is not None:
+            return (self.codec.uplink if direction == "uplink"
+                    else self.codec.downlink)
+        return CodecSpec(
+            sparsify="adaptive" if self._sparsify_cfg().enabled else "none",
+            positions="golomb" if self._encoding() else "raw")
+
+    def _make_compressor(self, direction: str, ab_mask: np.ndarray,
+                         backend: str = "numpy") -> Compressor:
+        spec = self.codec_spec(direction)
+        if self.codec is None:
+            sp_cfg = self._sparsify_cfg()
+            legacy_raw = 16 if not self._encoding() else None
+        else:
+            # an explicit CodecConfig is authoritative: its spec decides
+            # whether sparsification runs (build_pipeline disables it for
+            # sparsify="none"); eco only contributes the Eq. 4 schedule
+            # parameters when present. Without this, codec=... with eco=None
+            # would silently transmit dense.
+            sp_cfg = (dataclasses.replace(self.eco.sparsify, enabled=True)
+                      if self.eco else SparsifyConfig())
+            legacy_raw = None
+        pipe = build_pipeline(spec, sp_cfg, ab_mask, backend=backend,
+                              legacy_raw_bits=legacy_raw)
+        return Compressor(self.spec, sp_cfg, encoding=self._encoding(),
+                          ab_mask=ab_mask, pipeline=pipe)
+
     def make_uplink_compressors(self, n: int) -> List[Compressor]:
-        sp, enc = self._sparsify_cfg(), self._encoding()
         ab = ab_mask_from_spec(self.spec)       # shared, read-only
-        return [Compressor(self.spec, sp, encoding=enc, ab_mask=ab)
-                for _ in range(n)]
+        return [self._make_compressor("uplink", ab) for _ in range(n)]
 
     def make_uplink_pool(self) -> CompressorPool:
         """Lazily-populated per-client compressors: O(participants) state
-        even for a 10k+ client population (DESIGN.md §7)."""
-        sp, enc = self._sparsify_cfg(), self._encoding()
+        even for a 10k+ client population (DESIGN.md §7). Uplink pipelines
+        keep the numpy sparsify backend — the Pallas path batches all K
+        clients per round in ONE fused pass via ``compress_uplinks_batch``
+        instead of K single-row kernel launches."""
         ab = ab_mask_from_spec(self.spec)       # shared, read-only
-        return CompressorPool(
-            lambda: Compressor(self.spec, sp, encoding=enc, ab_mask=ab))
+        return CompressorPool(lambda: self._make_compressor("uplink", ab))
 
     def make_downlink_compressor(self) -> Compressor:
-        return Compressor(self.spec, self._sparsify_cfg(),
-                          encoding=self._encoding())
+        """The downlink broadcast pipeline inherits the protocol backend:
+        with ``backend="pallas"`` its sparsify stage runs the same fused
+        kernel as the batched uplink (single-row batch), so BOTH directions
+        share one accelerated compression path."""
+        return self._make_compressor(
+            "downlink", ab_mask_from_spec(self.spec), backend=self.backend)
 
     def compress_uplinks_batch(self, comps, values_rows, slices,
                                round_t: int) -> list:

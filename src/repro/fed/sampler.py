@@ -9,10 +9,13 @@ drawn (the resume-parity contract, DESIGN.md §7).
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
+
+from repro.core.segments import segment_id
 
 
 @dataclass
@@ -66,6 +69,54 @@ class AvailabilitySampler(UniformSampler):
         if take == 0:
             return np.zeros(0, np.int64)
         return rng.choice(online, size=take, replace=False)
+
+
+class SegmentCoverageMonitor:
+    """Round-robin segment-coverage guard (paper §3.3 requires Ns <= Nt:
+    at least as many participants per round as segments, or some segment
+    receives no upload).
+
+    Short rounds are legal — the AvailabilitySampler produces them by
+    design — but SUSTAINED low availability can starve one segment for many
+    consecutive rounds, silently freezing 1/Ns of the global vector while
+    training appears to progress. The monitor tracks when each segment was
+    last covered and emits one ``RuntimeWarning`` per starvation episode
+    (re-armed when the segment is covered again), so long sweeps surface
+    the condition without drowning in per-round noise.
+    """
+
+    def __init__(self, n_segments: int, starve_after: int = 5):
+        self.n_segments = int(n_segments)
+        self.starve_after = int(starve_after)
+        self.last_covered: Optional[np.ndarray] = None
+        self._warned = np.zeros(self.n_segments, bool)
+
+    def observe(self, round_t: int, client_ids) -> List[int]:
+        """Record one round's participants; returns the currently starved
+        segment ids (empty when coverage is healthy)."""
+        if self.last_covered is None:
+            # "covered" baseline just before the first observed round (which
+            # may be a checkpoint-resume round, not 0), so gaps measure
+            # actual starvation under this monitor's watch
+            self.last_covered = np.full(self.n_segments, round_t - 1,
+                                        np.int64)
+        for cid in np.asarray(client_ids, np.int64).ravel():
+            self.last_covered[segment_id(int(cid), round_t,
+                                         self.n_segments)] = round_t
+        gaps = round_t - self.last_covered
+        starved = np.flatnonzero(gaps >= self.starve_after)
+        self._warned &= gaps > 0                 # covered again: re-arm
+        fresh = [int(s) for s in starved if not self._warned[s]]
+        if fresh:
+            self._warned[fresh] = True
+            warnings.warn(
+                f"round {round_t}: segment(s) {fresh} received no upload "
+                f"for >= {self.starve_after} consecutive rounds — sustained "
+                f"low availability violates the paper's Ns <= Nt coverage "
+                f"requirement (n_segments={self.n_segments}); 1/Ns of the "
+                f"global vector is frozen until coverage recovers",
+                RuntimeWarning, stacklevel=2)
+        return [int(s) for s in starved]
 
 
 SAMPLERS = {"uniform": UniformSampler, "weighted": WeightedSampler,

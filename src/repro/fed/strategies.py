@@ -15,7 +15,7 @@ paper builds on; see DESIGN.md §3.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -80,9 +80,20 @@ class FLoRAPolicy(AggregationPolicy):
     merges_into_base = True
     client_mixing = False
 
-    def __init__(self):
+    def __init__(self, server_vec_cap: Optional[int] = None):
+        # insertion order doubles as LRU order: touching a client re-inserts
+        # its entry, so the dict's head is always the least-recently-updated
         self.server_client_vecs: Dict[int, np.ndarray] = {}
         self.round_participants: List[Tuple[int, int]] = []  # (cid, n_samples)
+        self.server_vec_cap = server_vec_cap
+        self._last_samples: Dict[int, int] = {}
+        # merge-on-evict aggregate: evicted clients' accumulated LoRA vecs
+        # fold into ONE stacked pseudo-module (plus their sample mass), so
+        # capping retention loses no update mass — the long-lived server
+        # holds O(cap) vectors however many distinct clients ever upload
+        self.evicted_vec: Optional[np.ndarray] = None
+        self.evicted_samples: int = 0
+        self.evicted_count: int = 0
 
     def aggregate(self, round_t: int, updates: List[SegmentUpdate],
                   global_vec: np.ndarray, n_segments: int) -> np.ndarray:
@@ -90,11 +101,16 @@ class FLoRAPolicy(AggregationPolicy):
         bounds = segment_bounds(global_vec.size, n_segments)
         self.round_participants = []
         for u in updates:
-            vec = self.server_client_vecs.setdefault(
-                u.client_id, np.zeros(global_vec.size, np.float32))
+            vec = self.server_client_vecs.pop(
+                u.client_id, None)
+            if vec is None:
+                vec = np.zeros(global_vec.size, np.float32)
+            self.server_client_vecs[u.client_id] = vec  # re-insert: now MRU
             s, e = bounds[u.seg_id]
             vec[s:e] += u.values  # delta-transmission: accumulate
+            self._last_samples[u.client_id] = u.num_samples
             self.round_participants.append((u.client_id, u.num_samples))
+        self._evict_lru(protect={cid for cid, _ in self.round_participants})
         # the broadcastable "global" = weighted average (clients use it for
         # Eq. 3 mixing); the exact stacked product is merged by the driver.
         if not self.round_participants:
@@ -106,14 +122,47 @@ class FLoRAPolicy(AggregationPolicy):
              for (cid, _), wi in zip(self.round_participants, w)], axis=0
         ).astype(np.float32)
 
+    def _evict_lru(self, protect=()) -> None:
+        """Bound ``server_client_vecs`` at ``server_vec_cap`` by folding the
+        least-recently-updated vectors into the stacked aggregate. Clients
+        in ``protect`` (this round's participants — the merge still reads
+        their vectors) are never evicted: normally they sit at the MRU end
+        anyway (cap >= clients_per_round is validated by FedConfig), but a
+        buffered-async straggler can push a round's DISTINCT updaters above
+        the cap, in which case the cap is soft-exceeded until next round."""
+        if self.server_vec_cap is None:
+            return
+        while len(self.server_client_vecs) > self.server_vec_cap:
+            cid = next((c for c in self.server_client_vecs
+                        if c not in protect), None)
+            if cid is None:          # every retained vec is still needed
+                return
+            vec = self.server_client_vecs.pop(cid)
+            if self.evicted_vec is None:
+                self.evicted_vec = np.zeros_like(vec)
+            self.evicted_vec += vec
+            self.evicted_samples += self._last_samples.pop(cid, 0)
+            self.evicted_count += 1
+
+    def cache_nbytes(self) -> int:
+        """Bytes held in per-client server vectors (the quantity the cap
+        bounds) plus the folded aggregate."""
+        n = sum(v.nbytes for v in self.server_client_vecs.values())
+        if self.evicted_vec is not None:
+            n += self.evicted_vec.nbytes
+        return int(n)
+
 
 POLICIES = {"fedit": FedITPolicy, "ffa_lora": FFALoRAPolicy,
             "flora": FLoRAPolicy, "dpo": FedITPolicy}
 ALLOWED_METHODS = tuple(POLICIES)
 
 
-def make_policy(method: str) -> AggregationPolicy:
+def make_policy(method: str,
+                server_vec_cap: Optional[int] = None) -> AggregationPolicy:
     if method not in POLICIES:
         raise ValueError(f"unknown method {method!r} "
                          f"(expected one of {sorted(POLICIES)})")
+    if method == "flora":
+        return FLoRAPolicy(server_vec_cap=server_vec_cap)
     return POLICIES[method]()

@@ -19,12 +19,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.codec import CodecConfig
 from repro.data.partition import dirichlet_partition, task_partition
 from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
 from repro.fed.client import make_evaluator
 from repro.fed.endpoints import ClientRuntime, ServerEndpoint
 from repro.fed.protocol import WireProtocol
-from repro.fed.sampler import SAMPLERS, make_sampler
+from repro.fed.sampler import SAMPLERS, SegmentCoverageMonitor, make_sampler
 from repro.fed.state_store import VIEW_STORES
 from repro.fed.strategies import (ALLOWED_METHODS, EcoLoRAConfig, make_policy)
 from repro.fed.transport import InMemoryTransport, Transport
@@ -60,6 +61,12 @@ class FedConfig:
     sampler: str = "uniform"           # uniform | weighted | availability
     sampler_kw: Optional[Dict[str, Any]] = None  # extra sampler args
     state_store: str = "cow"           # cow (O(active)) | dense (legacy)
+    # explicit per-direction codec stacks (core/codec.py); None = the legacy
+    # EcoLoRAConfig mapping, pinned byte-identical to the pre-codec wire
+    codec: Optional[CodecConfig] = None
+    # FLoRA server-side per-client vector cache cap (merge-on-evict LRU);
+    # None = unbounded (legacy). Must be >= clients_per_round.
+    flora_server_vec_cap: Optional[int] = None
 
     def __post_init__(self):
         if self.method not in ALLOWED_METHODS:
@@ -80,6 +87,14 @@ class FedConfig:
         if self.state_store not in VIEW_STORES:
             raise ValueError(f"unknown state_store {self.state_store!r} "
                              f"(expected one of {sorted(VIEW_STORES)})")
+        if self.codec is not None:
+            self.codec.validate()      # raises ValueError on unknown stages
+        if self.flora_server_vec_cap is not None \
+                and self.flora_server_vec_cap < self.clients_per_round:
+            raise ValueError(
+                f"flora_server_vec_cap ({self.flora_server_vec_cap}) must "
+                f"be >= clients_per_round ({self.clients_per_round}): the "
+                "current round's participants may never be evicted")
 
 
 @dataclass
@@ -161,8 +176,14 @@ class FederatedTrainer:
 
         # ---- the three federation layers: protocol, endpoints, transport ----
         self.protocol = WireProtocol.for_method(fed.method, self.lora0,
-                                                fed.eco, backend=fed.backend)
-        self.policy = make_policy(fed.method)
+                                                fed.eco, backend=fed.backend,
+                                                codec=fed.codec)
+        self.policy = make_policy(fed.method,
+                                  server_vec_cap=fed.flora_server_vec_cap)
+        # round-robin coverage guard: warns when sustained low availability
+        # starves a segment (the paper's Ns <= Nt requirement, §3.3)
+        self.coverage = (SegmentCoverageMonitor(self.protocol.n_segments)
+                         if self.protocol.n_segments > 1 else None)
         vec0 = self.protocol.tree_to_vec(self.lora0)
         self.server = ServerEndpoint(self.policy, self.protocol,
                                      fed.n_clients)
@@ -243,6 +264,8 @@ class FederatedTrainer:
         for t in range(t0, n_rounds):
             sampled = self.sampler.sample(t)
             participants = tp.plan_round(t, sampled)
+            if self.coverage is not None:
+                self.coverage.observe(t, participants)
             led = srv.ledger
             up0, down0 = led.upload_bytes, led.download_bytes
             upp0, downp0 = led.upload_params, led.download_params

@@ -89,6 +89,27 @@ def sparsify_topk_batch(x, residual, ab_mask, valid, keep_a, keep_b, **kw):
             np.asarray(mask)[:, :n])
 
 
+def sparsify_grouped(x, residual, ab_mask, keep_a, keep_b, **kw):
+    """Single-vector fused sparsify+residual with per-group (A/B) exact
+    keep counts — the downlink broadcast's kernel entry (the codec stack's
+    ``TopKSparsify(backend="pallas")``). A one-row batch through
+    ``sparsify_topk_batch``: identical selection rule to the numpy
+    reference, so wire byte counts match bit-for-bit; one compile per run
+    (the broadcast vector's length is fixed).
+
+    ``x``/``residual``: (N,) float32; ``ab_mask``: (N,) bool;
+    ``keep_a``/``keep_b``: ints (0 = group absent). Returns
+    (sparse, new_residual, mask), all (N,).
+    """
+    n = np.asarray(x).shape[0]
+    sparse, new_res, mask = sparsify_topk_batch(
+        np.asarray(x, np.float32)[None, :],
+        np.asarray(residual, np.float32)[None, :],
+        np.asarray(ab_mask, bool)[None, :], np.ones((1, n), bool),
+        np.array([keep_a], np.int32), np.array([keep_b], np.int32), **kw)
+    return sparse[0], new_res[0], mask[0]
+
+
 def decode_attention(q, k, v, valid, n_rep: int, **kw):
     """Flash-decode GQA attention. q:(B,1,H,D), k/v:(B,S,Hkv,D), valid:(S,)."""
     return _da.decode_attention(q, k, v, valid, n_rep,

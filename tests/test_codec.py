@@ -1,0 +1,340 @@
+"""Codec-stack redesign (ISSUE 4): parity pins + pluggable pipelines.
+
+The heart of the suite is the PRE-REFACTOR PIN: ledger bytes captured from
+the monolithic-Compressor implementation (commit 94dcfec) for fedit/ffa/
+flora x serial/batched at a fixed small config. The default codec stack
+must reproduce them bitwise — uplink AND downlink, totals AND per-round.
+On top of that: the Pallas downlink path (same wire bytes, allclose
+global_vec), non-default pipelines (raw positions, int8, zlib) end-to-end
+through trainer + checkpoint resume, and ckpt format-3 round-trips with
+legacy format-2 loads.
+"""
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core.codec import (CodecConfig, CodecSpec, build_pipeline,
+                              decode_packet)
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+ROUNDS = 3
+
+# ledger numbers captured from the pre-codec-stack implementation (the
+# monolithic Compressor, PR 3 HEAD) with _make_trainer's exact config —
+# (upload_bytes, download_bytes, upload_params, download_params) totals and
+# per-round (upload_bytes, download_bytes)
+PRE_REFACTOR_LEDGERS = {
+    "fedit": ((190038, 318632, 88827, 149012),
+              [(66400, 32), (65930, 125688), (57708, 192912)]),
+    "ffa_lora": ((93872, 164804, 43816, 77218),
+                 [(33216, 32), (32918, 66400), (27738, 98372)]),
+    "flora": ((190288, 781728, 88952, 355808),
+              [(66400, 269728), (65802, 275528), (58086, 236472)]),
+}
+
+
+def _make_trainer(method, engine, backend="numpy", **kw):
+    fed = FedConfig(method=method, n_clients=8, clients_per_round=4,
+                    rounds=ROUNDS, local_steps=2, local_batch=4, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+                    pretrain_steps=5, engine=engine, backend=backend, **kw)
+    return FederatedTrainer(CFG, fed, TC)
+
+
+def _assert_pinned(tr, method):
+    (up_b, down_b, up_p, down_p), per_round = PRE_REFACTOR_LEDGERS[method]
+    led = tr.server.ledger
+    assert (led.upload_bytes, led.download_bytes, led.upload_params,
+            led.download_params) == (up_b, down_b, up_p, down_p)
+    assert [(lg.upload_bytes, lg.download_bytes) for lg in tr.logs] \
+        == per_round
+
+
+# ---------------------------------------------------------------------------
+# default pipeline: bitwise wire parity with the pre-refactor ledgers
+# ---------------------------------------------------------------------------
+
+def test_default_codec_matches_pre_refactor_quick():
+    """One non-slow pin: fedit, batched engine."""
+    tr = _make_trainer("fedit", "batched")
+    tr.run()
+    _assert_pinned(tr, "fedit")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method,engine", [
+    ("fedit", "serial"),
+    ("ffa_lora", "serial"),
+    ("ffa_lora", "batched"),
+    ("flora", "serial"),
+    ("flora", "batched"),
+])
+def test_default_codec_matches_pre_refactor(method, engine):
+    tr = _make_trainer(method, engine)
+    tr.run()
+    _assert_pinned(tr, method)
+
+
+def test_pallas_downlink_same_bytes_allclose_state():
+    """backend='pallas' now routes the DOWNLINK broadcast through the fused
+    sparsify kernel too: wire bytes must stay identical to the numpy path
+    (same selection rule) and the global protocol state allclose."""
+    a = _make_trainer("fedit", "batched", backend="numpy")
+    b = _make_trainer("fedit", "batched", backend="pallas")
+    a.run()
+    b.run()
+    led_a, led_b = a.server.ledger, b.server.ledger
+    assert led_a.upload_bytes == led_b.upload_bytes
+    assert led_a.download_bytes == led_b.download_bytes
+    assert led_a.download_params == led_b.download_params
+    for la, lb in zip(a.logs, b.logs):
+        assert la.download_bytes == lb.download_bytes, la.round_t
+    np.testing.assert_allclose(a.server.global_vec, b.server.global_vec,
+                               atol=1e-6)
+    np.testing.assert_allclose(a.server.last_broadcast,
+                               b.server.last_broadcast, atol=1e-6)
+    # the pallas pin still satisfies the pre-refactor ledger bytes
+    _assert_pinned(b, "fedit")
+
+
+# ---------------------------------------------------------------------------
+# non-default pipelines end-to-end (trainer + checkpoint resume)
+# ---------------------------------------------------------------------------
+
+NON_DEFAULT = CodecConfig(
+    uplink=CodecSpec(positions="raw", entropy="zlib"),
+    downlink=CodecSpec(quantize="int8"))
+
+
+@pytest.mark.parametrize("codec", [
+    NON_DEFAULT,
+    CodecConfig(uplink=CodecSpec(quantize="int8"),
+                downlink=CodecSpec(sparsify="fixed", k=0.3)),
+])
+def test_non_default_pipeline_end_to_end(codec, tmp_path):
+    """raw-position / int8 / zlib / fixed-k pipelines drive the full
+    trainer, checkpoint at mid-run, and resume BITWISE (ledger bytes and
+    global_vec) against an uninterrupted run."""
+    kw = dict(codec=codec)
+    full = _make_trainer("fedit", "batched", **kw)
+    full.run()
+    assert full.server.ledger.upload_bytes > 0
+    assert full.server.ledger.download_bytes > 0
+
+    first = _make_trainer("fedit", "batched", **kw)
+    first.run(rounds=2)
+    p = str(tmp_path / "codec.ckpt")
+    ckpt.save_fed_state(p, first)
+    resumed = _make_trainer("fedit", "batched", **kw)
+    assert ckpt.load_fed_state(p, resumed) == 2
+    resumed.run()
+
+    led_a, led_b = full.server.ledger, resumed.server.ledger
+    assert led_a.upload_bytes == led_b.upload_bytes
+    assert led_a.download_bytes == led_b.download_bytes
+    np.testing.assert_array_equal(full.server.global_vec,
+                                  resumed.server.global_vec)
+
+
+def test_codec_config_changes_wire_bytes():
+    """The pluggable stack actually changes what crosses the wire: raw
+    positions cost more than Golomb; an int8 downlink costs less than
+    fp16."""
+    base = _make_trainer("fedit", "batched")
+    raw_up = _make_trainer("fedit", "batched", codec=CodecConfig(
+        uplink=CodecSpec(positions="raw")))
+    int8_down = _make_trainer("fedit", "batched", codec=CodecConfig(
+        downlink=CodecSpec(quantize="int8")))
+    base.run()
+    raw_up.run()
+    int8_down.run()
+    assert raw_up.server.ledger.upload_bytes \
+        > base.server.ledger.upload_bytes
+    assert int8_down.server.ledger.download_bytes \
+        < base.server.ledger.download_bytes
+
+
+def test_explicit_codec_sparsifies_without_eco():
+    """An explicit CodecConfig is authoritative: with eco=None (no
+    EcoLoRAConfig at all) a sparsifying spec must still sparsify —
+    regression for the spec silently degrading to dense fp16 because the
+    legacy eco mapping supplied a disabled SparsifyConfig."""
+    from repro.fed.protocol import WireProtocol
+
+    spec_list = [("x/a", (1000,), np.float32), ("x/b", (1000,), np.float32)]
+    proto = WireProtocol(spec_list, eco=None, codec=CodecConfig(
+        uplink=CodecSpec(sparsify="fixed", k=0.1)))
+    comp = proto.make_uplink_pool()[0]
+    v = np.random.default_rng(0).standard_normal(2000).astype(np.float32)
+    pkt = comp.compress(v, 0)
+    assert pkt.count == 200                  # 10% kept, not dense
+    assert pkt.wire_bytes < 2 * 2000 / 4
+    # and downlink keeps its own (default-spec) stack
+    down = proto.make_downlink_compressor()
+    dpkt = down.compress(v, 0)
+    assert dpkt.count < 2000                 # adaptive top-k active
+
+
+def test_codec_spec_validation():
+    for bad in (CodecSpec(sparsify="topk_typo"), CodecSpec(quantize="fp8"),
+                CodecSpec(positions="huffman"), CodecSpec(entropy="lz4"),
+                CodecSpec(sparsify="fixed", k=0.0)):
+        with pytest.raises(ValueError):
+            bad.validate()
+    with pytest.raises(ValueError):
+        FedConfig(codec=CodecConfig(uplink=CodecSpec(quantize="fp8")))
+    with pytest.raises(ValueError, match="clients_per_round"):
+        FedConfig(method="flora", clients_per_round=10,
+                  flora_server_vec_cap=4)
+
+
+# ---------------------------------------------------------------------------
+# packet-level contracts
+# ---------------------------------------------------------------------------
+
+def _pipe(spec, n=2000, **kw):
+    ab = np.arange(n) % 2 == 0
+    return build_pipeline(spec, SparsifyConfig(), ab, **kw)
+
+
+def test_packet_wire_bytes_match_legacy_formula():
+    """Default stack: positions_bytes*8 + 16*count + 64-bit header —
+    exactly the pre-refactor EncodedSparse accounting."""
+    rng = np.random.default_rng(3)
+    pipe = _pipe(CodecSpec())
+    pipe.observe_loss(1.0)
+    v = rng.standard_normal(2000).astype(np.float32)
+    pkt = pipe.encode(v, 0)
+    pos = pkt.sections["positions"]
+    vals = pkt.sections["values"]
+    assert pkt.wire_bits == pos.data.size * 8 + 16 * pkt.count + 64
+    assert vals.data.dtype == np.float16 and vals.data.size == pkt.count
+    assert pkt.codec == "topk[adaptive]+fp16+golomb"
+    assert pkt.stack == ["topk", "quantize", "golomb"]
+
+
+def test_decode_is_stateless_and_does_not_mutate_packet():
+    """decode_packet needs no pipeline (the packet IS the contract), works
+    without the same-process idx_cache, and must never change the packet's
+    billed bytes (regression: the zlib decoder once spliced inflated
+    sections back into the packet)."""
+    rng = np.random.default_rng(5)
+    v = rng.standard_normal(2000).astype(np.float32)
+    for spec in (CodecSpec(), CodecSpec(positions="raw"),
+                 CodecSpec(quantize="int8"),
+                 CodecSpec(positions="raw", entropy="zlib"),
+                 CodecSpec(entropy="zlib"),
+                 CodecSpec(sparsify="none")):
+        pipe = _pipe(spec)
+        pipe.observe_loss(1.0)
+        pkt = pipe.encode(v, 0)
+        before = pkt.wire_bytes
+        shortcut = decode_packet(pkt)
+        pkt.local.clear()                       # drop idx_cache: wire path
+        wire = decode_packet(pkt)
+        np.testing.assert_array_equal(shortcut, wire, err_msg=str(spec))
+        assert pkt.wire_bytes == before, spec
+
+
+def test_int8_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(7)
+    v = rng.standard_normal(4096).astype(np.float32)
+    pipe = _pipe(CodecSpec(sparsify="none", quantize="int8"), n=4096)
+    pkt = pipe.encode(v, 0)
+    out = decode_packet(pkt)
+    # symmetric int8: error <= half a quantization step per chunk
+    step = np.abs(v).max() / 127.0
+    assert float(np.abs(out - v).max()) <= step
+    # and it actually saves wire bytes vs fp16
+    fp16 = _pipe(CodecSpec(sparsify="none"), n=4096).encode(v, 0)
+    assert pkt.wire_bytes < fp16.wire_bytes
+
+
+def test_fixed_k_pipeline_keeps_constant_fraction():
+    pipe = _pipe(CodecSpec(sparsify="fixed", k=0.25), n=2000)
+    rng = np.random.default_rng(9)
+    for t, loss in enumerate([2.0, 1.0, 0.4]):   # falling loss: adaptive
+        pipe.observe_loss(loss)                  # would shrink k — fixed
+        pkt = pipe.encode(rng.standard_normal(2000).astype(np.float32), t)
+        assert pkt.k_used == {"a": 0.25, "b": 0.25}
+        # residual feedback still applies, so kept counts stay exact
+        assert pkt.count == 2 * int(np.ceil(0.25 * 1000))
+
+
+def test_pipeline_state_restore_uniform():
+    """state()/restore() round-trips the whole stack without the caller
+    knowing stage internals; restoring into a different stack warns and
+    restores only matching stages."""
+    pipe = _pipe(CodecSpec())
+    pipe.observe_loss(1.3)
+    pipe.observe_loss(0.9)
+    rng = np.random.default_rng(11)
+    pipe.encode(rng.standard_normal(2000).astype(np.float32), 0)
+    st = pipe.state()
+    fresh = _pipe(CodecSpec())
+    fresh.restore(st)
+    sa, sb = pipe.sparsify.sparsifier, fresh.sparsify.sparsifier
+    assert sa.loss0 == sb.loss0 and sa.loss_prev == sb.loss_prev
+    np.testing.assert_array_equal(sa.residual, sb.residual)
+    other = _pipe(CodecSpec(positions="raw", entropy="zlib"))
+    with pytest.warns(RuntimeWarning, match="codec state"):
+        other.restore(st)
+    assert other.sparsify.sparsifier.loss0 == sa.loss0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint formats
+# ---------------------------------------------------------------------------
+
+def test_ckpt_format3_roundtrip_and_format2_load(tmp_path):
+    """A format-3 checkpoint restores codec state bitwise; the same state
+    down-converted to the format-2 layout (bare sparsifier dicts, exactly
+    what PR 3 wrote) still loads to the identical compression state."""
+    tr = _make_trainer("fedit", "batched")
+    tr.run(rounds=2)
+    p3 = str(tmp_path / "f3.ckpt")
+    ckpt.save_fed_state(p3, tr)
+    state = ckpt.load(p3)
+    assert state["format"] == 3
+    assert "stages" in state["downlink"] and "tag" in state["downlink"]
+
+    a = _make_trainer("fedit", "batched")
+    assert ckpt.load_fed_state(p3, a) == 2
+
+    # down-convert to the format-2 on-disk layout
+    state2 = dict(state)
+    state2["format"] = 2
+    state2["downlink"] = state["downlink"]["stages"]["0:topk"]
+    state2["uplink"] = {
+        "pool": state["uplink"]["pool"],
+        "comps": {cid: st["stages"]["0:topk"]
+                  for cid, st in state["uplink"]["comps"].items()}}
+    p2 = str(tmp_path / "f2.ckpt")
+    ckpt.save(p2, state2)
+    b = _make_trainer("fedit", "batched")
+    assert ckpt.load_fed_state(p2, b) == 2
+
+    for x in (a, b):
+        sa = tr.server.down_comp.sparsifier
+        sx = x.server.down_comp.sparsifier
+        assert (sa.loss0, sa.loss_prev, sa.last_k) \
+            == (sx.loss0, sx.loss_prev, sx.last_k)
+        np.testing.assert_array_equal(sa.residual, sx.residual)
+        for cid, comp in tr.clients.up_comps.active().items():
+            np.testing.assert_array_equal(
+                comp.sparsifier.residual,
+                x.clients.up_comps[cid].sparsifier.residual)
+    # and the restored trainers keep producing identical wire traffic
+    tr.run()
+    a.run()
+    b.run()
+    assert tr.server.ledger.upload_bytes == a.server.ledger.upload_bytes \
+        == b.server.ledger.upload_bytes
+    np.testing.assert_array_equal(tr.server.global_vec, a.server.global_vec)
+    np.testing.assert_array_equal(tr.server.global_vec, b.server.global_vec)

@@ -155,6 +155,118 @@ def test_cow_store_tracks_dense_shadow():
 
 
 # ---------------------------------------------------------------------------
+# FLoRA server-side vector cache: merge-on-evict LRU (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+def _flora_updates(round_t, cids, size, n_segments=2, val=1.0):
+    from repro.core.segments import SegmentUpdate, segment_bounds, segment_id
+    ups = []
+    for cid in cids:
+        seg = segment_id(cid, round_t, n_segments)
+        s, e = segment_bounds(size, n_segments)[seg]
+        ups.append(SegmentUpdate(cid, round_t, seg,
+                                 np.full(e - s, val, np.float32), 10, 1.0))
+    return ups
+
+
+def test_flora_server_vecs_bounded_with_merge_on_evict():
+    """A long-lived FLoRA server that never clears (a custom driver / the
+    ROADMAP's large-population concern) stays O(cap) in per-client vectors;
+    evicted vectors fold into the stacked aggregate so NO update mass is
+    lost, and the broadcastable weighted average (which only reads the
+    current round's participants) matches the uncapped policy bitwise."""
+    from repro.fed.strategies import FLoRAPolicy
+
+    size, ns, k = 64, 2, 2
+    capped = FLoRAPolicy(server_vec_cap=4)
+    free = FLoRAPolicy()
+    gv = np.zeros(size, np.float32)
+    # 10 rounds x 2 fresh participants each: 20 distinct clients, none
+    # returning after eviction (a returning evicted client legitimately
+    # restarts from zero — its history lives in the folded aggregate)
+    for t in range(10):
+        cids = [2 * t, 2 * t + 1]
+        ups = _flora_updates(t, cids, size, ns, val=float(t + 1))
+        out_c = capped.aggregate(t, ups, gv, ns)
+        out_f = free.aggregate(t, ups, gv, ns)
+        np.testing.assert_array_equal(out_c, out_f)   # broadcast unchanged
+        assert len(capped.server_client_vecs) <= 4
+    assert len(free.server_client_vecs) == 20         # the unbounded growth
+    assert capped.evicted_count == 20 - len(capped.server_client_vecs)
+    # conservation: retained + folded == everything ever uploaded
+    total_c = sum(capped.server_client_vecs.values()) + capped.evicted_vec
+    total_f = sum(free.server_client_vecs.values())
+    np.testing.assert_allclose(total_c, total_f)
+    assert capped.evicted_samples == 10 * (20 - len(capped.server_client_vecs))
+    assert capped.cache_nbytes() < free.cache_nbytes()
+
+
+def test_flora_lru_never_evicts_current_round_participants():
+    """A buffered-async straggler can push one round's DISTINCT updaters
+    above the cap; the LRU must soft-exceed rather than evict a vector the
+    weighted average / merge still reads (regression: KeyError)."""
+    from repro.fed.strategies import FLoRAPolicy
+
+    size, ns = 64, 2
+    pol = FLoRAPolicy(server_vec_cap=2)
+    gv = np.zeros(size, np.float32)
+    # round 1 delivers 2 on-time updates + 1 straggler from round 0:
+    # 3 distinct participants against cap=2
+    ups = _flora_updates(1, [1, 2], size, ns) + \
+        _flora_updates(0, [3], size, ns)
+    out = pol.aggregate(1, ups, gv, ns)          # must not raise
+    assert np.isfinite(out).all()
+    assert set(pol.server_client_vecs) == {1, 2, 3}   # soft-exceeded
+    # next round: all three are evictable again, the cap re-applies
+    pol.aggregate(2, _flora_updates(2, [4, 5], size, ns), gv, ns)
+    assert len(pol.server_client_vecs) == 2
+    assert pol.evicted_count == 3
+
+
+def test_flora_lru_state_survives_checkpoint(tmp_path):
+    """LRU (insertion) order, per-client sample weights, and the folded
+    aggregate round-trip through save/load — a resumed capped server must
+    evict exactly what an uninterrupted one would."""
+    from repro.checkpoint import ckpt
+
+    tr = _make_trainer("flora", "batched", flora_server_vec_cap=4)
+    pol = tr.policy
+    size = tr.protocol.size
+    rng = np.random.default_rng(0)
+    # seed policy state in a deliberately non-sorted LRU order
+    for cid in (7, 2, 5):
+        pol.server_client_vecs[cid] = rng.standard_normal(size) \
+            .astype(np.float32)
+        pol._last_samples[cid] = 10 * cid
+    pol.evicted_vec = rng.standard_normal(size).astype(np.float32)
+    pol.evicted_samples, pol.evicted_count = 30, 3
+    p = str(tmp_path / "flora.ckpt")
+    ckpt.save_fed_state(p, tr)
+
+    tr2 = _make_trainer("flora", "batched", flora_server_vec_cap=4)
+    ckpt.load_fed_state(p, tr2)
+    pol2 = tr2.policy
+    assert list(pol2.server_client_vecs) == [7, 2, 5]   # LRU order kept
+    for cid in (7, 2, 5):
+        np.testing.assert_array_equal(pol2.server_client_vecs[cid],
+                                      pol.server_client_vecs[cid])
+    assert pol2._last_samples == {7: 70, 2: 20, 5: 50}
+    np.testing.assert_array_equal(pol2.evicted_vec, pol.evicted_vec)
+    assert (pol2.evicted_samples, pol2.evicted_count) == (30, 3)
+
+
+def test_flora_trainer_with_cap_matches_uncapped():
+    """End-to-end: with cap >= clients_per_round the standard driver
+    (which clears per round) is bitwise unaffected by the LRU."""
+    a = _make_trainer("flora", "batched")
+    b = _make_trainer("flora", "batched", flora_server_vec_cap=4)
+    a.run()
+    b.run()
+    np.testing.assert_array_equal(a.server.global_vec, b.server.global_vec)
+    assert a.server.ledger.total_bytes == b.server.ledger.total_bytes
+
+
+# ---------------------------------------------------------------------------
 # config validation (satellite: make_strategy KeyError -> ValueError)
 # ---------------------------------------------------------------------------
 
