@@ -1,0 +1,131 @@
+"""Benchmark regression gate: diff fresh ``BENCH_*.json`` snapshots against
+the committed baselines and fail the build on regressions.
+
+The contract per metric kind (see ``benchmarks.common.BENCH_KINDS``):
+
+  * ``bytes`` — the wire contract. ANY growth over baseline fails: wire
+    bytes are deterministic, so a single extra byte is a real regression
+    (and the headline claim of this repo).
+  * ``time`` — lower is better; fails when current > (1 + tol) * baseline.
+  * ``rate`` — higher is better; fails when current < baseline / (1 + tol).
+  * ``info`` — recorded, never gated.
+
+``tol`` defaults to 0.25 (the 25% CI budget for noisy shared runners) and
+can be overridden with --tolerance / $BENCH_GATE_TOLERANCE. Metrics present
+only in the baseline fail (a benchmark silently stopped measuring
+something); metrics only in the current snapshot pass (new coverage) and
+are reported so the baseline gets refreshed.
+
+Usage (what .github/workflows/ci.yml runs after the benchmark smokes):
+
+    python benchmarks/bench_gate.py --baseline benchmarks/baselines --current .
+
+Refreshing baselines after an intentional change:
+
+    PYTHONPATH=src:. ECOLORA_BENCH_DIR=benchmarks/baselines \
+        python benchmarks/round_engine.py --quick   # (etc.)
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_TOLERANCE = 0.25
+
+
+def compare(baseline: dict, current: dict,
+            tolerance: float = DEFAULT_TOLERANCE
+            ) -> Tuple[List[str], List[str]]:
+    """Diff one benchmark's snapshots. Returns (failures, notes) — failure
+    strings are human-readable verdicts; empty failures = gate passes."""
+    failures: List[str] = []
+    notes: List[str] = []
+    name = baseline.get("bench", "?")
+    base_m: Dict[str, dict] = baseline.get("metrics", {})
+    cur_m: Dict[str, dict] = current.get("metrics", {})
+    for key, bm in sorted(base_m.items()):
+        kind = bm.get("kind", "info")
+        if key not in cur_m:
+            failures.append(f"{name}/{key}: metric disappeared from the "
+                            "current snapshot (benchmark stopped measuring)")
+            continue
+        bv, cv = bm["value"], cur_m[key]["value"]
+        if kind == "info":
+            continue
+        bv, cv = float(bv), float(cv)
+        if kind == "bytes":
+            if cv > bv:
+                failures.append(
+                    f"{name}/{key}: wire bytes grew {bv:.0f} -> {cv:.0f} "
+                    "(any growth fails: the wire contract is deterministic)")
+            elif cv < bv:
+                notes.append(f"{name}/{key}: bytes improved "
+                             f"{bv:.0f} -> {cv:.0f} (refresh the baseline "
+                             "to lock in the win)")
+        elif kind == "time":
+            if cv > bv * (1.0 + tolerance):
+                failures.append(
+                    f"{name}/{key}: time regressed {bv:.4g} -> {cv:.4g} "
+                    f"(>{tolerance:.0%} over baseline)")
+        elif kind == "rate":
+            if cv < bv / (1.0 + tolerance):
+                failures.append(
+                    f"{name}/{key}: rate regressed {bv:.4g} -> {cv:.4g} "
+                    f"(>{tolerance:.0%} under baseline)")
+    for key in sorted(set(cur_m) - set(base_m)):
+        notes.append(f"{name}/{key}: new metric (not in baseline yet)")
+    return failures, notes
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--current", default=".",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--tolerance", type=float,
+                    default=float(os.environ.get("BENCH_GATE_TOLERANCE",
+                                                 DEFAULT_TOLERANCE)),
+                    help="relative budget for time/rate metrics "
+                         f"(default {DEFAULT_TOLERANCE})")
+    args = ap.parse_args(argv)
+
+    base_files = sorted(glob.glob(os.path.join(args.baseline,
+                                               "BENCH_*.json")))
+    if not base_files:
+        print(f"bench_gate: no baselines under {args.baseline!r}", flush=True)
+        return 2
+    all_failures: List[str] = []
+    for bpath in base_files:
+        fname = os.path.basename(bpath)
+        cpath = os.path.join(args.current, fname)
+        if not os.path.exists(cpath):
+            all_failures.append(f"{fname}: baseline exists but the current "
+                                "run produced no snapshot")
+            continue
+        failures, notes = compare(load(bpath), load(cpath), args.tolerance)
+        for msg in notes:
+            print(f"bench_gate NOTE  {msg}")
+        for msg in failures:
+            print(f"bench_gate FAIL  {msg}")
+        if not failures:
+            print(f"bench_gate OK    {fname}")
+        all_failures.extend(failures)
+    if all_failures:
+        print(f"bench_gate: {len(all_failures)} regression(s) — failing")
+        return 1
+    print("bench_gate: all benchmarks within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

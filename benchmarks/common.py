@@ -4,9 +4,15 @@ Every benchmark prints ``name,value,derived`` CSV rows (one per table cell
 group) and returns a dict for run.py's summary. Scale with ECOLORA_BENCH=full
 (paper-like rounds) vs the default quick profile (CI-sized; same protocol,
 fewer rounds/clients so it finishes on one CPU core).
+
+CI-gated benchmarks additionally write machine-readable ``BENCH_<name>.json``
+snapshots (``snapshot``) that the workflow uploads as artifacts and
+``benchmarks/bench_gate.py`` diffs against the committed baselines — wire
+bytes may never grow, encode/decode/round times may not regress >25%.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -64,3 +70,30 @@ def default_eco(**kw) -> EcoLoRAConfig:
 
 def emit(name: str, value, derived: str = "") -> None:
     print(f"{name},{value},{derived}")
+
+
+# metric kinds the regression gate understands:
+#   bytes — exact contract, ANY growth fails the gate
+#   time  — lower is better, >25% growth fails (seconds/ms, noisy)
+#   rate  — higher is better, >25% drop fails (rounds/s etc.)
+#   info  — recorded, never gated (parity booleans, counts)
+BENCH_KINDS = ("bytes", "time", "rate", "info")
+
+
+def snapshot(name: str, metrics: dict) -> str:
+    """Write the machine-readable ``BENCH_<name>.json`` snapshot.
+
+    ``metrics``: {key: (value, kind)} with kind in ``BENCH_KINDS``. Files
+    land in $ECOLORA_BENCH_DIR (default: the working directory) so CI can
+    collect them as artifacts and feed them to the regression gate.
+    """
+    out = {"bench": name, "metrics": {}}
+    for key, (value, kind) in metrics.items():
+        assert kind in BENCH_KINDS, (key, kind)
+        out["metrics"][key] = {"value": value, "kind": kind}
+    path = os.path.join(os.environ.get("ECOLORA_BENCH_DIR", "."),
+                        f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    emit(f"{name}/snapshot", path)
+    return path

@@ -17,7 +17,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from benchmarks.common import FULL, MODEL, emit, get_config
+from benchmarks.common import FULL, MODEL, emit, get_config, snapshot
 from repro.core.sparsify import SparsifyConfig
 from repro.data.synthetic import TaskConfig
 from repro.fed.strategies import EcoLoRAConfig
@@ -105,6 +105,20 @@ def main(quick: bool = False) -> dict:
          "target >=3x at K=10 (ISSUE 1)")
     emit("round_engine/global_vec_max_err", f"{gv_err:.2e}")
     emit("round_engine/ledger_bytes_equal", bytes_equal)
+    # snapshot BEFORE the asserts: when a smoke trips, the uploaded
+    # artifact is the evidence the investigation needs
+    snapshot("round_engine", {
+        # wire bytes are deterministic: the gate fails on ANY growth
+        "upload_bytes": (led_b.upload_bytes, "bytes"),
+        "download_bytes": (led_b.download_bytes, "bytes"),
+        # throughput rides as info: run-to-run variance of the ratio is
+        # well above the gate's budget, so the benchmark polices its own
+        # floor (the speedup assert below fails the CI step directly)
+        "speedup": (round(speedup, 3), "info"),
+        "serial_rounds_per_s": (round(rps_serial, 4), "info"),
+        "batched_rounds_per_s": (round(rps_batched, 4), "info"),
+        "ledger_bytes_equal": (int(bytes_equal), "info"),
+    })
     assert gv_err <= 1e-5, f"engine parity broken: max err {gv_err}"
     assert bytes_equal, "engine parity broken: ledger bytes differ"
     if quick:

@@ -23,7 +23,7 @@ import argparse
 import resource
 import time
 
-from benchmarks.common import FULL, MODEL, emit, get_config
+from benchmarks.common import FULL, MODEL, emit, get_config, snapshot
 from repro.core.sparsify import SparsifyConfig
 from repro.data.synthetic import TaskConfig
 from repro.fed.strategies import EcoLoRAConfig
@@ -118,6 +118,20 @@ def main(quick: bool = False) -> dict:
     ratio = state_bytes[n_hi] / max(state_bytes[n_lo], 1)
     emit("scale_clients/state_ratio_hi_lo", f"{ratio:.3f}",
          f"n={n_hi} vs n={n_lo}; 1.0 = perfectly population-independent")
+    # snapshot BEFORE the flatness assert: a tripped smoke still uploads
+    # its evidence
+    metrics = {
+        # memory and traffic contracts are deterministic -> exact gate
+        "parity_upload_bytes": (led_c.upload_bytes, "bytes"),
+        "parity_download_bytes": (led_c.download_bytes, "bytes"),
+        "parity_ledger_bytes_equal": (int(bytes_equal), "info"),
+        "parity_global_vec_bitwise": (int(gv_bitwise), "info"),
+        "state_ratio_hi_lo": (round(ratio, 4), "info"),
+    }
+    for n, r in results.items():
+        metrics[f"n{n}/state_bytes"] = (r["state_bytes"], "bytes")
+        metrics[f"n{n}/round_s"] = (round(r["round_s"], 4), "time")
+    snapshot("scale_clients", metrics)
     assert ratio < 1.5, \
         f"client state grew {ratio:.2f}x from n={n_lo} to n={n_hi}"
     return results

@@ -65,7 +65,10 @@ def main():
                          "where the interrupted run left off)")
     ap.add_argument("--uplink-codec", default=None, metavar="SPEC",
                     help="uplink codec stack, e.g. adaptive+fp16+golomb, "
-                         "fixed0.3+int8+raw+zlib (default: the paper stack)")
+                         "fixed0.3+int8+raw+zlib, adaptive+int8+golomb+ans "
+                         "(default: the paper stack; FedConfig(backend="
+                         "'pallas') runs int8 uplinks as the fused device "
+                         "kernel)")
     ap.add_argument("--downlink-codec", default=None, metavar="SPEC",
                     help="downlink codec stack (same grammar)")
     args = ap.parse_args()

@@ -155,11 +155,17 @@ def save_fed_state(path: str, trainer) -> int:
                    "comps": {str(cid): c.pipeline.state()
                              for cid, c in sorted(pool.active().items())}},
         "downlink": srv.down_comp.pipeline.state(),
+        # per-client codec negotiation table (cid -> negotiated uplink spec
+        # string): restored BEFORE pipeline states so each client's
+        # compressor is rebuilt with its negotiated stack
+        "codec_table": {str(cid): s
+                        for cid, s in sorted(srv.codec_table.items())},
         "ledger": {
             "upload_params": srv.ledger.upload_params,
             "download_params": srv.ledger.download_params,
             "upload_bytes": srv.ledger.upload_bytes,
             "download_bytes": srv.ledger.download_bytes,
+            "upload_by_codec": dict(srv.ledger.upload_by_codec),
         },
         "last_eval": (None if trainer._last_eval is None
                       else [float(x) for x in trainer._last_eval]),
@@ -176,9 +182,11 @@ def save_fed_state(path: str, trainer) -> int:
         if samples:
             state["policy_last_samples"] = {str(cid): int(n)
                                             for cid, n in samples.items()}
-        if getattr(trainer.policy, "evicted_vec", None) is not None:
+        if getattr(trainer.policy, "evicted_vec", None) is not None \
+                or getattr(trainer.policy, "evicted_product", None) is not None:
             state["policy_evicted"] = {
                 "vec": trainer.policy.evicted_vec,
+                "product": trainer.policy.evicted_product,
                 "samples": int(trainer.policy.evicted_samples),
                 "count": int(trainer.policy.evicted_count)}
     return save(path, state)
@@ -207,6 +215,12 @@ def load_fed_state(path: str, trainer) -> int:
         srv._bcast_count = int(state["bcast_count"])
         up = state["uplink"]
         cl.up_comps.load_state(up["pool"])
+        # negotiation table first: pool assignments decide which pipeline a
+        # restored client compressor is built with
+        table = state.get("codec_table") or {}
+        srv.codec_table = {int(cid): str(s) for cid, s in table.items()}
+        for cid, s in srv.codec_table.items():
+            cl.up_comps.assign(cid, s)
         if fmt >= 3:
             # format 3: whole codec pipelines through the uniform
             # state()/restore() API — stage internals never surface here
@@ -235,7 +249,12 @@ def load_fed_state(path: str, trainer) -> int:
                                             for cid, n in samples.items()}
         ev = state.get("policy_evicted")
         if ev is not None and hasattr(trainer.policy, "evicted_vec"):
-            trainer.policy.evicted_vec = np.asarray(ev["vec"], np.float32)
+            trainer.policy.evicted_vec = (
+                None if ev.get("vec") is None
+                else np.asarray(ev["vec"], np.float32))
+            trainer.policy.evicted_product = (
+                None if ev.get("product") is None
+                else np.asarray(ev["product"], np.float32))
             trainer.policy.evicted_samples = int(ev["samples"])
             trainer.policy.evicted_count = int(ev["count"])
     else:
@@ -261,8 +280,22 @@ def load_fed_state(path: str, trainer) -> int:
         # format 1 never persisted adaptive-k or RNG state — resumes from a
         # legacy checkpoint restart the schedule at k_max (the bug this
         # format exists to fix)
+    # the ledger is restored WHOLESALE: clear the breakdown first so a
+    # non-fresh trainer can't keep stale per-codec entries
+    srv.ledger.upload_by_codec = {}
     for k, v in state["ledger"].items():
-        setattr(srv.ledger, k, int(v))
+        if k == "upload_by_codec":
+            srv.ledger.upload_by_codec = {str(t): int(b)
+                                          for t, b in v.items()}
+        else:
+            setattr(srv.ledger, k, int(v))
+    # pre-PR5 checkpoints carry no per-codec breakdown: park the restored
+    # total under a legacy key so the invariant sum(upload_by_codec) ==
+    # upload_bytes keeps holding as new rounds add their own tags
+    shortfall = srv.ledger.upload_bytes \
+        - sum(srv.ledger.upload_by_codec.values())
+    if shortfall > 0:
+        srv.ledger.upload_by_codec["legacy(pre-negotiation)"] = shortfall
     rnd = int(state["round"])
     trainer.start_round = rnd
     srv.round_t = rnd

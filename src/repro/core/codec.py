@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import rans
 from repro.core.golomb import (decode_gaps, encode_gaps, golomb_parameter)
 from repro.core.quantize import QuantConfig, dequantize, quantize
 from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
@@ -198,10 +199,9 @@ class TopKSparsify(Codec):
             sparse, mask, ks = self.sparsifier.compress(car.dense, car.slice_)
         self.apply_sparsified(car, sparse, mask, ks)
 
-    def _compress_pallas(self, car: Carrier):
-        """Single-row fused kernel pass over the full slice (the downlink
-        broadcast path; the uplink batches K rows via compress_uplinks)."""
-        from repro.kernels import ops   # deferred: jax only on this path
+    def _pallas_inputs(self, car: Carrier):
+        """Shared setup for the single-row fused kernel entries: residual
+        shard, group membership, and the exact per-group keep counts."""
         sp = self.sparsifier
         start, end = car.slice_
         n = end - start
@@ -213,10 +213,35 @@ class TopKSparsify(Codec):
         nb = n - na
         keep_a = keep_count(na, ks["a"]) if na else 0
         keep_b = keep_count(nb, ks["b"]) if nb else 0
+        return res, seg_ab, keep_a, keep_b, ks
+
+    def _compress_pallas(self, car: Carrier):
+        """Single-row fused kernel pass over the full slice (the downlink
+        broadcast path; the uplink batches K rows via compress_uplinks)."""
+        from repro.kernels import ops   # deferred: jax only on this path
+        res, seg_ab, keep_a, keep_b, ks = self._pallas_inputs(car)
         sparse, new_res, mask = ops.sparsify_grouped(
             np.asarray(car.dense, np.float32), res, seg_ab, keep_a, keep_b)
         res[:] = np.asarray(new_res)
         return np.asarray(sparse), np.asarray(mask), ks
+
+    def compress_quantized_pallas(self, car: Carrier, chunk: int):
+        """Fused sparsify+int8 kernel pass (``ops.sparsify_quantize_grouped``):
+        the slice's selected values come back as int8 codes + per-chunk fp32
+        scales, never materialised host-side in fp32. Installs the result on
+        the carrier (the pipeline then skips its Quantize stage)."""
+        from repro.kernels import ops   # deferred: jax only on this path
+        res, seg_ab, keep_a, keep_b, ks = self._pallas_inputs(car)
+        codes, scales, new_res, mask, nz = ops.sparsify_quantize_grouped(
+            np.asarray(car.dense, np.float32), res, seg_ab, keep_a, keep_b,
+            chunk=chunk)
+        res[:] = np.asarray(new_res)
+        mask = np.asarray(mask)
+        nz = np.asarray(nz)
+        nchunks = -(-int(nz.sum()) // chunk)
+        Quantize.install_quantized(car, np.asarray(codes)[nz],
+                                   np.asarray(scales)[:nchunks], chunk,
+                                   mask, nz, ks)
 
     @staticmethod
     def apply_sparsified(car: Carrier, sparse: np.ndarray, mask: np.ndarray,
@@ -276,6 +301,8 @@ class Quantize(Codec):
         self.chunk = int(chunk)
 
     def encode(self, car: Carrier) -> None:
+        if "values" in car.sections:
+            return          # fused sparsify+quantize kernel already ran
         values = car.values if car.values is not None else \
             np.asarray(car.dense, np.float32)
         if car.values is None:
@@ -294,6 +321,27 @@ class Quantize(Codec):
 
     def _qcfg(self) -> QuantConfig:
         return QuantConfig(bits=8, stochastic=False, per_chunk=self.chunk)
+
+    @staticmethod
+    def install_quantized(car: Carrier, codes: np.ndarray, scales: np.ndarray,
+                          chunk: int, mask: np.ndarray, nzmask: np.ndarray,
+                          ks: Dict[str, float]) -> None:
+        """Fold already-quantized int8 codes + scales into the carrier (the
+        fused sparsify+quantize kernel did both stages on device; the wire
+        sections and billing are identical to the numpy int8 path).
+        ``mask`` is the top-k SELECTION (drives k_eff exactly like
+        ``apply_sparsified``); ``nzmask`` the selected-and-nonzero subset
+        that actually reaches the wire (positions/count)."""
+        car.idx = np.flatnonzero(nzmask)
+        car.values = None                     # fp32 values never materialise
+        car.k_eff = float(mask.mean()) if mask.size else 1.0
+        car.k_used = dict(ks)
+        car.dense = None
+        car.sections["values"] = Section(np.asarray(codes, np.int8),
+                                         8 * int(codes.size))
+        car.sections["scales"] = Section(np.asarray(scales, np.float32),
+                                         32 * int(scales.size))
+        car.meta["quant_chunk"] = int(chunk)
 
     @classmethod
     def decode(cls, car: Carrier, pkt: Packet) -> None:
@@ -416,13 +464,74 @@ class ZlibEntropy(Codec):
         car.sections = dict(car.sections, **sections)
 
 
+class AnsValues(Codec):
+    """Value-entropy stage: static rANS over the int8 quantization codes
+    (``repro.core.rans``). Positions keep their own near-entropy Golomb
+    stream; this stage squeezes the VALUE bytes, which fixed 8-bit codes
+    leave ~2-3 bits/value above the histogram entropy on sparsified LoRA
+    deltas. The per-packet frequency model rides in its own billed section.
+
+    Incompressible packets (uniform histograms, tiny counts where the model
+    header dominates) fall back to the raw int8 section untouched — the
+    stage never expands a packet. Applies only to int8 value sections
+    (``CodecSpec.validate`` enforces the pairing); fp16 sections pass
+    through."""
+
+    name = "ans"
+
+    def encode(self, car: Carrier) -> None:
+        sec = car.sections.get("values")
+        if sec is None or sec.data.dtype != np.int8:
+            return
+        symbols = sec.data.astype(np.int16).astype(np.int64) + 128
+        if symbols.size == 0:
+            return
+        stream, model, scale_bits = rans.encode_bytes(symbols)
+        if len(stream) + len(model) >= sec.data.size:
+            return                       # raw bypass: never expand
+        car.sections["values"] = Section(
+            np.frombuffer(stream, np.uint8), 8 * len(stream))
+        car.sections["ans_model"] = Section(
+            np.frombuffer(model, np.uint8), 8 * len(model))
+        car.meta["ans"] = {"count": int(symbols.size),
+                           "scale_bits": int(scale_bits)}
+
+    @classmethod
+    def decode(cls, car: Carrier, pkt: Packet) -> None:
+        if "ans_model" not in car.sections:
+            return                       # bypassed (raw int8 / fp16) packet
+        meta = pkt.meta["ans"]
+        symbols = rans.decode_bytes(
+            np.asarray(car.sections["values"].data, np.uint8).tobytes(),
+            np.asarray(car.sections["ans_model"].data, np.uint8).tobytes(),
+            int(meta["count"]), int(meta["scale_bits"]))
+        codes = (symbols - 128).astype(np.int8)
+        car.sections = dict(car.sections)
+        car.sections["values"] = Section(codes, 8 * codes.size)
+        del car.sections["ans_model"]
+
+
 # ---------------------------------------------------------------------------
 # pipeline
 # ---------------------------------------------------------------------------
 
 STAGE_DECODERS = {cls.name: cls for cls in
                   (TopKSparsify, Quantize, GolombPositions, RawPositions,
-                   ZlibEntropy)}
+                   ZlibEntropy, AnsValues)}
+
+
+def int8_pair(stages: List[Codec]
+              ) -> Optional[Tuple[TopKSparsify, Quantize]]:
+    """The adjacent (TopKSparsify, int8 Quantize) pair of a stage stack, or
+    None — THE eligibility scan for the fused sparsify+quantize kernel,
+    shared by the single-row encode dispatch (``CodecPipeline.fused_int8``,
+    which additionally requires the Pallas backend) and the batched uplink
+    grouping (``core.compression``), so the two paths cannot drift."""
+    for sp, qt in zip(stages, stages[1:]):
+        if isinstance(sp, TopKSparsify) and isinstance(qt, Quantize) \
+                and qt.mode == "int8":
+            return sp, qt
+    return None
 
 
 class CodecPipeline:
@@ -452,12 +561,29 @@ class CodecPipeline:
             st.observe_loss(loss)
 
     # -- encode -------------------------------------------------------------
+    @property
+    def fused_int8(self) -> Optional[Tuple[TopKSparsify, Quantize]]:
+        """The (sparsify, quantize) pair when this stack can run the fused
+        sparsify+int8 device kernel: a Pallas-backed enabled TopKSparsify
+        immediately followed by an int8 Quantize stage."""
+        pair = int8_pair(self.stages)
+        if pair is not None and pair[0].backend == "pallas" \
+                and pair[0].enabled:
+            return pair
+        return None
+
     def encode(self, values: np.ndarray, round_t: int,
                slice_: Optional[Tuple[int, int]] = None) -> Packet:
         start, end = slice_ if slice_ is not None else (0, values.size)
         car = Carrier(dense_size=int(values.size), slice_=(start, end),
                       round_t=round_t, dense=np.asarray(values, np.float32))
+        fused = self.fused_int8
         for st in self.stages:
+            if fused is not None and st is fused[0]:
+                # one device pass does sparsify AND int8 quantize; the
+                # Quantize stage then no-ops on the installed sections
+                st.compress_quantized_pallas(car, fused[1].chunk)
+                continue
             st.encode(car)
         return self._seal(car)
 
@@ -474,6 +600,26 @@ class CodecPipeline:
             if isinstance(st, TopKSparsify):
                 continue
             st.encode(car)
+        return self._seal(car)
+
+    def encode_quantized(self, codes: np.ndarray, scales: np.ndarray,
+                         mask: np.ndarray, nzmask: np.ndarray,
+                         ks: Dict[str, float], round_t: int,
+                         slice_: Tuple[int, int], chunk: int) -> Packet:
+        """Seal an already sparsified AND int8-quantized slice — the batched
+        (K, seg) fused kernel path (``ops.sparsify_quantize_batch``) hands
+        each client's compacted codes + scales straight here, so the uplink
+        values never exist host-side in fp32. Position/entropy stages still
+        run; sparsify and quantize are recorded in the stack (the packet is
+        indistinguishable from the numpy int8 path's)."""
+        car = Carrier(dense_size=int(mask.size), slice_=tuple(slice_),
+                      round_t=round_t)
+        Quantize.install_quantized(car, codes, scales, chunk, mask, nzmask,
+                                   ks)
+        for st in self.stages:
+            if isinstance(st, TopKSparsify):
+                continue
+            st.encode(car)               # Quantize no-ops on installed codes
         return self._seal(car)
 
     def _seal(self, car: Carrier) -> Packet:
@@ -520,7 +666,13 @@ def decode_packet(pkt: Packet) -> np.ndarray:
     car = Carrier(dense_size=pkt.dense_size, slice_=pkt.slice_,
                   round_t=pkt.round_t, sections=dict(pkt.sections))
     for name in reversed(pkt.stack):
-        STAGE_DECODERS[name].decode(car, pkt)
+        dec = STAGE_DECODERS.get(name)
+        if dec is None:
+            raise ValueError(
+                f"cannot decode packet tagged {pkt.codec!r}: unknown codec "
+                f"stage {name!r} (known: {sorted(STAGE_DECODERS)}) — the "
+                "sender used a stack this endpoint does not implement")
+        dec.decode(car, pkt)
     return car.dense
 
 
@@ -531,7 +683,7 @@ def decode_packet(pkt: Packet) -> np.ndarray:
 _SPARSIFY_MODES = ("adaptive", "fixed", "none")
 _QUANT_MODES = ("fp16", "int8")
 _POSITION_CODERS = ("golomb", "raw")
-_ENTROPY_STAGES = ("none", "zlib")
+_ENTROPY_STAGES = ("none", "zlib", "ans")
 
 
 @dataclass(frozen=True)
@@ -561,6 +713,23 @@ class CodecSpec:
         if not 0.0 < self.k <= 1.0:
             raise ValueError(f"fixed keep-rate k must be in (0, 1], "
                              f"got {self.k}")
+        if self.entropy == "ans" and self.quantize != "int8":
+            raise ValueError(
+                "entropy='ans' codes int8 value histograms — pair it with "
+                f"quantize='int8' (got quantize={self.quantize!r})")
+
+    def required_stages(self) -> frozenset:
+        """Capability tokens an endpoint must support to speak this stack —
+        the unit of per-client codec negotiation (fed.protocol). Tokens are
+        the stage names plus the non-baseline quantize mode."""
+        req = {TopKSparsify.name, Quantize.name,
+               GolombPositions.name if self.positions == "golomb"
+               else RawPositions.name}
+        if self.quantize == "int8":
+            req.add("int8")
+        if self.entropy != "none":
+            req.add(self.entropy)
+        return frozenset(req)
 
     @property
     def tag(self) -> str:
@@ -570,23 +739,48 @@ class CodecSpec:
             parts.append(self.entropy)
         return "+".join(parts)
 
+    def spec_str(self) -> str:
+        """The canonical ``parse``-round-trippable string — the form a
+        negotiated spec travels in (DownloadMsg.codec, the checkpointed
+        negotiation table). Non-default chunk/level ride as suffixes."""
+        sp = self.sparsify if self.sparsify != "fixed" else f"fixed{self.k:g}"
+        qt = self.quantize
+        if self.quant_chunk != CodecSpec.quant_chunk:
+            qt += f"c{self.quant_chunk}"
+        parts = [sp, qt, self.positions]
+        if self.entropy != "none":
+            ent = self.entropy
+            if ent == "zlib" and self.zlib_level != CodecSpec.zlib_level:
+                ent += f"l{self.zlib_level}"
+            parts.append(ent)
+        return "+".join(parts)
+
     @classmethod
     def parse(cls, text: str) -> "CodecSpec":
         """Parse a "+"-joined stage string, e.g. "adaptive+fp16+golomb",
-        "fixed0.3+int8+raw+zlib", "none+fp16+golomb" — the CLI/benchmark
-        shorthand for a spec."""
+        "fixed0.3+int8+raw+zlib", "none+fp16+golomb", "adaptive+int8+golomb
+        +ans" — the CLI/benchmark shorthand for a spec and the wire form of
+        a negotiated stack ("int8c<chunk>"/"zlibl<level>" carry non-default
+        scale granularity / compression level)."""
         parts = text.strip().split("+")
         if len(parts) not in (3, 4):
             raise ValueError(
                 f"codec spec {text!r} must be sparsify+quantize+positions"
-                "[+zlib]")
+                "[+entropy]")
         sparsify, quant, pos = parts[:3]
         kw: Dict[str, Any] = {}
         if sparsify.startswith("fixed") and sparsify != "fixed":
             kw["k"] = float(sparsify[len("fixed"):])
             sparsify = "fixed"
+        if "c" in quant:
+            quant, _, chunk = quant.partition("c")
+            kw["quant_chunk"] = int(chunk)
+        entropy = parts[3] if len(parts) == 4 else "none"
+        if entropy.startswith("zlibl"):
+            kw["zlib_level"] = int(entropy[len("zlibl"):])
+            entropy = "zlib"
         spec = cls(sparsify=sparsify, quantize=quant, positions=pos,
-                   entropy=parts[3] if len(parts) == 4 else "none", **kw)
+                   entropy=entropy, **kw)
         spec.validate()
         return spec
 
@@ -629,4 +823,13 @@ def build_pipeline(spec: CodecSpec, sparsify_cfg: SparsifyConfig,
         stages.append(RawPositions(bits=legacy_raw_bits))
     if spec.entropy == "zlib":
         stages.append(ZlibEntropy(level=spec.zlib_level))
+    elif spec.entropy == "ans":
+        stages.append(AnsValues())
     return CodecPipeline(stages, spec.tag)
+
+
+#: every capability token a fully-featured endpoint advertises (the
+#: negotiation universe; see fed.protocol.CodecNegotiator)
+ALL_CAPABILITIES = frozenset(
+    {TopKSparsify.name, Quantize.name, GolombPositions.name,
+     RawPositions.name, ZlibEntropy.name, AnsValues.name, "int8"})

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.codec import (CodecPipeline, CodecSpec, GolombPositions,
                               Packet, Quantize, RawPositions, TopKSparsify,
-                              build_pipeline, decode_packet)
+                              build_pipeline, decode_packet, int8_pair)
 from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
                                  ab_mask_from_spec, keep_count)
 
@@ -78,34 +78,30 @@ class Compressor:
         return self.pipeline.encode_sparsified(sparse, mask, ks, round_t,
                                                slice_)
 
+    def packetize_quantized(self, codes: np.ndarray, scales: np.ndarray,
+                            mask: np.ndarray, nzmask: np.ndarray,
+                            ks: Dict[str, float], round_t: int,
+                            slice_: Tuple[int, int], chunk: int) -> Packet:
+        """Encode codes+scales the fused sparsify+quantize kernel produced
+        (the values never existed host-side in fp32)."""
+        return self.pipeline.encode_quantized(codes, scales, mask, nzmask,
+                                              ks, round_t, slice_, chunk)
+
     @staticmethod
     def decompress(packet: Packet) -> np.ndarray:
         return decode_packet(packet)
 
 
-def compress_uplinks(comps, values_rows, slices, round_t: int,
-                     backend: str = "numpy",
-                     pad_to: Optional[int] = None) -> list:
-    """Compress K clients' uplink segment slices in one batched pass.
+def _int8_chunk(pipeline: CodecPipeline) -> Optional[int]:
+    """The int8 Quantize chunk size when the stack's value stage is int8
+    directly after sparsify (the fused-kernel-eligible shape), else None."""
+    pair = int8_pair(pipeline.stages)
+    return pair[1].chunk if pair is not None else None
 
-    ``backend="numpy"`` is the serial reference (K independent
-    Compressor.compress calls). ``backend="pallas"`` stacks the slices into
-    one padded (K, L) array and runs a single fused sparsify+residual kernel
-    with per-client per-group exact keep counts — byte-identical packets,
-    one device dispatch instead of K numpy passes; the remaining pipeline
-    stages (quantize, position coding, entropy) still run per packet, so the
-    kernel path composes with any codec stack that starts with a
-    ``TopKSparsify`` stage. Residual state is read from and written back to
-    each client's sparsifier either way.
-    """
-    if not comps:
-        return []
-    sp_stage = comps[0].pipeline.sparsify
-    if backend != "pallas" or sp_stage is None or not sp_stage.enabled:
-        return [c.compress(v, round_t, slice_=s)
-                for c, v, s in zip(comps, values_rows, slices)]
 
-    from repro.kernels import ops  # deferred: jax only needed on this path
+def _stack_batch(comps, values_rows, slices, pad_to):
+    """Stack K clients' slices into the padded (K, L) batch the fused
+    kernels take; reads residual shards and computes exact keep counts."""
     K = len(comps)
     # a round-independent width (pad_to = widest segment) keeps the jitted
     # batched pass at ONE compilation for the whole run
@@ -133,17 +129,91 @@ def compress_uplinks(comps, values_rows, slices, round_t: int,
             keep_a[i] = keep_count(na, ks["a"])
         if nb:
             keep_b[i] = keep_count(nb, ks["b"])
+    return x, res, ab, valid, keep_a, keep_b
+
+
+def _compress_uplinks_one_stack(comps, values_rows, slices, round_t: int,
+                                backend: str, pad_to: Optional[int]) -> list:
+    """Batched pass for clients sharing ONE codec stack."""
+    sp_stage = comps[0].pipeline.sparsify
+    if backend != "pallas" or sp_stage is None or not sp_stage.enabled:
+        return [c.compress(v, round_t, slice_=s)
+                for c, v, s in zip(comps, values_rows, slices)]
+
+    from repro.kernels import ops  # deferred: jax only needed on this path
+    x, res, ab, valid, keep_a, keep_b = _stack_batch(comps, values_rows,
+                                                     slices, pad_to)
+    chunk = _int8_chunk(comps[0].pipeline)
+    pkts = []
+    if chunk is not None:
+        # device-resident value path: the fused kernel emits int8 codes +
+        # per-chunk scales; fp32 values never cross the host boundary
+        codes, scales, new_res, mask, nz = ops.sparsify_quantize_batch(
+            x, res, ab, valid, keep_a, keep_b, chunk=chunk)
+        for i, (c, (s, e)) in enumerate(zip(comps, slices)):
+            n = e - s
+            c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
+            m = mask[i, :n]
+            mnz = nz[i, :n]
+            nch = -(-int(mnz.sum()) // chunk) if mnz.any() else 0
+            pkts.append(c.packetize_quantized(
+                codes[i, :n][mnz], scales[i, :nch], m, mnz,
+                c.sparsifier.last_k, round_t, (s, e), chunk))
+        return pkts
     sparse, new_res, mask = ops.sparsify_topk_batch(x, res, ab, valid,
                                                     keep_a, keep_b)
     sparse = np.asarray(sparse)
     new_res = np.asarray(new_res)
     mask = np.asarray(mask)
-    pkts = []
     for i, (c, (s, e)) in enumerate(zip(comps, slices)):
         n = e - s
         c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
         pkts.append(c.packetize(sparse[i, :n], mask[i, :n],
                                 c.sparsifier.last_k, round_t, (s, e)))
+    return pkts
+
+
+def compress_uplinks(comps, values_rows, slices, round_t: int,
+                     backend: str = "numpy",
+                     pad_to: Optional[int] = None) -> list:
+    """Compress K clients' uplink segment slices in one batched pass.
+
+    ``backend="numpy"`` is the serial reference (K independent
+    Compressor.compress calls). ``backend="pallas"`` stacks the slices into
+    one padded (K, L) array and runs a single fused kernel pass with
+    per-client per-group exact keep counts — byte-identical packets, one
+    device dispatch instead of K numpy passes. Stacks whose value stage is
+    int8 take the fused sparsify+QUANTIZE kernel (values come back as int8
+    codes + scales — never fp32); other stacks take the fused
+    sparsify+residual kernel with the remaining stages per packet, so the
+    kernel path composes with any codec stack that starts with a
+    ``TopKSparsify`` stage. Residual state is read from and written back to
+    each client's sparsifier either way.
+
+    Per-client codec negotiation can hand different clients different
+    stacks; the batch is partitioned by pipeline tag and each group batches
+    independently (packet order still matches the input order).
+    """
+    if not comps:
+        return []
+    # group key = tag + int8 chunk size: the tag alone hides quant_chunk,
+    # and negotiation can assign e.g. "int8c64" to one client and plain
+    # "int8" to another — batching them together would encode one of them
+    # with the other's scale granularity
+    groups: Dict[tuple, list] = {}
+    for i, c in enumerate(comps):
+        key = (c.pipeline.tag, _int8_chunk(c.pipeline))
+        groups.setdefault(key, []).append(i)
+    if len(groups) == 1:
+        return _compress_uplinks_one_stack(comps, values_rows, slices,
+                                           round_t, backend, pad_to)
+    pkts: list = [None] * len(comps)
+    for idxs in groups.values():
+        sub = _compress_uplinks_one_stack(
+            [comps[i] for i in idxs], [values_rows[i] for i in idxs],
+            [slices[i] for i in idxs], round_t, backend, pad_to)
+        for i, p in zip(idxs, sub):
+            pkts[i] = p
     return pkts
 
 
@@ -158,18 +228,41 @@ class CompressorPool:
     first value and ``loss_prev`` to the last, which is exactly what seeding
     those two fields at creation reproduces — bitwise identical to an eager
     list of ``n_clients`` compressors.
+
+    Codec negotiation assigns a client its stack BEFORE its first upload
+    (``assign``; the server's DownloadMsg carries the decision at sync, and
+    uploads only happen after a sync) — the factory then builds that
+    client's pipeline from the negotiated spec string. Unassigned clients
+    get the configured default (``factory(None)``).
     """
 
     def __init__(self, factory):
-        self._factory = factory
+        self._factory = factory                # factory(spec_str | None)
         self._comps: Dict[int, Compressor] = {}
+        self._specs: Dict[int, str] = {}
         self._first_gloss: Optional[float] = None
         self._last_gloss: Optional[float] = None
+
+    def assign(self, cid: int, spec_str: Optional[str]) -> None:
+        """Record the negotiated codec spec for ``cid``. Sticky: negotiation
+        resolves once per client, so a repeat assignment is a no-op; a
+        CHANGED assignment after the compressor exists rebuilds it fresh
+        (residual state restarts — only reachable if a server re-negotiates
+        mid-run, which the protocol never does today)."""
+        if spec_str is None:
+            return
+        prev = self._specs.get(cid)
+        self._specs[cid] = spec_str
+        if prev is not None and prev != spec_str:
+            self._comps.pop(cid, None)
+
+    def assigned(self) -> Dict[int, str]:
+        return dict(self._specs)
 
     def __getitem__(self, cid: int) -> Compressor:
         c = self._comps.get(cid)
         if c is None:
-            c = self._comps[cid] = self._factory()
+            c = self._comps[cid] = self._factory(self._specs.get(cid))
             if self._first_gloss is not None:
                 c.sparsifier.loss0 = self._first_gloss
                 c.sparsifier.loss_prev = self._last_gloss
@@ -213,11 +306,17 @@ class CommLedger:
     upload_dense_bytes: int = 0
     download_dense_bytes: int = 0
     per_round: list = field(default_factory=list)
+    # per-codec-stack upload bytes: with per-client negotiation a mixed
+    # population bills different stacks in one round; this is the breakdown
+    # (sums to upload_bytes)
+    upload_by_codec: Dict[str, int] = field(default_factory=dict)
 
     def log_upload(self, pkt: Packet) -> None:
         self.upload_params += pkt.param_count
         self.upload_bytes += pkt.wire_bytes
         self.upload_dense_bytes += pkt.dense_bytes
+        self.upload_by_codec[pkt.codec] = \
+            self.upload_by_codec.get(pkt.codec, 0) + pkt.wire_bytes
 
     def log_download(self, pkt: Packet) -> None:
         self.log_download_stats(pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)

@@ -18,6 +18,13 @@ from typing import Optional, Tuple
 import numpy as np
 
 
+#: symmetric int8 code ceiling — THE quantization constant shared with the
+#: fused device kernel (repro.kernels.sparsify), so host and device paths
+#: cannot drift: scale = max|chunk| / INT8_QMAX, codes clipped to
+#: [-INT8_QMAX - 1, INT8_QMAX]
+INT8_QMAX = 127
+
+
 @dataclass(frozen=True)
 class QuantConfig:
     bits: int = 8

@@ -1,0 +1,164 @@
+"""Range/ANS entropy coding over small-alphabet symbol streams.
+
+The codec stack's value bytes are int8 quantization codes after top-k
+sparsification; their histogram is far from uniform (magnitudes cluster just
+above the keep threshold, signs split the mass), so a static entropy coder
+over the per-packet histogram recovers the 8-bit/value slack that fixed-width
+codes leave on the wire. rANS (Duda 2014; the byte-renormalised variant from
+ryg_rans) reaches the histogram's entropy to within ~0.1%, beating DEFLATE's
+integer-bit Huffman codes, and decodes with one table lookup per symbol.
+
+This module is the self-contained coder: 32-bit state, 8-bit renormalisation,
+a quantized frequency table whose resolution ADAPTS to the stream length
+(``scale_bits_for``) — short packets get a coarser model whose serialized
+table costs less than the rate it gives up. The table rides in the packet
+(zlib-packed uint16 counts — smooth histograms squeeze to a few dozen bytes)
+so decode needs nothing but the stream. ``repro.core.codec.AnsValues`` is
+the stage that applies it to the quantized value section.
+
+Encoding walks the symbols in reverse with a scalar state machine (ANS is
+sequential by construction); numpy handles the histogram/normalisation and
+the decoder's slot table. Interleaved multi-state vectorisation is the known
+follow-up if the value stage ever dominates encode time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import zlib
+
+import numpy as np
+
+MAX_SCALE_BITS = 12              # frequency table resolution ceiling
+RANS_L = 1 << 23                 # normalised state lower bound
+_STATE_BYTES = 4
+
+
+def scale_bits_for(count: int) -> int:
+    """Model resolution for a ``count``-symbol stream: finer tables cost
+    more header bytes than they save on short streams. count >= 4096 earns
+    the full 12 bits; each halving drops one bit, floored at 9."""
+    bits = MAX_SCALE_BITS
+    while bits > 9 and count < (1 << bits):
+        bits -= 1
+    return bits
+
+
+def normalize_freqs(counts: np.ndarray, scale_bits: int) -> np.ndarray:
+    """Quantize a histogram to sum exactly ``1 << scale_bits`` with every
+    present symbol keeping freq >= 1 (an encodable model). Deterministic, so
+    encoder and tests agree bit-for-bit."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        raise ValueError("cannot build an ANS model from an empty stream")
+    target = 1 << scale_bits
+    f = (counts.astype(np.float64) * target / total).astype(np.int64)
+    f = np.where(counts > 0, np.maximum(f, 1), 0)
+    diff = target - int(f.sum())
+    if diff > 0:
+        f[int(np.argmax(f))] += diff
+    while diff < 0:
+        # shave the largest reducible freqs; guaranteed to terminate because
+        # sum(max(f,1)) <= target requires <= target present symbols
+        i = int(np.argmax(f))
+        take = min(int(f[i]) - 1, -diff)
+        if take <= 0:
+            raise ValueError(
+                f"alphabet too large for a {scale_bits}-bit ANS table")
+        f[i] -= take
+        diff += take
+    return f.astype(np.int64)
+
+
+def encode(symbols: np.ndarray, freqs: np.ndarray, scale_bits: int) -> bytes:
+    """rANS-encode ``symbols`` (ints in [0, len(freqs))) under the
+    normalized model ``freqs`` (sum == 1 << scale_bits, freq >= 1 wherever a
+    symbol occurs). Returns the byte stream the decoder reads FORWARD."""
+    symbols = np.asarray(symbols, np.int64)
+    freqs = np.asarray(freqs, np.int64)
+    cum = np.concatenate([[0], np.cumsum(freqs)])
+    f = freqs[symbols].tolist()        # per-symbol freq/cum/renorm bound,
+    c = cum[symbols].tolist()          # precomputed; python lists keep the
+    if min(f, default=1) == 0:         # sequential loop off numpy scalars
+        bad = int(symbols[int(np.argmin(freqs[symbols]))])
+        raise ValueError(f"symbol {bad} has zero model frequency")
+    x_max = (((RANS_L >> scale_bits) << 8) * freqs[symbols]).tolist()
+    out = bytearray()
+    x = RANS_L
+    for i in range(len(f) - 1, -1, -1):        # ANS encodes in reverse
+        fi = f[i]
+        xm = x_max[i]
+        while x >= xm:
+            out.append(x & 0xFF)
+            x >>= 8
+        x = ((x // fi) << scale_bits) + (x % fi) + c[i]
+    for _ in range(_STATE_BYTES):               # flush final state
+        out.append(x & 0xFF)
+        x >>= 8
+    out.reverse()                               # decoder reads forward
+    return bytes(out)
+
+
+def decode(data: bytes, freqs: np.ndarray, count: int,
+           scale_bits: int) -> np.ndarray:
+    """Decode ``count`` symbols from an ``encode`` stream under the same
+    normalized model."""
+    freqs = np.asarray(freqs, np.int64)
+    cumf = np.concatenate([[0], np.cumsum(freqs)])
+    # slot -> symbol lookup: one table of 1 << scale_bits entries
+    slots = np.repeat(np.arange(freqs.size), freqs).tolist()
+    fl = freqs.tolist()
+    cl = cumf.tolist()
+    out = [0] * count
+    pos = 0
+    x = 0
+    for _ in range(_STATE_BYTES):
+        x = (x << 8) | data[pos]
+        pos += 1
+    mask = (1 << scale_bits) - 1
+    n_data = len(data)
+    for i in range(count):
+        slot = x & mask
+        s = slots[slot]
+        out[i] = s
+        x = fl[s] * (x >> scale_bits) + slot - cl[s]
+        while x < RANS_L and pos < n_data:
+            x = (x << 8) | data[pos]
+            pos += 1
+    return np.asarray(out, np.int64)
+
+
+# ---------------------------------------------------------------------------
+# model (frequency table) serialization
+# ---------------------------------------------------------------------------
+
+def pack_model(freqs: np.ndarray) -> bytes:
+    """Serialize the normalized table: zlib over the uint16 counts (smooth
+    histograms compress to a few dozen bytes; the worst case is bounded by
+    256 * 2 bytes + the DEFLATE frame)."""
+    return zlib.compress(np.asarray(freqs, np.uint16).tobytes(), 9)
+
+
+def unpack_model(blob: bytes, n_symbols: int, scale_bits: int) -> np.ndarray:
+    raw = zlib.decompress(bytes(blob))
+    f = np.frombuffer(raw, np.uint16).astype(np.int64)
+    if f.size != n_symbols or int(f.sum()) != (1 << scale_bits):
+        raise ValueError("corrupt ANS model table")
+    return f
+
+
+def encode_bytes(symbols: np.ndarray, n_symbols: int = 256
+                 ) -> Tuple[bytes, bytes, int]:
+    """Histogram + encode in one call: (stream, packed_model, scale_bits)."""
+    symbols = np.asarray(symbols, np.int64)
+    bits = scale_bits_for(symbols.size)
+    counts = np.bincount(symbols, minlength=n_symbols)
+    freqs = normalize_freqs(counts, bits)
+    return encode(symbols, freqs, bits), pack_model(freqs), bits
+
+
+def decode_bytes(stream: bytes, model: bytes, count: int, scale_bits: int,
+                 n_symbols: int = 256) -> np.ndarray:
+    return decode(stream, unpack_model(model, n_symbols, scale_bits), count,
+                  scale_bits)

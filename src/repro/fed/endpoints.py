@@ -27,12 +27,19 @@ from repro.core.staleness import mix_models, mix_models_batch
 from repro.fed.client import (TimedCall, make_batched_local_trainer,
                               make_local_trainer, stack_batches,
                               stack_client_states)
-from repro.fed.protocol import BroadcastMsg, DownloadMsg, UploadMsg, WireProtocol
+from repro.fed.protocol import (ALL_CAPABILITIES, BroadcastMsg, DownloadMsg,
+                                UploadMsg, WireProtocol)
 from repro.fed.state_store import make_view_store
 from repro.fed.strategies import AggregationPolicy
 from repro.optim import adamw
 
 Params = Dict[str, Any]
+
+# the server's advertised capability tokens (DownloadMsg.capabilities):
+# purely advertisory today — the issue's wire contract reserves the
+# symmetric half of the handshake for downlink negotiation (ROADMAP) —
+# computed once, not per sync
+_SERVER_CAPABILITIES = sorted(ALL_CAPABILITIES)
 
 
 class ServerEndpoint:
@@ -62,6 +69,11 @@ class ServerEndpoint:
         self._client_cum = np.zeros((n_clients, 3), np.int64)
         self.pending: List[SegmentUpdate] = []
         self.round_t = 0
+        # per-client uplink codec negotiation: capability lists resolve to
+        # the cheapest mutually-supported stack, recorded here (the table
+        # checkpoint format 3 persists) and answered in DownloadMsg.codec
+        self.negotiator = protocol.make_negotiator()
+        self.codec_table: Dict[int, str] = {}
 
     # -- round lifecycle ----------------------------------------------------
     def begin_round(self, round_t: Optional[int] = None) -> BroadcastMsg:
@@ -82,12 +94,20 @@ class ServerEndpoint:
         self._bcast_count += 1
         return BroadcastMsg(t, pkt, self.protocol.n_segments)
 
-    def sync_client(self, cid: int, round_t: int) -> DownloadMsg:
+    def sync_client(self, cid: int, round_t: int,
+                    capabilities: Optional[List[str]] = None) -> DownloadMsg:
         """Bring client ``cid`` fully in sync: bill one wire packet per
         broadcast it missed since it last participated (as a prefix-sum
         difference — O(1) however long it was idle), and ship the synced
         view (= the server's broadcast base, which is exactly what a client
-        holding every applied delta would have)."""
+        holding every applied delta would have).
+
+        ``capabilities`` is the client's advertised codec-stage token list;
+        the first sync resolves it to the cheapest mutually-supported uplink
+        stack (sticky thereafter) and the DownloadMsg carries the decision,
+        so the client compresses THIS round's upload with the negotiated
+        pipeline."""
+        self._negotiate(cid, capabilities)
         n = self._bcast_count
         billed_p, billed_w, billed_d = (
             self._cum_stats - self._client_cum[cid]).tolist()
@@ -96,13 +116,21 @@ class ServerEndpoint:
         self.client_sync[cid] = n
         self._client_cum[cid] = self._cum_stats
         return DownloadMsg(cid, round_t, self.last_broadcast.copy(),
-                           missed, billed_w, billed_p, bcast_version=n)
+                           missed, billed_w, billed_p, bcast_version=n,
+                           codec=self.codec_table.get(cid),
+                           capabilities=_SERVER_CAPABILITIES)
+
+    def _negotiate(self, cid: int, capabilities) -> None:
+        if capabilities is not None and cid not in self.codec_table:
+            spec = self.negotiator.resolve(capabilities)
+            self.codec_table[cid] = spec.spec_str()
 
     def receive(self, msg: UploadMsg) -> None:
         """Ingest one uplink message: decompress, bill, queue for aggregate.
         Late messages (a buffered-async transport delivering last round's
         stragglers) are valid — their segment id derives from the SENDING
         round, so they land in the segment they were trained for."""
+        self._negotiate(msg.client_id, msg.capabilities)
         values = Compressor.decompress(msg.packet)
         seg = self.protocol.segment_for(msg.client_id, msg.round_t)
         self.pending.append(SegmentUpdate(msg.client_id, msg.round_t, seg,
@@ -214,7 +242,20 @@ class ClientRuntime:
     def views(self, value) -> None:
         self.view_store.load_dense(np.asarray(value, np.float32))
 
+    def capabilities_for(self, cid: int) -> List[str]:
+        """The codec-stage tokens client ``cid`` advertises. Defaults to the
+        full set (every stage this build implements); a heterogeneous
+        population comes from ``FedConfig.client_capabilities`` —
+        {cid: [tokens]}, missing clients fully capable."""
+        caps = getattr(self.fed, "client_capabilities", None) or {}
+        got = caps.get(cid)
+        return sorted(ALL_CAPABILITIES) if got is None else list(got)
+
     def apply_download(self, cid: int, msg: DownloadMsg) -> None:
+        if msg.codec is not None:
+            # the server's negotiation decision for this client's uplink —
+            # recorded before the first upload builds the compressor
+            self.up_comps.assign(cid, msg.codec)
         self.view_store.set_synced(cid, msg.view, msg.bcast_version)
 
     def reset_views(self, vec: np.ndarray) -> None:
@@ -273,7 +314,8 @@ class ClientRuntime:
         comp = self.up_comps[cid]
         comp.observe_loss(loss)
         pkt = comp.compress(update, round_t, slice_=(s, e))
-        return UploadMsg(cid, round_t, pkt, n_samples, loss)
+        return UploadMsg(cid, round_t, pkt, n_samples, loss,
+                         capabilities=self.capabilities_for(cid))
 
     def make_uploads_batch(self, cids, round_t: int, trained_vecs: np.ndarray,
                            start_vecs: np.ndarray, n_samples, losses
@@ -298,7 +340,8 @@ class ClientRuntime:
             comps.append(comp)
         pkts = self.protocol.compress_uplinks_batch(comps, values, slices,
                                                     round_t)
-        return [UploadMsg(int(cid), round_t, pkt, int(n), float(l))
+        return [UploadMsg(int(cid), round_t, pkt, int(n), float(l),
+                          capabilities=self.capabilities_for(int(cid)))
                 for pkt, cid, n, l in zip(pkts, cids, n_samples, losses)]
 
     # -- the round ------------------------------------------------------------

@@ -34,8 +34,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.codec import (CodecConfig, CodecSpec, Packet,  # noqa: F401
-                              build_pipeline, decode_packet)
+from repro.core.codec import (ALL_CAPABILITIES, CodecConfig,  # noqa: F401
+                              CodecSpec, Packet, build_pipeline,
+                              decode_packet)
 from repro.core.compression import (Compressor, CompressorPool,
                                     compress_uplinks)
 from repro.core.segments import segment_bounds, segment_id, tree_spec
@@ -65,6 +66,12 @@ class DownloadMsg:
     packets it skipped; the simulation short-circuits to the resulting view
     but bills exactly those packets (``wire_bytes``/``param_count`` are the
     summed catch-up cost, already logged in the server ledger).
+
+    ``codec`` carries the server's codec-negotiation decision for this
+    client's UPLINK (a ``CodecSpec.parse`` string; None = not negotiated,
+    use the configured default) and ``capabilities`` advertises the stage
+    tokens the server itself supports — the symmetric half of the
+    negotiation handshake.
     """
     client_id: int
     round_t: int
@@ -73,16 +80,72 @@ class DownloadMsg:
     wire_bytes: int
     param_count: int
     bcast_version: int = 0    # absolute broadcast count the view reflects
+    codec: Optional[str] = None
+    capabilities: Optional[List[str]] = None
 
 
 @dataclass
 class UploadMsg:
-    """Client -> server: one compressed round-robin segment update."""
+    """Client -> server: one compressed round-robin segment update.
+
+    ``capabilities`` is the client's advertised codec-stage token list
+    (None = legacy client, assumed fully capable): the server resolves it to
+    the cheapest mutually-supported stack and answers in the next
+    ``DownloadMsg.codec``.
+    """
     client_id: int
     round_t: int
     packet: Packet
     num_samples: int
     local_loss: float
+    capabilities: Optional[List[str]] = None
+
+
+# ---------------------------------------------------------------------------
+# per-client codec negotiation
+# ---------------------------------------------------------------------------
+
+class CodecNegotiator:
+    """Resolves each client's advertised capability tokens to the cheapest
+    mutually-supported uplink stack.
+
+    ``candidates`` is the server's preference list, cheapest wire format
+    first: the configured uplink spec, then progressively less demanding
+    derivatives (drop the entropy tail, drop int8), ending at the DEFAULT
+    stack (adaptive top-k + fp16 + Golomb) that every endpoint MUST speak —
+    the protocol's mandatory baseline, like identity encoding in HTTP. A
+    client advertising only unknown stages therefore still resolves: to the
+    default stack.
+    """
+
+    def __init__(self, primary: CodecSpec,
+                 default: Optional[CodecSpec] = None):
+        self.default = default if default is not None else CodecSpec()
+        seen = {}
+        for spec in self._fallback_chain(primary) + [self.default]:
+            seen.setdefault(spec.tag, spec)    # dedupe, keep order
+        self.candidates: List[CodecSpec] = list(seen.values())
+
+    @staticmethod
+    def _fallback_chain(spec: CodecSpec) -> List[CodecSpec]:
+        chain = [spec]
+        if spec.entropy != "none":
+            chain.append(dataclasses.replace(spec, entropy="none"))
+        if spec.quantize != "fp16":
+            chain.append(dataclasses.replace(chain[-1], quantize="fp16"))
+        return chain
+
+    def resolve(self, capabilities) -> CodecSpec:
+        """The first (cheapest) candidate whose required stages the client
+        supports; ``capabilities=None`` means negotiation is not in play
+        (legacy client) and resolves to the primary candidate."""
+        if capabilities is None:
+            return self.candidates[0]
+        caps = frozenset(capabilities)
+        for spec in self.candidates:
+            if spec.required_stages() <= caps:
+                return spec
+        return self.default
 
 
 # ---------------------------------------------------------------------------
@@ -152,9 +215,17 @@ class WireProtocol:
             sparsify="adaptive" if self._sparsify_cfg().enabled else "none",
             positions="golomb" if self._encoding() else "raw")
 
+    def make_negotiator(self) -> CodecNegotiator:
+        """The server's uplink codec negotiator: preference list anchored at
+        the configured uplink spec, falling back to the mandatory default
+        stack."""
+        return CodecNegotiator(self.codec_spec("uplink"))
+
     def _make_compressor(self, direction: str, ab_mask: np.ndarray,
-                         backend: str = "numpy") -> Compressor:
-        spec = self.codec_spec(direction)
+                         backend: str = "numpy",
+                         spec: Optional[CodecSpec] = None) -> Compressor:
+        if spec is None:
+            spec = self.codec_spec(direction)
         if self.codec is None:
             sp_cfg = self._sparsify_cfg()
             legacy_raw = 16 if not self._encoding() else None
@@ -181,9 +252,18 @@ class WireProtocol:
         even for a 10k+ client population (DESIGN.md §7). Uplink pipelines
         keep the numpy sparsify backend — the Pallas path batches all K
         clients per round in ONE fused pass via ``compress_uplinks_batch``
-        instead of K single-row kernel launches."""
+        instead of K single-row kernel launches.
+
+        The factory takes the client's NEGOTIATED spec string (None = the
+        configured uplink stack), so a pool serves a mixed-capability
+        population with per-client pipelines."""
         ab = ab_mask_from_spec(self.spec)       # shared, read-only
-        return CompressorPool(lambda: self._make_compressor("uplink", ab))
+
+        def factory(spec_str: Optional[str] = None) -> Compressor:
+            spec = CodecSpec.parse(spec_str) if spec_str else None
+            return self._make_compressor("uplink", ab, spec=spec)
+
+        return CompressorPool(factory)
 
     def make_downlink_compressor(self) -> Compressor:
         """The downlink broadcast pipeline inherits the protocol backend:

@@ -80,18 +80,27 @@ class FLoRAPolicy(AggregationPolicy):
     merges_into_base = True
     client_mixing = False
 
-    def __init__(self, server_vec_cap: Optional[int] = None):
+    def __init__(self, server_vec_cap: Optional[int] = None,
+                 product_fn=None):
         # insertion order doubles as LRU order: touching a client re-inserts
         # its entry, so the dict's head is always the least-recently-updated
         self.server_client_vecs: Dict[int, np.ndarray] = {}
         self.round_participants: List[Tuple[int, int]] = []  # (cid, n_samples)
         self.server_vec_cap = server_vec_cap
         self._last_samples: Dict[int, int] = {}
-        # merge-on-evict aggregate: evicted clients' accumulated LoRA vecs
-        # fold into ONE stacked pseudo-module (plus their sample mass), so
-        # capping retention loses no update mass — the long-lived server
-        # holds O(cap) vectors however many distinct clients ever upload
+        # merge-on-evict aggregate. With ``product_fn`` (maps a client's
+        # accumulated LoRA vector to its flattened merged scale*(a@b)
+        # product) eviction folds the EXACT stacking-aggregation quantity:
+        # sum_i n_i * product_i is conserved bit-for-bit against an uncapped
+        # server, because FLoRA's global update is a weighted sum of
+        # per-client products — summing products commutes with eviction,
+        # summing raw (a, b) vectors does not. Without ``product_fn`` the
+        # legacy conservative stacked fold of raw vectors applies. Either
+        # way the long-lived server holds O(cap) vectors however many
+        # distinct clients ever upload.
+        self.product_fn = product_fn
         self.evicted_vec: Optional[np.ndarray] = None
+        self.evicted_product: Optional[np.ndarray] = None
         self.evicted_samples: int = 0
         self.evicted_count: int = 0
 
@@ -138,18 +147,29 @@ class FLoRAPolicy(AggregationPolicy):
             if cid is None:          # every retained vec is still needed
                 return
             vec = self.server_client_vecs.pop(cid)
-            if self.evicted_vec is None:
-                self.evicted_vec = np.zeros_like(vec)
-            self.evicted_vec += vec
-            self.evicted_samples += self._last_samples.pop(cid, 0)
+            n_samples = self._last_samples.pop(cid, 0)
+            if self.product_fn is not None:
+                # exact scheme: fold the merged scale*(a@b) product,
+                # sample-weighted — the stacking aggregate is conserved
+                prod = np.asarray(self.product_fn(vec), np.float32)
+                if self.evicted_product is None:
+                    self.evicted_product = np.zeros_like(prod)
+                self.evicted_product += n_samples * prod
+            else:
+                # legacy conservative fold of the raw stacked vector
+                if self.evicted_vec is None:
+                    self.evicted_vec = np.zeros_like(vec)
+                self.evicted_vec += vec
+            self.evicted_samples += n_samples
             self.evicted_count += 1
 
     def cache_nbytes(self) -> int:
         """Bytes held in per-client server vectors (the quantity the cap
         bounds) plus the folded aggregate."""
         n = sum(v.nbytes for v in self.server_client_vecs.values())
-        if self.evicted_vec is not None:
-            n += self.evicted_vec.nbytes
+        for agg in (self.evicted_vec, self.evicted_product):
+            if agg is not None:
+                n += agg.nbytes
         return int(n)
 
 
@@ -158,11 +178,12 @@ POLICIES = {"fedit": FedITPolicy, "ffa_lora": FFALoRAPolicy,
 ALLOWED_METHODS = tuple(POLICIES)
 
 
-def make_policy(method: str,
-                server_vec_cap: Optional[int] = None) -> AggregationPolicy:
+def make_policy(method: str, server_vec_cap: Optional[int] = None,
+                product_fn=None) -> AggregationPolicy:
     if method not in POLICIES:
         raise ValueError(f"unknown method {method!r} "
                          f"(expected one of {sorted(POLICIES)})")
     if method == "flora":
-        return FLoRAPolicy(server_vec_cap=server_vec_cap)
+        return FLoRAPolicy(server_vec_cap=server_vec_cap,
+                           product_fn=product_fn)
     return POLICIES[method]()

@@ -67,6 +67,11 @@ class FedConfig:
     # FLoRA server-side per-client vector cache cap (merge-on-evict LRU);
     # None = unbounded (legacy). Must be >= clients_per_round.
     flora_server_vec_cap: Optional[int] = None
+    # per-client codec capability lists ({cid: [stage tokens]}; missing
+    # clients advertise every stage). The server negotiates each client to
+    # the cheapest mutually-supported uplink stack; clients advertising
+    # unknown/insufficient stages fall back to the default stack.
+    client_capabilities: Optional[Dict[int, List[str]]] = None
 
     def __post_init__(self):
         if self.method not in ALLOWED_METHODS:
@@ -95,6 +100,15 @@ class FedConfig:
                 f"flora_server_vec_cap ({self.flora_server_vec_cap}) must "
                 f"be >= clients_per_round ({self.clients_per_round}): the "
                 "current round's participants may never be evicted")
+        if self.client_capabilities is not None:
+            for cid, caps in self.client_capabilities.items():
+                if not isinstance(cid, int) \
+                        or not isinstance(caps, (list, tuple, set,
+                                                 frozenset)) \
+                        or not all(isinstance(c, str) for c in caps):
+                    raise ValueError(
+                        "client_capabilities must map int client ids to "
+                        f"lists of stage tokens (bad entry: {cid!r})")
 
 
 @dataclass
@@ -108,6 +122,28 @@ class RoundLog:
     download_params: int
     compute_s: float
     overhead_s: float
+
+
+def lora_product_vec(protocol: WireProtocol, lora_template: Params,
+                     cfg: ModelConfig, vec: np.ndarray) -> np.ndarray:
+    """The exact FLoRA merge contribution of one client's accumulated LoRA
+    vector: scale * (a @ b) per LoRA pair, flattened in pair order. This is
+    the quantity stacking aggregation conserves — summing PRODUCTS across
+    clients is exact, whereas summing (a, b) vectors and multiplying later
+    is not; the merge-on-evict LRU folds this instead of the raw vector."""
+    from repro.models.lora import flatten_lora
+    lora = protocol.vec_to_tree(vec, lora_template)
+    pairs = {p: np.asarray(l, np.float32) for p, l in flatten_lora(lora)}
+    scale = cfg.lora_alpha / cfg.lora_rank
+    out = []
+    for path, a in pairs.items():
+        if not path.endswith("/a"):
+            continue
+        b = pairs[path[:-2] + "/b"]
+        eq = "lir,lro->lio" if a.ndim == 3 else "ir,ro->io"
+        out.append((scale * np.einsum(eq, a, b)).reshape(-1))
+    return (np.concatenate(out).astype(np.float32) if out
+            else np.zeros(0, np.float32))
 
 
 def merge_lora_into_params(params: Params, lora: Params, cfg: ModelConfig,
@@ -178,8 +214,11 @@ class FederatedTrainer:
         self.protocol = WireProtocol.for_method(fed.method, self.lora0,
                                                 fed.eco, backend=fed.backend,
                                                 codec=fed.codec)
-        self.policy = make_policy(fed.method,
-                                  server_vec_cap=fed.flora_server_vec_cap)
+        self.policy = make_policy(
+            fed.method, server_vec_cap=fed.flora_server_vec_cap,
+            product_fn=((lambda v: lora_product_vec(self.protocol,
+                                                    self.lora0, cfg, v))
+                        if fed.method == "flora" else None))
         # round-robin coverage guard: warns when sustained low availability
         # starves a segment (the paper's Ns <= Nt requirement, §3.3)
         self.coverage = (SegmentCoverageMonitor(self.protocol.n_segments)
@@ -276,7 +315,11 @@ class FederatedTrainer:
             t_over = time.perf_counter()
             tp.on_broadcast(srv.begin_round(t))
             for cid in participants:
-                dl = srv.sync_client(int(cid), t)
+                # sync doubles as the negotiation handshake: the client
+                # advertises its codec capabilities, the DownloadMsg carries
+                # the server's (sticky) cheapest-mutual-stack decision
+                dl = srv.sync_client(int(cid), t,
+                                     capabilities=cl.capabilities_for(int(cid)))
                 tp.on_download(dl)
                 cl.apply_download(int(cid), dl)
 

@@ -48,6 +48,24 @@ def sparsify_residual(x, residual, k_frac: float, **kw):
     return s[0, :n], nr[0, :n]
 
 
+def _pad_batch(x, residual, ab_mask, valid, keep_a, keep_b, block):
+    """Shared (K, L) batch prep: pad to a block multiple, split the A/B
+    group masks, coerce dtypes."""
+    k, n = x.shape
+    block = min(block, n)
+    pad = (-n) % block
+    wide = ((0, 0), (0, pad))
+    xp = np.pad(np.asarray(x, np.float32), wide)
+    rp = np.pad(np.asarray(residual, np.float32), wide)
+    ab = np.asarray(ab_mask, bool)
+    va = np.asarray(valid, bool)
+    gm_a = np.pad(ab & va, wide)
+    gm_b = np.pad(~ab & va, wide)
+    ka = np.asarray(keep_a, np.int32)
+    kb = np.asarray(keep_b, np.int32)
+    return xp, rp, gm_a, gm_b, ka, kb, block
+
+
 def sparsify_topk_batch(x, residual, ab_mask, valid, keep_a, keep_b, **kw):
     """Batched (K, L) fused sparsify+residual for one round's K clients.
 
@@ -63,18 +81,9 @@ def sparsify_topk_batch(x, residual, ab_mask, valid, keep_a, keep_b, **kw):
     threshold pass uses the vectorized numpy selection instead, because
     XLA:CPU's sort is far slower than np.sort and the result is identical.
     """
-    k, n = x.shape
-    block = min(kw.pop("block", 1024), n)
-    pad = (-n) % block
-    wide = ((0, 0), (0, pad))
-    xp = np.pad(np.asarray(x, np.float32), wide)
-    rp = np.pad(np.asarray(residual, np.float32), wide)
-    ab = np.asarray(ab_mask, bool)
-    va = np.asarray(valid, bool)
-    gm_a = np.pad(ab & va, wide)
-    gm_b = np.pad(~ab & va, wide)
-    ka = np.asarray(keep_a, np.int32)
-    kb = np.asarray(keep_b, np.int32)
+    n = x.shape[1]
+    xp, rp, gm_a, gm_b, ka, kb, block = _pad_batch(
+        x, residual, ab_mask, valid, keep_a, keep_b, kw.pop("block", 1024))
     if not INTERPRET:
         s, nr, mask = _sp.topk_sparsify_batch(xp, rp, gm_a, gm_b, ka, kb,
                                               block=block, interpret=False,
@@ -87,6 +96,75 @@ def sparsify_topk_batch(x, residual, ab_mask, valid, keep_a, keep_b, **kw):
                                              interpret=True, **kw)
     return (np.asarray(s)[:, :n], np.asarray(nr)[:, :n],
             np.asarray(mask)[:, :n])
+
+
+def sparsify_quantize_batch(x, residual, ab_mask, valid, keep_a, keep_b,
+                            chunk: int = 2048, **kw):
+    """Batched (K, L) fused sparsify + int8-quantize: the device-resident
+    uplink codec. Same selection contract as ``sparsify_topk_batch``, but
+    the kept values come back as int8 codes + per-chunk fp32 scales — on a
+    real accelerator the fp32 values never cross the host boundary
+    (``kernels.sparsify.sparsify_quantize_batch`` is one jitted pass).
+
+    Returns (codes int8 (K, L) dense layout, scales (K, ceil(L/chunk)),
+    new_residual (K, L), mask (K, L) — the selection mask, nzmask (K, L) —
+    selected AND nonzero). The wire contract transmits nonzero sparse
+    values only, so compaction/positions/chunking run over ``nzmask`` —
+    identical codes/scales/billing to quantizing the nonzero compacted
+    values host-side with ``repro.core.quantize`` (deterministic mode),
+    which is exactly what the CPU-interpret fallback does.
+    """
+    n = x.shape[1]
+    n_chunks = -(-n // chunk)
+    xp, rp, gm_a, gm_b, ka, kb, block = _pad_batch(
+        x, residual, ab_mask, valid, keep_a, keep_b, kw.pop("block", 1024))
+    if not INTERPRET:
+        codes, scales, nr, mask, nz = _sp.sparsify_quantize_batch(
+            xp, rp, gm_a, gm_b, ka, kb, chunk=chunk, block=block,
+            interpret=False, **kw)
+        codes, scales, nr, mask, nz = (
+            np.asarray(codes), np.asarray(scales), np.asarray(nr),
+            np.asarray(mask), np.asarray(nz))
+    else:
+        from repro.core.quantize import QuantConfig, quantize
+        from repro.core.sparsify import batched_topk_mask
+        mag = np.abs(xp + rp)
+        mask = batched_topk_mask(mag, gm_a, ka) | batched_topk_mask(mag, gm_b, kb)
+        s, nr = _sp.sparsify_residual_masked(xp, rp, mask, block=block,
+                                             interpret=True, **kw)
+        s, nr = np.asarray(s), np.asarray(nr)
+        nz = mask & (s != 0)
+        qcfg = QuantConfig(bits=8, stochastic=False, per_chunk=chunk)
+        codes = np.zeros(s.shape, np.int8)
+        scales = np.ones((s.shape[0], -(-s.shape[1] // chunk)), np.float32)
+        for i in range(s.shape[0]):
+            kept = nz[i]
+            if kept.any():
+                c, sc = quantize(s[i][kept], qcfg)
+                codes[i][kept] = c.astype(np.int8)
+                scales[i, :sc.size] = sc
+    return (codes[:, :n], scales[:, :n_chunks], nr[:, :n], mask[:, :n],
+            nz[:, :n])
+
+
+def sparsify_quantize_grouped(x, residual, ab_mask, keep_a, keep_b,
+                              chunk: int = 2048, **kw):
+    """Single-vector fused sparsify + int8-quantize with per-group (A/B)
+    exact keep counts — the downlink/serial entry of the device-resident
+    codec (a one-row batch through ``sparsify_quantize_batch``).
+
+    ``x``/``residual``: (N,) float32; ``ab_mask``: (N,) bool. Returns
+    (codes int8 (N,) dense layout, scales (ceil(N/chunk),),
+    new_residual (N,), mask (N,), nzmask (N,)).
+    """
+    n = np.asarray(x).shape[0]
+    codes, scales, new_res, mask, nz = sparsify_quantize_batch(
+        np.asarray(x, np.float32)[None, :],
+        np.asarray(residual, np.float32)[None, :],
+        np.asarray(ab_mask, bool)[None, :], np.ones((1, n), bool),
+        np.array([keep_a], np.int32), np.array([keep_b], np.int32),
+        chunk=chunk, **kw)
+    return codes[0], scales[0], new_res[0], mask[0], nz[0]
 
 
 def sparsify_grouped(x, residual, ab_mask, keep_a, keep_b, **kw):

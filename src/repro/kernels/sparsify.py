@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.quantize import INT8_QMAX as _QMAX
+
 
 def _kernel(x_ref, r_ref, tau_ref, s_ref, nr_ref):
     x = x_ref[...].astype(jnp.float32)
@@ -48,6 +50,17 @@ def _masked_kernel(x_ref, r_ref, m_ref, s_ref, nr_ref):
     sparse = jnp.where(m_ref[...], offered, 0.0)
     s_ref[...] = sparse.astype(s_ref.dtype)
     nr_ref[...] = (offered - sparse).astype(nr_ref.dtype)
+
+
+def _quantize_kernel(s_ref, sc_ref, q_ref):
+    """Elementwise symmetric int8 quantization against a per-element scale
+    (the scale gather by chunk id runs in XLA outside the kernel; this pass
+    is the VPU-bound divide+round+clip). Matches repro.core.quantize's
+    deterministic mode exactly: y = rint(x / scale), clipped to
+    [-INT8_QMAX - 1, INT8_QMAX]."""
+    y = s_ref[...].astype(jnp.float32) / sc_ref[...].astype(jnp.float32)
+    q_ref[...] = jnp.clip(jnp.rint(y), -float(_QMAX) - 1.0,
+                          float(_QMAX)).astype(q_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -179,3 +192,75 @@ def topk_sparsify_batch(x: jnp.ndarray, residual: jnp.ndarray,
     sparse, new_res = sparsify_residual_masked(x, residual, mask,
                                                block=block, interpret=interpret)
     return sparse, new_res, mask
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_codes(sparse: jnp.ndarray, scale_elem: jnp.ndarray,
+                   *, block: int = 1024, interpret: bool = True):
+    """(K, L) elementwise int8 quantization pass (the second Pallas kernel
+    of the fused sparsify+quantize pipeline). ``scale_elem`` carries each
+    element's chunk scale, pre-gathered. Returns int8 codes, (K, L)."""
+    k, n = sparse.shape
+    block = min(block, n)
+    assert n % block == 0, (n, block)
+    grid = (k, n // block)
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((k, n), jnp.int8),
+        interpret=interpret,
+    )(sparse, scale_elem)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block", "interpret"))
+def sparsify_quantize_batch(x: jnp.ndarray, residual: jnp.ndarray,
+                            gm_a: jnp.ndarray, gm_b: jnp.ndarray,
+                            keep_a: jnp.ndarray, keep_b: jnp.ndarray,
+                            *, chunk: int = 2048, block: int = 1024,
+                            interpret: bool = True):
+    """The device-resident uplink codec: batched exact top-k selection, the
+    fused masked sparsify+residual kernel, then symmetric int8 quantization
+    with per-chunk scales — all in ONE jitted pass, so the selected values
+    cross the host boundary as int8 codes + fp32 scales, never as fp32.
+
+    The wire contract transmits NONZERO sparse values (a selected slot whose
+    offered value is exactly 0.0 — e.g. the all-zero first broadcast delta —
+    never reaches the wire: ``flatnonzero(sparse)`` is the position list),
+    so chunking follows ``repro.core.quantize`` over the nonzero-compacted
+    order: scales are the max |value| over consecutive runs of ``chunk``
+    NONZERO values, divided by 127, with all-zero chunks pinned to scale
+    1.0 — the codes are bit-identical to quantizing host-side.
+
+    Returns (codes int8 (K, L) dense layout, scales (K, ceil(L/chunk)),
+    new_residual (K, L), mask (K, L) — the SELECTION mask (drives k_eff
+    billing), nzmask (K, L) — selected AND nonzero (drives positions,
+    count, compaction)); compaction (``codes[nzmask]``) happens host-side
+    on int8 bytes.
+    """
+    k, n = x.shape
+    offered = x + residual
+    mask = grouped_topk_mask(offered, (gm_a, gm_b), (keep_a, keep_b))
+    sparse, new_res = sparsify_residual_masked(x, residual, mask,
+                                               block=block,
+                                               interpret=interpret)
+    nzmask = mask & (sparse != 0)
+    # per-(row, chunk-of-nonzero-compacted-order) max via one segment
+    # reduction
+    n_chunks = -(-n // chunk)
+    cpos = jnp.cumsum(nzmask, axis=1) - 1
+    cid = jnp.where(nzmask, cpos // chunk, 0).astype(jnp.int32)
+    row = jax.lax.broadcasted_iota(jnp.int32, (k, n), 0)
+    seg = (row * n_chunks + cid).ravel()
+    mag = jnp.where(nzmask, jnp.abs(sparse.astype(jnp.float32)), 0.0)
+    maxs = jax.ops.segment_max(mag.ravel(), seg,
+                               num_segments=k * n_chunks)
+    maxs = maxs.reshape(k, n_chunks)
+    scales = jnp.where(maxs > 0, maxs / float(_QMAX), 1.0) \
+        .astype(jnp.float32)
+    scale_elem = jnp.take_along_axis(scales, cid, axis=1)
+    codes = quantize_codes(sparse, scale_elem, block=block,
+                           interpret=interpret)
+    return codes, scales, new_res, mask, nzmask

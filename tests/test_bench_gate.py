@@ -1,0 +1,114 @@
+"""Benchmark regression gate: the CI tripwire must actually trip.
+
+The gate's whole value is failing PRs on injected regressions — these tests
+inject them: grown wire bytes (any growth fails), a >25% slowdown, a >25%
+rate drop, and a metric that silently disappeared. Within-budget noise and
+improvements must pass (improvements surface as refresh-the-baseline notes).
+"""
+import copy
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.bench_gate import compare, main  # noqa: E402
+
+BASE = {
+    "bench": "codec_sweep",
+    "metrics": {
+        "default/wire_bytes": {"value": 20750, "kind": "bytes"},
+        "default/encode_ms": {"value": 1.2, "kind": "time"},
+        "engine/speedup": {"value": 2.0, "kind": "rate"},
+        "parity": {"value": 1, "kind": "info"},
+    },
+}
+
+
+def _with(key, value):
+    cur = copy.deepcopy(BASE)
+    cur["metrics"][key]["value"] = value
+    return cur
+
+
+def test_identical_snapshots_pass():
+    failures, notes = compare(BASE, copy.deepcopy(BASE))
+    assert failures == [] and notes == []
+
+
+def test_injected_byte_growth_fails():
+    failures, _ = compare(BASE, _with("default/wire_bytes", 20751))
+    assert len(failures) == 1 and "wire bytes grew" in failures[0]
+
+
+def test_byte_improvement_passes_with_note():
+    failures, notes = compare(BASE, _with("default/wire_bytes", 20000))
+    assert failures == []
+    assert any("refresh the baseline" in n for n in notes)
+
+
+def test_injected_slowdown_fails():
+    """The acceptance demo: a >25% encode-time regression fails the gate."""
+    failures, _ = compare(BASE, _with("default/encode_ms", 1.2 * 1.5))
+    assert len(failures) == 1 and "time regressed" in failures[0]
+
+
+def test_slowdown_within_budget_passes():
+    failures, _ = compare(BASE, _with("default/encode_ms", 1.2 * 1.2))
+    assert failures == []
+
+
+def test_rate_drop_fails_but_info_is_never_gated():
+    failures, _ = compare(BASE, _with("engine/speedup", 1.0))
+    assert len(failures) == 1 and "rate regressed" in failures[0]
+    failures, _ = compare(BASE, _with("parity", 0))
+    assert failures == []
+
+
+def test_missing_metric_fails():
+    cur = copy.deepcopy(BASE)
+    del cur["metrics"]["default/wire_bytes"]
+    failures, _ = compare(BASE, cur)
+    assert len(failures) == 1 and "disappeared" in failures[0]
+
+
+def test_new_metric_noted_not_gated():
+    cur = copy.deepcopy(BASE)
+    cur["metrics"]["brand_new"] = {"value": 1, "kind": "bytes"}
+    failures, notes = compare(BASE, cur)
+    assert failures == []
+    assert any("new metric" in n for n in notes)
+
+
+def test_tolerance_override():
+    failures, _ = compare(BASE, _with("default/encode_ms", 1.2 * 1.5),
+                          tolerance=0.75)
+    assert failures == []
+
+
+@pytest.mark.parametrize("inject,code", [(None, 0), (30000, 1)])
+def test_main_end_to_end(tmp_path, inject, code):
+    """The CLI the workflow runs: exit 0 on parity, 1 on regression, and a
+    missing current snapshot also fails."""
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir()
+    cdir.mkdir()
+    (bdir / "BENCH_codec_sweep.json").write_text(json.dumps(BASE))
+    cur = BASE if inject is None else _with("default/wire_bytes", inject)
+    (cdir / "BENCH_codec_sweep.json").write_text(json.dumps(cur))
+    assert main(["--baseline", str(bdir), "--current", str(cdir)]) == code
+
+
+def test_main_missing_snapshot_fails(tmp_path):
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir()
+    cdir.mkdir()
+    (bdir / "BENCH_codec_sweep.json").write_text(json.dumps(BASE))
+    assert main(["--baseline", str(bdir), "--current", str(cdir)]) == 1
+
+
+def test_main_no_baselines_is_an_error(tmp_path):
+    assert main(["--baseline", str(tmp_path), "--current",
+                 str(tmp_path)]) == 2

@@ -223,6 +223,88 @@ def test_flora_lru_never_evicts_current_round_participants():
     assert pol.evicted_count == 3
 
 
+def _toy_product_fn(size=64, ra=4, rk=4):
+    """LoRA-pair-shaped product for a policy-level test: the first ra*rk
+    entries are A (ra x rk), the next rk*(size//rk - ra)... keep it simple:
+    A = vec[:16].reshape(4, 4), B = vec[16:48].reshape(4, 8), product =
+    A @ B flattened — bilinear, like the real scale*(a@b) merge."""
+    def fn(vec):
+        a = vec[:16].reshape(4, 4)
+        b = vec[16:48].reshape(4, 8)
+        return (a @ b).reshape(-1).astype(np.float32)
+    return fn
+
+
+def test_flora_exact_merge_on_evict_conserves_product():
+    """ISSUE 5 / ROADMAP fix: eviction folds the merged a@b PRODUCT, not
+    the raw stacked vector. The stacking-aggregation invariant — the
+    sample-weighted sum of per-client products — must match an uncapped
+    server exactly; the legacy vector fold provably cannot (the product of
+    a sum is not the sum of products)."""
+    from repro.fed.strategies import FLoRAPolicy
+
+    size, ns = 64, 2
+    fn = _toy_product_fn()
+    capped = FLoRAPolicy(server_vec_cap=4, product_fn=fn)
+    legacy = FLoRAPolicy(server_vec_cap=4)          # old stacked fold
+    free = FLoRAPolicy()
+    gv = np.zeros(size, np.float32)
+    rng = np.random.default_rng(0)
+    all_updates = {}
+    for t in range(10):
+        cids = [2 * t, 2 * t + 1]
+        ups = _flora_updates(t, cids, size, ns, val=float(rng.normal()))
+        for pol in (capped, legacy, free):
+            pol.aggregate(t, [type(u)(u.client_id, u.round_t, u.seg_id,
+                                      u.values.copy(), u.num_samples,
+                                      u.local_loss) for u in ups], gv, ns)
+        all_updates[t] = cids
+    assert capped.evicted_count > 0
+    assert capped.evicted_vec is None               # no legacy fold anymore
+
+    def total_product(pol):
+        tot = np.zeros(32, np.float32)
+        for cid, vec in pol.server_client_vecs.items():
+            tot += pol._last_samples[cid] * fn(vec)
+        if pol.evicted_product is not None:
+            tot += pol.evicted_product
+        return tot
+
+    exact = total_product(free)                     # ground truth: no evict
+    np.testing.assert_allclose(total_product(capped), exact,
+                               rtol=1e-5, atol=1e-5)
+    # the legacy fold loses the product structure: applying the product to
+    # the folded vector does NOT reconstruct the per-client product sum
+    legacy_total = np.zeros(32, np.float32)
+    for cid, vec in legacy.server_client_vecs.items():
+        legacy_total += legacy._last_samples[cid] * fn(vec)
+    # (weight the fold by its average sample mass — the best a vector fold
+    # can do)
+    legacy_total += (legacy.evicted_samples / max(legacy.evicted_count, 1)
+                     ) * fn(legacy.evicted_vec)
+    assert not np.allclose(legacy_total, exact, rtol=1e-3)
+
+
+def test_flora_trainer_wires_exact_product_fn():
+    """The trainer supplies the policy a real product_fn (scale * a@b over
+    the protocol's LoRA pairs) — bilinear in the vector halves and shaped
+    like the merged delta."""
+    tr = _make_trainer("flora", "batched", flora_server_vec_cap=4)
+    fn = tr.policy.product_fn
+    assert fn is not None
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal(tr.protocol.size).astype(np.float32)
+    p = fn(v)
+    assert p.dtype == np.float32 and p.size > 0 and np.isfinite(p).all()
+    # bilinearity in the A half: doubling A (with B fixed at v's B) adds
+    # exactly one more product of the original
+    from repro.core.sparsify import ab_mask_from_spec
+    ab = ab_mask_from_spec(tr.protocol.spec)
+    v2 = v.copy()
+    v2[ab] *= 2.0
+    np.testing.assert_allclose(fn(v2), 2.0 * p, rtol=1e-5, atol=1e-6)
+
+
 def test_flora_lru_state_survives_checkpoint(tmp_path):
     """LRU (insertion) order, per-client sample weights, and the folded
     aggregate round-trip through save/load — a resumed capped server must

@@ -140,6 +140,105 @@ def test_grouped_topk_batch_matches_per_client_numpy():
     assert int(mask.sum()) == int(ka.sum() + kb.sum())
 
 
+def _quant_batch_inputs(seed=0, K=5, L=700, valid_to=650):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((K, L)) ** 3).astype(np.float32)
+    r = (rng.standard_normal((K, L)) * 0.1).astype(np.float32)
+    ab = rng.random((K, L)) < 0.5
+    valid = np.ones((K, L), bool)
+    valid[:, valid_to:] = False
+    ka = rng.integers(1, 150, K).astype(np.int32)
+    kb = rng.integers(1, 150, K).astype(np.int32)
+    return x, r, ab, valid, ka, kb
+
+
+@pytest.mark.parametrize("chunk", [96, 2048])
+def test_sparsify_quantize_device_path_matches_numpy(chunk):
+    """The jitted device pipeline (selection + fused masked kernel +
+    segment-max scales + Pallas quantize kernel, interpret=True) produces
+    BIT-identical codes, scales, residuals and masks to the CPU fallback
+    that quantizes the compacted values with repro.core.quantize — the
+    ledger-parity guarantee behind the device-resident uplink."""
+    from repro.kernels import sparsify as sp
+    x, r, ab, valid, ka, kb = _quant_batch_inputs()
+    K, L = x.shape
+    codes_np, scales_np, nr_np, mask_np, nz_np = ops.sparsify_quantize_batch(
+        x, r, ab, valid, ka, kb, chunk=chunk)
+    block = min(1024, L)
+    pad = (-L) % block
+    wide = ((0, 0), (0, pad))
+    cj, sj, nrj, mj, nzj = sp.sparsify_quantize_batch(
+        jnp.asarray(np.pad(x, wide)), jnp.asarray(np.pad(r, wide)),
+        jnp.asarray(np.pad(ab & valid, wide)),
+        jnp.asarray(np.pad(~ab & valid, wide)),
+        jnp.asarray(ka), jnp.asarray(kb), chunk=chunk, block=block,
+        interpret=True)
+    cj = np.asarray(cj)[:, :L]
+    mj = np.asarray(mj)[:, :L]
+    nzj = np.asarray(nzj)[:, :L]
+    np.testing.assert_array_equal(mask_np, mj)
+    np.testing.assert_array_equal(nz_np, nzj)
+    np.testing.assert_array_equal(nr_np, np.asarray(nrj)[:, :L])
+    np.testing.assert_array_equal(codes_np[nz_np], cj[nzj])
+    for i in range(K):
+        nch = -(-int(nz_np[i].sum()) // chunk)
+        np.testing.assert_array_equal(scales_np[i, :nch],
+                                      np.asarray(sj)[i, :nch])
+
+
+def test_sparsify_quantize_roundtrip_error_bounded():
+    """Dequantizing the fused kernel's codes reconstructs the sparse values
+    to within half a quantization step — and the residual still conserves
+    the untransmitted mass exactly (quantization error is wire-only, never
+    fed back)."""
+    from repro.core.quantize import QuantConfig, dequantize
+    chunk = 128
+    x, r, ab, valid, ka, kb = _quant_batch_inputs(seed=3)
+    offered = x + r
+    codes, scales, new_res, mask, nz = ops.sparsify_quantize_batch(
+        x, r.copy(), ab, valid, ka, kb, chunk=chunk)
+    qcfg = QuantConfig(bits=8, stochastic=False, per_chunk=chunk)
+    for i in range(x.shape[0]):
+        kept = nz[i]
+        nch = -(-int(kept.sum()) // chunk)
+        deq = dequantize(codes[i][kept].astype(np.int32),
+                         scales[i, :nch], qcfg)
+        step = np.abs(offered[i][kept]).max() / 127.0
+        assert np.abs(deq - offered[i][kept]).max() <= step + 1e-7
+        # Eq. 6 conservation against the EXACT sparse values
+        np.testing.assert_allclose(new_res[i][valid[i]],
+                                   np.where(mask[i], 0.0, offered[i])[valid[i]],
+                                   atol=1e-6)
+
+
+def test_sparsify_quantize_grouped_matches_batch_row():
+    x, r, ab, valid, ka, kb = _quant_batch_inputs(seed=5, valid_to=700)
+    codes_b, scales_b, nr_b, mask_b, nz_b = ops.sparsify_quantize_batch(
+        x, r.copy(), ab, valid, ka, kb, chunk=64)
+    c0, s0, nr0, m0, nz0 = ops.sparsify_quantize_grouped(
+        x[0], r[0].copy(), ab[0], int(ka[0]), int(kb[0]), chunk=64)
+    np.testing.assert_array_equal(c0, codes_b[0])
+    np.testing.assert_array_equal(s0, scales_b[0])
+    np.testing.assert_array_equal(nr0, nr_b[0])
+    np.testing.assert_array_equal(m0, mask_b[0])
+    np.testing.assert_array_equal(nz0, nz_b[0])
+
+
+def test_sparsify_quantize_zero_delta_transmits_nothing():
+    """An all-zero offered slice (the first broadcast) selects keep_count
+    slots but transmits ZERO values — the nonzero mask is empty, matching
+    the numpy path's flatnonzero(sparse) wire contract."""
+    K, L = 2, 256
+    z = np.zeros((K, L), np.float32)
+    ab = np.tile(np.arange(L) % 2 == 0, (K, 1))
+    codes, scales, nr, mask, nz = ops.sparsify_quantize_batch(
+        z, z.copy(), ab, np.ones((K, L), bool),
+        np.full(K, 100, np.int32), np.full(K, 50, np.int32), chunk=64)
+    assert int(mask.sum()) == K * 150       # selection still exact top-k
+    assert int(nz.sum()) == 0               # but nothing reaches the wire
+    assert not codes.any() and not nr.any()
+
+
 @pytest.mark.parametrize("b,s,hkv,nrep,d", [(2, 512, 4, 4, 64), (1, 1024, 2, 8, 128),
                                             (3, 256, 1, 1, 64), (2, 512, 8, 2, 32)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

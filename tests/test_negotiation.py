@@ -1,0 +1,188 @@
+"""Per-client codec negotiation: capability advertisement -> cheapest
+mutually-supported stack, mixed-population billing, foreign-packet safety,
+and checkpoint persistence of the negotiation table (format 3)."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core.codec import (ALL_CAPABILITIES, CodecConfig, CodecSpec,
+                              build_pipeline, decode_packet)
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.protocol import CodecNegotiator
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+
+ANS_UPLINK = CodecConfig(uplink=CodecSpec(quantize="int8", entropy="ans"))
+BASELINE_CAPS = ["topk", "quantize", "golomb", "rawpos"]   # no int8/ans/zlib
+
+
+def _make_trainer(codec=None, caps=None, engine="batched", **kw):
+    fed = FedConfig(method="fedit", n_clients=8, clients_per_round=4,
+                    rounds=3, local_steps=2, local_batch=4, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+                    pretrain_steps=5, engine=engine, codec=codec,
+                    client_capabilities=caps, **kw)
+    return FederatedTrainer(CFG, fed, TC)
+
+
+# ---------------------------------------------------------------------------
+# the negotiator itself
+# ---------------------------------------------------------------------------
+
+def test_negotiator_full_caps_resolve_primary():
+    neg = CodecNegotiator(CodecSpec(quantize="int8", entropy="ans"))
+    # primary wins outright for a fully-capable client
+    assert neg.resolve(ALL_CAPABILITIES).tag == "topk[adaptive]+int8+golomb+ans"
+    assert neg.resolve(None) is neg.candidates[0]   # legacy client
+
+
+def test_negotiator_fallback_chain_cheapest_first():
+    neg = CodecNegotiator(CodecSpec(quantize="int8", entropy="ans"))
+    tags = [s.tag for s in neg.candidates]
+    # primary, entropy stripped, int8 stripped (== the default stack)
+    assert tags == ["topk[adaptive]+int8+golomb+ans",
+                    "topk[adaptive]+int8+golomb",
+                    "topk[adaptive]+fp16+golomb"]
+    # a client without ans support gets the int8 stack
+    got = neg.resolve({"topk", "quantize", "golomb", "int8"})
+    assert got.tag == "topk[adaptive]+int8+golomb"
+    # a client without int8 gets the mandatory default
+    got = neg.resolve(set(BASELINE_CAPS))
+    assert got.tag == "topk[adaptive]+fp16+golomb"
+
+
+def test_unknown_stages_fall_back_to_default_stack():
+    """A client advertising only stages this build has never heard of still
+    resolves — to the default stack (the protocol's mandatory baseline)."""
+    neg = CodecNegotiator(CodecSpec(quantize="int8", entropy="ans"))
+    got = neg.resolve({"huffman", "lz4", "turbojpeg"})
+    assert got == neg.default
+    assert got.tag == "topk[adaptive]+fp16+golomb"
+
+
+def test_spec_str_roundtrips_through_parse():
+    for spec in (CodecSpec(), CodecSpec(quantize="int8", entropy="ans"),
+                 CodecSpec(sparsify="fixed", k=0.3, positions="raw",
+                           entropy="zlib"),
+                 CodecSpec(quantize="int8", quant_chunk=512),
+                 CodecSpec(entropy="zlib", zlib_level=9)):
+        assert CodecSpec.parse(spec.spec_str()) == spec
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: mixed population through the trainer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["batched", "serial"])
+def test_mixed_population_bills_per_client_stacks(engine):
+    """Half the population lacks int8/ans support: the server negotiates
+    them onto the default stack, the other half onto int8+ans, and the
+    ledger's per-codec breakdown shows BOTH stacks billing real bytes that
+    sum to the upload total."""
+    caps = {cid: list(BASELINE_CAPS) for cid in range(0, 8, 2)}
+    tr = _make_trainer(codec=ANS_UPLINK, caps=caps, engine=engine)
+    tr.run()
+    led = tr.server.ledger
+    by_codec = led.upload_by_codec
+    assert set(by_codec) == {"topk[adaptive]+fp16+golomb",
+                             "topk[adaptive]+int8+golomb+ans"}
+    assert all(v > 0 for v in by_codec.values())
+    assert sum(by_codec.values()) == led.upload_bytes
+    # the negotiation table records every participant, split as configured
+    table = tr.server.codec_table
+    for cid, spec_str in table.items():
+        want = "adaptive+fp16+golomb" if cid in caps \
+            else "adaptive+int8+golomb+ans"
+        assert spec_str == want, (cid, spec_str)
+
+
+def test_negotiation_changes_nothing_for_full_capability_population():
+    """Everyone supports everything -> everyone resolves to the configured
+    uplink stack; bytes match a run without any capability config."""
+    a = _make_trainer(codec=ANS_UPLINK)
+    b = _make_trainer(codec=ANS_UPLINK,
+                      caps={cid: sorted(ALL_CAPABILITIES)
+                            for cid in range(8)})
+    a.run()
+    b.run()
+    assert a.server.ledger.upload_bytes == b.server.ledger.upload_bytes
+    assert list(a.server.ledger.upload_by_codec) \
+        == ["topk[adaptive]+int8+golomb+ans"]
+    np.testing.assert_array_equal(a.server.global_vec, b.server.global_vec)
+
+
+def test_restricted_clients_cost_more_bytes():
+    """Clients forced off int8+ans onto the default stack upload more bytes
+    than a fully-capable population — negotiation is what keeps the cheap
+    stack for everyone who can speak it."""
+    full = _make_trainer(codec=ANS_UPLINK)
+    capped = _make_trainer(codec=ANS_UPLINK,
+                           caps={cid: list(BASELINE_CAPS)
+                                 for cid in range(8)})
+    full.run()
+    capped.run()
+    assert capped.server.ledger.upload_bytes \
+        > full.server.ledger.upload_bytes
+
+
+# ---------------------------------------------------------------------------
+# foreign packets
+# ---------------------------------------------------------------------------
+
+def test_decode_packet_foreign_stack_raises_cleanly():
+    """A packet whose recorded stack names a stage this endpoint does not
+    implement must raise a clear ValueError, not a KeyError deep in the
+    decode loop."""
+    ab = np.arange(2000) % 2 == 0
+    pipe = build_pipeline(CodecSpec(), SparsifyConfig(), ab)
+    pipe.observe_loss(1.0)
+    pkt = pipe.encode(np.random.default_rng(0)
+                      .standard_normal(2000).astype(np.float32), 0)
+    pkt.stack = ["topk", "quantize", "huffman9000"]
+    pkt.codec = "topk[adaptive]+fp16+huffman9000"
+    with pytest.raises(ValueError, match="huffman9000"):
+        decode_packet(pkt)
+    with pytest.raises(ValueError, match="unknown codec stage"):
+        decode_packet(pkt)
+
+
+# ---------------------------------------------------------------------------
+# persistence (checkpoint format 3)
+# ---------------------------------------------------------------------------
+
+def test_negotiation_table_survives_checkpoint(tmp_path):
+    """Save mid-run, resume in a fresh trainer: the table is restored, the
+    restored clients keep their negotiated pipelines, and the resumed run's
+    traffic is bitwise identical to an uninterrupted one."""
+    caps = {cid: list(BASELINE_CAPS) for cid in range(0, 8, 2)}
+
+    full = _make_trainer(codec=ANS_UPLINK, caps=caps)
+    full.run()
+
+    first = _make_trainer(codec=ANS_UPLINK, caps=caps)
+    first.run(rounds=2)
+    p = str(tmp_path / "neg.ckpt")
+    ckpt.save_fed_state(p, first)
+
+    resumed = _make_trainer(codec=ANS_UPLINK, caps=caps)
+    assert ckpt.load_fed_state(p, resumed) == 2
+    assert resumed.server.codec_table == first.server.codec_table
+    assert len(resumed.server.codec_table) > 0
+    resumed.run()
+
+    led_a, led_b = full.server.ledger, resumed.server.ledger
+    assert led_a.upload_bytes == led_b.upload_bytes
+    assert led_a.upload_by_codec == led_b.upload_by_codec
+    np.testing.assert_array_equal(full.server.global_vec,
+                                  resumed.server.global_vec)
+
+
+def test_config_validation_rejects_bad_capability_maps():
+    for bad in ({"0": ["topk"]}, {0: "topk"}, {0: [1, 2]}):
+        with pytest.raises(ValueError, match="client_capabilities"):
+            FedConfig(client_capabilities=bad)
