@@ -7,6 +7,11 @@ The contract per metric kind (see ``benchmarks.common.BENCH_KINDS``):
     bytes are deterministic, so a single extra byte is a real regression
     (and the headline claim of this repo).
   * ``time`` — lower is better; fails when current > (1 + tol) * baseline.
+    Millisecond-scale metrics (``*_ms`` keys) additionally get an absolute
+    slack (default 1 ms, $BENCH_GATE_MS_SLACK): scheduler jitter on a
+    2-core shared runner exceeds 25% of a sub-ms timing, so a relative
+    budget alone flaps, while any real per-packet regression (an
+    accidental O(n^2), a dropped fast path) shows up as multiple ms.
   * ``rate`` — higher is better; fails when current < baseline / (1 + tol).
   * ``info`` — recorded, never gated.
 
@@ -35,10 +40,12 @@ import sys
 from typing import Dict, List, Tuple
 
 DEFAULT_TOLERANCE = 0.25
+DEFAULT_MS_SLACK = 1.0
 
 
 def compare(baseline: dict, current: dict,
-            tolerance: float = DEFAULT_TOLERANCE
+            tolerance: float = DEFAULT_TOLERANCE,
+            ms_slack: float = DEFAULT_MS_SLACK
             ) -> Tuple[List[str], List[str]]:
     """Diff one benchmark's snapshots. Returns (failures, notes) — failure
     strings are human-readable verdicts; empty failures = gate passes."""
@@ -67,10 +74,12 @@ def compare(baseline: dict, current: dict,
                              f"{bv:.0f} -> {cv:.0f} (refresh the baseline "
                              "to lock in the win)")
         elif kind == "time":
-            if cv > bv * (1.0 + tolerance):
+            slack = ms_slack if key.endswith("_ms") else 0.0
+            if cv > bv * (1.0 + tolerance) + slack:
                 failures.append(
                     f"{name}/{key}: time regressed {bv:.4g} -> {cv:.4g} "
-                    f"(>{tolerance:.0%} over baseline)")
+                    f"(>{tolerance:.0%} over baseline"
+                    + (f" + {slack:g} ms slack)" if slack else ")"))
         elif kind == "rate":
             if cv < bv / (1.0 + tolerance):
                 failures.append(
@@ -97,6 +106,12 @@ def main(argv=None) -> int:
                                                  DEFAULT_TOLERANCE)),
                     help="relative budget for time/rate metrics "
                          f"(default {DEFAULT_TOLERANCE})")
+    ap.add_argument("--ms-slack", type=float,
+                    default=float(os.environ.get("BENCH_GATE_MS_SLACK",
+                                                 DEFAULT_MS_SLACK)),
+                    help="absolute slack for *_ms time metrics, in ms "
+                         f"(default {DEFAULT_MS_SLACK}; runner jitter "
+                         "dwarfs a relative budget at sub-ms scale)")
     args = ap.parse_args(argv)
 
     base_files = sorted(glob.glob(os.path.join(args.baseline,
@@ -112,7 +127,8 @@ def main(argv=None) -> int:
             all_failures.append(f"{fname}: baseline exists but the current "
                                 "run produced no snapshot")
             continue
-        failures, notes = compare(load(bpath), load(cpath), args.tolerance)
+        failures, notes = compare(load(bpath), load(cpath), args.tolerance,
+                                  ms_slack=args.ms_slack)
         for msg in notes:
             print(f"bench_gate NOTE  {msg}")
         for msg in failures:

@@ -35,6 +35,12 @@ SPECS = [
     ("adaptive+int8+golomb+zlib", CodecSpec(quantize="int8",
                                             entropy="zlib")),
     ("adaptive+int8+golomb+ans", CodecSpec(quantize="int8", entropy="ans")),
+    # small-chunk pair: per-chunk fp32 scales become a material fraction of
+    # the wire, exercising the ANS SCALES stream (large chunks bypass it)
+    ("adaptive+int8c16+golomb", CodecSpec(quantize="int8", quant_chunk=16)),
+    ("adaptive+int8c16+golomb+ans", CodecSpec(quantize="int8",
+                                              quant_chunk=16,
+                                              entropy="ans")),
     ("fixed0.1+fp16+golomb", CodecSpec(sparsify="fixed", k=0.1)),
 ]
 
@@ -54,20 +60,28 @@ def _sweep_one(spec: CodecSpec, updates, losses, ab_mask):
     wire = 0
     enc_s, dec_s = [], []
     value_bytes = 0          # values (+ entropy model) sections only
+    scales_bytes = 0         # scales (+ entropy model) sections only
     zlib_value_bytes = 0     # what zlib would cost on the same value bytes
+    decoded = []
     for t, (u, loss) in enumerate(zip(updates, losses)):
         pipe.observe_loss(loss)
         t0 = time.perf_counter()
         pkt = pipe.encode(u, t)
         enc_s.append(time.perf_counter() - t0)
+        pkt.local.clear()        # force the wire path, not the shortcut
         t0 = time.perf_counter()
         out = decode_packet(pkt)
         dec_s.append(time.perf_counter() - t0)
+        decoded.append(out)
         wire += pkt.wire_bytes
         for sec_name in ("values", "ans_model"):
             sec = pkt.sections.get(sec_name)
             if sec is not None:
                 value_bytes += (sec.wire_bits + 7) // 8
+        for sec_name in ("scales", "ans_scales_model"):
+            sec = pkt.sections.get(sec_name)
+            if sec is not None:
+                scales_bytes += (sec.wire_bits + 7) // 8
         vals = pkt.sections.get("values")
         if vals is not None and vals.data.dtype == np.int8:
             zlib_value_bytes += len(zlib.compress(vals.data.tobytes(), 6))
@@ -77,7 +91,8 @@ def _sweep_one(spec: CodecSpec, updates, losses, ab_mask):
     # polluted by first-call warmup and GC pauses, which on a 2-core CI
     # box swing 2x run-to-run and would flap the 25% regression gate
     return dict(pipeline=pipe, wire_bytes=wire, dense_bytes=dense,
-                value_bytes=value_bytes, zlib_value_bytes=zlib_value_bytes,
+                value_bytes=value_bytes, scales_bytes=scales_bytes,
+                zlib_value_bytes=zlib_value_bytes, decoded=decoded,
                 encode_ms=1e3 * min(enc_s),
                 decode_ms=1e3 * min(dec_s))
 
@@ -121,6 +136,8 @@ def main(quick: bool = False) -> dict:
         metrics[f"{name}/decode_ms"] = (round(r["decode_ms"], 3), "time")
     metrics["ans_value_bytes"] = (results["adaptive+int8+golomb+ans"]
                                   ["value_bytes"], "bytes")
+    metrics["ans_scales_bytes"] = (results["adaptive+int8c16+golomb+ans"]
+                                   ["scales_bytes"], "bytes")
     snapshot("codec_sweep", metrics)
 
     # ---- structural invariants (the CI gate) ----
@@ -144,6 +161,19 @@ def main(quick: bool = False) -> dict:
         ("ANS must not lose to zlib on quantized value codes: "
          f"{ans['value_bytes']} vs {results['adaptive+int8+golomb']['zlib_value_bytes']}")
     assert ans["wire_bytes"] < results["adaptive+int8+golomb"]["wire_bytes"]
+    # 3c. the ANS SCALES stream engages on small-chunk packets (where the
+    #     per-chunk fp32 scales dominate), shrinks both the scales section
+    #     and the whole packet, and the decode is bitwise identical to the
+    #     plain int8c16 stack over the entire stream
+    c16_ans = results["adaptive+int8c16+golomb+ans"]
+    c16_raw = results["adaptive+int8c16+golomb"]
+    assert c16_ans["scales_bytes"] < c16_raw["scales_bytes"], \
+        ("ANS scales stream must shrink the fp32 scales section: "
+         f"{c16_ans['scales_bytes']} vs {c16_raw['scales_bytes']}")
+    assert c16_ans["wire_bytes"] < c16_raw["wire_bytes"]
+    for a, b in zip(c16_ans["decoded"], c16_raw["decoded"]):
+        assert np.array_equal(a, b), \
+            "ANS scales decode must round-trip bitwise vs the plain stack"
     # 4. default stack byte-equal to the legacy Compressor wire format
     assert legacy_bytes == pipe_bytes, (legacy_bytes, pipe_bytes)
     emit("codec_sweep/default_vs_legacy_parity", "ok",

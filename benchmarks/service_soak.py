@@ -1,0 +1,175 @@
+"""Service-mode churn soak: dynamic membership must not leak client state.
+
+The continuous federation service admits and retires clients mid-run
+(JoinMsg/LeaveMsg, DESIGN.md §10). Every leave must drop the client's
+O(active) state — its COW view base (once unshared), locally-trained
+vector, and uplink compressor residuals — while the O(1) server-side
+billing cursors persist so a rejoin pays staleness for the gap. This soak
+drives a deterministic churn schedule (joins of brand-new ids, leaves,
+rejoins) through ``FederationService(dynamic=True)`` with an M-of-K round
+close policy (stragglers stay in flight across churn) and pins, after
+EVERY leave wave:
+
+  * ``CowViewStore``: no view entry for a non-active id, refcount table
+    consistent (``set(_refs) == set(_bases)``, refs sum == #views);
+  * ``CompressorPool``: no residual shards for a non-active id (negotiated
+    specs stay sticky by design);
+  * ``ClientRuntime.local_vecs``: no vector for a non-active id;
+  * the adapter publisher versions every completed round.
+
+Rows: ``service_soak/{rounds,final_active,state_MB,deviations,versions}``.
+``--quick`` is the CI fast-gate smoke (8 rounds, 6-client seed population);
+the full profile runs 40 rounds over a 20-client population with
+rng-derived churn.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import MODEL, emit, get_config, snapshot
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.protocol import JoinMsg, LeaveMsg
+from repro.fed.service import AdapterPublisher, FederationService, \
+    ServiceConfig
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+K = 3
+
+
+def _fed(n_clients: int, rounds: int) -> FedConfig:
+    return FedConfig(
+        method="fedit",
+        n_clients=n_clients,
+        clients_per_round=K,
+        rounds=rounds,
+        local_steps=1,
+        local_batch=2,
+        lr=3e-3,
+        eco=EcoLoRAConfig(n_segments=4, sparsify=SparsifyConfig()),
+        pretrain_steps=2,
+        eval_every=1_000_000,          # isolate churn cost from eval
+        engine="batched",
+        backend="numpy",
+        state_store="cow",
+    )
+
+
+def _assert_no_leaks(tr, active) -> None:
+    """The no-leak invariant: every per-client O(vector) structure holds
+    entries ONLY for currently-active ids, and the COW refcount table is
+    internally consistent."""
+    active = set(int(c) for c in active)
+    vs = tr.clients.view_store
+    leaked = set(vs._vers) - active
+    assert not leaked, f"CowViewStore leaked views for {sorted(leaked)}"
+    assert set(vs._refs) == set(vs._bases), \
+        (sorted(vs._refs), sorted(vs._bases))
+    assert sum(vs._refs.values()) == len(vs._vers), \
+        (dict(vs._refs), dict(vs._vers))
+    leaked = set(tr.clients.up_comps._comps) - active
+    assert not leaked, f"CompressorPool leaked residuals for {sorted(leaked)}"
+    leaked = set(tr.clients.local_vecs) - active
+    assert not leaked, f"local_vecs leaked for {sorted(leaked)}"
+
+
+def _quick_schedule(n0: int):
+    """Deterministic churn: {after_round: [(op, cid), ...]}. Brand-new ids,
+    a mid-run leave+rejoin pair, and a final wave retiring every non-seed
+    id."""
+    return {
+        1: [("join", n0), ("join", n0 + 1)],
+        2: [("leave", 1), ("leave", 2)],
+        3: [("join", n0 + 2), ("leave", n0)],
+        4: [("join", 1)],                      # rejoin: pays staleness
+        5: [("leave", n0 + 1), ("leave", n0 + 2)],
+    }
+
+
+def _full_schedule(n0: int, rounds: int):
+    """rng-derived churn, still deterministic: every other round a join of
+    a fresh id and a leave of the longest-active non-seed member."""
+    rng = np.random.default_rng(0xC0FFEE)
+    sched, next_id, joined = {}, n0, []
+    for r in range(1, rounds - 1):
+        ops = []
+        if r % 2 == 1:
+            ops.append(("join", next_id))
+            joined.append(next_id)
+            next_id += 1
+        if r % 3 == 2 and joined:
+            ops.append(("leave", joined.pop(0)))
+        if r % 5 == 4:
+            seed_cid = int(rng.integers(1, n0))
+            ops.append(("leave", seed_cid))
+            sched.setdefault(r + 1, []).append(("join", seed_cid))
+        if ops:
+            sched.setdefault(r, []).extend(ops)
+    sched.setdefault(rounds - 1, []).extend(
+        ("leave", c) for c in joined)
+    return sched
+
+
+def main(quick: bool = False) -> dict:
+    n0 = 6 if quick else 20
+    rounds = 8 if quick else 40
+    cfg = get_config(MODEL).reduced()
+    tc = TaskConfig(vocab_size=256, seq_len=8, n_samples=256, seed=0)
+    tr = FederatedTrainer(cfg, _fed(n0, rounds), tc)
+    pub = AdapterPublisher()
+    svc = FederationService(tr, ServiceConfig(min_uploads=K - 1),
+                            publisher=pub, dynamic=True)
+    sched = _quick_schedule(n0) if quick else _full_schedule(n0, rounds)
+
+    leaves = joins = rejoins = 0
+    for t in range(rounds):
+        svc.run_round(final=(t == rounds - 1))
+        for op, cid in sched.get(t, []):
+            if op == "join":
+                ack = svc.join(JoinMsg(cid, t))
+                joins += 1
+                rejoins += int(ack.rejoined)
+            else:
+                svc.leave(LeaveMsg(cid, t))
+                leaves += 1
+        # the soak invariant: checked after EVERY churn wave, not just at
+        # the end, so a leak is attributed to the round that caused it
+        _assert_no_leaks(tr, svc.membership.active)
+
+    assert pub.version == rounds, (pub.version, rounds)
+    assert leaves > 0 and joins > 0 and rejoins > 0, \
+        "churn schedule must exercise join, leave AND rejoin"
+    # after the final wave only seed-population survivors remain; their
+    # views bound the deviation count
+    n_active = len(svc.membership.active)
+    dev = tr.clients.view_store.n_deviations()
+    assert dev <= n_active, (dev, n_active)
+    state_b = tr.clients.state_nbytes()
+
+    emit("service_soak/rounds", rounds)
+    emit("service_soak/churn", f"{joins}j/{leaves}l/{rejoins}r")
+    emit("service_soak/final_active", n_active)
+    emit("service_soak/deviations", dev, f"<= active {n_active}")
+    emit("service_soak/state_MB", f"{state_b / 1e6:.3f}")
+    emit("service_soak/adapter_versions", pub.version)
+    snapshot("service_soak", {
+        # leak-freedom is deterministic -> exact gates
+        "final_active": (n_active, "info"),
+        "deviations": (dev, "info"),
+        "state_bytes": (state_b, "bytes"),
+        "adapter_versions": (pub.version, "info"),
+        "upload_bytes": (tr.server.ledger.upload_bytes, "bytes"),
+    })
+    return {"rounds": rounds, "active": n_active, "deviations": dev,
+            "state_bytes": state_b, "versions": pub.version}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke profile: short churn schedule, assert "
+                         "no leaked client state after leaves")
+    main(quick=ap.parse_args().quick)

@@ -8,6 +8,11 @@ decoder with EcoLoRA for a few hundred aggregate optimizer steps.
     # A/B a non-default codec stack (per-direction "stage+stage" specs):
     PYTHONPATH=src python examples/fed_finetune.py \
         --uplink-codec adaptive+fp16+raw+zlib --downlink-codec adaptive+int8+golomb
+    # continuous service mode: close rounds on 4 arrivals OR a 90s deadline,
+    # with a fresh client joining (and the eldest joiner leaving) every 5
+    # rounds — the event-driven lifecycle of DESIGN.md §10:
+    PYTHONPATH=src python examples/fed_finetune.py \
+        --scenario 1/5 --service-min-uploads 4 --service-deadline 90 --churn 5
 
 Prints per-round eval + the final communication ledger (plus simulated
 wall-clock when a network scenario is selected), and writes a
@@ -25,6 +30,9 @@ from repro.checkpoint import ckpt
 from repro.configs.base import ModelConfig
 from repro.core.codec import CodecConfig, CodecSpec
 from repro.data.synthetic import TaskConfig
+from repro.fed.protocol import JoinMsg, LeaveMsg
+from repro.fed.service import AdapterPublisher, FederationService, \
+    ServiceConfig
 from repro.fed.strategies import EcoLoRAConfig
 from repro.fed.trainer import FedConfig, FederatedTrainer
 from repro.fed.transport import SimTransport
@@ -71,7 +79,29 @@ def main():
                          "kernel)")
     ap.add_argument("--downlink-codec", default=None, metavar="SPEC",
                     help="downlink codec stack (same grammar)")
+    ap.add_argument("--service-min-uploads", type=int, default=None,
+                    metavar="M",
+                    help="service mode: close each round once M uploads "
+                         "arrived (stragglers stay in flight to the next "
+                         "round)")
+    ap.add_argument("--service-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="service mode: close each round at this deadline "
+                         "on the simulated event clock (needs --scenario)")
+    ap.add_argument("--churn", type=int, default=None, metavar="EVERY",
+                    help="service mode: every EVERY rounds a brand-new "
+                         "client joins (codec negotiated at admission) and "
+                         "the eldest mid-run joiner leaves")
     args = ap.parse_args()
+    service_mode = (args.service_min_uploads is not None
+                    or args.service_deadline is not None
+                    or args.churn is not None)
+    if args.service_deadline is not None and args.scenario is None:
+        ap.error("--service-deadline needs the simulated event clock: "
+                 "pass --scenario")
+    if service_mode and args.async_m:
+        ap.error("--async-m is the legacy spelling of "
+                 "--service-min-uploads; pick one")
 
     codec = None
     if args.uplink_codec or args.downlink_codec:
@@ -92,12 +122,38 @@ def main():
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")
     tr = FederatedTrainer(MODEL_100M, fed, tc,
                           transport=make_transport(ap, args))
+    svc = None
+    if service_mode:
+        svc = FederationService(
+            tr, ServiceConfig(min_uploads=args.service_min_uploads,
+                              deadline_s=args.service_deadline),
+            publisher=AdapterPublisher(), dynamic=args.churn is not None)
     if args.resume:
         if not os.path.exists(args.out):
             ap.error(f"--resume: no checkpoint at {args.out}")
-        rnd = ckpt.load_fed_state(args.out, tr)
+        rnd = ckpt.load_fed_state(args.out, tr, service=svc)
         print(f"resuming at round {rnd} from {args.out}")
-    for lg in tr.run():
+    if svc is None:
+        logs = tr.run()
+    else:
+        next_id, joiners = fed.n_clients, []
+        while tr.start_round < args.rounds:
+            t = tr.start_round
+            svc.run_round(final=(t == args.rounds - 1))
+            if args.churn and (t + 1) % args.churn == 0 \
+                    and t < args.rounds - 1:
+                ack = svc.join(JoinMsg(next_id, t))
+                joiners.append(next_id)
+                print(f"  [churn] client {next_id} joined "
+                      f"(negotiated uplink: {ack.codec or 'default stack'})")
+                next_id += 1
+                if len(joiners) > 1:
+                    gone = joiners.pop(0)
+                    svc.leave(LeaveMsg(gone, t))
+                    print(f"  [churn] client {gone} left")
+        logs = tr.logs
+        print(f"adapter versions published: {svc.publisher.version}")
+    for lg in logs:
         print(f"round {lg.round_t:3d} | loss {lg.global_loss:.4f} | "
               f"acc {lg.metric:.3f} | up {lg.upload_bytes/1e6:.2f} MB | "
               f"down {lg.download_bytes/1e6:.2f} MB")
@@ -111,7 +167,7 @@ def main():
               f"compute {t['computation_s']:.1f}s = {t['total_s']:.1f}s; "
               f"late uploads {tr.transport.straggler_count()}, "
               f"dropped {sum(len(c) for _, c in tr.transport.dropped)}")
-    n = ckpt.save_fed_state(args.out, tr)
+    n = ckpt.save_fed_state(args.out, tr, service=svc)
     print(f"checkpoint: {args.out} ({n/1e6:.2f} MB)")
 
 

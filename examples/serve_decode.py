@@ -1,5 +1,13 @@
 """Serving example: prefill + batched decode with the flash-decode Pallas
-kernel (interpret mode on CPU), using a LoRA-adapted model.
+kernel (interpret mode on CPU), hot-swapping the LoRA adapter live as a
+federation service publishes new global versions.
+
+The decode step is jitted with the LoRA as a traced ARGUMENT (not a
+closure): every published adapter has the same pytree structure and
+shapes, so swapping versions re-uses the compiled executable — no
+retrace, no serving pause. An ``AdapterPublisher`` subscription delivers
+each merged global adapter right after the federation round's BROADCAST
+phase (DESIGN.md §10).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,20 +21,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.service import AdapterPublisher, FederationService
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
 from repro.models import model as M
+
+
+def make_trainer(cfg):
+    fed = FedConfig(
+        method="fedit", n_clients=4, clients_per_round=2, rounds=4,
+        local_steps=1, local_batch=2, lr=3e-3,
+        eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+        pretrain_steps=2, eval_every=1_000_000, engine="batched",
+        backend="numpy")
+    tc = TaskConfig(vocab_size=min(256, cfg.vocab_size), seq_len=8,
+                    n_samples=128, seed=0)
+    return FederatedTrainer(cfg, fed, tc)
 
 
 def main():
     cfg = get_config("llama3.2-1b").reduced()
-    key = jax.random.PRNGKey(0)
-    params = M.init_params(cfg, key)
-    lora = M.init_lora(cfg, jax.random.PRNGKey(1))
+    trainer = make_trainer(cfg)
+    params = trainer.params
 
-    B, prompt_len, gen = 4, 24, 8
-    S = prompt_len + gen
+    # the live adapter slot: the publisher subscription swaps it between
+    # decode steps, versions strictly tracking the federation service
+    live = {"version": 0, "round": None,
+            "lora": trainer.protocol.vec_to_tree(
+                trainer.server.global_vec, trainer.lora0)}
+
+    pub = AdapterPublisher()
+
+    def on_publish(version, round_t, vec):
+        live["version"] = version
+        live["round"] = round_t
+        live["lora"] = trainer.protocol.vec_to_tree(vec, trainer.lora0)
+        print(f"  [publisher] adapter v{version} (round {round_t}) received")
+
+    pub.subscribe(on_publish)
+    svc = FederationService(trainer, publisher=pub)
+
+    B, prompt_len, gen_per_phase = 4, 24, 4
+    n_phases = 3                      # decode, train+swap, decode, ...
+    S = prompt_len + n_phases * gen_per_phase
     batch = M.make_batch(cfg, B, prompt_len, jax.random.PRNGKey(2))
 
-    logits, caches = M.prefill(params, lora, batch, cfg, remat=False)
+    logits, caches = M.prefill(params, live["lora"], batch, cfg, remat=False)
     shapes = M.cache_shapes(cfg, B, S)
     zeros = jax.tree_util.tree_map(
         lambda s: jnp.zeros(s, jnp.float32), shapes,
@@ -36,19 +78,39 @@ def main():
                                                   (0,) * z.ndim), zeros, caches)
     tok = jnp.argmax(logits[:, -1], -1)[:, None]
     out_tokens = [tok]
-    step = jax.jit(lambda t, c, p: M.decode_step(params, lora, t, c, p, cfg),
+
+    # LoRA is argument #3: published adapters share one compiled executable
+    step = jax.jit(lambda t, c, p, l: M.decode_step(params, l, t, c, p, cfg),
                    static_argnums=2)
+
+    pos = prompt_len
+    n_decoded = 0
+    versions_served = []
     t0 = time.perf_counter()
-    for i in range(gen - 1):
-        logits, cache = step(tok, cache, prompt_len + i)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None]
-        out_tokens.append(tok)
+    for phase in range(n_phases):
+        print(f"decode phase {phase}: serving adapter v{live['version']}")
+        for _ in range(gen_per_phase - (1 if phase == 0 else 0)):
+            logits, cache = step(tok, cache, pos, live["lora"])
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            out_tokens.append(tok)
+            pos += 1
+            n_decoded += 1
+            versions_served.append(live["version"])
+        if phase < n_phases - 1:
+            # training continues between decode bursts; BROADCAST publishes
+            svc.run_round(final=(phase == n_phases - 2))
     dt = time.perf_counter() - t0
+
     seq = jnp.concatenate(out_tokens, axis=1)
     print("generated token ids (greedy):")
     for b in range(B):
         print(f"  request {b}: {list(map(int, seq[b]))}")
-    print(f"decode throughput: {B * (gen-1) / dt:.1f} tok/s (CPU, reduced cfg)")
+    swaps = sorted(set(versions_served))
+    print(f"served adapter versions across the stream: {swaps}")
+    assert len(swaps) >= 3 and pub.version >= 2, \
+        "demo must hot-swap across at least two published versions"
+    print(f"decode throughput: {n_decoded * B / dt:.1f} tok/s "
+          "(CPU, reduced cfg; includes 2 federation rounds inline)")
 
 
 if __name__ == "__main__":

@@ -100,6 +100,69 @@ def load(path: str) -> Any:
     return _decode(msgpack.unpackb(raw, raw=False))
 
 
+def _pack_packet(pkt) -> Dict[str, Any]:
+    """Wire ``Packet`` -> plain tree (format 4: in-flight uploads and
+    pending updates persist mid-round). ``local`` (same-process shortcuts,
+    never on the wire) is deliberately dropped — decode falls back to the
+    wire-only path."""
+    return {"codec": pkt.codec, "stack": list(pkt.stack),
+            "sections": {name: {"data": sec.data,
+                                "wire_bits": int(sec.wire_bits)}
+                         for name, sec in pkt.sections.items()},
+            "count": int(pkt.count), "dense_size": int(pkt.dense_size),
+            "slice": [int(pkt.slice_[0]), int(pkt.slice_[1])],
+            "k_used": {k: float(v) for k, v in pkt.k_used.items()},
+            "round_t": int(pkt.round_t), "meta": pkt.meta}
+
+
+def _unpack_packet(d: Dict[str, Any]):
+    from repro.core.codec import Packet, Section
+    return Packet(
+        codec=str(d["codec"]), stack=[str(s) for s in d["stack"]],
+        sections={str(n): Section(np.asarray(s["data"]),
+                                  int(s["wire_bits"]))
+                  for n, s in d["sections"].items()},
+        count=int(d["count"]), dense_size=int(d["dense_size"]),
+        slice_=(int(d["slice"][0]), int(d["slice"][1])),
+        k_used={str(k): float(v) for k, v in d["k_used"].items()},
+        round_t=int(d["round_t"]), meta=d.get("meta") or {})
+
+
+def _pack_upload(msg) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t),
+            "packet": _pack_packet(msg.packet),
+            "num_samples": int(msg.num_samples),
+            "local_loss": float(msg.local_loss),
+            "capabilities": (None if msg.capabilities is None
+                             else [str(c) for c in msg.capabilities]),
+            "seg_id": None if msg.seg_id is None else int(msg.seg_id)}
+
+
+def _unpack_upload(d: Dict[str, Any]):
+    from repro.fed.protocol import UploadMsg
+    caps = d.get("capabilities")
+    seg = d.get("seg_id")
+    return UploadMsg(int(d["client_id"]), int(d["round_t"]),
+                     _unpack_packet(d["packet"]), int(d["num_samples"]),
+                     float(d["local_loss"]),
+                     capabilities=None if caps is None else list(caps),
+                     seg_id=None if seg is None else int(seg))
+
+
+def _pack_seg_update(u) -> Dict[str, Any]:
+    return {"client_id": int(u.client_id), "round_t": int(u.round_t),
+            "seg_id": int(u.seg_id), "values": np.asarray(u.values),
+            "num_samples": int(u.num_samples),
+            "local_loss": float(u.local_loss)}
+
+
+def _unpack_seg_update(d: Dict[str, Any]):
+    from repro.core.segments import SegmentUpdate
+    return SegmentUpdate(int(d["client_id"]), int(d["round_t"]),
+                         int(d["seg_id"]), np.asarray(d["values"]),
+                         int(d["num_samples"]), float(d["local_loss"]))
+
+
 def _pack_rng_state(rng) -> Dict[str, Any]:
     """np.random.Generator bit-generator state; 128-bit PCG64 words exceed
     msgpack's int range, so they travel as decimal strings."""
@@ -118,8 +181,8 @@ def _unpack_rng_state(rng, d: Dict[str, Any]) -> None:
         "uinteger": int(d["uinteger"])}
 
 
-def save_fed_state(path: str, trainer) -> int:
-    """Round-resumable federated state (format 3, DESIGN.md §7-8).
+def save_fed_state(path: str, trainer, service=None) -> int:
+    """Round-resumable federated state (format 4, DESIGN.md §7-8, §10).
 
     Server-side state comes from the ServerEndpoint (global vec, prefix-sum
     billing cursors, ledger, downlink codec state), client-side state from
@@ -131,16 +194,22 @@ def save_fed_state(path: str, trainer) -> int:
     ``CodecPipeline.state()/restore()`` API — the checkpoint layer knows
     NOTHING about stage internals, so new codec stages checkpoint for free.
     The on-disk layout is sparse: O(active) vectors, not O(n_clients).
-    ``load_fed_state`` still reads the legacy dense (format 1) and
-    per-sparsifier (format 2) layouts. Transport state (simulated clock,
-    event log, buffered_async in-flight stragglers) is NOT persisted: a
-    checkpoint boundary acts like a round deadline — in-flight uploads are
-    dropped, the same rule as at the end of a run (DESIGN.md §6).
+    ``load_fed_state`` still reads the legacy dense (format 1),
+    per-sparsifier (format 2), and pre-service (format 3) layouts.
+
+    Format 4 closes format 3's known resume gap: transport state (event
+    clock, dropout rng, IN-FLIGHT straggler uploads), the server's pending
+    segment updates, the coverage monitor's starvation clocks, and — when a
+    ``FederationService`` is passed — lifecycle phase + mid-round fields +
+    dynamic membership all persist, so a service-mode run saved at ANY
+    phase boundary resumes bitwise (in-flight uploads are delivered, not
+    dropped). Pass the same ``service`` to ``load_fed_state`` to restore
+    the service blocks.
     """
     srv, cl = trainer.server, trainer.clients
     pool = cl.up_comps
     state = {
-        "format": 3,
+        "format": 4,
         "round": int(trainer.start_round),
         "global_vec": srv.global_vec,
         "last_broadcast": srv.last_broadcast,
@@ -170,7 +239,18 @@ def save_fed_state(path: str, trainer) -> int:
         "last_eval": (None if trainer._last_eval is None
                       else [float(x) for x in trainer._last_eval]),
         "rng_state": _pack_rng_state(trainer.rng),
+        # ---- format 4: the pieces a mid-round / service resume needs ----
+        "pending": [_pack_seg_update(u) for u in srv.pending],
+        "transport": {
+            "inflight": [_pack_upload(m)
+                         for m in trainer.transport.inflight()],
+            "sim": trainer.transport.state() or None,
+        },
     }
+    if trainer.coverage is not None:
+        state["coverage"] = trainer.coverage.state()
+    if service is not None:
+        state["service"] = service.state()
     vecs = getattr(trainer.policy, "server_client_vecs", None)
     if vecs is not None:
         # INSERTION order preserved: it doubles as the policy's LRU order
@@ -192,10 +272,12 @@ def save_fed_state(path: str, trainer) -> int:
     return save(path, state)
 
 
-def load_fed_state(path: str, trainer) -> int:
+def load_fed_state(path: str, trainer, service=None) -> int:
     """Restores state in place; returns (and sets on the trainer) the resume
     round, so the next ``trainer.run()`` continues at the checkpointed
-    round instead of replaying from 0."""
+    round instead of replaying from 0. Pass the ``FederationService`` that
+    will drive the resumed run to restore format 4's lifecycle/membership
+    blocks (a service-mode run saved mid-round re-enters its phase)."""
     state = load(path)
     srv, cl = trainer.server, trainer.clients
     n = srv.n_clients
@@ -204,6 +286,9 @@ def load_fed_state(path: str, trainer) -> int:
     cl.client_tau = [int(v) for v in state["client_tau"]]
     srv.client_sync = np.asarray(state.get("client_sync", np.zeros(n)),
                                  np.int64).copy()
+    # a dynamic-membership run may have grown past the configured
+    # population; the cursor arrays carry the authoritative capacity
+    srv.n_clients = int(srv.client_sync.size)
     for k, v in state["client_vecs"].items():
         cl.local_vecs[int(k)] = np.asarray(v, np.float32)
 
@@ -296,6 +381,20 @@ def load_fed_state(path: str, trainer) -> int:
         - sum(srv.ledger.upload_by_codec.values())
     if shortfall > 0:
         srv.ledger.upload_by_codec["legacy(pre-negotiation)"] = shortfall
+    if fmt >= 4:
+        srv.pending = [_unpack_seg_update(u)
+                       for u in state.get("pending") or []]
+        tpst = state.get("transport")
+        if tpst is not None:
+            trainer.transport.set_inflight(
+                [_unpack_upload(m) for m in tpst.get("inflight") or []])
+            if tpst.get("sim"):
+                trainer.transport.load_state(tpst["sim"])
+        cov = state.get("coverage")
+        if cov is not None and trainer.coverage is not None:
+            trainer.coverage.load_state(cov)
+        if service is not None and state.get("service") is not None:
+            service.load_state(state["service"])
     rnd = int(state["round"])
     trainer.start_round = rnd
     srv.round_t = rnd

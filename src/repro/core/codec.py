@@ -471,11 +471,19 @@ class AnsValues(Codec):
     leave ~2-3 bits/value above the histogram entropy on sparsified LoRA
     deltas. The per-packet frequency model rides in its own billed section.
 
-    Incompressible packets (uniform histograms, tiny counts where the model
-    header dominates) fall back to the raw int8 section untouched — the
-    stage never expands a packet. Applies only to int8 value sections
-    (``CodecSpec.validate`` enforces the pairing); fp16 sections pass
-    through."""
+    The fp32 per-chunk SCALES section is entropy-coded too, as its own
+    rANS stream over the raw little-endian bytes: a static byte histogram
+    is order-free, and fp32 scale bytes are far from uniform (the exponent
+    and sign bytes of same-magnitude scales concentrate on a handful of
+    values), so small-chunk int8 packets — where scales are a material
+    fraction of the wire — shrink further. Lossless: decode restores the
+    fp32 words bitwise.
+
+    Incompressible sections (uniform histograms, tiny counts where the
+    model header dominates) fall back to the raw section untouched — the
+    stage never expands a packet; values and scales bypass independently.
+    Applies only to int8 value sections (``CodecSpec.validate`` enforces
+    the pairing); fp16 sections pass through."""
 
     name = "ans"
 
@@ -484,31 +492,55 @@ class AnsValues(Codec):
         if sec is None or sec.data.dtype != np.int8:
             return
         symbols = sec.data.astype(np.int16).astype(np.int64) + 128
-        if symbols.size == 0:
+        if symbols.size:
+            stream, model, scale_bits = rans.encode_bytes(symbols)
+            if len(stream) + len(model) < sec.data.size:  # never expand
+                car.sections["values"] = Section(
+                    np.frombuffer(stream, np.uint8), 8 * len(stream))
+                car.sections["ans_model"] = Section(
+                    np.frombuffer(model, np.uint8), 8 * len(model))
+                car.meta["ans"] = {"count": int(symbols.size),
+                                   "scale_bits": int(scale_bits)}
+        ssec = car.sections.get("scales")
+        if ssec is None or ssec.data.size == 0:
             return
-        stream, model, scale_bits = rans.encode_bytes(symbols)
-        if len(stream) + len(model) >= sec.data.size:
+        raw = np.frombuffer(np.ascontiguousarray(
+            ssec.data, np.float32).tobytes(), np.uint8)
+        stream, model, scale_bits = rans.encode_bytes(raw.astype(np.int64))
+        if len(stream) + len(model) >= raw.size:
             return                       # raw bypass: never expand
-        car.sections["values"] = Section(
+        car.sections["scales"] = Section(
             np.frombuffer(stream, np.uint8), 8 * len(stream))
-        car.sections["ans_model"] = Section(
+        car.sections["ans_scales_model"] = Section(
             np.frombuffer(model, np.uint8), 8 * len(model))
-        car.meta["ans"] = {"count": int(symbols.size),
-                           "scale_bits": int(scale_bits)}
+        car.meta["ans_scales"] = {"count": int(raw.size),
+                                  "scale_bits": int(scale_bits)}
 
     @classmethod
     def decode(cls, car: Carrier, pkt: Packet) -> None:
-        if "ans_model" not in car.sections:
-            return                       # bypassed (raw int8 / fp16) packet
-        meta = pkt.meta["ans"]
-        symbols = rans.decode_bytes(
-            np.asarray(car.sections["values"].data, np.uint8).tobytes(),
-            np.asarray(car.sections["ans_model"].data, np.uint8).tobytes(),
-            int(meta["count"]), int(meta["scale_bits"]))
-        codes = (symbols - 128).astype(np.int8)
-        car.sections = dict(car.sections)
-        car.sections["values"] = Section(codes, 8 * codes.size)
-        del car.sections["ans_model"]
+        if "ans_model" in car.sections:
+            meta = pkt.meta["ans"]
+            symbols = rans.decode_bytes(
+                np.asarray(car.sections["values"].data, np.uint8).tobytes(),
+                np.asarray(car.sections["ans_model"].data,
+                           np.uint8).tobytes(),
+                int(meta["count"]), int(meta["scale_bits"]))
+            codes = (symbols - 128).astype(np.int8)
+            car.sections = dict(car.sections)
+            car.sections["values"] = Section(codes, 8 * codes.size)
+            del car.sections["ans_model"]
+        if "ans_scales_model" in car.sections:
+            meta = pkt.meta["ans_scales"]
+            raw = rans.decode_bytes(
+                np.asarray(car.sections["scales"].data, np.uint8).tobytes(),
+                np.asarray(car.sections["ans_scales_model"].data,
+                           np.uint8).tobytes(),
+                int(meta["count"]), int(meta["scale_bits"]))
+            scales = np.frombuffer(raw.astype(np.uint8).tobytes(),
+                                   np.float32).copy()
+            car.sections = dict(car.sections)
+            car.sections["scales"] = Section(scales, 32 * scales.size)
+            del car.sections["ans_scales_model"]
 
 
 # ---------------------------------------------------------------------------

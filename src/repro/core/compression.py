@@ -283,6 +283,12 @@ class CompressorPool:
         for c in self._comps.values():
             c.observe_loss(loss)
 
+    def drop(self, cid: int) -> None:
+        """Free a departed client's compressor (residual shards with it).
+        The negotiated spec stays sticky: a rejoin rebuilds the SAME stack
+        — fresh residuals, same wire format — without renegotiating."""
+        self._comps.pop(cid, None)
+
     def residual_nbytes(self) -> int:
         return sum(c.sparsifier.residual_nbytes()
                    for c in self._comps.values())

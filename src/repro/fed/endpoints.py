@@ -28,7 +28,8 @@ from repro.fed.client import (TimedCall, make_batched_local_trainer,
                               make_local_trainer, stack_batches,
                               stack_client_states)
 from repro.fed.protocol import (ALL_CAPABILITIES, BroadcastMsg, DownloadMsg,
-                                UploadMsg, WireProtocol)
+                                JoinAck, JoinMsg, LeaveMsg, UploadMsg,
+                                WireProtocol)
 from repro.fed.state_store import make_view_store
 from repro.fed.strategies import AggregationPolicy
 from repro.optim import adamw
@@ -95,7 +96,8 @@ class ServerEndpoint:
         return BroadcastMsg(t, pkt, self.protocol.n_segments)
 
     def sync_client(self, cid: int, round_t: int,
-                    capabilities: Optional[List[str]] = None) -> DownloadMsg:
+                    capabilities: Optional[List[str]] = None,
+                    segment: Optional[int] = None) -> DownloadMsg:
         """Bring client ``cid`` fully in sync: bill one wire packet per
         broadcast it missed since it last participated (as a prefix-sum
         difference — O(1) however long it was idle), and ship the synced
@@ -118,7 +120,8 @@ class ServerEndpoint:
         return DownloadMsg(cid, round_t, self.last_broadcast.copy(),
                            missed, billed_w, billed_p, bcast_version=n,
                            codec=self.codec_table.get(cid),
-                           capabilities=_SERVER_CAPABILITIES)
+                           capabilities=_SERVER_CAPABILITIES,
+                           segment=segment)
 
     def _negotiate(self, cid: int, capabilities) -> None:
         if capabilities is not None and cid not in self.codec_table:
@@ -132,7 +135,10 @@ class ServerEndpoint:
         round, so they land in the segment they were trained for."""
         self._negotiate(msg.client_id, msg.capabilities)
         values = Compressor.decompress(msg.packet)
-        seg = self.protocol.segment_for(msg.client_id, msg.round_t)
+        # an explicit seg_id wins (remediation override, possibly riding a
+        # straggler buffer); legacy messages derive the schedule slot
+        seg = (msg.seg_id if msg.seg_id is not None
+               else self.protocol.segment_for(msg.client_id, msg.round_t))
         self.pending.append(SegmentUpdate(msg.client_id, msg.round_t, seg,
                                           values, msg.num_samples,
                                           msg.local_loss))
@@ -150,6 +156,44 @@ class ServerEndpoint:
 
     def snapshot(self, round_t: int) -> None:
         self.ledger.snapshot_round(round_t)
+
+    # -- dynamic membership -------------------------------------------------
+    def ensure_capacity(self, n_clients: int) -> None:
+        """Grow the per-client billing cursors to cover ``n_clients`` ids.
+        New rows start at cursor 0 ("owes everything"); ``admit`` snaps a
+        genuinely-new joiner's cursor to now."""
+        n = int(n_clients)
+        if n <= self.n_clients:
+            return
+        grow = n - self.n_clients
+        self.client_sync = np.concatenate(
+            [self.client_sync, np.zeros(grow, np.int64)])
+        self._client_cum = np.vstack(
+            [self._client_cum, np.zeros((grow, 3), np.int64)])
+        self.n_clients = n
+
+    def admit(self, msg: JoinMsg, rejoin: bool = False) -> JoinAck:
+        """Process a ``JoinMsg``: grow cursors, run codec negotiation, and
+        answer with the negotiated uplink stack. A NEW client's billing
+        cursor snaps to the current broadcast count (it owes nothing for
+        history before it existed); a REJOINING client keeps its cursor and
+        pays the catch-up bill for every broadcast missed while away at its
+        first sync."""
+        cid = int(msg.client_id)
+        self.ensure_capacity(cid + 1)
+        if not rejoin:
+            self.client_sync[cid] = self._bcast_count
+            self._client_cum[cid] = self._cum_stats
+        self._negotiate(cid, msg.capabilities)
+        return JoinAck(cid, msg.round_t, self.codec_table.get(cid),
+                       int(self._bcast_count), rejoined=rejoin,
+                       capabilities=_SERVER_CAPABILITIES)
+
+    def retire(self, msg: LeaveMsg) -> None:
+        """Process a ``LeaveMsg``. Server-side state is deliberately kept:
+        billing cursors make a rejoin pay for the gap, and the negotiated
+        codec stays sticky. In-flight uploads from the leaver remain valid
+        (``receive`` needs no per-client server state)."""
 
     # -- state management ---------------------------------------------------
     def reset_broadcast_base(self, vec: np.ndarray) -> None:
@@ -204,6 +248,9 @@ class ClientRuntime:
         self.mixing = mixing
         self.local_vecs: Dict[int, np.ndarray] = {}
         self.client_tau = [0] * fed.n_clients
+        # per-round segment re-assignments (DownloadMsg.segment): consumed
+        # by the next make_upload, never sticky across rounds
+        self._seg_overrides: Dict[int, int] = {}
         # O(active) copy-on-write view store + lazy per-client compressors
         # (DESIGN.md §7); "dense" keeps the legacy materialised matrix for
         # parity pins and scale benchmarks.
@@ -256,7 +303,46 @@ class ClientRuntime:
             # the server's negotiation decision for this client's uplink —
             # recorded before the first upload builds the compressor
             self.up_comps.assign(cid, msg.codec)
+        if msg.segment is not None:
+            self._seg_overrides[cid] = int(msg.segment)
+        else:
+            self._seg_overrides.pop(cid, None)
         self.view_store.set_synced(cid, msg.view, msg.bcast_version)
+
+    # -- dynamic membership -------------------------------------------------
+    def admit(self, cid: int, part=None) -> None:
+        """Host a newly-joined client: grow the staleness clocks and view
+        store, and give it a local data partition. Without an explicit
+        ``part`` the shard is drawn from a ``(seed, cid)``-derived rng —
+        deterministic per id, so a checkpoint resume re-admits the client
+        with the SAME data."""
+        cid = int(cid)
+        while len(self.client_tau) <= cid:
+            self.client_tau.append(0)
+        while len(self.parts) <= cid:
+            new_id = len(self.parts)
+            if part is not None and new_id == cid:
+                self.parts.append(np.asarray(part, np.int64))
+                continue
+            rng = np.random.default_rng((self.fed.seed, 4097, new_id))
+            sizes = [p.size for p in self.parts[:self.fed.n_clients]]
+            size = max(1, int(np.mean(sizes)) if sizes else 1)
+            self.parts.append(np.sort(rng.choice(
+                len(self.task.samples), size=min(size,
+                                                 len(self.task.samples)),
+                replace=False)))
+        self.view_store.grow(cid + 1)
+
+    def retire(self, cid: int) -> None:
+        """Drop a departed client's state: its view (COW base freed once
+        unshared), locally-trained vector, segment override, and uplink
+        compressor (residual shards). The data partition and staleness
+        clock stay — deterministic, O(1) scalars — so a rejoin is cheap."""
+        cid = int(cid)
+        self.local_vecs.pop(cid, None)
+        self._seg_overrides.pop(cid, None)
+        self.view_store.drop(cid)
+        self.up_comps.drop(cid)
 
     def reset_views(self, vec: np.ndarray) -> None:
         self.view_store.reset(vec)
@@ -308,14 +394,15 @@ class ClientRuntime:
                     ) -> UploadMsg:
         self.local_vecs[cid] = np.array(trained_vec, copy=True)
         self.client_tau[cid] = round_t
-        seg = self.protocol.segment_for(cid, round_t)
+        seg = self._segment_for(cid, round_t)
         s, e = self.protocol.bounds[seg]
         update = (trained_vec - start_vec)[s:e]
         comp = self.up_comps[cid]
         comp.observe_loss(loss)
         pkt = comp.compress(update, round_t, slice_=(s, e))
         return UploadMsg(cid, round_t, pkt, n_samples, loss,
-                         capabilities=self.capabilities_for(cid))
+                         capabilities=self.capabilities_for(cid),
+                         seg_id=seg)
 
     def make_uploads_batch(self, cids, round_t: int, trained_vecs: np.ndarray,
                            start_vecs: np.ndarray, n_samples, losses
@@ -324,13 +411,14 @@ class ClientRuntime:
         and sparsify+encode them in one (K, seg) pass. Semantically identical
         to K make_upload calls."""
         bounds_all = self.protocol.bounds
-        comps, values, slices = [], [], []
+        comps, values, slices, segs = [], [], [], []
         for i, cid in enumerate(cids):
             cid = int(cid)
             self.local_vecs[cid] = np.array(trained_vecs[i], np.float32,
                                             copy=True)
             self.client_tau[cid] = round_t
-            seg = self.protocol.segment_for(cid, round_t)
+            seg = self._segment_for(cid, round_t)
+            segs.append(seg)
             s, e = bounds_all[seg]
             slices.append((s, e))
             values.append(np.asarray(trained_vecs[i] - start_vecs[i],
@@ -341,8 +429,18 @@ class ClientRuntime:
         pkts = self.protocol.compress_uplinks_batch(comps, values, slices,
                                                     round_t)
         return [UploadMsg(int(cid), round_t, pkt, int(n), float(l),
-                          capabilities=self.capabilities_for(int(cid)))
-                for pkt, cid, n, l in zip(pkts, cids, n_samples, losses)]
+                          capabilities=self.capabilities_for(int(cid)),
+                          seg_id=seg)
+                for pkt, cid, n, l, seg in zip(pkts, cids, n_samples,
+                                               losses, segs)]
+
+    def _segment_for(self, cid: int, round_t: int) -> int:
+        """This round's uplink segment: the remediation override delivered
+        in the sync ``DownloadMsg`` (consumed here — one round only), else
+        the round-robin schedule slot."""
+        seg = self._seg_overrides.pop(cid, None)
+        return seg if seg is not None else self.protocol.segment_for(cid,
+                                                                     round_t)
 
     # -- the round ------------------------------------------------------------
     def run_round(self, round_t: int, participants

@@ -72,6 +72,12 @@ class DownloadMsg:
     use the configured default) and ``capabilities`` advertises the stage
     tokens the server itself supports — the symmetric half of the
     negotiation handshake.
+
+    ``segment`` overrides the round-robin segment the client trains/uploads
+    this round (None = derive from ``segment_id(cid, t, Ns)`` as usual).
+    The lifecycle uses it for availability-starvation remediation: a
+    duplicate-covered participant is re-assigned to the starved segment so
+    every segment keeps receiving uploads (paper §3.3, Ns <= Nt).
     """
     client_id: int
     round_t: int
@@ -82,6 +88,7 @@ class DownloadMsg:
     bcast_version: int = 0    # absolute broadcast count the view reflects
     codec: Optional[str] = None
     capabilities: Optional[List[str]] = None
+    segment: Optional[int] = None
 
 
 @dataclass
@@ -92,6 +99,12 @@ class UploadMsg:
     (None = legacy client, assumed fully capable): the server resolves it to
     the cheapest mutually-supported stack and answers in the next
     ``DownloadMsg.codec``.
+
+    ``seg_id`` names the segment the payload was trained for. None (legacy
+    senders) means the receiver derives it from ``segment_id(cid, t, Ns)``;
+    an explicit value wins — it carries a remediation override through the
+    straggler buffer, where the receiving round no longer knows the
+    sender-side schedule.
     """
     client_id: int
     round_t: int
@@ -99,6 +112,43 @@ class UploadMsg:
     num_samples: int
     local_loss: float
     capabilities: Optional[List[str]] = None
+    seg_id: Optional[int] = None
+
+
+@dataclass
+class JoinMsg:
+    """Client -> server: enter the federation mid-run.
+
+    Joining runs codec negotiation immediately (the ``JoinAck`` answers with
+    the resolved uplink spec) and snaps the newcomer's broadcast-billing
+    cursor to "now" — a fresh client owes nothing for history it never
+    subscribed to. A REJOINING client (seen before) keeps its old cursor and
+    pays the catch-up bill for every broadcast missed while away at its
+    first sync, exactly like a long-idle client.
+    """
+    client_id: int
+    round_t: int
+    capabilities: Optional[List[str]] = None
+
+
+@dataclass
+class JoinAck:
+    """Server -> joining client: admission + negotiation outcome."""
+    client_id: int
+    round_t: int
+    codec: Optional[str]      # negotiated uplink spec (CodecSpec.parse str)
+    bcast_version: int        # broadcast count at admission
+    rejoined: bool = False
+    capabilities: Optional[List[str]] = None
+
+
+@dataclass
+class LeaveMsg:
+    """Client -> server: leave the federation. Client-side state (view,
+    local vector, compressor residuals) is dropped; server-side billing
+    cursors persist so a later rejoin is billed for the gap."""
+    client_id: int
+    round_t: int
 
 
 # ---------------------------------------------------------------------------

@@ -27,10 +27,21 @@ class UniformSampler:
     def _rng(self, round_t: int) -> np.random.Generator:
         return np.random.default_rng((self.seed, round_t))
 
-    def sample(self, round_t: int) -> np.ndarray:
-        return self._rng(round_t).choice(
-            self.n_clients, size=min(self.per_round, self.n_clients),
-            replace=False)
+    def sample(self, round_t: int,
+               members: Optional[Sequence[int]] = None) -> np.ndarray:
+        """``members`` restricts the draw to the currently-active population
+        (dynamic-membership service mode). None keeps the legacy full-range
+        draw BITWISE — the static-population parity pin depends on it."""
+        if members is None:
+            return self._rng(round_t).choice(
+                self.n_clients, size=min(self.per_round, self.n_clients),
+                replace=False)
+        members = np.asarray(members, np.int64)
+        if members.size == 0:
+            return np.zeros(0, np.int64)
+        return members[self._rng(round_t).choice(
+            members.size, size=min(self.per_round, members.size),
+            replace=False)]
 
 
 @dataclass
@@ -38,14 +49,25 @@ class WeightedSampler(UniformSampler):
     """Sample proportional to local dataset size (FedAvg's implicit ideal)."""
     weights: Optional[Sequence[float]] = None
 
-    def sample(self, round_t: int) -> np.ndarray:
+    def sample(self, round_t: int,
+               members: Optional[Sequence[int]] = None) -> np.ndarray:
         if self.weights is None:
-            return super().sample(round_t)
+            return super().sample(round_t, members)
         w = np.asarray(self.weights, float)
-        p = w / w.sum()
-        return self._rng(round_t).choice(
-            self.n_clients, size=min(self.per_round, self.n_clients),
-            replace=False, p=p)
+        if members is None:
+            p = w / w.sum()
+            return self._rng(round_t).choice(
+                self.n_clients, size=min(self.per_round, self.n_clients),
+                replace=False, p=p)
+        members = np.asarray(members, np.int64)
+        if members.size == 0:
+            return np.zeros(0, np.int64)
+        # joined clients beyond the configured weight table weigh the mean
+        mean_w = float(w.mean()) if w.size else 1.0
+        wm = np.array([w[m] if m < w.size else mean_w for m in members])
+        return members[self._rng(round_t).choice(
+            members.size, size=min(self.per_round, members.size),
+            replace=False, p=wm / wm.sum())]
 
 
 @dataclass
@@ -57,14 +79,19 @@ class AvailabilitySampler(UniformSampler):
     coverage requirement is checked upstream."""
     availability: Optional[Sequence[float]] = None
 
-    def sample(self, round_t: int) -> np.ndarray:
+    def sample(self, round_t: int,
+               members: Optional[Sequence[int]] = None) -> np.ndarray:
         rng = self._rng(round_t)
         if self.availability is None:
-            return rng.choice(self.n_clients,
-                              size=min(self.per_round, self.n_clients),
-                              replace=False)
+            return super().sample(round_t, members)
         avail = np.asarray(self.availability, float)
-        online = np.flatnonzero(rng.random(self.n_clients) < avail)
+        if members is None:
+            online = np.flatnonzero(rng.random(self.n_clients) < avail)
+        else:
+            members = np.asarray(members, np.int64)
+            am = np.array([avail[m] if m < avail.size else 1.0
+                           for m in members])
+            online = members[rng.random(members.size) < am]
         take = min(self.per_round, online.size)
         if take == 0:
             return np.zeros(0, np.int64)
@@ -113,10 +140,58 @@ class SegmentCoverageMonitor:
                 f"round {round_t}: segment(s) {fresh} received no upload "
                 f"for >= {self.starve_after} consecutive rounds — sustained "
                 f"low availability violates the paper's Ns <= Nt coverage "
-                f"requirement (n_segments={self.n_segments}); 1/Ns of the "
-                f"global vector is frozen until coverage recovers",
+                f"requirement (n_segments={self.n_segments}); re-assigning "
+                f"an online client per round until schedule coverage "
+                f"recovers",
                 RuntimeWarning, stacklevel=2)
         return [int(s) for s in starved]
+
+    def state(self) -> dict:
+        """Checkpointable coverage clocks (ckpt format 4): a resumed run
+        must keep flagging the same starvation episodes, or remediation
+        overrides — and therefore wire bytes — would diverge from the
+        uninterrupted run."""
+        return {"last_covered": (None if self.last_covered is None
+                                 else np.asarray(self.last_covered,
+                                                 np.int64)),
+                "warned": self._warned.astype(np.int8)}
+
+    def load_state(self, state: dict) -> None:
+        lc = state.get("last_covered")
+        self.last_covered = None if lc is None else np.asarray(lc, np.int64)
+        self._warned = np.asarray(state["warned"]).astype(bool)
+
+
+def assign_starved_segments(starved, participants, round_t: int,
+                            n_segments: int) -> dict:
+    """Starvation remediation (paper §3.3): re-assign duplicate-covered
+    participants to starved segments for THIS round.
+
+    Returns ``{donor_cid: starved_seg}``. A donor is a participant whose
+    scheduled ``segment_id`` is covered by at least one OTHER participant —
+    moving it never un-covers its own segment. Deterministic (lowest-id
+    donor to lowest starved segment first) so remediated schedules replay
+    bitwise across checkpoint resumes. Only schedule coverage re-arms the
+    monitor, so remediation repeats every round until the natural
+    round-robin coverage resumes."""
+    scheduled = {int(c): segment_id(int(c), round_t, n_segments)
+                 for c in np.asarray(participants, np.int64).ravel()}
+    counts: dict = {}
+    for seg in scheduled.values():
+        counts[seg] = counts.get(seg, 0) + 1
+    overrides = {}
+    for seg in sorted(int(s) for s in starved):
+        if counts.get(seg, 0) > 0:
+            continue                       # this round covers it anyway
+        donor = next((cid for cid in sorted(scheduled)
+                      if counts[scheduled[cid]] >= 2), None)
+        if donor is None:
+            continue                       # nobody to spare (short round)
+        counts[scheduled[donor]] -= 1
+        del scheduled[donor]
+        counts[seg] = 1
+        overrides[donor] = seg
+    return overrides
 
 
 SAMPLERS = {"uniform": UniformSampler, "weighted": WeightedSampler,

@@ -1,0 +1,422 @@
+"""Continuous federation service: the event-driven round lifecycle
+(DESIGN.md §10).
+
+EcoLoRA's protocol is long-lived — round-robin segment sharing only pays
+off over many rounds — so the driver is a SERVICE, not a batch job. The
+round loop that used to live inside ``FederatedTrainer.run()`` is an
+explicit state machine here:
+
+    OPEN -> COLLECTING -> AGGREGATING -> BROADCAST -> (next round OPEN)
+
+  * ``RoundLifecycle`` owns one round's progression and all mid-round
+    state (participants, segment-remediation overrides, ledger baselines);
+  * ``FederationService`` drives lifecycles over the existing Protocol /
+    Endpoint / Transport layers, adds dynamic membership (``JoinMsg`` /
+    ``LeaveMsg``: codec negotiation at join, O(active) state dropped at
+    leave), and closes rounds on arrival count or deadline
+    (``RoundClosePolicy``) — the buffered-async transport mode is now just
+    one close policy;
+  * ``AdapterPublisher`` versions the merged global adapter after every
+    BROADCAST so an inference process (examples/serve_decode.py) hot-swaps
+    to the freshest LoRA while training continues.
+
+``FederatedTrainer.run()`` is a thin shim: a static population, a fixed
+round count, and host-walltime overhead accounting — pinned BITWISE to the
+pre-refactor ledgers and global vectors (tests/test_service.py). Lifecycle
+phase, the transport event clock, and in-flight stragglers persist in
+checkpoint format 4, so a service-mode run is bitwise resumable from any
+phase boundary (tests/test_resume_parity.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.fed.protocol import JoinAck, JoinMsg, LeaveMsg
+from repro.fed.sampler import assign_starved_segments
+from repro.fed.transport import RoundClosePolicy
+
+
+@dataclass
+class RoundLog:
+    round_t: int
+    global_loss: float
+    metric: float                     # top-1 acc (lm) or pref-acc (dpo)
+    upload_bytes: int
+    download_bytes: int
+    upload_params: int
+    download_params: int
+    compute_s: float
+    overhead_s: float
+
+
+@dataclass
+class ServiceConfig:
+    """How the service closes rounds and accounts host time.
+
+    ``min_uploads`` / ``deadline_s`` form the arrival-triggered round-close
+    policy (None/None = wait for every participant — the synchronous
+    semantics). ``measured_overhead=True`` bills host walltime into the
+    simulated clock (the batch shim's legacy behaviour); service mode
+    defaults to a deterministic zero overhead so the event clock — and
+    therefore a checkpoint resume — is bitwise reproducible."""
+    min_uploads: Optional[int] = None
+    deadline_s: Optional[float] = None
+    measured_overhead: bool = False
+
+    def close_policy(self) -> Optional[RoundClosePolicy]:
+        if self.min_uploads is None and self.deadline_s is None:
+            return None
+        return RoundClosePolicy(min_uploads=self.min_uploads,
+                                deadline_s=self.deadline_s)
+
+
+class AdapterPublisher:
+    """Versioned publication point for the merged global adapter.
+
+    ``publish`` bumps a monotonic version and notifies subscribers (an
+    inference server swaps its LoRA in the callback). Aimed at policies
+    whose knowledge accumulates in the adapter vector (fedit / ffa_lora);
+    merge-into-base policies (flora) re-init the adapter every round, so
+    the published vector is only the current round's residual."""
+
+    def __init__(self):
+        self.version = 0
+        self.round_t: Optional[int] = None
+        self._vec: Optional[np.ndarray] = None
+        self._subs: List[Callable[[int, int, np.ndarray], None]] = []
+
+    def subscribe(self, fn: Callable[[int, int, np.ndarray], None]) -> None:
+        """``fn(version, round_t, vec)`` fires on every publish."""
+        self._subs.append(fn)
+
+    def publish(self, round_t: int, vec: np.ndarray) -> int:
+        self.version += 1
+        self.round_t = int(round_t)
+        self._vec = np.array(vec, np.float32)
+        for fn in self._subs:
+            fn(self.version, self.round_t, self._vec)
+        return self.version
+
+    def current(self):
+        """(version, vec) of the freshest published adapter (0, None before
+        the first publish)."""
+        return self.version, self._vec
+
+
+class Membership:
+    """The active client population. ``active`` keeps JOIN ORDER — the
+    member array feeds the sampler's (seed, round)-derived draw, so its
+    order is part of the reproducible schedule and persists in checkpoints.
+    ``ever`` remembers every id that was ever admitted: a rejoin keeps its
+    server-side billing cursor and pays for the gap."""
+
+    def __init__(self, n_clients: int):
+        self.active: List[int] = list(range(n_clients))
+        self.ever = set(self.active)
+
+    def join(self, cid: int) -> bool:
+        """Returns True when this is a REjoin of a previously-seen id."""
+        cid = int(cid)
+        rejoin = cid in self.ever
+        if cid not in self.active:
+            self.active.append(cid)
+        self.ever.add(cid)
+        return rejoin
+
+    def leave(self, cid: int) -> None:
+        self.active.remove(int(cid))
+
+    def state(self) -> dict:
+        return {"active": [int(c) for c in self.active],
+                "ever": sorted(int(c) for c in self.ever)}
+
+    def load_state(self, state: dict) -> None:
+        self.active = [int(c) for c in state["active"]]
+        self.ever = {int(c) for c in state["ever"]}
+
+
+class RoundLifecycle:
+    """One round's state machine: OPEN -> COLLECTING -> AGGREGATING ->
+    BROADCAST. Each transition method performs the phase's work; the phase
+    string plus the mid-round fields below are exactly what checkpoint
+    format 4 persists, so a resume re-enters the machine where it left."""
+
+    OPEN = "open"
+    COLLECTING = "collecting"
+    AGGREGATING = "aggregating"
+    BROADCAST = "broadcast"
+    PHASES = (OPEN, COLLECTING, AGGREGATING, BROADCAST)
+
+    def __init__(self, svc: "FederationService"):
+        self.svc = svc
+        self.phase = self.OPEN
+        self.round_t: Optional[int] = None
+        self._participants: Optional[np.ndarray] = None
+        self._overrides: Dict[int, int] = {}
+        self._compute_s: List[float] = []
+        self._led0: Optional[List[int]] = None
+        self._t_wall: Optional[float] = None
+
+    # -- OPEN: sample, remediate starvation, broadcast + per-client sync ----
+    def open_round(self, t: int) -> np.ndarray:
+        assert self.phase == self.OPEN, self.phase
+        tr = self.svc.tr
+        srv, cl, tp = tr.server, tr.clients, tr.transport
+        self.round_t = t
+        sampled = self.svc.sample(t)
+        participants = tp.plan_round(t, sampled)
+        overrides: Dict[int, int] = {}
+        if tr.coverage is not None:
+            starved = tr.coverage.observe(t, participants)
+            if starved:
+                # starvation remediation (paper §3.3): a duplicate-covered
+                # participant donates its round to the starved segment
+                overrides = assign_starved_segments(
+                    starved, participants, t, tr.protocol.n_segments)
+        self._overrides = overrides
+        led = srv.ledger
+        self._led0 = [led.upload_bytes, led.download_bytes,
+                      led.upload_params, led.download_params]
+        self._t_wall = time.perf_counter()
+        tp.on_broadcast(srv.begin_round(t))
+        for cid in participants:
+            # sync doubles as the negotiation handshake: the client
+            # advertises its codec capabilities, the DownloadMsg carries
+            # the server's (sticky) cheapest-mutual-stack decision — and,
+            # under remediation, this round's segment re-assignment
+            dl = srv.sync_client(int(cid), t,
+                                 capabilities=cl.capabilities_for(int(cid)),
+                                 segment=overrides.get(int(cid)))
+            tp.on_download(dl)
+            cl.apply_download(int(cid), dl)
+        self._participants = np.asarray(participants, np.int64)
+        self.phase = self.COLLECTING
+        return self._participants
+
+    # -- COLLECTING: local training, uploads race the close policy ----------
+    def collect(self) -> None:
+        assert self.phase == self.COLLECTING, self.phase
+        tr = self.svc.tr
+        srv, cl, tp = tr.server, tr.clients, tr.transport
+        t = self.round_t
+        msgs, compute_s = cl.run_round(t, self._participants)
+        self._compute_s = [float(c) for c in compute_s]
+        for msg in tp.dispatch_uploads(t, msgs, compute_s,
+                                       policy=self.svc.close_policy):
+            srv.receive(msg)
+        self.phase = self.AGGREGATING
+
+    # -- AGGREGATING: fold received updates into the global vector ----------
+    def aggregate(self) -> None:
+        assert self.phase == self.AGGREGATING, self.phase
+        tr = self.svc.tr
+        t = self.round_t
+        updates = tr.server.end_round(t)
+        if tr.policy.merges_into_base:
+            tr._flora_merge_and_reinit(t, self._participants, updates)
+        self.phase = self.BROADCAST
+
+    # -- BROADCAST: close timing, eval cadence, log, publish ----------------
+    def close_round(self, final: bool = False) -> None:
+        assert self.phase == self.BROADCAST, self.phase
+        tr = self.svc.tr
+        fed, srv, tp = tr.fed, tr.server, tr.transport
+        t = self.round_t
+        compute_s = self._compute_s
+        if self.svc.cfg.measured_overhead and self._t_wall is not None:
+            overhead_s = time.perf_counter() - self._t_wall - sum(compute_s)
+        else:
+            overhead_s = 0.0            # deterministic service-mode clock
+        tp.finish_round(t, max(overhead_s, 0.0))
+        if t % max(fed.eval_every, 1) == 0 or final \
+                or tr._last_eval is None:
+            gloss, metric = tr.evaluate(srv.global_vec)
+            tr.observe_global_loss(gloss)
+            tr._last_eval = (gloss, metric)
+        else:
+            gloss, metric = tr._last_eval
+        srv.snapshot(t)
+        led = srv.ledger
+        up0, down0, upp0, downp0 = self._led0
+        tr.logs.append(RoundLog(
+            t, gloss, metric,
+            led.upload_bytes - up0,
+            led.download_bytes - down0,
+            led.upload_params - upp0,
+            led.download_params - downp0,
+            float(np.max(compute_s)) if len(compute_s) else 0.0,
+            max(overhead_s, 0.0)))
+        tr.start_round = t + 1
+        if self.svc.publisher is not None:
+            self.svc.publisher.publish(t, srv.global_vec)
+        self.phase = self.OPEN
+        self.round_t = None
+        self._participants = None
+        self._overrides = {}
+        self._compute_s = []
+        self._led0 = None
+        self._t_wall = None
+
+    # -- checkpointing ------------------------------------------------------
+    def state(self) -> dict:
+        return {
+            "phase": self.phase,
+            "round_t": None if self.round_t is None else int(self.round_t),
+            "participants": (None if self._participants is None
+                             else np.asarray(self._participants, np.int64)),
+            "overrides": {str(c): int(s)
+                          for c, s in self._overrides.items()},
+            "compute_s": [float(c) for c in self._compute_s],
+            "led0": (None if self._led0 is None
+                     else [int(x) for x in self._led0]),
+        }
+
+    def load_state(self, state: dict) -> None:
+        phase = state["phase"]
+        if phase not in self.PHASES:
+            raise ValueError(f"unknown lifecycle phase {phase!r}")
+        self.phase = phase
+        rt = state.get("round_t")
+        self.round_t = None if rt is None else int(rt)
+        p = state.get("participants")
+        self._participants = None if p is None else np.asarray(p, np.int64)
+        self._overrides = {int(c): int(s)
+                           for c, s in (state.get("overrides") or {}).items()}
+        self._compute_s = [float(c) for c in state.get("compute_s") or []]
+        led0 = state.get("led0")
+        self._led0 = None if led0 is None else [int(x) for x in led0]
+        # walltime anchor does not survive a process boundary; a resumed
+        # round's measured overhead restarts at load (service mode bills a
+        # deterministic 0.0 anyway)
+        self._t_wall = time.perf_counter()
+
+
+class FederationService:
+    """Drives ``RoundLifecycle``s over a (possibly dynamic) population.
+
+    ``dynamic=True`` activates membership tracking: ``join``/``leave``
+    process the wire-contract messages, growing/shrinking the sampler
+    population, billing cursors, view store, and compressor pool mid-run.
+    The default static service (and the ``FederatedTrainer.run()`` shim)
+    keeps the legacy full-range sampling path BITWISE."""
+
+    def __init__(self, trainer, config: Optional[ServiceConfig] = None,
+                 publisher: Optional[AdapterPublisher] = None,
+                 dynamic: bool = False):
+        self.tr = trainer
+        self.cfg = config or ServiceConfig()
+        self.publisher = publisher
+        self.close_policy = self.cfg.close_policy()
+        if self.close_policy is not None \
+                and trainer.policy.merges_into_base:
+            raise ValueError(
+                "arrival-triggered round close (min_uploads/deadline_s) is "
+                "not supported for merge-into-base policies (flora): a "
+                "straggler's base model no longer exists next round")
+        self.membership = (Membership(trainer.fed.n_clients)
+                           if dynamic else None)
+        self.lc = RoundLifecycle(self)
+
+    # -- membership (the JoinMsg/LeaveMsg wire contract) --------------------
+    def sample(self, t: int) -> np.ndarray:
+        if self.membership is None:
+            # static population: keep the bare sampler contract (scripted
+            # test samplers and the legacy draw path take no members kwarg)
+            return self.tr.sampler.sample(t)
+        return self.tr.sampler.sample(
+            t, members=np.asarray(self.membership.active, np.int64))
+
+    def join(self, msg: JoinMsg) -> JoinAck:
+        """Admit a client mid-run: codec negotiation happens NOW (the ack
+        answers the resolved uplink spec), billing cursors snap to the
+        present for genuinely-new ids, and the client becomes sampleable
+        from the next OPEN."""
+        if self.membership is None:
+            raise RuntimeError("join/leave need a dynamic-membership "
+                               "service (FederationService(dynamic=True))")
+        rejoin = int(msg.client_id) in self.membership.ever
+        ack = self.tr.server.admit(msg, rejoin=rejoin)
+        self.tr.clients.admit(int(msg.client_id))
+        self.membership.join(int(msg.client_id))
+        return ack
+
+    def leave(self, msg: LeaveMsg) -> None:
+        """Retire a client: O(active) client-side state (view, local
+        vector, compressor residuals) is dropped immediately; server-side
+        billing cursors persist so a rejoin pays staleness for the gap. An
+        in-flight upload from the leaver still aggregates — ``receive``
+        needs no client runtime state."""
+        if self.membership is None:
+            raise RuntimeError("join/leave need a dynamic-membership "
+                               "service (FederationService(dynamic=True))")
+        self.membership.leave(int(msg.client_id))
+        self.tr.clients.retire(int(msg.client_id))
+        self.tr.server.retire(msg)
+
+    # -- driving ------------------------------------------------------------
+    def step(self, final: bool = False) -> str:
+        """Advance exactly one lifecycle transition; returns the NEW phase.
+        From OPEN this opens round ``trainer.start_round``."""
+        lc = self.lc
+        if lc.phase == lc.OPEN:
+            lc.open_round(self.tr.start_round)
+        elif lc.phase == lc.COLLECTING:
+            lc.collect()
+        elif lc.phase == lc.AGGREGATING:
+            lc.aggregate()
+        else:
+            lc.close_round(final=final)
+        return lc.phase
+
+    def run_round(self, final: bool = False) -> None:
+        """Finish the current round (from whatever phase a resume restored)
+        or run the next one to completion."""
+        if self.lc.phase == self.lc.OPEN:
+            self.lc.open_round(self.tr.start_round)
+        while self.lc.phase != self.lc.OPEN:
+            self.step(final=final)
+
+    def run(self, rounds: Optional[int] = None,
+            start_round: Optional[int] = None) -> List[RoundLog]:
+        """Run rounds ``[start_round, n_rounds)`` — the batch-job contract
+        ``FederatedTrainer.run()`` keeps. A round restored mid-lifecycle is
+        finished first; ``final`` (the last-round eval trigger) fires on
+        round ``n_rounds - 1`` exactly like the pre-refactor loop."""
+        tr = self.tr
+        n_rounds = rounds or tr.fed.rounds
+        if self.lc.phase != self.lc.OPEN:
+            # finish the checkpoint-restored partial round
+            t = self.lc.round_t
+            while self.lc.phase != self.lc.OPEN:
+                self.step(final=(t == n_rounds - 1))
+        t0 = tr.start_round if start_round is None else start_round
+        for t in range(t0, n_rounds):
+            self.lc.open_round(t)
+            while self.lc.phase != self.lc.OPEN:
+                self.step(final=(t == n_rounds - 1))
+        return tr.logs
+
+    # -- checkpointing ------------------------------------------------------
+    def state(self) -> dict:
+        st: Dict[str, Any] = {"lifecycle": self.lc.state()}
+        if self.membership is not None:
+            st["membership"] = self.membership.state()
+        return st
+
+    def load_state(self, state: dict) -> None:
+        mem = state.get("membership")
+        if mem is not None:
+            if self.membership is None:
+                self.membership = Membership(self.tr.fed.n_clients)
+            self.membership.load_state(mem)
+            # re-host every ever-admitted client: capacity, partitions and
+            # staleness clocks are (seed, cid)-deterministic, so this
+            # reconstructs exactly what the saving run built
+            for cid in sorted(self.membership.ever):
+                self.tr.server.ensure_capacity(int(cid) + 1)
+                self.tr.clients.admit(int(cid))
+        self.lc.load_state(state["lifecycle"])

@@ -55,6 +55,18 @@ class ViewStore:
     def load_dense(self, mat: np.ndarray) -> None:
         raise NotImplementedError
 
+    def grow(self, n_clients: int) -> None:
+        """Extend the population to ``n_clients`` (dynamic membership:
+        joins). Newly-covered ids start on the shared default view."""
+        raise NotImplementedError
+
+    def drop(self, cid: int) -> None:
+        """Release ``cid``'s view (dynamic membership: leaves). The client
+        reverts to the shared default; for the COW store this frees its
+        refcounted base once unshared — the no-leak invariant the service
+        soak pins."""
+        raise NotImplementedError
+
     def nbytes(self) -> int:
         raise NotImplementedError
 
@@ -131,6 +143,12 @@ class CowViewStore(ViewStore):
             else:
                 self.set_override(cid, mat[cid])
 
+    def grow(self, n_clients: int) -> None:
+        self.n_clients = max(self.n_clients, int(n_clients))
+
+    def drop(self, cid: int) -> None:
+        self._release(cid)
+
     def nbytes(self) -> int:
         return int(self._default.nbytes
                    + sum(b.nbytes for b in self._bases.values()))
@@ -169,11 +187,22 @@ class DenseViewStore(ViewStore):
 
     def __init__(self, n_clients: int, default_vec: np.ndarray):
         self.n_clients = n_clients
-        self._mat = np.tile(np.asarray(default_vec, np.float32),
-                            (n_clients, 1))
+        self._default = np.asarray(default_vec, np.float32).copy()
+        self._mat = np.tile(self._default, (n_clients, 1))
 
     def view(self, cid: int) -> np.ndarray:
         return self._mat[cid]
+
+    def grow(self, n_clients: int) -> None:
+        n_clients = int(n_clients)
+        if n_clients <= self.n_clients:
+            return
+        extra = np.tile(self._default, (n_clients - self.n_clients, 1))
+        self._mat = np.vstack([self._mat, extra])
+        self.n_clients = n_clients
+
+    def drop(self, cid: int) -> None:
+        self._mat[cid] = self._default
 
     def views_for(self, cids) -> np.ndarray:
         return self._mat[np.asarray(cids, np.int64)].copy()
@@ -182,7 +211,8 @@ class DenseViewStore(ViewStore):
         self._mat[cid] = vec
 
     def reset(self, vec: np.ndarray) -> None:
-        self._mat[:] = np.asarray(vec, np.float32)[None, :]
+        self._default = np.asarray(vec, np.float32).copy()
+        self._mat[:] = self._default[None, :]
 
     def materialize(self) -> np.ndarray:
         return self._mat.copy()

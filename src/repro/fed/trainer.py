@@ -10,7 +10,6 @@ serialization/billing lives in ``WireProtocol``; all aggregation policy in
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
@@ -26,6 +25,8 @@ from repro.fed.client import make_evaluator
 from repro.fed.endpoints import ClientRuntime, ServerEndpoint
 from repro.fed.protocol import WireProtocol
 from repro.fed.sampler import SAMPLERS, SegmentCoverageMonitor, make_sampler
+from repro.fed.service import (FederationService, RoundLog,  # noqa: F401
+                               ServiceConfig)
 from repro.fed.state_store import VIEW_STORES
 from repro.fed.strategies import (ALLOWED_METHODS, EcoLoRAConfig, make_policy)
 from repro.fed.transport import InMemoryTransport, Transport
@@ -109,19 +110,6 @@ class FedConfig:
                     raise ValueError(
                         "client_capabilities must map int client ids to "
                         f"lists of stage tokens (bad entry: {cid!r})")
-
-
-@dataclass
-class RoundLog:
-    round_t: int
-    global_loss: float
-    metric: float                     # top-1 acc (lm) or pref-acc (dpo)
-    upload_bytes: int
-    download_bytes: int
-    upload_params: int
-    download_params: int
-    compute_s: float
-    overhead_s: float
 
 
 def lora_product_vec(protocol: WireProtocol, lora_template: Params,
@@ -295,67 +283,17 @@ class FederatedTrainer:
         to ``self.start_round`` — 0 for a fresh trainer, the restored round
         after ``ckpt.load_fed_state`` — so a resumed run continues the
         absolute round numbering (segment schedule, ledger, eval cadence)
-        instead of replaying from 0."""
-        fed = self.fed
-        srv, cl, tp = self.server, self.clients, self.transport
-        n_rounds = rounds or fed.rounds
-        t0 = self.start_round if start_round is None else start_round
-        for t in range(t0, n_rounds):
-            sampled = self.sampler.sample(t)
-            participants = tp.plan_round(t, sampled)
-            if self.coverage is not None:
-                self.coverage.observe(t, participants)
-            led = srv.ledger
-            up0, down0 = led.upload_bytes, led.download_bytes
-            upp0, downp0 = led.upload_params, led.download_params
+        instead of replaying from 0.
 
-            # ---- downlink: one broadcast per round; every participant then
-            # catches up on ALL broadcasts it missed while idle (and is
-            # billed for each), so no client trains from a stale view ----
-            t_over = time.perf_counter()
-            tp.on_broadcast(srv.begin_round(t))
-            for cid in participants:
-                # sync doubles as the negotiation handshake: the client
-                # advertises its codec capabilities, the DownloadMsg carries
-                # the server's (sticky) cheapest-mutual-stack decision
-                dl = srv.sync_client(int(cid), t,
-                                     capabilities=cl.capabilities_for(int(cid)))
-                tp.on_download(dl)
-                cl.apply_download(int(cid), dl)
-
-            # ---- local training -> typed uploads over the transport ----
-            msgs, compute_s = cl.run_round(t, participants)
-            for msg in tp.dispatch_uploads(t, msgs, compute_s):
-                srv.receive(msg)
-
-            # ---- aggregate + (FLoRA) merge into base ----
-            updates = srv.end_round(t)
-            if self.policy.merges_into_base:
-                self._flora_merge_and_reinit(t, participants, updates)
-            overhead_s = time.perf_counter() - t_over - sum(compute_s)
-            tp.finish_round(t, max(overhead_s, 0.0))
-
-            # ---- eval / adaptive-k loss signal (eval_every thins the
-            # cadence; stale rounds reuse the last signal — persisted, so
-            # the cadence survives a checkpoint resume) ----
-            if t % max(fed.eval_every, 1) == 0 or t == n_rounds - 1 \
-                    or self._last_eval is None:
-                gloss, metric = self.evaluate(srv.global_vec)
-                self.observe_global_loss(gloss)
-                self._last_eval = (gloss, metric)
-            else:
-                gloss, metric = self._last_eval
-            srv.snapshot(t)
-            self.logs.append(RoundLog(
-                t, gloss, metric,
-                led.upload_bytes - up0,
-                led.download_bytes - down0,
-                led.upload_params - upp0,
-                led.download_params - downp0,
-                float(np.max(compute_s)) if len(compute_s) else 0.0,
-                max(overhead_s, 0.0)))
-            self.start_round = t + 1
-        return self.logs
+        This is now a thin shim over ``FederationService`` (fed/service.py):
+        a static population, synchronous round close, measured host-walltime
+        overhead — the batch-job semantics, pinned bitwise to the
+        pre-refactor loop (tests/test_service.py). Service features (dynamic
+        membership, arrival-triggered rounds, adapter publishing, mid-round
+        checkpointing) come from constructing a ``FederationService``
+        directly."""
+        svc = FederationService(self, ServiceConfig(measured_overhead=True))
+        return svc.run(rounds=rounds, start_round=start_round)
 
     # ------------------------------------------------------------------
     def _flora_merge_and_reinit(self, t: int, participants, updates) -> None:

@@ -39,10 +39,33 @@ class MessageEvent:
     delivered_round: int      # round the aggregator consumed it (uploads)
 
 
+@dataclass
+class RoundClosePolicy:
+    """When the aggregator stops waiting for uploads (fed/service.py's
+    arrival-triggered rounds): after the first ``min_uploads`` arrivals,
+    and/or at ``deadline_s`` on the round's event clock — whichever cuts
+    first. Uploads past the cut become in-flight stragglers, delivered at
+    the next round's aggregation (the buffered-async semantics, now ONE
+    lifecycle policy instead of a transport special case). Transports
+    without a clock (InMemoryTransport) honour the count and ignore the
+    deadline."""
+    min_uploads: Optional[int] = None
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.min_uploads is not None and self.min_uploads < 1:
+            raise ValueError("min_uploads must be >= 1")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0")
+
+
 class Transport:
     """Delivery contract between ServerEndpoint and ClientRuntime."""
 
     round_mode = "sync"
+
+    def __init__(self):
+        self._late: List[UploadMsg] = []         # straggler buffer
 
     def plan_round(self, round_t: int, sampled) -> np.ndarray:
         """Which of the sampled clients actually participate this round."""
@@ -55,10 +78,20 @@ class Transport:
         pass
 
     def dispatch_uploads(self, round_t: int, msgs: Sequence[UploadMsg],
-                         compute_s: Sequence[float]) -> List[UploadMsg]:
+                         compute_s: Sequence[float],
+                         policy: Optional[RoundClosePolicy] = None
+                         ) -> List[UploadMsg]:
         """Returns the uploads the server sees BEFORE this round's aggregate
-        (possibly including stragglers buffered from earlier rounds)."""
-        return list(msgs)
+        (possibly including stragglers buffered from earlier rounds).
+        ``policy`` closes the round early; without a clock only the arrival
+        count applies (list order stands in for arrival order)."""
+        delivered, self._late = list(self._late), []
+        msgs = list(msgs)
+        if policy is not None and policy.min_uploads is not None \
+                and len(msgs) > policy.min_uploads:
+            self._late = msgs[policy.min_uploads:]
+            msgs = msgs[:policy.min_uploads]
+        return delivered + msgs
 
     def on_stacked_download(self, cid: int, round_t: int,
                             wire_bytes: int) -> None:
@@ -69,6 +102,23 @@ class Transport:
 
     def finish_round(self, round_t: int, overhead_s: float = 0.0) -> None:
         """Close the round's timing entry (overhead = host-side CPU cost)."""
+        pass
+
+    # -- checkpointing (ckpt format 4) --------------------------------------
+    def inflight(self) -> List[UploadMsg]:
+        """In-flight straggler uploads (consumed next round) — persisted so
+        a service-mode resume delivers them instead of dropping them."""
+        return list(self._late)
+
+    def set_inflight(self, msgs: Sequence[UploadMsg]) -> None:
+        self._late = list(msgs)
+
+    def state(self) -> dict:
+        """Scalar transport state beyond the in-flight buffer (clock, rng,
+        pending timing). Base transports are stateless."""
+        return {}
+
+    def load_state(self, state: dict) -> None:
         pass
 
 
@@ -92,6 +142,7 @@ class SimTransport(Transport):
                              "in M-of-K aggregation)")
         if not 0.0 <= dropout < 1.0:
             raise ValueError(f"dropout must be in [0, 1), got {dropout}")
+        super().__init__()
         self.sim = NetworkSimulator(scenario, per_client=per_client)
         self.dropout = dropout
         self.round_mode = round_mode
@@ -100,7 +151,6 @@ class SimTransport(Transport):
         self.clock = 0.0
         self.events: List[MessageEvent] = []
         self.dropped: List[Tuple[int, List[int]]] = []   # (round, client ids)
-        self._late: List[UploadMsg] = []                 # straggler buffer
         self._down_s: Dict[int, float] = {}              # cid -> downlink time
         self._extra_down_s: Dict[int, float] = {}        # stacked modules
         self._pending_timing: Optional[RoundTiming] = None
@@ -135,7 +185,12 @@ class SimTransport(Transport):
 
     # -- uplink -------------------------------------------------------------
     def dispatch_uploads(self, round_t: int, msgs: Sequence[UploadMsg],
-                         compute_s: Sequence[float]) -> List[UploadMsg]:
+                         compute_s: Sequence[float],
+                         policy: Optional[RoundClosePolicy] = None
+                         ) -> List[UploadMsg]:
+        if policy is None and self.round_mode == "buffered_async":
+            # the legacy config knob is exactly one close policy
+            policy = RoundClosePolicy(min_uploads=self.min_uploads)
         delivered, self._late = list(self._late), []
         arrivals = []
         for m, c in zip(msgs, compute_s):
@@ -144,11 +199,16 @@ class SimTransport(Transport):
                                           cid=m.client_id)
             arrivals.append((t_down + c + t_up, m, t_down, c, t_up))
         arrivals.sort(key=lambda a: a[0])
-        if self.round_mode == "sync" or not arrivals:
+        if policy is None or not arrivals:
             arrived, late = arrivals, []
         else:
-            m_need = min(self.min_uploads, len(arrivals))
-            arrived, late = arrivals[:m_need], arrivals[m_need:]
+            arrived, late = [], []
+            for idx, a in enumerate(arrivals):
+                on_time = (policy.min_uploads is None
+                           or idx < policy.min_uploads) \
+                    and (policy.deadline_s is None
+                         or a[0] <= policy.deadline_s)
+                (arrived if on_time else late).append(a)
         for total, m, t_down, c, t_up in arrived:
             self.events.append(MessageEvent(
                 "upload", m.client_id, round_t, m.packet.wire_bytes,
@@ -168,7 +228,11 @@ class SimTransport(Transport):
             self._round_total = total
         else:
             self._pending_timing = RoundTiming(round_t, 0.0, 0.0, 0.0, 0.0)
-            self._round_total = 0.0
+            # a deadline-closed round with zero on-time arrivals still
+            # lasted until its deadline
+            self._round_total = (float(policy.deadline_s)
+                                 if policy is not None and arrivals
+                                 and policy.deadline_s is not None else 0.0)
         self._down_s = {}
         return delivered
 
@@ -196,6 +260,45 @@ class SimTransport(Transport):
         self.clock += self._round_total + overhead_s
         self._pending_timing = None
         self._round_total = 0.0
+
+    # -- checkpointing (ckpt format 4) --------------------------------------
+    def state(self) -> dict:
+        """Event clock + dropout rng + pending round timing: with these (and
+        the in-flight buffer, packed separately by the ckpt layer) a
+        service-mode resume continues the simulated timeline bitwise. The
+        event/dropout logs are reporting-only and not persisted."""
+        from repro.checkpoint.ckpt import _pack_rng_state
+        pt = self._pending_timing
+        return {
+            "clock": float(self.clock),
+            "round_total": float(self._round_total),
+            "pending_timing": None if pt is None else [
+                int(pt.round_t), float(pt.download_s), float(pt.compute_s),
+                float(pt.upload_s), float(pt.overhead_s)],
+            "rng": _pack_rng_state(self.rng),
+            # per-client downlink times recorded during OPEN and consumed at
+            # upload dispatch: a save between the two phases must carry them
+            # or the resumed round's arrival totals (and close cut) shift
+            "down_s": {str(c): float(s) for c, s in self._down_s.items()},
+            "extra_down_s": {str(c): float(s)
+                             for c, s in self._extra_down_s.items()},
+        }
+
+    def load_state(self, state: dict) -> None:
+        from repro.checkpoint.ckpt import _unpack_rng_state
+        self.clock = float(state["clock"])
+        self._round_total = float(state["round_total"])
+        pt = state.get("pending_timing")
+        self._pending_timing = None if pt is None else RoundTiming(
+            int(pt[0]), float(pt[1]), float(pt[2]), float(pt[3]),
+            float(pt[4]))
+        if state.get("rng") is not None:
+            _unpack_rng_state(self.rng, state["rng"])
+        self._down_s = {int(c): float(s)
+                        for c, s in (state.get("down_s") or {}).items()}
+        self._extra_down_s = {
+            int(c): float(s)
+            for c, s in (state.get("extra_down_s") or {}).items()}
 
     # -- reporting ----------------------------------------------------------
     def totals(self) -> Dict[str, float]:

@@ -244,6 +244,48 @@ def test_ans_incompressible_bypass():
     np.testing.assert_array_equal(car.sections["values"].data, codes)
 
 
+def test_ans_scales_stream_roundtrips_and_shrinks():
+    """Small quant chunks make the per-chunk fp32 scales a material slice of
+    the wire; the ANS SCALES stream must shrink that section, round-trip the
+    fp32 words bitwise, and bypass independently of the values stream."""
+    n = 8192
+    rng = np.random.default_rng(13)
+    v = (rng.standard_normal(n) ** 3 / 3).astype(np.float32)
+    plain = _pipe(CodecSpec(quantize="int8", quant_chunk=16), n=n)
+    ans = _pipe(CodecSpec(quantize="int8", quant_chunk=16, entropy="ans"),
+                n=n)
+    for p in (plain, ans):
+        p.observe_loss(1.0)
+    pkt_plain = plain.encode(v.copy(), 0)
+    pkt_ans = ans.encode(v.copy(), 0)
+    assert "ans_scales_model" in pkt_ans.sections
+    sb = lambda pkt: sum((pkt.sections[s].wire_bits + 7) // 8  # noqa: E731
+                         for s in ("scales", "ans_scales_model")
+                         if s in pkt.sections)
+    assert sb(pkt_ans) < sb(pkt_plain)
+    assert pkt_ans.wire_bytes < pkt_plain.wire_bytes
+    pkt_ans.local.clear()        # force the wire path
+    np.testing.assert_array_equal(decode_packet(pkt_ans),
+                                  decode_packet(pkt_plain))
+
+
+def test_ans_scales_bypass_on_large_chunks():
+    """With the default 2048-entry chunks the scales section is a handful of
+    floats — smaller than any rANS model header — so the SCALES stream must
+    bypass while the values stream still engages."""
+    n = 8192
+    rng = np.random.default_rng(13)
+    v = (rng.standard_normal(n) ** 3 / 3).astype(np.float32)
+    ans = _pipe(CodecSpec(quantize="int8", entropy="ans"), n=n)
+    ans.observe_loss(1.0)
+    pkt = ans.encode(v.copy(), 0)
+    assert "ans_model" in pkt.sections
+    assert "ans_scales_model" not in pkt.sections
+    assert pkt.sections["scales"].data.dtype == np.float32
+    pkt.local.clear()
+    assert np.isfinite(decode_packet(pkt)).all()
+
+
 def test_ans_requires_int8():
     with pytest.raises(ValueError, match="ans"):
         CodecSpec(entropy="ans").validate()
@@ -425,15 +467,16 @@ def test_pipeline_state_restore_uniform():
 # ---------------------------------------------------------------------------
 
 def test_ckpt_format3_roundtrip_and_format2_load(tmp_path):
-    """A format-3 checkpoint restores codec state bitwise; the same state
-    down-converted to the format-2 layout (bare sparsifier dicts, exactly
-    what PR 3 wrote) still loads to the identical compression state."""
+    """A current-format checkpoint restores codec state bitwise; the same
+    state down-converted to the format-2 layout (bare sparsifier dicts,
+    exactly what PR 3 wrote) still loads to the identical compression
+    state."""
     tr = _make_trainer("fedit", "batched")
     tr.run(rounds=2)
     p3 = str(tmp_path / "f3.ckpt")
     ckpt.save_fed_state(p3, tr)
     state = ckpt.load(p3)
-    assert state["format"] == 3
+    assert state["format"] == 4
     assert "stages" in state["downlink"] and "tag" in state["downlink"]
 
     a = _make_trainer("fedit", "batched")

@@ -4,7 +4,9 @@ bytes, adaptive-k schedule state, participant schedule, and global_vec. This
 pins the three resume bugs fixed together: adaptive-k state lost on load,
 run() replaying the round/segment schedule from 0, and history-dependent
 participant sampling. Plus the prefix-sum broadcast-billing equivalence for
-a client idle over many rounds.
+a client idle over many rounds, and (checkpoint format 4) service-mode
+resume: a save taken MID-round — lifecycle phase, in-flight straggler
+uploads, and the transport event clock — continues bitwise.
 """
 import numpy as np
 
@@ -12,8 +14,11 @@ from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.core.sparsify import SparsifyConfig
 from repro.data.synthetic import TaskConfig
+from repro.fed.service import FederationService, ServiceConfig
 from repro.fed.strategies import EcoLoRAConfig, FedITPolicy
 from repro.fed.trainer import FedConfig, FederatedTrainer
+from repro.fed.transport import SimTransport
+from repro.netsim.network import SCENARIOS
 
 CFG = get_config("llama2-7b").reduced()
 TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
@@ -112,6 +117,100 @@ def test_run_without_resume_still_starts_at_zero():
     tr = FederatedTrainer(CFG, _fed(), TC)
     tr.run(rounds=N)
     assert [lg.round_t for lg in tr.logs] == list(range(N))
+
+
+# ---------------------------------------------------------------------------
+# service-mode resume (checkpoint format 4): mid-round, with in-flight
+# stragglers and the simulated event clock
+# ---------------------------------------------------------------------------
+
+def _sim():
+    # clients 0-3 on slow links: with min_uploads=2 the close policy cuts
+    # each round before the slow cohort lands, keeping uploads IN FLIGHT
+    # across the save boundary
+    het = {i: SCENARIOS["0.2/1"] for i in range(4)}
+    return SimTransport(SCENARIOS["5/25"], per_client=het, seed=1)
+
+
+def _service(rounds=2 * N):
+    # compute_model_s pins the modeled local-compute time: the close cut
+    # sorts arrivals by download + compute + upload, so MEASURED compute
+    # (the default) would make the cut — and the clock — nondeterministic
+    tr = FederatedTrainer(CFG, _fed(rounds=rounds, clients_per_round=4,
+                                    compute_model_s=0.25), TC,
+                          transport=_sim())
+    # measured_overhead stays False: the event clock must be a pure
+    # function of the protocol stream for the resume to be bitwise
+    return tr, FederationService(tr, ServiceConfig(min_uploads=2))
+
+
+def test_service_mode_resume_mid_collecting_bitwise(tmp_path):
+    full_tr, full_svc = _service()
+    full_svc.run()                              # rounds 0..2N-1 straight
+    assert full_tr.transport.straggler_count() > 0   # policy left late msgs
+
+    a_tr, a_svc = _service()
+    a_svc.run(rounds=N)                         # rounds 0..N-1 complete
+    a_svc.step()                                # OPEN -> COLLECTING of round N
+    assert a_svc.lc.phase == a_svc.lc.COLLECTING
+    p = str(tmp_path / "mid_round.ckpt")
+    ckpt.save_fed_state(p, a_tr, service=a_svc)
+
+    b_tr, b_svc = _service()
+    assert ckpt.load_fed_state(p, b_tr, service=b_svc) == N
+    assert b_svc.lc.phase == b_svc.lc.COLLECTING
+    assert b_svc.lc.round_t == N
+    np.testing.assert_array_equal(b_svc.lc._participants,
+                                  a_svc.lc._participants)
+    # the in-flight stragglers and the event clock crossed the boundary
+    assert len(b_tr.transport.inflight()) == len(a_tr.transport.inflight())
+    assert b_tr.transport.clock == a_tr.transport.clock
+    b_svc.run()                                 # finishes round N, then N+1..
+
+    assert [lg.round_t for lg in b_tr.logs] == list(range(N, 2 * N))
+    la, lb = full_tr.server.ledger, b_tr.server.ledger
+    assert (la.upload_bytes, la.download_bytes, la.upload_params,
+            la.download_params) == (lb.upload_bytes, lb.download_bytes,
+                                    lb.upload_params, lb.download_params)
+    for lga, lgb in zip(full_tr.logs[N:], b_tr.logs):
+        assert lga.round_t == lgb.round_t
+        assert lga.upload_bytes == lgb.upload_bytes, lga.round_t
+        assert lga.download_bytes == lgb.download_bytes, lga.round_t
+        assert lga.global_loss == lgb.global_loss, lga.round_t
+    np.testing.assert_array_equal(full_tr.server.global_vec,
+                                  b_tr.server.global_vec)
+    # the deterministic event clock re-converges exactly
+    assert full_tr.transport.clock == b_tr.transport.clock
+    assert _k_state(full_tr) == _k_state(b_tr)
+
+
+def test_service_mode_resume_mid_aggregating_bitwise(tmp_path):
+    """The save can land on ANY phase boundary: cut between COLLECTING and
+    AGGREGATING (received updates pending, not yet folded in)."""
+    full_tr, full_svc = _service()
+    full_svc.run()
+
+    a_tr, a_svc = _service()
+    a_svc.run(rounds=N)
+    a_svc.step()                                # -> COLLECTING
+    a_svc.step()                                # -> AGGREGATING (pending set)
+    assert a_svc.lc.phase == a_svc.lc.AGGREGATING
+    assert len(a_tr.server.pending) > 0
+    p = str(tmp_path / "mid_agg.ckpt")
+    ckpt.save_fed_state(p, a_tr, service=a_svc)
+
+    b_tr, b_svc = _service()
+    ckpt.load_fed_state(p, b_tr, service=b_svc)
+    assert b_svc.lc.phase == b_svc.lc.AGGREGATING
+    assert len(b_tr.server.pending) == len(a_tr.server.pending)
+    b_svc.run()
+
+    la, lb = full_tr.server.ledger, b_tr.server.ledger
+    assert (la.upload_bytes, la.download_bytes) \
+        == (lb.upload_bytes, lb.download_bytes)
+    np.testing.assert_array_equal(full_tr.server.global_vec,
+                                  b_tr.server.global_vec)
+    assert full_tr.transport.clock == b_tr.transport.clock
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,318 @@
+"""Continuous federation service (DESIGN.md §10): the lifecycle state
+machine is pinned BITWISE to the pre-refactor batch loop, dynamic
+membership bills joins/rejoins correctly, starvation remediation re-routes
+an online client to the starved segment, and the adapter publisher
+versions every broadcast."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.codec import ALL_CAPABILITIES, CodecConfig, CodecSpec
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.protocol import JoinMsg, LeaveMsg
+from repro.fed.service import (AdapterPublisher, FederationService,
+                               Membership, RoundLog, ServiceConfig)
+from repro.fed.strategies import EcoLoRAConfig
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+
+
+def _make_trainer(method="fedit", engine="batched", rounds=3, **kw):
+    fed = FedConfig(method=method, n_clients=8, clients_per_round=4,
+                    rounds=rounds, local_steps=2, local_batch=4, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=2,
+                                      sparsify=SparsifyConfig()),
+                    pretrain_steps=5, engine=engine, **kw)
+    return FederatedTrainer(CFG, fed, TC)
+
+
+def _legacy_run(tr, rounds=None):
+    """Faithful replica of the pre-refactor ``FederatedTrainer.run()`` body
+    (the PR-5 loop, before the lifecycle state machine existed) — the
+    ground truth the service shim is pinned against."""
+    fed = tr.fed
+    srv, cl, tp = tr.server, tr.clients, tr.transport
+    n_rounds = rounds or fed.rounds
+    for t in range(tr.start_round, n_rounds):
+        sampled = tr.sampler.sample(t)
+        participants = tp.plan_round(t, sampled)
+        if tr.coverage is not None:
+            tr.coverage.observe(t, participants)
+        led = srv.ledger
+        up0, down0 = led.upload_bytes, led.download_bytes
+        upp0, downp0 = led.upload_params, led.download_params
+        t_over = time.perf_counter()
+        tp.on_broadcast(srv.begin_round(t))
+        for cid in participants:
+            dl = srv.sync_client(int(cid), t,
+                                 capabilities=cl.capabilities_for(int(cid)))
+            tp.on_download(dl)
+            cl.apply_download(int(cid), dl)
+        msgs, compute_s = cl.run_round(t, participants)
+        for msg in tp.dispatch_uploads(t, msgs, compute_s):
+            srv.receive(msg)
+        updates = srv.end_round(t)
+        if tr.policy.merges_into_base:
+            tr._flora_merge_and_reinit(t, participants, updates)
+        overhead_s = time.perf_counter() - t_over - sum(compute_s)
+        tp.finish_round(t, max(overhead_s, 0.0))
+        if t % max(fed.eval_every, 1) == 0 or t == n_rounds - 1 \
+                or tr._last_eval is None:
+            gloss, metric = tr.evaluate(srv.global_vec)
+            tr.observe_global_loss(gloss)
+            tr._last_eval = (gloss, metric)
+        else:
+            gloss, metric = tr._last_eval
+        srv.snapshot(t)
+        tr.logs.append(RoundLog(
+            t, gloss, metric,
+            led.upload_bytes - up0,
+            led.download_bytes - down0,
+            led.upload_params - upp0,
+            led.download_params - downp0,
+            float(np.max(compute_s)) if len(compute_s) else 0.0,
+            max(overhead_s, 0.0)))
+        tr.start_round = t + 1
+    return tr.logs
+
+
+def _assert_runs_match(a, b):
+    """Bitwise parity: ledger bytes, per-round log counters, global vec."""
+    led_a, led_b = a.server.ledger, b.server.ledger
+    assert led_a.upload_bytes == led_b.upload_bytes
+    assert led_a.download_bytes == led_b.download_bytes
+    assert led_a.upload_params == led_b.upload_params
+    assert led_a.download_params == led_b.download_params
+    assert len(a.logs) == len(b.logs)
+    for la, lb in zip(a.logs, b.logs):
+        assert (la.round_t, la.upload_bytes, la.download_bytes,
+                la.upload_params, la.download_params) \
+            == (lb.round_t, lb.upload_bytes, lb.download_bytes,
+                lb.upload_params, lb.download_params)
+        assert (la.global_loss, la.metric) == (lb.global_loss, lb.metric)
+    np.testing.assert_array_equal(a.server.global_vec, b.server.global_vec)
+
+
+# ---------------------------------------------------------------------------
+# the batch shim: trainer.run() through the lifecycle == the legacy loop
+# ---------------------------------------------------------------------------
+
+def test_shim_matches_legacy_loop_quick():
+    a = _make_trainer()
+    b = _make_trainer()
+    a.run()
+    _legacy_run(b)
+    _assert_runs_match(a, b)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method,engine", [
+    ("fedit", "serial"), ("fedit", "batched"),
+    ("ffa_lora", "serial"), ("ffa_lora", "batched"),
+    ("flora", "serial"), ("flora", "batched"),
+])
+def test_shim_matches_legacy_loop(method, engine):
+    a = _make_trainer(method, engine)
+    b = _make_trainer(method, engine)
+    a.run()
+    _legacy_run(b)
+    _assert_runs_match(a, b)
+
+
+def test_stepwise_lifecycle_matches_run():
+    """Driving the machine one transition at a time (the service-mode
+    granularity checkpoints cut at) produces the same run as run()."""
+    a = _make_trainer()
+    b = _make_trainer()
+    a.run()
+    svc = FederationService(b, ServiceConfig(measured_overhead=True))
+    for t in range(b.fed.rounds):
+        phases = [svc.step(final=(t == b.fed.rounds - 1))]
+        while phases[-1] != svc.lc.OPEN:
+            phases.append(svc.step(final=(t == b.fed.rounds - 1)))
+        assert phases == [svc.lc.COLLECTING, svc.lc.AGGREGATING,
+                          svc.lc.BROADCAST, svc.lc.OPEN]
+    _assert_runs_match(a, b)
+
+
+def test_close_policy_rejected_for_flora():
+    tr = _make_trainer("flora")
+    with pytest.raises(ValueError, match="flora"):
+        FederationService(tr, ServiceConfig(min_uploads=2))
+
+
+# ---------------------------------------------------------------------------
+# dynamic membership: join / leave / rejoin
+# ---------------------------------------------------------------------------
+
+def test_join_negotiates_and_bills_from_admission():
+    """A mid-run joiner negotiates its codec AT ADMISSION and owes nothing
+    for history before it existed; its first sync bills exactly the
+    broadcasts since the join — unlike a never-synced seed client, which
+    owes every broadcast since round 0."""
+    tr = _make_trainer(
+        codec=CodecConfig(uplink=CodecSpec(quantize="int8", entropy="ans")))
+    svc = FederationService(tr, dynamic=True)
+    svc.run_round()
+    srv = tr.server
+    b_admit = int(srv._bcast_count)
+    assert b_admit == 1
+
+    new_cid = tr.fed.n_clients
+    ack = svc.join(JoinMsg(new_cid, 0,
+                           capabilities=sorted(ALL_CAPABILITIES)))
+    assert not ack.rejoined
+    assert ack.bcast_version == b_admit
+    # negotiation happened at join: the full-caps client gets the primary
+    assert ack.codec is not None and "ans" in ack.codec
+    assert srv.codec_table[new_cid] == ack.codec
+    # cursor snapped to the present, not to round 0
+    assert int(srv.client_sync[new_cid]) == b_admit
+    assert new_cid in svc.membership.active
+    assert tr.clients.parts[new_cid].size >= 1   # got a data partition
+
+    # first sync right after join owes NOTHING (no pre-join history) —
+    # while a seed client that never participated owes every broadcast
+    # since round 0, proving the joiner was not back-billed
+    dl = srv.sync_client(new_cid, 1,
+                         capabilities=sorted(ALL_CAPABILITIES))
+    assert dl.n_missed == 0
+    never = next(c for c in range(tr.fed.n_clients)
+                 if int(srv.client_sync[c]) == 0)
+    dl_never = srv.sync_client(never, 1)
+    assert dl_never.n_missed == b_admit > dl.n_missed
+
+    # first upload: compressed with the negotiated stack, billed in full
+    tr.clients.apply_download(new_cid, dl)
+    assert tr.clients.up_comps._specs[new_cid] == ack.codec
+    start = tr.clients.client_start(new_cid, 1,
+                                    tr.clients.view_store.view(new_cid))
+    rng = np.random.default_rng(0)
+    trained = start + rng.standard_normal(start.size).astype(np.float32) \
+        * 1e-2
+    up0 = srv.ledger.upload_bytes
+    msg = tr.clients.make_upload(new_cid, 1, trained, start, 4, 1.0)
+    srv.receive(msg)
+    assert srv.ledger.upload_bytes - up0 == msg.packet.wire_bytes > 0
+
+
+def test_leave_then_rejoin_pays_staleness_gap():
+    """A leaver's O(active) state drops immediately; its billing cursor and
+    staleness clock survive, so the rejoin acks as a REJOIN and the first
+    sync pays for every broadcast missed while away."""
+    tr = _make_trainer(rounds=5)
+    svc = FederationService(tr, dynamic=True)
+    svc.run_round()
+    # pick a round-0 participant (it has a view/local state to drop)
+    gone = int(tr.sampler.sample(0)[0])
+    cursor_before = int(tr.server.client_sync[gone])
+    tau_before = tr.clients.client_tau[gone]
+    assert cursor_before > 0
+    assert gone in tr.clients.up_comps._specs            # negotiated
+
+    svc.leave(LeaveMsg(gone, 0))
+    assert gone not in svc.membership.active
+    assert gone not in tr.clients.view_store._vers       # view freed
+    assert gone not in tr.clients.up_comps._comps        # residuals freed
+    assert gone in tr.clients.up_comps._specs            # spec stays sticky
+
+    svc.run_round()
+    svc.run_round()                                      # 2 missed broadcasts
+
+    ack = svc.join(JoinMsg(gone, 3))
+    assert ack.rejoined
+    # the cursor was NOT snapped forward: the rejoiner still owes the gap
+    assert int(tr.server.client_sync[gone]) == cursor_before
+    assert tr.clients.client_tau[gone] == tau_before     # staleness kept
+    dl = tr.server.sync_client(gone, 3)
+    assert dl.n_missed == int(tr.server._bcast_count) - cursor_before > 0
+    assert dl.wire_bytes > 0                             # the gap is billed
+
+
+def test_membership_join_order_is_reproducible_schedule():
+    m = Membership(3)
+    assert m.join(5) is False and m.join(1) is True
+    m.leave(0)
+    st = m.state()
+    m2 = Membership(3)
+    m2.load_state(st)
+    assert m2.active == m.active and m2.ever == m.ever
+
+
+# ---------------------------------------------------------------------------
+# availability-starvation remediation
+# ---------------------------------------------------------------------------
+
+def test_starved_segment_reassigned_to_online_client():
+    """Permanently-offline cohort: clients 0 and 6 are the only ones ever
+    online, both scheduled to the SAME segment each round (cid % Ns equal),
+    so one segment's scheduled coverage gap hits the starvation threshold
+    every round. The lifecycle must then re-assign a duplicate-covered
+    online client to the starved segment — every round from the first flag
+    on — so every segment keeps receiving uploads."""
+    ns = 6
+    avail = [1.0 if c in (0, 6) else 0.0 for c in range(12)]
+    fed = FedConfig(method="fedit", n_clients=12, clients_per_round=2,
+                    rounds=9, local_steps=1, local_batch=2, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=ns,
+                                      sparsify=SparsifyConfig()),
+                    pretrain_steps=0, engine="batched",
+                    sampler="availability",
+                    sampler_kw={"availability": avail})
+    tr = FederatedTrainer(CFG, fed, TC)
+
+    seen = {}                         # round -> set of received segment ids
+    orig = tr.server.receive
+
+    def spy(msg):
+        seg = (msg.seg_id if msg.seg_id is not None
+               else tr.protocol.segment_for(msg.client_id, msg.round_t))
+        seen.setdefault(msg.round_t, set()).add(int(seg))
+        return orig(msg)
+
+    tr.server.receive = spy
+    with pytest.warns(RuntimeWarning, match="segment"):
+        tr.run()
+
+    # before the starvation threshold: only the scheduled segment t % Ns
+    # arrives (both online clients duplicate-cover it). Segment 5 is never
+    # scheduled until round 5, so its gap hits starve_after=5 AT round 4.
+    for t in range(4):
+        assert seen[t] == {t % ns}, (t, seen[t])
+    # from the first flag on, the starved segment (scheduled-coverage gap
+    # >= 5, always the NEXT one in the rotation) is remediated EVERY round
+    # on top of the scheduled one
+    for t in range(4, 9):
+        assert seen[t] == {t % ns, (t + 1) % ns}, (t, seen[t])
+
+
+# ---------------------------------------------------------------------------
+# adapter publishing
+# ---------------------------------------------------------------------------
+
+def test_publisher_versions_track_every_broadcast():
+    """A subscriber (the serving process) sees version v published for
+    round v-1, strictly in order, and the latest vector equals the
+    server's global vector — the contract examples/serve_decode.py's
+    hot-swap relies on."""
+    tr = _make_trainer()
+    pub = AdapterPublisher()
+    served = []
+    pub.subscribe(lambda v, t, vec: served.append((v, t, vec.copy())))
+    svc = FederationService(tr, publisher=pub)
+    svc.run(rounds=3)
+    assert [v for v, _, _ in served] == [1, 2, 3]
+    assert [t for _, t, _ in served] == [0, 1, 2]
+    assert pub.version == 3
+    v, vec = pub.current()
+    assert v == 3
+    np.testing.assert_array_equal(vec, tr.server.global_vec)
+    np.testing.assert_array_equal(served[-1][2], tr.server.global_vec)
+    # the published copy is insulated from further server mutation
+    tr.server.global_vec[:] += 1.0
+    assert not np.array_equal(pub.current()[1], tr.server.global_vec)
