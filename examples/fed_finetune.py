@@ -92,6 +92,13 @@ def main():
                     help="service mode: every EVERY rounds a brand-new "
                          "client joins (codec negotiated at admission) and "
                          "the eldest mid-run joiner leaves")
+    ap.add_argument("--downlink-tiers", type=int, default=1, metavar="N",
+                    help="split clients round-robin over N capability "
+                         "groups (full caps / no ans / no ans+int8) so the "
+                         "broadcast distribution plane multicasts one "
+                         "encode per TIER; N>1 defaults the downlink stack "
+                         "to adaptive+int8+golomb+ans so the fallback chain "
+                         "has somewhere to tier to")
     args = ap.parse_args()
     service_mode = (args.service_min_uploads is not None
                     or args.service_deadline is not None
@@ -103,20 +110,40 @@ def main():
         ap.error("--async-m is the legacy spelling of "
                  "--service-min-uploads; pick one")
 
+    if args.downlink_tiers < 1:
+        ap.error("--downlink-tiers must be >= 1")
     codec = None
-    if args.uplink_codec or args.downlink_codec:
+    if args.uplink_codec or args.downlink_codec or args.downlink_tiers > 1:
+        # tiering needs a downlink with a real fallback chain: the richest
+        # stack the negotiator can degrade from is int8+ans
+        downlink_default = ("adaptive+int8+golomb+ans"
+                            if args.downlink_tiers > 1
+                            else "adaptive+fp16+golomb")
         codec = CodecConfig(
             uplink=CodecSpec.parse(args.uplink_codec or
                                    "adaptive+fp16+golomb"),
             downlink=CodecSpec.parse(args.downlink_codec or
-                                     "adaptive+fp16+golomb"))
+                                     downlink_default))
         print(f"codec: uplink={codec.uplink.tag} "
               f"downlink={codec.downlink.tag}")
+    caps = None
+    if args.downlink_tiers > 1:
+        # round-robin capability groups: group 0 speaks everything, group 1
+        # lacks entropy coding, group 2+ lacks int8 too — each resolves one
+        # rung down the downlink fallback chain
+        from repro.core.codec import ALL_CAPABILITIES
+        full = sorted(ALL_CAPABILITIES)
+        groups = [full,
+                  [c for c in full if c != "ans"],
+                  [c for c in full if c not in ("ans", "int8")]]
+        caps = {cid: list(groups[min(cid % args.downlink_tiers,
+                                     len(groups) - 1)])
+                for cid in range(24)}
     tc = TaskConfig(vocab_size=4096, seq_len=64, n_samples=2048, seed=0)
     fed = FedConfig(n_clients=24, clients_per_round=6, rounds=args.rounds,
                     local_steps=2, local_batch=4, lr=2e-3,
                     eco=EcoLoRAConfig(n_segments=3), pretrain_steps=60,
-                    codec=codec)
+                    codec=codec, client_capabilities=caps)
     # total optimizer steps = rounds x clients/round x local steps
     print(f"total federated optimizer steps: "
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")
@@ -160,6 +187,15 @@ def main():
     s = tr.summary()
     print("\nledger:", {k: round(v, 3) if isinstance(v, float) else v
                         for k, v in s.items()})
+    if args.downlink_tiers > 1:
+        plane = tr.server.distribution
+        print("downlink tiers (encodes/broadcast: "
+              f"{plane.last_broadcast_encodes}, cache hit rate "
+              f"{plane.cache.hit_rate():.2f}):")
+        for tag, members in sorted(plane.plan().items()):
+            billed = tr.server.ledger.download_by_codec.get(tag, 0)
+            print(f"  {tag}: {len(members)} clients, "
+                  f"{billed/1e6:.2f} MB billed")
     if args.scenario is not None:
         t = tr.transport.totals()
         print(f"simulated wall-clock @ {args.scenario} Mbps: "

@@ -182,7 +182,7 @@ def _unpack_rng_state(rng, d: Dict[str, Any]) -> None:
 
 
 def save_fed_state(path: str, trainer, service=None) -> int:
-    """Round-resumable federated state (format 4, DESIGN.md §7-8, §10).
+    """Round-resumable federated state (format 5, DESIGN.md §7-8, §10-11).
 
     Server-side state comes from the ServerEndpoint (global vec, prefix-sum
     billing cursors, ledger, downlink codec state), client-side state from
@@ -195,7 +195,8 @@ def save_fed_state(path: str, trainer, service=None) -> int:
     NOTHING about stage internals, so new codec stages checkpoint for free.
     The on-disk layout is sparse: O(active) vectors, not O(n_clients).
     ``load_fed_state`` still reads the legacy dense (format 1),
-    per-sparsifier (format 2), and pre-service (format 3) layouts.
+    per-sparsifier (format 2), pre-service (format 3), and pre-tiering
+    (format 4) layouts.
 
     Format 4 closes format 3's known resume gap: transport state (event
     clock, dropout rng, IN-FLIGHT straggler uploads), the server's pending
@@ -205,11 +206,18 @@ def save_fed_state(path: str, trainer, service=None) -> int:
     phase boundary resumes bitwise (in-flight uploads are delivered, not
     dropped). Pass the same ``service`` to ``load_fed_state`` to restore
     the service blocks.
+
+    Format 5 adds the broadcast distribution plane (DESIGN.md §11): the
+    capability tier table, per-tier billing cumulatives, tier pipeline
+    states and the encoded-delta cache INDEX (payloads are memory-only —
+    a resumed server re-encodes on the first post-resume miss), plus the
+    ledger's per-tier download breakdown. Formats 1-4 load with a fresh
+    plane (every pre-tiering run is single-tier, so nothing is lost).
     """
     srv, cl = trainer.server, trainer.clients
     pool = cl.up_comps
     state = {
-        "format": 4,
+        "format": 5,
         "round": int(trainer.start_round),
         "global_vec": srv.global_vec,
         "last_broadcast": srv.last_broadcast,
@@ -235,7 +243,10 @@ def save_fed_state(path: str, trainer, service=None) -> int:
             "upload_bytes": srv.ledger.upload_bytes,
             "download_bytes": srv.ledger.download_bytes,
             "upload_by_codec": dict(srv.ledger.upload_by_codec),
+            "download_by_codec": dict(srv.ledger.download_by_codec),
         },
+        # ---- format 5: the broadcast distribution plane ----
+        "distribution": trainer.server.distribution.state(),
         "last_eval": (None if trainer._last_eval is None
                       else [float(x) for x in trainer._last_eval]),
         "rng_state": _pack_rng_state(trainer.rng),
@@ -365,13 +376,17 @@ def load_fed_state(path: str, trainer, service=None) -> int:
         # format 1 never persisted adaptive-k or RNG state — resumes from a
         # legacy checkpoint restart the schedule at k_max (the bug this
         # format exists to fix)
-    # the ledger is restored WHOLESALE: clear the breakdown first so a
+    # the ledger is restored WHOLESALE: clear the breakdowns first so a
     # non-fresh trainer can't keep stale per-codec entries
     srv.ledger.upload_by_codec = {}
+    srv.ledger.download_by_codec = {}
     for k, v in state["ledger"].items():
         if k == "upload_by_codec":
             srv.ledger.upload_by_codec = {str(t): int(b)
                                           for t, b in v.items()}
+        elif k == "download_by_codec":
+            srv.ledger.download_by_codec = {str(t): int(b)
+                                            for t, b in v.items()}
         else:
             setattr(srv.ledger, k, int(v))
     # pre-PR5 checkpoints carry no per-codec breakdown: park the restored
@@ -381,6 +396,12 @@ def load_fed_state(path: str, trainer, service=None) -> int:
         - sum(srv.ledger.upload_by_codec.values())
     if shortfall > 0:
         srv.ledger.upload_by_codec["legacy(pre-negotiation)"] = shortfall
+    # the downlink mirror: pre-format-5 checkpoints billed downloads with
+    # no tier attribution
+    shortfall = srv.ledger.download_bytes \
+        - sum(srv.ledger.download_by_codec.values())
+    if shortfall > 0:
+        srv.ledger.download_by_codec["legacy(pre-tiering)"] = shortfall
     if fmt >= 4:
         srv.pending = [_unpack_seg_update(u)
                        for u in state.get("pending") or []]
@@ -395,6 +416,8 @@ def load_fed_state(path: str, trainer, service=None) -> int:
             trainer.coverage.load_state(cov)
         if service is not None and state.get("service") is not None:
             service.load_state(state["service"])
+    if state.get("distribution") is not None:
+        srv.distribution.load_state(state["distribution"])
     rnd = int(state["round"])
     trainer.start_round = rnd
     srv.round_t = rnd

@@ -316,6 +316,10 @@ class CommLedger:
     # population bills different stacks in one round; this is the breakdown
     # (sums to upload_bytes)
     upload_by_codec: Dict[str, int] = field(default_factory=dict)
+    # the downlink mirror: with capability-tiered multicast (DESIGN.md §11)
+    # different tiers bill different stacks; keys are pipeline tags and the
+    # values sum to download_bytes
+    download_by_codec: Dict[str, int] = field(default_factory=dict)
 
     def log_upload(self, pkt: Packet) -> None:
         self.upload_params += pkt.param_count
@@ -325,15 +329,23 @@ class CommLedger:
             self.upload_by_codec.get(pkt.codec, 0) + pkt.wire_bytes
 
     def log_download(self, pkt: Packet) -> None:
-        self.log_download_stats(pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)
+        self.log_download_stats(pkt.param_count, pkt.wire_bytes,
+                                pkt.dense_bytes, codec=pkt.codec)
 
     def log_download_stats(self, params: int, wire_bytes: int,
-                           dense_bytes: int) -> None:
+                           dense_bytes: int,
+                           codec: Optional[str] = None) -> None:
         """Bill a download whose packet is no longer materialised (replayed
-        broadcast catch-up for clients that skipped rounds)."""
+        broadcast catch-up for clients that skipped rounds). ``codec`` tags
+        the bytes with the pipeline that encoded them (the client's
+        multicast tier); an up-to-date client's zero-byte sync is not a
+        wire event and adds no breakdown entry."""
         self.download_params += params
         self.download_bytes += wire_bytes
         self.download_dense_bytes += dense_bytes
+        if codec is not None and wire_bytes:
+            self.download_by_codec[codec] = \
+                self.download_by_codec.get(codec, 0) + wire_bytes
 
     def snapshot_round(self, round_t: int) -> None:
         self.per_round.append(dict(round=round_t,

@@ -1,0 +1,421 @@
+"""Broadcast distribution plane: capability-tiered multicast encoding +
+encoded-delta cache (DESIGN.md §11).
+
+Sits between ``ServerEndpoint`` and the ``Transport``. Before this plane
+every broadcast was one reference encode whose bytes were billed to every
+client, and a returning client's catch-up bill was re-derived per client.
+At "millions of subscribers" scale (ROADMAP) the downlink must instead be:
+
+  * **capability-tiered multicast** — the active population is grouped by
+    the downlink stack each client can decode (the same ``CodecNegotiator``
+    token handshake the uplink uses, resolved against the DOWNLINK spec's
+    fallback chain). Each broadcast is encoded once per TIER, not once per
+    client: tier 0 (the "reference" tier — the configured downlink stack)
+    reuses the ``ServerEndpoint.down_comp`` packet, every other tier runs
+    one shared pipeline over the same delta. A tier pipeline is endpoint
+    state (sparsification residual, Eq. 6) shared by the whole tier — there
+    is no per-client encode, hence no per-client state to leak.
+  * **encoded-delta cache** — an LRU of encoded broadcast packets keyed
+    ``(from_version, to_version, codec_tag)``. Every broadcast inserts its
+    per-tier single-step entries; a returning client's catch-up over an
+    already-encoded version range is a cache HIT (served from the edge,
+    zero new encodes) and coalesced ranges are inserted back so the next
+    rejoiner over the same gap hits directly. Eviction is byte-budgeted
+    (LRU order, oversized entries are never admitted).
+
+Billing stays EXACT per client and — under the single-tier default — is
+bitwise identical to the pre-plane prefix-sum scheme: the plane keeps one
+cumulative (params, wire, dense) vector per non-reference tier, mirrors of
+``ServerEndpoint._cum_stats``, and ``settle`` bills the difference between
+the client's tier cumulative and its snapshot cursor. A client migrating
+tiers settles under its OLD tier first, then its cursor snaps to the new
+tier's cumulative — O(1) per sync however long the client was away.
+
+The simulation's model content remains the reference stack's (every view
+is the server broadcast base, so tiers never fork the model); tier encodes
+measure the exact wire bytes of each tier's stack over the same delta
+stream, which is what the ledger and the CDN fan-out model consume.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.codec import CodecSpec
+
+CacheKey = Tuple[int, int, str]          # (from_version, to_version, tag)
+
+
+@dataclass
+class DistributionConfig:
+    """Knobs for the broadcast distribution plane."""
+    # byte budget for the encoded-delta LRU (sum of cached wire bytes)
+    cache_budget_bytes: int = 4 << 20
+
+    def validate(self) -> None:
+        if self.cache_budget_bytes <= 0:
+            raise ValueError("cache_budget_bytes must be > 0, got "
+                             f"{self.cache_budget_bytes}")
+
+
+@dataclass
+class CacheEntry:
+    """One encoded broadcast delta range: the billed (params, wire, dense)
+    stats plus (in memory only) the packets an edge would serve. Payloads
+    are re-derivable content and deliberately do NOT persist in checkpoints
+    — a restarted edge refills from origin; hit/miss accounting needs only
+    the index."""
+    stats: np.ndarray                    # int64 (params, wire, dense)
+    packets: Optional[list] = None       # encoded Packets (memory only)
+
+    @property
+    def wire_bytes(self) -> int:
+        return int(self.stats[1])
+
+
+class EncodedDeltaCache:
+    """Byte-budgeted LRU of encoded broadcast deltas.
+
+    Keys are ``(from_version, to_version, codec_tag)`` — version numbers
+    are the server's absolute broadcast count, so a single broadcast is the
+    step ``(v-1, v, tag)`` and a catch-up range is ``(a, b, tag)``. Budget
+    accounting charges each entry its encoded wire bytes; eviction pops the
+    least-recently-used entry until the cache fits, and an entry larger
+    than the whole budget is never admitted (it would evict everything for
+    one range nobody else shares)."""
+
+    def __init__(self, budget_bytes: int):
+        self.budget = int(budget_bytes)
+        self._entries: "OrderedDict[CacheKey, CacheEntry]" = OrderedDict()
+        self._nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._entries
+
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def get(self, key: CacheKey) -> Optional[CacheEntry]:
+        e = self._entries.get(key)
+        if e is not None:
+            self._entries.move_to_end(key)
+        return e
+
+    def put(self, key: CacheKey, stats, packets: Optional[list] = None
+            ) -> bool:
+        stats = np.asarray(stats, np.int64).copy()
+        wire = int(stats[1])
+        if wire > self.budget:
+            return False
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._nbytes -= old.wire_bytes
+        self._entries[key] = CacheEntry(stats, packets)
+        self._nbytes += wire
+        while self._nbytes > self.budget:
+            _, ev = self._entries.popitem(last=False)
+            self._nbytes -= ev.wire_bytes
+            self.evictions += 1
+        return True
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._nbytes = 0
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    # -- checkpointing (the cache INDEX persists; payloads do not) ----------
+    def state(self) -> dict:
+        return {
+            "entries": [[int(a), int(b), str(tag),
+                         [int(x) for x in e.stats]]
+                        for (a, b, tag), e in self._entries.items()],
+            "hits": int(self.hits), "misses": int(self.misses),
+            "evictions": int(self.evictions),
+        }
+
+    def load_state(self, st: dict) -> None:
+        self.clear()
+        for a, b, tag, stats in st.get("entries") or []:
+            self.put((int(a), int(b), str(tag)),
+                     np.asarray(stats, np.int64))
+        self.hits = int(st.get("hits", 0))
+        self.misses = int(st.get("misses", 0))
+        self.evictions = int(st.get("evictions", 0))
+
+
+class DistributionPlane:
+    """Capability-tiered broadcast encoding + per-tier exact billing.
+
+    Owned by ``ServerEndpoint``; the endpoint delegates per-broadcast tier
+    encodes (``on_broadcast``), per-sync billing (``settle``), catch-up
+    cache serving (``serve_catchup``) and downlink negotiation
+    (``negotiate``) here. Under the default config every client resolves to
+    the reference tier and the plane is pure bookkeeping — the billing
+    arithmetic is bit-for-bit the pre-plane prefix-sum path."""
+
+    def __init__(self, protocol, config: Optional[DistributionConfig] = None):
+        self.protocol = protocol
+        self.config = config or DistributionConfig()
+        self.config.validate()
+        self.negotiator = protocol.make_downlink_negotiator()
+        # candidates are tag-deduped, so tag <-> spec is 1:1 here
+        self._spec_by_tag: Dict[str, CodecSpec] = {
+            s.tag: s for s in self.negotiator.candidates}
+        self.ref_spec = self.negotiator.candidates[0]
+        self.ref_tag = self.ref_spec.tag
+        # cid -> resolved downlink spec string (sticky, like the uplink
+        # codec_table; spec_str is the parseable wire/checkpoint form)
+        self.table: Dict[int, str] = {}
+        self._tag_cache: Dict[str, str] = {}
+        # cid -> the tier tag its billing cursor refers to (absent = ref)
+        self.billing: Dict[int, str] = {}
+        # tag -> shared tier compressor (built lazily at first broadcast)
+        self._pipes: Dict[str, object] = {}
+        # tag -> cumulative (params, wire, dense); the ref tier's cumulative
+        # is the server's _cum_stats and never lives here
+        self._cum: Dict[str, np.ndarray] = {}
+        self.cache = EncodedDeltaCache(self.config.cache_budget_bytes)
+        # Eq. 4 loss seeding for late-built tier pipelines, mirroring
+        # CompressorPool: loss0 = first global loss, loss_prev = latest
+        self._first_gloss: Optional[float] = None
+        self._last_gloss: Optional[float] = None
+        # encode instrumentation (the encode-once-per-tier pin)
+        self.total_encodes = 0               # ref + tier encodes, all time
+        self.last_broadcast_encodes = 0      # encodes of the last broadcast
+        self.last_plan: Dict[str, List[int]] = {}
+
+    # -- tiering -------------------------------------------------------------
+    def _tag_of(self, spec_str: str) -> str:
+        tag = self._tag_cache.get(spec_str)
+        if tag is None:
+            tag = self._tag_cache[spec_str] = CodecSpec.parse(spec_str).tag
+        return tag
+
+    def tier_tag(self, cid: int) -> str:
+        s = self.table.get(int(cid))
+        return self.ref_tag if s is None else self._tag_of(s)
+
+    def downlink_spec(self, cid: int) -> Optional[str]:
+        """The negotiated downlink spec string (JoinAck.downlink)."""
+        return self.table.get(int(cid))
+
+    def negotiate(self, cid: int, capabilities) -> str:
+        """Resolve ``cid``'s advertised capability tokens against the
+        DOWNLINK fallback chain (sticky, like the uplink table). Returns the
+        tier tag. ``capabilities=None`` (legacy client) stays untabled and
+        implicitly rides the reference tier."""
+        cid = int(cid)
+        if capabilities is not None and cid not in self.table:
+            spec = self.negotiator.resolve(capabilities)
+            self.table[cid] = spec.spec_str()
+            if spec.tag != self.ref_tag and spec.tag not in self._cum:
+                self._cum[spec.tag] = np.zeros(3, np.int64)
+        return self.tier_tag(cid)
+
+    def enroll(self, cid: int, cursor_row: np.ndarray,
+               ref_cum: np.ndarray) -> None:
+        """Snap a genuinely-NEW client's billing cursor to its tier's
+        present: admission already negotiated the tier, so the gap between
+        admission and first sync bills at tier rates (ref-tier clients keep
+        the cursor the endpoint just snapped to ``_cum_stats``)."""
+        cid = int(cid)
+        tag = self.tier_tag(cid)
+        if tag != self.ref_tag:
+            cursor_row[:] = self._cum[tag]
+            self.billing[cid] = tag
+
+    def plan(self, active_ids=None) -> Dict[str, List[int]]:
+        """Tier -> members. ``active_ids=None`` groups every tabled client
+        (static populations); untabled ids in ``active_ids`` are reference
+        tier."""
+        ids = (sorted(self.table) if active_ids is None
+               else [int(c) for c in active_ids])
+        out: Dict[str, List[int]] = {self.ref_tag: []}
+        for cid in ids:
+            out.setdefault(self.tier_tag(cid), []).append(cid)
+        return out
+
+    def replan(self, active_ids) -> Dict[str, List[int]]:
+        """Recompute the tier plan at a membership change (service join/
+        leave admission). Tier pipelines and cumulatives are never torn
+        down when a tier empties: departed clients' cursors still reference
+        the tier cumulative, and a rejoin must pay its exact gap — the set
+        of tiers is bounded by the negotiator's candidate list, not the
+        population."""
+        self.last_plan = self.plan(active_ids)
+        return self.last_plan
+
+    # -- per-broadcast tier encodes ------------------------------------------
+    def _pipe(self, tag: str):
+        c = self._pipes.get(tag)
+        if c is None:
+            spec = self._spec_by_tag.get(tag)
+            if spec is None:             # foreign tag (config changed under
+                return None              # a resumed checkpoint): skip
+            c = self._pipes[tag] = self.protocol.make_tier_compressor(spec)
+            if self._first_gloss is not None:
+                c.sparsifier.loss0 = self._first_gloss
+                c.sparsifier.loss_prev = self._last_gloss
+        return c
+
+    def on_broadcast(self, round_t: int, version: int, delta: np.ndarray,
+                     ref_pkt) -> None:
+        """Encode broadcast ``version`` once per non-reference tier (the
+        reference encode — ``ref_pkt`` — already happened in
+        ``ServerEndpoint.begin_round``) and cache every tier's single-step
+        delta entry."""
+        self.last_broadcast_encodes = 1
+        self.cache.put((version - 1, version, self.ref_tag),
+                       (ref_pkt.param_count, ref_pkt.wire_bytes,
+                        ref_pkt.dense_bytes), [ref_pkt])
+        for tag in sorted(self._cum):
+            pipe = self._pipe(tag)
+            if pipe is None:
+                continue
+            pkt = pipe.compress(np.array(delta, np.float32, copy=True),
+                                round_t)
+            self._cum[tag] += (pkt.param_count, pkt.wire_bytes,
+                               pkt.dense_bytes)
+            self.cache.put((version - 1, version, tag),
+                           (pkt.param_count, pkt.wire_bytes,
+                            pkt.dense_bytes), [pkt])
+            self.last_broadcast_encodes += 1
+        self.total_encodes += self.last_broadcast_encodes
+
+    # -- exact per-client billing ---------------------------------------------
+    def settle(self, cid: int, cursor_row: np.ndarray, ref_cum: np.ndarray
+               ) -> Tuple[str, Tuple[int, int, int]]:
+        """Bill ``cid`` for every broadcast since its last sync, at the
+        rates of the tier its cursor belongs to, then snap the cursor to
+        its CURRENT tier's cumulative (tier migration settles under the old
+        tier first). Mutates ``cursor_row`` (the endpoint's ``_client_cum``
+        row) in place; returns ``(billed_tier_tag, (params, wire, dense))``.
+        Single-tier default: ``ref_cum - cursor_row`` — bitwise the
+        pre-plane bill."""
+        cid = int(cid)
+        old = self.billing.get(cid, self.ref_tag)
+        cum_old = ref_cum if old == self.ref_tag else self._cum[old]
+        billed = tuple(int(x) for x in (cum_old - cursor_row))
+        new = self.tier_tag(cid)
+        if new == self.ref_tag:
+            cursor_row[:] = ref_cum
+            self.billing.pop(cid, None)
+        else:
+            cursor_row[:] = self._cum[new]
+            self.billing[cid] = new
+        return old, billed
+
+    # -- catch-up serving -------------------------------------------------------
+    def serve_catchup(self, tag: str, from_version: int, to_version: int,
+                      stats) -> bool:
+        """Serve the catch-up range ``(from_version, to_version]`` for one
+        tier from the encoded-delta cache. Exact-range key present -> HIT.
+        Else, if every single-step entry of the range is cached, the range
+        is coalesced from them (HIT — still zero new encodes) and inserted
+        back so the next client over the same gap hits directly. Else MISS:
+        a real edge would fill from origin, so the range is indexed with
+        the billed stats. Billing never happens here — ``settle`` already
+        produced the exact prefix-sum bill; the cache only decides whether
+        serving it required origin work."""
+        span = to_version - from_version
+        if span <= 0:
+            return True
+        key = (from_version, to_version, tag)
+        if self.cache.get(key) is not None:
+            self.cache.hits += 1
+            return True
+        # compose from cached single steps (len() bounds the walk: a range
+        # wider than the whole cache cannot be fully covered)
+        if 1 < span <= len(self.cache):
+            steps = []
+            for v in range(from_version, to_version):
+                if (v, v + 1, tag) not in self.cache:
+                    steps = None
+                    break
+                steps.append((v, v + 1, tag))
+            if steps is not None:
+                packets: Optional[list] = []
+                for sk in steps:
+                    e = self.cache.get(sk)          # LRU bump: it served
+                    if packets is not None and e.packets:
+                        packets.extend(e.packets)
+                self.cache.hits += 1
+                self.cache.put(key, stats, packets or None)
+                return True
+        self.cache.misses += 1
+        self.cache.put(key, stats)
+        return False
+
+    # -- signals / lifecycle ---------------------------------------------------
+    def observe_loss(self, loss: float) -> None:
+        """Feed the Eq. 4 global-loss signal to every tier pipeline (the
+        reference tier's ``down_comp`` is fed by the endpoint); remember
+        first/latest for seeding late-built pipelines."""
+        loss = float(loss)
+        if self._first_gloss is None:
+            self._first_gloss = loss
+        self._last_gloss = loss
+        for c in self._pipes.values():
+            c.observe_loss(loss)
+
+    def reset(self) -> None:
+        """Re-anchor with the endpoint (FLoRA's per-round base reset): the
+        version counter restarts, so cached keys and tier cumulatives are
+        void; negotiated tiers stay sticky."""
+        for cum in self._cum.values():
+            cum[:] = 0
+        self.billing.clear()
+        self.cache.clear()
+
+    # -- checkpointing (format 5) -----------------------------------------------
+    def state(self) -> dict:
+        return {
+            "table": {str(c): s for c, s in sorted(self.table.items())},
+            "billing": {str(c): t for c, t in sorted(self.billing.items())},
+            "tier_cum": {t: np.asarray(c, np.int64)
+                         for t, c in sorted(self._cum.items())},
+            "tier_pipes": {t: p.pipeline.state()
+                           for t, p in sorted(self._pipes.items())},
+            "gloss": [self._first_gloss, self._last_gloss],
+            "encodes": {"total": int(self.total_encodes),
+                        "last": int(self.last_broadcast_encodes)},
+            "cache": self.cache.state(),
+        }
+
+    def load_state(self, st: dict) -> None:
+        self.table = {int(c): str(s)
+                      for c, s in (st.get("table") or {}).items()}
+        self._cum = {}
+        for tag, cum in (st.get("tier_cum") or {}).items():
+            self._cum[str(tag)] = np.asarray(cum, np.int64).copy()
+        # billing cursors may reference tiers the CURRENT config no longer
+        # produces (operator changed the downlink spec between save and
+        # resume — same caveat as uplink renegotiation): those fall back to
+        # the reference tier
+        self.billing = {int(c): str(t)
+                        for c, t in (st.get("billing") or {}).items()
+                        if str(t) in self._cum or str(t) == self.ref_tag}
+        gloss = st.get("gloss") or [None, None]
+        self._first_gloss = None if gloss[0] is None else float(gloss[0])
+        self._last_gloss = None if gloss[1] is None else float(gloss[1])
+        self._pipes = {}
+        for tag, pst in (st.get("tier_pipes") or {}).items():
+            pipe = self._pipe(str(tag))
+            if pipe is not None:
+                pipe.pipeline.restore(pst)
+        enc = st.get("encodes") or {}
+        self.total_encodes = int(enc.get("total", 0))
+        self.last_broadcast_encodes = int(enc.get("last", 0))
+        self.cache.load_state(st.get("cache") or {})

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core.compression import CommLedger, Compressor
 from repro.core.segments import SegmentUpdate
+from repro.fed.distribution import DistributionConfig, DistributionPlane
 from repro.core.staleness import mix_models, mix_models_batch
 from repro.fed.client import (TimedCall, make_batched_local_trainer,
                               make_local_trainer, stack_batches,
@@ -47,7 +48,8 @@ class ServerEndpoint:
     """Aggregator endpoint: global state + sync cursors + ledger + policy."""
 
     def __init__(self, policy: AggregationPolicy, protocol: WireProtocol,
-                 n_clients: int):
+                 n_clients: int,
+                 distribution: Optional[DistributionConfig] = None):
         self.policy = policy
         self.protocol = protocol
         self.n_clients = n_clients
@@ -75,6 +77,10 @@ class ServerEndpoint:
         # checkpoint format 3 persists) and answered in DownloadMsg.codec
         self.negotiator = protocol.make_negotiator()
         self.codec_table: Dict[int, str] = {}
+        # the broadcast distribution plane (DESIGN.md §11): capability-
+        # tiered multicast encoding, per-tier exact billing, and the
+        # encoded-delta cache. Single-tier default = pure bookkeeping.
+        self.distribution = DistributionPlane(protocol, config=distribution)
 
     # -- round lifecycle ----------------------------------------------------
     def begin_round(self, round_t: Optional[int] = None) -> BroadcastMsg:
@@ -93,6 +99,10 @@ class ServerEndpoint:
         self.last_broadcast = self.last_broadcast + applied
         self._cum_stats += (pkt.param_count, pkt.wire_bytes, pkt.dense_bytes)
         self._bcast_count += 1
+        # distribution plane: encode the same delta once per non-reference
+        # multicast tier (exact per-tier billing cumulatives) and cache
+        # every tier's single-step encoded delta
+        self.distribution.on_broadcast(t, self._bcast_count, delta, pkt)
         return BroadcastMsg(t, pkt, self.protocol.n_segments)
 
     def sync_client(self, cid: int, round_t: int,
@@ -111,22 +121,36 @@ class ServerEndpoint:
         pipeline."""
         self._negotiate(cid, capabilities)
         n = self._bcast_count
-        billed_p, billed_w, billed_d = (
-            self._cum_stats - self._client_cum[cid]).tolist()
-        self.ledger.log_download_stats(billed_p, billed_w, billed_d)
-        missed = n - int(self.client_sync[cid])
+        plane = self.distribution
+        prev_sync = int(self.client_sync[cid])
+        # the plane bills at the client's TIER rates (bitwise the pre-plane
+        # ref-cumulative diff under the single-tier default) and snaps the
+        # cursor to its current tier's cumulative
+        tag, (billed_p, billed_w, billed_d) = plane.settle(
+            cid, self._client_cum[cid], self._cum_stats)
+        self.ledger.log_download_stats(billed_p, billed_w, billed_d,
+                                       codec=tag)
+        missed = n - prev_sync
+        if missed > 0:
+            # CDN semantics: the catch-up range is served from the encoded-
+            # delta cache (hit = zero origin encodes); billing above is
+            # already exact and never depends on the cache outcome
+            plane.serve_catchup(tag, prev_sync, n,
+                                (billed_p, billed_w, billed_d))
         self.client_sync[cid] = n
-        self._client_cum[cid] = self._cum_stats
         return DownloadMsg(cid, round_t, self.last_broadcast.copy(),
                            missed, billed_w, billed_p, bcast_version=n,
                            codec=self.codec_table.get(cid),
                            capabilities=_SERVER_CAPABILITIES,
-                           segment=segment)
+                           segment=segment,
+                           tier=plane.tier_tag(cid))
 
     def _negotiate(self, cid: int, capabilities) -> None:
         if capabilities is not None and cid not in self.codec_table:
             spec = self.negotiator.resolve(capabilities)
             self.codec_table[cid] = spec.spec_str()
+        # the SAME capability tokens resolve the downlink tier (sticky)
+        self.distribution.negotiate(cid, capabilities)
 
     def receive(self, msg: UploadMsg) -> None:
         """Ingest one uplink message: decompress, bill, queue for aggregate.
@@ -181,13 +205,18 @@ class ServerEndpoint:
         first sync."""
         cid = int(msg.client_id)
         self.ensure_capacity(cid + 1)
+        self._negotiate(cid, msg.capabilities)
         if not rejoin:
             self.client_sync[cid] = self._bcast_count
             self._client_cum[cid] = self._cum_stats
-        self._negotiate(cid, msg.capabilities)
+            # a NEW client negotiated into a non-reference tier bills its
+            # admission->first-sync gap at tier rates from the start
+            self.distribution.enroll(cid, self._client_cum[cid],
+                                     self._cum_stats)
         return JoinAck(cid, msg.round_t, self.codec_table.get(cid),
                        int(self._bcast_count), rejoined=rejoin,
-                       capabilities=_SERVER_CAPABILITIES)
+                       capabilities=_SERVER_CAPABILITIES,
+                       downlink=self.distribution.downlink_spec(cid))
 
     def retire(self, msg: LeaveMsg) -> None:
         """Process a ``LeaveMsg``. Server-side state is deliberately kept:
@@ -205,9 +234,11 @@ class ServerEndpoint:
         self._cum_stats[:] = 0
         self.client_sync[:] = 0
         self._client_cum[:] = 0
+        self.distribution.reset()
 
     def observe_global_loss(self, loss: float) -> None:
         self.down_comp.observe_loss(loss)
+        self.distribution.observe_loss(loss)
 
     def cursor_nbytes(self) -> int:
         """Bytes of per-client billing cursors (O(n_clients) ints — the

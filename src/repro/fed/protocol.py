@@ -78,6 +78,11 @@ class DownloadMsg:
     The lifecycle uses it for availability-starvation remediation: a
     duplicate-covered participant is re-assigned to the starved segment so
     every segment keeps receiving uploads (paper §3.3, Ns <= Nt).
+
+    ``tier`` names the downlink multicast tier (a pipeline tag) that
+    encoded the bytes this download bills — the distribution plane's
+    capability-tiered fan-out (DESIGN.md §11). None on legacy senders;
+    every client resolves to the reference tier by default.
     """
     client_id: int
     round_t: int
@@ -89,6 +94,7 @@ class DownloadMsg:
     codec: Optional[str] = None
     capabilities: Optional[List[str]] = None
     segment: Optional[int] = None
+    tier: Optional[str] = None
 
 
 @dataclass
@@ -133,13 +139,19 @@ class JoinMsg:
 
 @dataclass
 class JoinAck:
-    """Server -> joining client: admission + negotiation outcome."""
+    """Server -> joining client: admission + negotiation outcome.
+
+    ``codec`` is the negotiated UPLINK spec; ``downlink`` is the resolved
+    DOWNLINK spec — the multicast tier the client subscribes to (None =
+    not negotiated, the reference tier). Both resolve from the SAME
+    capability tokens the ``JoinMsg`` advertised."""
     client_id: int
     round_t: int
     codec: Optional[str]      # negotiated uplink spec (CodecSpec.parse str)
     bcast_version: int        # broadcast count at admission
     rejoined: bool = False
     capabilities: Optional[List[str]] = None
+    downlink: Optional[str] = None
 
 
 @dataclass
@@ -271,6 +283,14 @@ class WireProtocol:
         stack."""
         return CodecNegotiator(self.codec_spec("uplink"))
 
+    def make_downlink_negotiator(self) -> CodecNegotiator:
+        """The downlink's symmetric negotiator: the same fallback-chain
+        grammar anchored at the configured DOWNLINK spec. Its candidate
+        list is the universe of multicast tiers the distribution plane can
+        form (fed.distribution) — under the default config the chain
+        collapses to the single mandatory stack, i.e. one tier."""
+        return CodecNegotiator(self.codec_spec("downlink"))
+
     def _make_compressor(self, direction: str, ab_mask: np.ndarray,
                          backend: str = "numpy",
                          spec: Optional[CodecSpec] = None) -> Compressor:
@@ -322,6 +342,15 @@ class WireProtocol:
         share one accelerated compression path."""
         return self._make_compressor(
             "downlink", ab_mask_from_spec(self.spec), backend=self.backend)
+
+    def make_tier_compressor(self, spec: CodecSpec) -> Compressor:
+        """One downlink compressor for a multicast TIER (fed.distribution):
+        the plane encodes each broadcast once per tier with a pipeline the
+        whole tier shares — endpoint state (the sparsify residual) belongs
+        to the tier, never to a client."""
+        return self._make_compressor(
+            "downlink", ab_mask_from_spec(self.spec), backend=self.backend,
+            spec=spec)
 
     def compress_uplinks_batch(self, comps, values_rows, slices,
                                round_t: int) -> list:

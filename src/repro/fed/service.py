@@ -293,6 +293,16 @@ class RoundLifecycle:
         # round's measured overhead restarts at load (service mode bills a
         # deterministic 0.0 anyway)
         self._t_wall = time.perf_counter()
+        if self.phase == self.COLLECTING and self._overrides:
+            # remediation overrides were delivered during OPEN (they live
+            # in ClientRuntime._seg_overrides until collect() consumes
+            # them) but the runtime is rebuilt fresh on resume — without
+            # re-installing them the overridden client would upload (and
+            # bill!) its DEFAULT schedule segment instead of the starved
+            # one it was re-assigned
+            cl = self.svc.tr.clients
+            for cid, seg in self._overrides.items():
+                cl._seg_overrides[int(cid)] = int(seg)
 
 
 class FederationService:
@@ -342,6 +352,9 @@ class FederationService:
         ack = self.tr.server.admit(msg, rejoin=rejoin)
         self.tr.clients.admit(int(msg.client_id))
         self.membership.join(int(msg.client_id))
+        # distribution plane: re-plan the multicast tier membership at
+        # admission (the joiner's downlink tier was just negotiated)
+        self.tr.server.distribution.replan(self.membership.active)
         return ack
 
     def leave(self, msg: LeaveMsg) -> None:
@@ -356,6 +369,10 @@ class FederationService:
         self.membership.leave(int(msg.client_id))
         self.tr.clients.retire(int(msg.client_id))
         self.tr.server.retire(msg)
+        # a tier that empties stays alive (the leaver's billing cursor
+        # still references its cumulative; a rejoin pays the exact gap) —
+        # replan only refreshes the reported membership
+        self.tr.server.distribution.replan(self.membership.active)
 
     # -- driving ------------------------------------------------------------
     def step(self, final: bool = False) -> str:

@@ -22,6 +22,7 @@ from repro.core.codec import CodecConfig
 from repro.data.partition import dirichlet_partition, task_partition
 from repro.data.synthetic import InstructionTask, PreferenceTask, TaskConfig
 from repro.fed.client import make_evaluator
+from repro.fed.distribution import DistributionConfig
 from repro.fed.endpoints import ClientRuntime, ServerEndpoint
 from repro.fed.protocol import WireProtocol
 from repro.fed.sampler import SAMPLERS, SegmentCoverageMonitor, make_sampler
@@ -73,6 +74,9 @@ class FedConfig:
     # the cheapest mutually-supported uplink stack; clients advertising
     # unknown/insufficient stages fall back to the default stack.
     client_capabilities: Optional[Dict[int, List[str]]] = None
+    # broadcast distribution plane knobs (tiered multicast encoding +
+    # encoded-delta cache, DESIGN.md §11); None = defaults
+    distribution: Optional[DistributionConfig] = None
 
     def __post_init__(self):
         if self.method not in ALLOWED_METHODS:
@@ -110,6 +114,8 @@ class FedConfig:
                     raise ValueError(
                         "client_capabilities must map int client ids to "
                         f"lists of stage tokens (bad entry: {cid!r})")
+        if self.distribution is not None:
+            self.distribution.validate()
 
 
 def lora_product_vec(protocol: WireProtocol, lora_template: Params,
@@ -213,7 +219,8 @@ class FederatedTrainer:
                          if self.protocol.n_segments > 1 else None)
         vec0 = self.protocol.tree_to_vec(self.lora0)
         self.server = ServerEndpoint(self.policy, self.protocol,
-                                     fed.n_clients)
+                                     fed.n_clients,
+                                     distribution=fed.distribution)
         # global protocol vector starts at the (shared) init
         self.server.global_vec = vec0.copy()
         self.server.last_broadcast = vec0.copy()

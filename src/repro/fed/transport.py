@@ -23,14 +23,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.fed.protocol import BroadcastMsg, DownloadMsg, UploadMsg
-from repro.netsim.network import (SCENARIOS, NetworkScenario, NetworkSimulator,
-                                  RoundTiming)
+from repro.netsim.network import (SCENARIOS, CdnFanout, FanoutTier,
+                                  NetworkScenario, NetworkSimulator,
+                                  RoundTiming, simulate_fanout)
 
 
 @dataclass
 class MessageEvent:
     """One wire message on the simulated clock."""
-    kind: str                 # "broadcast" | "download" | "upload"
+    kind: str                 # "broadcast" | "download" | "upload" | "fanout"
     client_id: int            # -1 for the broadcast fan-out
     round_t: int              # round the message was sent
     wire_bytes: int
@@ -301,6 +302,19 @@ class SimTransport(Transport):
             for c, s in (state.get("extra_down_s") or {}).items()}
 
     # -- reporting ----------------------------------------------------------
+    def fanout_round(self, round_t: int, tiers: Sequence[FanoutTier],
+                     model: Optional[CdnFanout] = None) -> Dict[str, object]:
+        """Price serving round ``round_t``'s broadcast to a full subscriber
+        population through the CDN fan-out model (DESIGN.md §11). This is a
+        reporting overlay on the cohort timeline — the training round's
+        clock is set by the sampled cohort above, so fan-out wall time is
+        logged as a ``"fanout"`` event but does NOT advance the clock."""
+        report = simulate_fanout(tiers, model)
+        self.events.append(MessageEvent(
+            "fanout", -1, round_t, int(report["served_bytes"]),
+            self.clock, self.clock + float(report["wall_s"]), round_t))
+        return report
+
     def totals(self) -> Dict[str, float]:
         return self.sim.totals()
 

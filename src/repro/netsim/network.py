@@ -107,3 +107,114 @@ class NetworkSimulator:
             "overhead_s": sum(r.overhead_s for r in self.timeline),
             "total_s": sum(r.total_s for r in self.timeline),
         }
+
+
+# ---------------------------------------------------------------------------
+# CDN-style broadcast fan-out (DESIGN.md §11)
+#
+# The synchronous-round model above prices cohort traffic: tens of sampled
+# clients per round, each on its own access link. Broadcast DISTRIBUTION is a
+# different regime — every subscriber (10k..1M) pulls the same encoded delta,
+# so the binding resources are the origin's encode budget (once per tier, the
+# distribution plane guarantees) and replicated edge serving capacity, not
+# any single access link. This analytic model prices that regime.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FanoutTier:
+    """One capability tier's serving load for a single broadcast.
+
+    ``cache_hit_rate`` is the fraction of subscriber pulls the edge layer
+    answers from the encoded-delta cache; each miss costs one origin
+    re-encode (a rejoining straggler whose catch-up range fell out of the
+    cache)."""
+    tag: str
+    subscribers: int
+    packet_bytes: int
+    encode_s: float
+    cache_hit_rate: float = 1.0
+
+    def validate(self) -> None:
+        if self.subscribers < 0:
+            raise ValueError("subscribers must be >= 0")
+        if self.packet_bytes < 0:
+            raise ValueError("packet_bytes must be >= 0")
+        if self.encode_s < 0:
+            raise ValueError("encode_s must be >= 0")
+        if not 0.0 <= self.cache_hit_rate <= 1.0:
+            raise ValueError("cache_hit_rate must be in [0, 1]")
+
+
+@dataclass(frozen=True)
+class CdnFanout:
+    """Edge-replicated serving model: each tier's encoded packet is filled
+    once from the origin into ``edges_per_tier`` replicas, which then serve
+    subscribers in parallel at ``edge_downlink_mbps`` each."""
+    edges_per_tier: int = 32
+    edge_downlink_mbps: float = 100.0
+    efficiency: float = 0.9
+    origin_fill_latency_s: float = 0.05
+
+    def validate(self) -> None:
+        if self.edges_per_tier < 1:
+            raise ValueError("edges_per_tier must be >= 1")
+        if self.edge_downlink_mbps <= 0:
+            raise ValueError("edge_downlink_mbps must be > 0")
+        if not 0.0 < self.efficiency <= 1.0:
+            raise ValueError("efficiency must be in (0, 1]")
+        if self.origin_fill_latency_s < 0:
+            raise ValueError("origin_fill_latency_s must be >= 0")
+
+
+def simulate_fanout(tiers: Sequence[FanoutTier],
+                    model: Optional[CdnFanout] = None) -> Dict[str, object]:
+    """Price serving ONE broadcast to every subscriber of every tier.
+
+    Tiers are served in parallel (disjoint edge pools), so the broadcast's
+    wall clock is the slowest tier's, while served bytes and encode cost sum
+    across tiers. Per tier:
+
+      encode_total = encode_s * (1 + misses)        # once + per cache miss
+      transfer_s   = subscribers*bytes*8 / (edges * edge_bw)
+      wall_s       = origin_fill_latency + encode_total + transfer_s
+
+    The returned ``encode_share`` (origin encode seconds / wall seconds of
+    the slowest tier) is the headline: encode-once-per-tier makes it shrink
+    as subscriber count grows, i.e. distribution cost scales with the CDN,
+    not with the origin.
+    """
+    model = model or CdnFanout()
+    model.validate()
+    bw = model.edge_downlink_mbps * 1e6 * model.efficiency
+    per_tier: Dict[str, Dict[str, float]] = {}
+    wall_s = 0.0
+    served_bytes = 0
+    encode_s_total = 0.0
+    for tier in tiers:
+        tier.validate()
+        misses = tier.subscribers * (1.0 - tier.cache_hit_rate)
+        encode_total = tier.encode_s * (1.0 + misses)
+        transfer_s = (tier.subscribers * tier.packet_bytes * 8.0) \
+            / (model.edges_per_tier * bw)
+        tier_wall = model.origin_fill_latency_s + encode_total + transfer_s
+        tier_bytes = tier.subscribers * tier.packet_bytes
+        per_tier[tier.tag] = {
+            "subscribers": int(tier.subscribers),
+            "served_bytes": int(tier_bytes),
+            "encode_s": encode_total,
+            "transfer_s": transfer_s,
+            "wall_s": tier_wall,
+        }
+        wall_s = max(wall_s, tier_wall)
+        served_bytes += tier_bytes
+        encode_s_total += encode_total
+    throughput_bps = (served_bytes * 8.0 / wall_s) if wall_s > 0 else 0.0
+    return {
+        "per_tier": per_tier,
+        "wall_s": wall_s,
+        "served_bytes": int(served_bytes),
+        "throughput_bps": throughput_bps,
+        "encode_s": encode_s_total,
+        "encode_share": (encode_s_total / wall_s) if wall_s > 0 else 0.0,
+    }

@@ -476,7 +476,7 @@ def test_ckpt_format3_roundtrip_and_format2_load(tmp_path):
     p3 = str(tmp_path / "f3.ckpt")
     ckpt.save_fed_state(p3, tr)
     state = ckpt.load(p3)
-    assert state["format"] == 4
+    assert state["format"] == 5
     assert "stages" in state["downlink"] and "tag" in state["downlink"]
 
     a = _make_trainer("fedit", "batched")

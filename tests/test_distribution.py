@@ -1,0 +1,354 @@
+"""Broadcast distribution plane (DESIGN.md §11): capability-tiered multicast
+encodes each broadcast once per TIER (not per client) with exact per-tier
+billing, catch-up ranges serve from the encoded-delta cache with zero new
+origin encodes, and the tier table + cache index persist through checkpoint
+format 5 (formats 1-4 still load, parking the pre-tiering download total
+under a legacy breakdown key)."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core.codec import ALL_CAPABILITIES, CodecConfig, CodecSpec
+from repro.core.compression import CommLedger
+from repro.core.sparsify import SparsifyConfig
+from repro.data.synthetic import TaskConfig
+from repro.fed.distribution import DistributionConfig, EncodedDeltaCache
+from repro.fed.endpoints import ServerEndpoint
+from repro.fed.protocol import WireProtocol
+from repro.fed.strategies import EcoLoRAConfig, FedITPolicy
+from repro.fed.trainer import FedConfig, FederatedTrainer
+
+CFG = get_config("llama2-7b").reduced()
+TC = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+
+# the downlink stack with the deepest fallback chain: int8+ans degrades to
+# int8 degrades to the mandatory fp16 default — three tiers
+ANS_DOWN = CodecConfig(downlink=CodecSpec(quantize="int8", entropy="ans"))
+FULL_CAPS = sorted(ALL_CAPABILITIES)
+NO_ANS = [c for c in FULL_CAPS if c != "ans"]
+BASELINE = [c for c in FULL_CAPS if c not in ("ans", "int8")]
+
+REF_TAG = "topk[adaptive]+int8+golomb+ans"
+INT8_TAG = "topk[adaptive]+int8+golomb"
+FP16_TAG = "topk[adaptive]+fp16+golomb"
+
+
+def _server(n_clients=6, codec=ANS_DOWN, distribution=None):
+    spec = [("x/a", (64,), np.float32), ("x/b", (64,), np.float32)]
+    proto = WireProtocol(spec, eco=EcoLoRAConfig(n_segments=1), codec=codec)
+    return ServerEndpoint(FedITPolicy(), proto, n_clients=n_clients,
+                          distribution=distribution)
+
+
+def _drive(srv, rounds, caps, rng, sync=None):
+    """Drive ``rounds`` broadcasts; sync the clients listed in ``sync`` (or
+    everyone) each round with their capability lists. Returns per-client
+    DownloadMsg history."""
+    history = {cid: [] for cid in caps}
+    for t in range(rounds):
+        srv.global_vec = srv.global_vec + rng.standard_normal(
+            srv.protocol.size).astype(np.float32)
+        srv.begin_round(t)
+        for cid in (sync(t) if sync is not None else sorted(caps)):
+            history[cid].append(srv.sync_client(cid, t,
+                                                capabilities=caps[cid]))
+    return history
+
+
+# ---------------------------------------------------------------------------
+# the tentpole pin: encode once per TIER, bill exactly per client
+# ---------------------------------------------------------------------------
+
+def test_encode_once_per_tier_with_exact_billing():
+    """6 clients in 3 capability tiers: after negotiation every broadcast
+    runs exactly THREE pipeline encodes (one per tier, however many clients
+    subscribe), each client's per-round bill equals its OWN tier's step
+    bytes, and the ledger breakdown sums per tier."""
+    srv = _server(6)
+    plane = srv.distribution
+    caps = {0: FULL_CAPS, 1: FULL_CAPS, 2: NO_ANS, 3: NO_ANS,
+            4: BASELINE, 5: BASELINE}
+    rounds = 5
+    hist = _drive(srv, rounds, caps, np.random.default_rng(0))
+
+    assert plane.plan() == {REF_TAG: [0, 1], INT8_TAG: [2, 3],
+                            FP16_TAG: [4, 5]}
+    # broadcast 1 predates negotiation (reference encode only); every later
+    # broadcast is exactly one encode per tier — NOT one per client
+    assert plane.last_broadcast_encodes == 3
+    assert plane.total_encodes == 1 + 3 * (rounds - 1)
+
+    # per-client bills are their tier's encoded step bytes: clients sharing
+    # a tier bill identically, different tiers bill differently
+    for cid, tag in [(0, REF_TAG), (2, INT8_TAG), (4, FP16_TAG)]:
+        assert all(dl.tier == tag for dl in hist[cid])
+        twin = {0: 1, 2: 3, 4: 5}[cid]
+        assert [dl.wire_bytes for dl in hist[cid]] \
+            == [dl.wire_bytes for dl in hist[twin]]
+    by_round = {tag: [dl.wire_bytes for dl in hist[cid]]
+                for cid, tag in [(0, REF_TAG), (2, INT8_TAG),
+                                 (4, FP16_TAG)]}
+    # rounds >= 1 bill the tier's OWN encode of the same delta: the fp16
+    # tier costs more wire than the int8 tiers
+    assert sum(by_round[FP16_TAG][1:]) > sum(by_round[INT8_TAG][1:])
+
+    # the ledger's downlink breakdown: per-tier sums, exactly the total
+    led = srv.ledger
+    assert set(led.download_by_codec) == {REF_TAG, INT8_TAG, FP16_TAG}
+    for cid, tag in [(0, REF_TAG), (2, INT8_TAG), (4, FP16_TAG)]:
+        want = 2 * sum(dl.wire_bytes for dl in hist[cid])   # two clients
+        # round 0 billed before negotiation -> under the reference tier
+        if tag != REF_TAG:
+            want -= 2 * by_round[tag][0]
+        assert led.download_by_codec[tag] >= want
+    assert sum(led.download_by_codec.values()) == led.download_bytes
+
+    # every tier's cumulative equals the sum of its cached step entries
+    for tag in (INT8_TAG, FP16_TAG):
+        steps = [plane.cache.get((v, v + 1, tag)).stats
+                 for v in range(1, rounds)]
+        np.testing.assert_array_equal(plane._cum[tag],
+                                      np.sum(steps, axis=0))
+
+
+def test_single_tier_default_is_pure_bookkeeping():
+    """Under the default downlink config everyone resolves to the one
+    reference tier: a capability-advertising population bills BITWISE what
+    a legacy (no-capabilities) population bills, there is exactly one
+    encode per broadcast, and the breakdown is a single entry."""
+    rng_a, rng_b = np.random.default_rng(7), np.random.default_rng(7)
+    srv_a = _server(4, codec=None)
+    srv_b = _server(4, codec=None)
+    caps_none = {cid: None for cid in range(4)}
+    caps_full = {cid: FULL_CAPS for cid in range(4)}
+    hist_a = _drive(srv_a, 4, caps_none, rng_a)
+    hist_b = _drive(srv_b, 4, caps_full, rng_b)
+
+    for cid in range(4):
+        assert [(d.wire_bytes, d.param_count) for d in hist_a[cid]] \
+            == [(d.wire_bytes, d.param_count) for d in hist_b[cid]]
+    la, lb = srv_a.ledger, srv_b.ledger
+    assert (la.download_bytes, la.download_params) \
+        == (lb.download_bytes, lb.download_params)
+    for srv in (srv_a, srv_b):
+        plane = srv.distribution
+        assert plane.last_broadcast_encodes == 1
+        assert plane.total_encodes == 4
+        assert not plane.billing            # nobody off the reference tier
+        ref = plane.ref_tag
+        assert srv.ledger.download_by_codec == {ref: srv.ledger.download_bytes}
+    np.testing.assert_array_equal(srv_a._client_cum, srv_b._client_cum)
+
+
+# ---------------------------------------------------------------------------
+# catch-up serving from the encoded-delta cache
+# ---------------------------------------------------------------------------
+
+def test_idle_client_catchup_is_cache_hit_with_zero_encodes():
+    """A client away for many broadcasts returns: its catch-up range is
+    composed from the cached per-broadcast step entries — a HIT, zero new
+    origin encodes — and the coalesced range is inserted back so the NEXT
+    client over the same gap hits the exact key."""
+    srv = _server(3)
+    plane = srv.distribution
+    caps = {0: FULL_CAPS, 1: BASELINE, 2: BASELINE}
+    rng = np.random.default_rng(1)
+    # round 0: everyone syncs (negotiates); rounds 1-6: only client 0
+    _drive(srv, 7, caps, rng, sync=lambda t: [0, 1, 2] if t == 0 else [0])
+
+    tag = plane.tier_tag(1)
+    assert tag == FP16_TAG
+    enc0, hits0, len0 = plane.total_encodes, plane.cache.hits, \
+        len(plane.cache)
+    dl = srv.sync_client(1, 6, capabilities=caps[1])
+    assert dl.n_missed == 6
+    assert plane.total_encodes == enc0, "catch-up must not re-encode"
+    assert plane.cache.hits == hits0 + 1
+    assert (1, 7, tag) in plane.cache       # coalesced range inserted back
+    assert len(plane.cache) == len0 + 1
+    # the bill is exactly the tier's cached step bytes over the gap
+    want = sum(plane.cache.get((v, v + 1, tag)).wire_bytes
+               for v in range(1, 7))
+    assert dl.wire_bytes == want
+    assert dl.tier == tag
+
+    # second straggler over the SAME gap: exact-key hit, no index growth
+    hits1, len1 = plane.cache.hits, len(plane.cache)
+    dl2 = srv.sync_client(2, 6, capabilities=caps[2])
+    assert dl2.wire_bytes == dl.wire_bytes
+    assert plane.cache.hits == hits1 + 1
+    assert len(plane.cache) == len1
+    assert plane.cache.misses == 0
+
+
+def test_evicted_range_is_a_miss_but_bills_exactly():
+    """A cache too small to hold the gap's steps records a MISS (origin
+    refill on a real edge) — but the prefix-sum bill is exact regardless,
+    and still no re-encode happens server-side."""
+    srv = _server(2, distribution=DistributionConfig(cache_budget_bytes=64))
+    plane = srv.distribution
+    caps = {0: FULL_CAPS, 1: BASELINE}
+    rng = np.random.default_rng(2)
+    _drive(srv, 5, caps, rng, sync=lambda t: [0, 1] if t == 0 else [0])
+
+    assert len(plane.cache) == 0            # nothing fit the 64-byte budget
+    before = srv.ledger.download_bytes
+    enc0, misses0 = plane.total_encodes, plane.cache.misses
+    dl = srv.sync_client(1, 4, capabilities=caps[1])
+    assert dl.n_missed == 4
+    assert plane.cache.misses == misses0 + 1
+    assert plane.total_encodes == enc0
+    # exact billing: the tier cumulative delta, independent of cache state
+    assert srv.ledger.download_bytes - before == dl.wire_bytes
+    assert dl.wire_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# the cache itself
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_eviction_stays_within_budget():
+    cache = EncodedDeltaCache(budget_bytes=100)
+    assert cache.put((0, 1, "t"), (1, 40, 2))
+    assert cache.put((1, 2, "t"), (1, 40, 2))
+    assert cache.nbytes() == 80
+    cache.get((0, 1, "t"))                   # bump: (1,2) is now LRU
+    assert cache.put((2, 3, "t"), (1, 40, 2))
+    assert (1, 2, "t") not in cache          # the LRU entry went
+    assert (0, 1, "t") in cache and (2, 3, "t") in cache
+    assert cache.nbytes() == 80 <= cache.budget
+    assert cache.evictions == 1
+
+
+def test_cache_rejects_oversized_entries():
+    cache = EncodedDeltaCache(budget_bytes=100)
+    assert not cache.put((0, 5, "t"), (9, 101, 9))
+    assert len(cache) == 0 and cache.nbytes() == 0
+    # replacing a key re-accounts its bytes instead of double-charging
+    assert cache.put((0, 1, "t"), (1, 60, 2))
+    assert cache.put((0, 1, "t"), (1, 90, 2))
+    assert len(cache) == 1 and cache.nbytes() == 90
+
+
+def test_cache_state_round_trips_index_only():
+    cache = EncodedDeltaCache(budget_bytes=1000)
+    cache.put((0, 1, "t"), (1, 10, 2), packets=["payload"])
+    cache.put((1, 2, "u"), (3, 20, 4))
+    cache.hits, cache.misses, cache.evictions = 5, 2, 1
+    st = cache.state()
+    fresh = EncodedDeltaCache(budget_bytes=1000)
+    fresh.load_state(st)
+    assert len(fresh) == 2 and fresh.nbytes() == 30
+    assert (fresh.hits, fresh.misses, fresh.evictions) == (5, 2, 1)
+    entry = fresh.get((0, 1, "t"))
+    np.testing.assert_array_equal(entry.stats, [1, 10, 2])
+    assert entry.packets is None, "payloads are memory-only"
+
+
+def test_distribution_config_validates():
+    with pytest.raises(ValueError, match="cache_budget_bytes"):
+        DistributionConfig(cache_budget_bytes=0).validate()
+
+
+# ---------------------------------------------------------------------------
+# ledger breakdown (satellite: download_by_codec mirrors upload_by_codec)
+# ---------------------------------------------------------------------------
+
+def test_ledger_download_breakdown_accumulates_per_codec():
+    led = CommLedger()
+    led.log_download_stats(10, 100, 200, codec="a")
+    led.log_download_stats(5, 50, 80, codec="a")
+    led.log_download_stats(1, 7, 9, codec="b")
+    assert led.download_by_codec == {"a": 150, "b": 7}
+    assert led.download_bytes == 157
+    # an up-to-date client's zero-byte sync is not a wire event
+    led.log_download_stats(0, 0, 0, codec="a")
+    assert led.download_by_codec == {"a": 150, "b": 7}
+    # legacy callers without attribution change no breakdown
+    led.log_download_stats(2, 11, 13)
+    assert led.download_by_codec == {"a": 150, "b": 7}
+    assert led.download_bytes == 168
+
+
+# ---------------------------------------------------------------------------
+# persistence: checkpoint format 5 (and formats without the plane block)
+# ---------------------------------------------------------------------------
+
+def _make_trainer(caps=None, rounds=4):
+    fed = FedConfig(method="fedit", n_clients=8, clients_per_round=4,
+                    rounds=rounds, local_steps=2, local_batch=4, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=2,
+                                      sparsify=SparsifyConfig()),
+                    pretrain_steps=5, engine="batched", codec=ANS_DOWN,
+                    client_capabilities=caps)
+    return FederatedTrainer(CFG, fed, TC)
+
+
+def _tier_caps():
+    return {cid: list((FULL_CAPS, NO_ANS, BASELINE)[cid % 3])
+            for cid in range(8)}
+
+
+def test_format5_resume_parity_multitier(tmp_path):
+    """Save a tiered run mid-way, resume in a fresh trainer: tier table,
+    per-tier cumulatives, cache index and the ledger's download breakdown
+    all restore, and the finished resumed run matches an uninterrupted one
+    bitwise — downlink bytes, breakdown, and global vector."""
+    caps = _tier_caps()
+    full = _make_trainer(caps=caps)
+    full.run()
+
+    first = _make_trainer(caps=caps)
+    first.run(rounds=2)
+    p = str(tmp_path / "tiered.ckpt")
+    ckpt.save_fed_state(p, first)
+
+    resumed = _make_trainer(caps=caps)
+    assert ckpt.load_fed_state(p, resumed) == 2
+    pa, pb = first.server.distribution, resumed.server.distribution
+    assert pb.table == pa.table and len(pb.table) > 0
+    assert pb.billing == pa.billing
+    assert set(pb._cum) == set(pa._cum)
+    for tag in pa._cum:
+        np.testing.assert_array_equal(pb._cum[tag], pa._cum[tag])
+    assert pb.cache.state() == pa.cache.state()
+    assert pb.total_encodes == pa.total_encodes
+    assert resumed.server.ledger.download_by_codec \
+        == first.server.ledger.download_by_codec
+    resumed.run()
+
+    la, lb = full.server.ledger, resumed.server.ledger
+    assert la.download_bytes == lb.download_bytes
+    assert la.download_by_codec == lb.download_by_codec
+    assert la.upload_bytes == lb.upload_bytes
+    np.testing.assert_array_equal(full.server.global_vec,
+                                  resumed.server.global_vec)
+
+
+def test_pre_tiering_checkpoint_loads_with_legacy_key(tmp_path):
+    """A format-4 checkpoint (no distribution block, no download
+    breakdown) still loads: the plane starts fresh and the restored
+    download total parks under the legacy breakdown key, keeping the
+    sum(download_by_codec) == download_bytes invariant."""
+    first = _make_trainer(caps=None)
+    first.run(rounds=2)
+    p = str(tmp_path / "fmt5.ckpt")
+    ckpt.save_fed_state(p, first)
+
+    state = ckpt.load(p)
+    assert state["format"] == 5 and state.get("distribution") is not None
+    state["format"] = 4
+    del state["distribution"]
+    del state["ledger"]["download_by_codec"]
+    p4 = str(tmp_path / "fmt4.ckpt")
+    ckpt.save(p4, state)
+
+    resumed = _make_trainer(caps=None)
+    assert ckpt.load_fed_state(p4, resumed) == 2
+    led = resumed.server.ledger
+    assert led.download_bytes == first.server.ledger.download_bytes
+    assert led.download_by_codec \
+        == {"legacy(pre-tiering)": led.download_bytes}
+    resumed.run()                                 # keeps running fine
+    assert sum(led.download_by_codec.values()) == led.download_bytes

@@ -1,0 +1,200 @@
+"""rANS coder edge cases (repro.core.rans): adversarial inputs that the
+federated wire path never produces on the happy path — degenerate
+single-symbol histograms, max-resolution tables, empty payloads, corrupt
+model tables — plus the ``AnsValues`` never-expand bypass boundary. All
+deterministic (fixed seeds / constructed inputs), no property-test deps."""
+import numpy as np
+import pytest
+
+from repro.core import rans
+from repro.core.codec import (AnsValues, Carrier, CodecSpec, Section,
+                              build_pipeline, decode_packet)
+from repro.core.sparsify import SparsifyConfig
+
+
+# ---------------------------------------------------------------------------
+# model resolution schedule
+# ---------------------------------------------------------------------------
+
+def test_scale_bits_for_pins():
+    """The adaptive table resolution: floor 9 bits, one bit per doubling,
+    ceiling 12 at count >= 4096. Changing this silently re-prices every ANS
+    packet on the wire."""
+    for count, bits in [(0, 9), (1, 9), (511, 9), (512, 9), (1023, 9),
+                        (1024, 10), (2047, 10), (2048, 11), (4095, 11),
+                        (4096, 12), (1 << 20, 12)]:
+        assert rans.scale_bits_for(count) == bits, (count, bits)
+
+
+# ---------------------------------------------------------------------------
+# degenerate histograms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [1, 5, 10_000])
+def test_single_symbol_stream_round_trips(length):
+    """A one-symbol alphabet is the coder's degenerate extreme: the whole
+    probability mass sits on one slot, every encode step is pure renorm.
+    Must round-trip at any length (including the 12-bit table regime)."""
+    symbols = np.full(length, 7, np.int64)
+    stream, model, bits = rans.encode_bytes(symbols)
+    assert bits == rans.scale_bits_for(length)
+    out = rans.decode_bytes(stream, model, length, bits)
+    np.testing.assert_array_equal(out, symbols)
+    # the entropy of a constant stream is zero: the coder should spend
+    # (almost) nothing beyond the flushed state + packed model
+    assert len(stream) <= rans._STATE_BYTES + 2
+
+
+def test_single_symbol_normalized_table_holds_full_mass():
+    freqs = rans.normalize_freqs(np.bincount([3] * 10, minlength=8), 9)
+    assert int(freqs.sum()) == 1 << 9
+    assert freqs[3] == 1 << 9 and (freqs[np.arange(8) != 3] == 0).all()
+
+
+def test_max_resolution_table_round_trips():
+    """Full 256-symbol alphabet at the 12-bit resolution ceiling (count >=
+    4096) — every slot table entry in play."""
+    rng = np.random.default_rng(0xA45)
+    symbols = rng.integers(0, 256, size=8192).astype(np.int64)
+    stream, model, bits = rans.encode_bytes(symbols)
+    assert bits == rans.MAX_SCALE_BITS
+    out = rans.decode_bytes(stream, model, symbols.size, bits)
+    np.testing.assert_array_equal(out, symbols)
+
+
+def test_two_symbol_extreme_skew_round_trips():
+    """A 9999:1 histogram quantizes the rare symbol to the freq-1 floor —
+    the most mispriced model normalize_freqs can emit; the stream must
+    still decode exactly."""
+    symbols = np.zeros(10_000, np.int64)
+    symbols[1234] = 255
+    stream, model, bits = rans.encode_bytes(symbols)
+    out = rans.decode_bytes(stream, model, symbols.size, bits)
+    np.testing.assert_array_equal(out, symbols)
+
+
+# ---------------------------------------------------------------------------
+# empty payloads / impossible models
+# ---------------------------------------------------------------------------
+
+def test_empty_stream_has_no_model():
+    with pytest.raises(ValueError, match="empty stream"):
+        rans.normalize_freqs(np.zeros(256, np.int64), 12)
+    with pytest.raises(ValueError, match="empty stream"):
+        rans.encode_bytes(np.array([], np.int64))
+
+
+def test_decode_zero_count_returns_empty():
+    stream, model, bits = rans.encode_bytes(np.array([1, 2, 3], np.int64))
+    out = rans.decode_bytes(stream, model, 0, bits)
+    assert out.size == 0
+
+
+def test_alphabet_too_large_for_resolution():
+    """600 present symbols cannot all keep freq >= 1 in a 512-slot table."""
+    with pytest.raises(ValueError, match="alphabet too large"):
+        rans.normalize_freqs(np.ones(600, np.int64), 9)
+
+
+def test_encode_rejects_zero_frequency_symbol():
+    """A symbol absent from the model (freq 0) is unencodable — must raise
+    up front, not corrupt the state machine."""
+    freqs = rans.normalize_freqs(
+        np.bincount([0, 0, 1, 1], minlength=4), 9)
+    assert freqs[3] == 0
+    with pytest.raises(ValueError, match="symbol 3 has zero model"):
+        rans.encode(np.array([0, 1, 3], np.int64), freqs, 9)
+
+
+def test_unpack_model_rejects_corruption():
+    freqs = rans.normalize_freqs(
+        np.bincount([0, 1, 1, 2], minlength=4), 9)
+    blob = rans.pack_model(freqs)
+    # wrong alphabet size
+    with pytest.raises(ValueError, match="corrupt ANS model"):
+        rans.unpack_model(blob, 8, 9)
+    # wrong resolution: counts no longer sum to 1 << scale_bits
+    with pytest.raises(ValueError, match="corrupt ANS model"):
+        rans.unpack_model(blob, 4, 10)
+    # tampered counts with the right shape
+    bad = rans.pack_model(freqs + 1)
+    with pytest.raises(ValueError, match="corrupt ANS model"):
+        rans.unpack_model(bad, 4, 9)
+
+
+# ---------------------------------------------------------------------------
+# AnsValues never-expand bypass boundary
+# ---------------------------------------------------------------------------
+
+def _int8_ans_pipeline(n=4000):
+    ab = np.arange(n) % 2 == 0
+    pipe = build_pipeline(CodecSpec(sparsify="fixed", k=0.5,
+                                    quantize="int8", entropy="ans"),
+                          SparsifyConfig(), ab)
+    pipe.observe_loss(1.0)
+    return pipe
+
+
+def test_ans_bypass_boundary_incompressible_values():
+    """EXACTLY uniform int8 codes carry a full 8 bits/value of entropy:
+    the rANS stream alone is ~the raw section and the packed model pushes
+    it past — the stage must leave the values section UNTOUCHED (never
+    expand), recording no ``ans`` meta."""
+    codes = np.tile(np.arange(-128, 128, dtype=np.int8), 8)   # 2048 uniform
+    car = Carrier(dense_size=codes.size, slice_=(0, codes.size), round_t=0)
+    car.sections["values"] = Section(codes.copy(), 8 * codes.size)
+    AnsValues().encode(car)
+    assert "ans" not in car.meta, "uniform codes must take the raw bypass"
+    assert "ans_model" not in car.sections
+    np.testing.assert_array_equal(car.sections["values"].data, codes)
+
+
+def test_ans_engages_on_skewed_values():
+    """The complementary side of the boundary: heavily clustered values
+    quantize to a handful of codes, the model+stream undercut the raw
+    section, and the entropy-coded packet decodes to the SAME vector as
+    the bypass would."""
+    n = 4000
+    pipe = _int8_ans_pipeline(n)
+    rng = np.random.default_rng(2)
+    values = rng.choice([-1.0, -0.5, 0.5, 1.0], n).astype(np.float32) \
+        + rng.uniform(-1e-3, 1e-3, n).astype(np.float32)
+    pkt = pipe.encode(values.copy(), 0)
+    assert "ans" in pkt.meta and "ans_model" in pkt.sections
+    kept = pkt.meta["ans"]["count"]
+    wire_values = pkt.sections["values"].data.size \
+        + pkt.sections["ans_model"].data.size
+    assert wire_values < kept, (wire_values, kept)
+    # parity with the plain int8 stack over the same input
+    plain = build_pipeline(CodecSpec(sparsify="fixed", k=0.5,
+                                     quantize="int8"),
+                           SparsifyConfig(), np.arange(n) % 2 == 0)
+    plain.observe_loss(1.0)
+    pkt_plain = plain.encode(values.copy(), 0)
+    np.testing.assert_array_equal(decode_packet(pkt),
+                                  decode_packet(pkt_plain))
+
+
+def test_ans_exact_boundary_is_never_worse():
+    """Sweep stream sizes across the bypass threshold: whatever side a
+    packet lands on, its billed values+model bytes never exceed the raw
+    int8 section."""
+    n = 2048
+    ab = np.arange(n) % 2 == 0
+    rng = np.random.default_rng(3)
+    for mix in (0.0, 0.25, 0.5, 0.75, 1.0):   # uniform..clustered blend
+        pipe = build_pipeline(CodecSpec(sparsify="fixed", k=0.5,
+                                        quantize="int8", entropy="ans"),
+                              SparsifyConfig(), ab)
+        pipe.observe_loss(1.0)
+        uniform = rng.uniform(-1, 1, n)
+        clustered = rng.choice([-1.0, 1.0], n)
+        values = ((1 - mix) * uniform + mix * clustered).astype(np.float32)
+        pkt = pipe.encode(values.copy(), 0)
+        raw_bytes = (pkt.meta["ans"]["count"] if "ans" in pkt.meta
+                     else pkt.sections["values"].data.size)
+        billed = pkt.sections["values"].data.size \
+            + (pkt.sections["ans_model"].data.size
+               if "ans_model" in pkt.sections else 0)
+        assert billed <= raw_bytes, (mix, billed, raw_bytes)
+        assert np.isfinite(decode_packet(pkt)).all()

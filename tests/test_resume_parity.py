@@ -245,3 +245,93 @@ def test_prefix_sum_billing_equals_per_packet_sum():
     dl2 = srv.sync_client(1, 299)
     assert dl2.n_missed == 0 and dl2.wire_bytes == 0
     assert srv.ledger.download_bytes == w1
+
+
+# ---------------------------------------------------------------------------
+# starvation-override accounting across a mid-COLLECTING resume
+# ---------------------------------------------------------------------------
+
+def _starved_service(rounds=9):
+    """Permanently-offline cohort (test_service's starvation scenario):
+    only clients 0 and 6 are ever online, both scheduled to the SAME
+    segment, so from round 4 on EVERY round re-assigns one of them to the
+    starved segment via DownloadMsg.segment."""
+    ns = 6
+    avail = [1.0 if c in (0, 6) else 0.0 for c in range(12)]
+    fed = FedConfig(method="fedit", n_clients=12, clients_per_round=2,
+                    rounds=rounds, local_steps=1, local_batch=2, lr=3e-3,
+                    eco=EcoLoRAConfig(n_segments=ns,
+                                      sparsify=SparsifyConfig()),
+                    pretrain_steps=0, engine="batched",
+                    sampler="availability",
+                    sampler_kw={"availability": avail})
+    tr = FederatedTrainer(CFG, fed, TC)
+    return tr, FederationService(tr)
+
+
+def _spy_segments(tr, seen):
+    """Record which segment each consumed upload actually billed."""
+    orig = tr.server.receive
+
+    def spy(msg):
+        seg = (msg.seg_id if msg.seg_id is not None
+               else tr.protocol.segment_for(msg.client_id, msg.round_t))
+        seen.setdefault(msg.round_t, set()).add(int(seg))
+        return orig(msg)
+
+    tr.server.receive = spy
+
+
+def test_starvation_override_survives_mid_collecting_resume(tmp_path):
+    """A save taken mid-COLLECTING on a remediation round must re-install
+    the segment overrides into the rebuilt ClientRuntime: without that the
+    overridden client uploads (and the ledger bills) its DEFAULT schedule
+    segment instead of the starved one it was re-assigned during OPEN."""
+    import warnings
+    rounds = 9
+
+    full_tr, full_svc = _starved_service(rounds)
+    full_seen = {}
+    _spy_segments(full_tr, full_seen)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        full_svc.run()
+
+    a_tr, a_svc = _starved_service(rounds)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        a_svc.run(rounds=5)                 # rounds 0..4: remediation is on
+        a_svc.step()                        # OPEN -> COLLECTING of round 5
+    assert a_svc.lc.phase == a_svc.lc.COLLECTING
+    assert a_svc.lc._overrides, "round 5 must carry a starvation override"
+    assert a_tr.clients._seg_overrides == a_svc.lc._overrides
+    p = str(tmp_path / "override.ckpt")
+    ckpt.save_fed_state(p, a_tr, service=a_svc)
+
+    b_tr, b_svc = _starved_service(rounds)
+    b_seen = {}
+    _spy_segments(b_tr, b_seen)
+    assert ckpt.load_fed_state(p, b_tr, service=b_svc) == 5
+    assert b_svc.lc.phase == b_svc.lc.COLLECTING
+    # THE pin: the rebuilt runtime holds the re-assignments again
+    assert b_tr.clients._seg_overrides == a_svc.lc._overrides
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        b_svc.run()                         # finishes round 5, then 6..8
+
+    # the overridden client uploaded the STARVED segment, identical to the
+    # uninterrupted run — round 5 must show both the scheduled segment and
+    # the remediated one
+    for t in range(5, rounds):
+        assert b_seen[t] == full_seen[t], (t, b_seen[t], full_seen[t])
+        assert len(full_seen[t]) == 2, full_seen[t]
+    # and the ledger billed the override's ACTUAL encoded bytes: totals and
+    # per-round uploads match the uninterrupted run bitwise
+    la, lb = full_tr.server.ledger, b_tr.server.ledger
+    assert (la.upload_bytes, la.upload_params) \
+        == (lb.upload_bytes, lb.upload_params)
+    for lga, lgb in zip(full_tr.logs[5:], b_tr.logs):
+        assert (lga.round_t, lga.upload_bytes, lga.download_bytes) \
+            == (lgb.round_t, lgb.upload_bytes, lgb.download_bytes)
+    np.testing.assert_array_equal(full_tr.server.global_vec,
+                                  b_tr.server.global_vec)
