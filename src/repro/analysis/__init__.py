@@ -1,0 +1,77 @@
+"""Invariant analyzer: AST-based contract, checkpoint-parity, jit-hygiene
+and determinism checks (DESIGN.md §12).
+
+Run it as ``python -m repro.analysis``; use :func:`analyze` programmatically
+(the fixture tests drive single files through it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.core import (AnalysisError, Baseline, BaselineEntry,
+                                 Finding, Pass, Project)
+from repro.analysis.passes import ALL_PASSES, ALL_RULES
+
+__all__ = ["analyze", "AnalysisResult", "AnalysisError", "Baseline",
+           "BaselineEntry", "Finding", "Pass", "Project", "ALL_PASSES",
+           "ALL_RULES"]
+
+
+@dataclass
+class AnalysisResult:
+    findings: List[Finding] = field(default_factory=list)    # non-baselined
+    baselined: List[Finding] = field(default_factory=list)
+    stale_baseline: List[BaselineEntry] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_dict(self) -> dict:
+        return {
+            "findings": [f.to_dict() for f in self.findings],
+            "baselined": [f.to_dict() for f in self.baselined],
+            "stale_baseline": [vars(e) for e in self.stale_baseline],
+            "counts": {"new": len(self.findings),
+                       "baselined": len(self.baselined),
+                       "stale": len(self.stale_baseline)},
+        }
+
+
+def _select_rules(rules: Optional[Sequence[str]]):
+    if not rules:
+        return None
+    unknown = [r for r in rules if r not in ALL_RULES]
+    if unknown:
+        raise AnalysisError(
+            f"unknown rule(s) {unknown}; known: {sorted(ALL_RULES)}")
+    return set(rules)
+
+
+def analyze(paths: Sequence, rules: Optional[Sequence[str]] = None,
+            baseline: Optional[Baseline] = None) -> AnalysisResult:
+    """Run every pass (or the passes owning ``rules``) over ``paths``."""
+    selected = _select_rules(rules)
+    project = Project([Path(p) for p in paths])
+    raw: List[Finding] = []
+    for p in ALL_PASSES:
+        if selected is not None and not (selected & set(p.rules)):
+            continue
+        raw.extend(p.run(project))
+    if selected is not None:
+        raw = [f for f in raw if f.rule in selected]
+    raw.sort(key=lambda f: (f.file, f.line, f.rule, f.symbol))
+
+    result = AnalysisResult()
+    if baseline is None:
+        result.findings = raw
+        return result
+    for f in raw:
+        (result.baselined if baseline.match(f) else
+         result.findings).append(f)
+    # a --rule filter must not report out-of-scope suppressions as stale
+    result.stale_baseline = [e for e in baseline.stale(raw)
+                             if selected is None or e.rule in selected]
+    return result

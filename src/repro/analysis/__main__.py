@@ -1,0 +1,120 @@
+"""CLI: ``python -m repro.analysis [paths...] [--rule ID] [--no-baseline]``.
+
+Exit codes: 0 = clean (or everything baselined), 1 = non-baselined
+findings, 2 = configuration error (unknown rule, unjustified baseline
+entry, unparseable input). The CI fast gate runs this over ``src/repro``
+with the committed ``ANALYSIS_BASELINE.json``; nightly runs add
+``--no-baseline`` to report total debt including reviewed suppressions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import ALL_PASSES, AnalysisError, Baseline, analyze
+
+BASELINE_NAME = "ANALYSIS_BASELINE.json"
+
+
+def _default_paths() -> List[Path]:
+    # repro is a namespace package (no top-level __init__.py), so
+    # __file__ is None — __path__ still points at src/repro
+    import repro
+    return [Path(next(iter(repro.__path__)))]
+
+
+def _discover_baseline(paths: List[Path]) -> Optional[Path]:
+    starts = [Path.cwd()] + [Path(p).resolve() for p in paths]
+    for start in starts:
+        cur = start if start.is_dir() else start.parent
+        for candidate in [cur] + list(cur.parents):
+            hit = candidate / BASELINE_NAME
+            if hit.is_file():
+                return hit
+    return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Invariant analyzer: wire-contract, checkpoint-parity, "
+                    "jit-hygiene and determinism passes (DESIGN.md §12).")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/directories to analyze (default: the "
+                         "installed repro package)")
+    ap.add_argument("--rule", "-r", action="append", default=[],
+                    help="only run these rule ids (repeatable, "
+                         "comma-separated ok), e.g. --rule CP001")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help=f"baseline file (default: nearest {BASELINE_NAME} "
+                         "above the analyzed paths)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline: report ALL findings "
+                         "(nightly debt tracking)")
+    ap.add_argument("--format", "-f", choices=("text", "json"),
+                    default="text")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="also write the JSON report to this path "
+                         "(uploaded as a CI artifact)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="print a baseline skeleton for the current "
+                         "findings (justifications left TODO) and exit")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for p in ALL_PASSES:
+            print(f"pass {p.name}:")
+            for rid, desc in p.rules.items():
+                print(f"  {rid}  {desc}")
+        return 0
+
+    rules = [r for chunk in args.rule for r in chunk.split(",") if r]
+    paths = [Path(p) for p in args.paths] or _default_paths()
+
+    baseline = None
+    try:
+        if not args.no_baseline:
+            bpath = args.baseline or _discover_baseline(paths)
+            if args.baseline is not None and not bpath.is_file():
+                raise AnalysisError(f"baseline not found: {bpath}")
+            if bpath is not None:
+                baseline = Baseline.load(bpath)
+        result = analyze(paths, rules=rules or None, baseline=baseline)
+    except AnalysisError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        entries = [{"rule": f.rule, "file": f.file, "symbol": f.symbol,
+                    "justification": "TODO"}
+                   for f in result.findings + result.baselined]
+        print(json.dumps({"entries": entries}, indent=2))
+        return 0
+
+    if args.report is not None:
+        args.report.write_text(json.dumps(result.to_dict(), indent=2) + "\n")
+
+    if args.format == "json":
+        print(json.dumps(result.to_dict(), indent=2))
+    else:
+        for f in result.findings:
+            print(f.format())
+        if result.stale_baseline:
+            print(f"-- {len(result.stale_baseline)} stale baseline "
+                  "entr(y/ies) matched nothing (debt paid off — remove "
+                  "them):")
+            for e in result.stale_baseline:
+                print(f"   {e.rule} [{e.symbol}] {e.file}")
+        print(f"{len(result.findings)} finding(s), "
+              f"{len(result.baselined)} baselined, "
+              f"{len(result.stale_baseline)} stale baseline entr(y/ies)")
+
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,319 @@
+"""Shared infrastructure for the invariant analyzer (DESIGN.md §12).
+
+The analyzer is a pure-stdlib AST framework: a ``Project`` parses a set of
+Python files once, passes walk the trees and emit ``Finding``s, and a
+committed ``Baseline`` separates reviewed/intentional findings from new
+violations. Nothing here imports the analyzed code — analysis is static, so
+it runs on a bare interpreter and can inspect modules whose imports would
+fail (e.g. kernels on a machine without an accelerator).
+"""
+from __future__ import annotations
+
+import ast
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "AnalysisError", "Finding", "Module", "Project", "Pass",
+    "Baseline", "BaselineEntry", "dotted_name", "const_str",
+]
+
+
+class AnalysisError(Exception):
+    """Configuration / usage error (bad baseline, unknown rule, ...)."""
+
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+@dataclass
+class Finding:
+    """One structured violation: ``file:line``, rule id, and a fix hint.
+
+    ``symbol`` is the *stable identity* used for baseline matching — it names
+    the construct (``Packet.local``, ``save_fed_state:rng_state``) rather
+    than the line, so baselines survive unrelated edits to the file.
+    """
+    rule: str
+    file: str
+    line: int
+    symbol: str
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.file}:{self.line}: {self.rule} [{self.symbol}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "file": self.file, "line": self.line,
+                "symbol": self.symbol, "message": self.message,
+                "hint": self.hint}
+
+
+# --------------------------------------------------------------------------
+# project model
+# --------------------------------------------------------------------------
+
+@dataclass
+class Module:
+    name: str            # dotted module name ("repro.fed.protocol")
+    path: Path
+    tree: ast.Module
+    is_package: bool = False
+
+    @property
+    def package(self) -> str:
+        """The package this module's relative imports resolve against."""
+        if self.is_package:
+            return self.name
+        return self.name.rpartition(".")[0]
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.jit`` / ``np.asarray`` attribute chains as a dotted string."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def const_str(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class Project:
+    """A parsed set of modules plus cross-module name resolution.
+
+    ``paths`` may mix package directories (walked recursively, modules get
+    dotted names rooted at the directory's basename) and loose ``.py`` files
+    (module name = file stem) — the latter is how fixture tests feed single
+    files through the same passes that scan ``src/repro``.
+    """
+
+    def __init__(self, paths: Sequence[Path]):
+        self.modules: Dict[str, Module] = {}
+        for p in paths:
+            p = Path(p)
+            if p.is_dir():
+                self._add_tree(p)
+            elif p.suffix == ".py":
+                self._add_file(p, p.stem, is_package=False)
+            else:
+                raise AnalysisError(f"not a Python file or directory: {p}")
+
+    def _add_tree(self, root: Path) -> None:
+        base = root.name
+        for path in sorted(root.rglob("*.py")):
+            if "__pycache__" in path.parts:
+                continue
+            rel = path.relative_to(root)
+            parts = list(rel.parts[:-1])
+            is_pkg = rel.name == "__init__.py"
+            if not is_pkg:
+                parts.append(rel.stem)
+            name = ".".join([base] + parts)
+            self._add_file(path, name, is_package=is_pkg)
+
+    def _add_file(self, path: Path, name: str, is_package: bool) -> None:
+        src = path.read_text()
+        try:
+            tree = ast.parse(src, filename=str(path))
+        except SyntaxError as e:
+            raise AnalysisError(f"cannot parse {path}: {e}") from e
+        self.modules[name] = Module(name, path, tree, is_package)
+
+    def __iter__(self):
+        return iter(self.modules.values())
+
+    # -- name resolution ----------------------------------------------------
+
+    def local_symbols(self, module: Module) -> Dict[str, ast.AST]:
+        """Top-level defs/classes/assignments by name."""
+        out: Dict[str, ast.AST] = {}
+        for node in module.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                out[node.name] = node
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = node
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name):
+                out[node.target.id] = node
+        return out
+
+    def import_map(self, module: Module) -> Dict[str, Tuple[str, Optional[str]]]:
+        """local name -> (source module, symbol | None for module imports)."""
+        out: Dict[str, Tuple[str, Optional[str]]] = {}
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = (a.name, None)
+            elif isinstance(node, ast.ImportFrom):
+                src = self._import_source(module, node)
+                if src is None:
+                    continue
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    out[a.asname or a.name] = (src, a.name)
+        return out
+
+    def _import_source(self, module: Module, node: ast.ImportFrom) -> Optional[str]:
+        if node.level == 0:
+            return node.module
+        # relative import: walk up from the module's package
+        parts = module.package.split(".") if module.package else []
+        up = node.level - 1
+        if up > len(parts):
+            return None
+        base = parts[:len(parts) - up]
+        if node.module:
+            base = base + node.module.split(".")
+        return ".".join(base) or None
+
+    def resolve_export(self, module_name: str, symbol: str,
+                       _seen: Optional[set] = None,
+                       ) -> Optional[Tuple[Module, ast.AST]]:
+        """Find the defining (module, node) for ``module_name.symbol``,
+        following ``from X import Y`` re-export chains — this is how the
+        wire pass sees ``Packet`` through ``fed/protocol.py`` even though
+        it is defined in ``core/codec.py``."""
+        _seen = _seen or set()
+        if (module_name, symbol) in _seen:
+            return None
+        _seen.add((module_name, symbol))
+        mod = self.modules.get(module_name)
+        if mod is None:
+            return None
+        local = self.local_symbols(mod)
+        node = local.get(symbol)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return mod, node
+        src = self.import_map(mod).get(symbol)
+        if src is not None and src[1] is not None:
+            resolved = self.resolve_export(src[0], src[1], _seen)
+            if resolved is not None:
+                return resolved
+        # a local assignment (alias) still counts as a definition site
+        if node is not None:
+            return mod, node
+        return None
+
+    # -- dataclass helpers --------------------------------------------------
+
+    @staticmethod
+    def is_dataclass(node: ast.ClassDef) -> bool:
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = dotted_name(target)
+            if name in ("dataclass", "dataclasses.dataclass"):
+                return True
+        return False
+
+    @staticmethod
+    def dataclass_fields(node: ast.ClassDef) -> List[Tuple[str, bool]]:
+        """[(field name, has_default)] in declaration order."""
+        fields: List[Tuple[str, bool]] = []
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign) or \
+                    not isinstance(stmt.target, ast.Name):
+                continue
+            ann = ast.dump(stmt.annotation)
+            if "ClassVar" in ann:
+                continue
+            has_default = stmt.value is not None
+            if isinstance(stmt.value, ast.Call) and \
+                    dotted_name(stmt.value.func) in ("field",
+                                                     "dataclasses.field"):
+                kw = {k.arg for k in stmt.value.keywords}
+                has_default = bool(kw & {"default", "default_factory"})
+            fields.append((stmt.target.id, has_default))
+        return fields
+
+
+# --------------------------------------------------------------------------
+# passes
+# --------------------------------------------------------------------------
+
+@dataclass
+class Pass:
+    """One analysis pass: a name, its rule catalog, and a runner."""
+    name: str
+    rules: Dict[str, str]                      # rule id -> one-line description
+    run: Callable[[Project], List[Finding]] = field(repr=False, default=None)
+
+
+# --------------------------------------------------------------------------
+# baseline
+# --------------------------------------------------------------------------
+
+@dataclass
+class BaselineEntry:
+    rule: str
+    file: str
+    symbol: str
+    justification: str
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule or self.symbol != f.symbol:
+            return False
+        # file paths are stored repo-relative; the finding's path may be
+        # absolute or cwd-relative — suffix matching keeps both stable
+        a, b = Path(f.file).as_posix(), Path(self.file).as_posix()
+        return a == b or a.endswith("/" + b) or b.endswith("/" + a)
+
+
+class Baseline:
+    """The committed suppression file: every entry must carry a one-line
+    justification (enforced at load — an unjustified entry is a hard
+    error, which is how CI verifies the baseline stays reviewed)."""
+
+    def __init__(self, entries: List[BaselineEntry], path: Optional[Path] = None):
+        self.entries = entries
+        self.path = path
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        try:
+            data = json.loads(Path(path).read_text())
+        except (OSError, ValueError) as e:
+            raise AnalysisError(f"cannot read baseline {path}: {e}") from e
+        entries = []
+        for i, e in enumerate(data.get("entries", [])):
+            missing = {"rule", "file", "symbol", "justification"} - set(e)
+            if missing:
+                raise AnalysisError(
+                    f"baseline entry #{i} missing {sorted(missing)}: {e}")
+            if not str(e["justification"]).strip():
+                raise AnalysisError(
+                    f"baseline entry #{i} ({e['rule']} {e['symbol']}) has an "
+                    "empty justification — every suppression must say why")
+            entries.append(BaselineEntry(e["rule"], e["file"], e["symbol"],
+                                         e["justification"]))
+        return cls(entries, Path(path))
+
+    def match(self, f: Finding) -> Optional[BaselineEntry]:
+        for e in self.entries:
+            if e.matches(f):
+                return e
+        return None
+
+    def stale(self, findings: Iterable[Finding]) -> List[BaselineEntry]:
+        """Entries that matched nothing — debt that has been paid off and
+        should be removed from the file."""
+        fs = list(findings)
+        return [e for e in self.entries
+                if not any(e.matches(f) for f in fs)]

@@ -1,0 +1,13 @@
+"""Per-pass plugins. Adding a pass = one module exporting ``PASS`` plus a
+registry entry here (DESIGN.md §12)."""
+from repro.analysis.passes import (checkpoint_parity, determinism,
+                                   jit_hygiene, wire_contract)
+
+ALL_PASSES = [
+    wire_contract.PASS,
+    checkpoint_parity.PASS,
+    jit_hygiene.PASS,
+    determinism.PASS,
+]
+
+ALL_RULES = {rid: desc for p in ALL_PASSES for rid, desc in p.rules.items()}

@@ -1,0 +1,200 @@
+"""Checkpoint save/load parity (CP001-CP003).
+
+Every persisted key must round-trip: a key written by ``save_fed_state`` /
+``state()`` that the paired ``load_fed_state`` / ``load_state()`` /
+``restore()`` never reads is state that silently resets on resume (the
+exact bug class behind the format-1 adaptive-k reset). The converse — a
+hard ``state["key"]`` read of a key the save side never writes — is either
+dead legacy code or a typo'd key that will ``KeyError`` on a fresh file.
+
+Pairs are discovered structurally:
+  * module-level ``save_X``/``load_X`` functions (same module, same suffix)
+  * classes defining both ``state`` and ``load_state`` (or ``restore``)
+
+Key reads through ``.get(...)`` are *soft* (presence-tolerant: legacy
+formats, optional blocks) and satisfy CP001 but never trigger CP002.
+Format gates (``fmt >= N``) must cite a format number the save side
+actually writes (CP003) — citing an unknown format is drift between the
+reader and the writer.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.core import Finding, Module, Pass, Project, const_str
+
+RULES = {
+    "CP001": "key written by save/state() never read by the paired load",
+    "CP002": "hard state[key] read of a key the paired save never writes",
+    "CP003": "format-gated read cites an unknown format number",
+}
+
+
+def _pairs(mod: Module):
+    """(kind, owner, save_fn, load_fn) pairs in one module."""
+    top = {n.name: n for n in mod.tree.body if isinstance(n, ast.FunctionDef)}
+    for name, fn in top.items():
+        if name.startswith("save"):
+            load = top.get("load" + name[len("save"):])
+            if load is not None:
+                yield "function", name, fn, load
+    for node in mod.tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        methods = {n.name: n for n in node.body
+                   if isinstance(n, ast.FunctionDef)}
+        save = methods.get("state")
+        load = methods.get("load_state") or methods.get("restore")
+        if save is not None and load is not None:
+            yield "class", node.name, save, load
+
+
+def _written_keys(fn: ast.FunctionDef) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                s = const_str(k) if k is not None else None
+                if s is not None:
+                    out.setdefault(s, k.lineno)
+        elif isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Store):
+            s = const_str(node.slice)
+            if s is not None:
+                out.setdefault(s, node.lineno)
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "setdefault" and node.args:
+            s = const_str(node.args[0])
+            if s is not None:
+                out.setdefault(s, node.lineno)
+    return out
+
+
+def _read_keys(fn: ast.FunctionDef) -> Tuple[Dict[str, int], Dict[str, int]]:
+    """(hard reads, soft reads) -> line. Soft = .get/.pop/`in`/== compares."""
+    hard: Dict[str, int] = {}
+    soft: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load):
+            s = const_str(node.slice)
+            if s is not None:
+                hard.setdefault(s, node.lineno)
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("get", "pop") and node.args:
+            s = const_str(node.args[0])
+            if s is not None:
+                soft.setdefault(s, node.lineno)
+        elif isinstance(node, ast.Compare):
+            for operand in [node.left] + list(node.comparators):
+                s = const_str(operand)
+                if s is not None:
+                    soft.setdefault(s, operand.lineno)
+    return hard, soft
+
+
+def _format_var_names(fn: ast.FunctionDef) -> Set[str]:
+    """Local names assigned from a read of the 'format' key."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        reads_format = any(
+            (isinstance(sub, ast.Subscript) and
+             const_str(sub.slice) == "format") or
+            (isinstance(sub, ast.Call) and
+             isinstance(sub.func, ast.Attribute) and
+             sub.func.attr == "get" and sub.args and
+             const_str(sub.args[0]) == "format")
+            for sub in ast.walk(node.value))
+        if reads_format:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _known_formats(project: Project) -> Set[int]:
+    """Format numbers any save path writes at the literal 'format' key;
+    1..max are all known (each format subsumes its predecessors)."""
+    written: Set[int] = set()
+    for mod in project:
+        if mod.name.startswith("repro.analysis"):
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Dict):
+                for k, v in zip(node.keys, node.values):
+                    if k is not None and const_str(k) == "format" and \
+                            isinstance(v, ast.Constant) and \
+                            isinstance(v.value, int):
+                        written.add(v.value)
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Constant) and \
+                    isinstance(node.value.value, int):
+                for t in node.targets:
+                    if isinstance(t, ast.Subscript) and \
+                            isinstance(t.ctx, ast.Store) and \
+                            const_str(t.slice) == "format":
+                        written.add(node.value.value)
+    if not written:
+        return set()
+    return set(range(1, max(written) + 1))
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    known_formats = _known_formats(project)
+
+    for mod in project:
+        if mod.name.startswith("repro.analysis"):
+            continue
+        for kind, owner, save_fn, load_fn in _pairs(mod):
+            written = _written_keys(save_fn)
+            hard, soft = _read_keys(load_fn)
+            read = set(hard) | set(soft)
+            for key, line in sorted(written.items()):
+                if key not in read:
+                    findings.append(Finding(
+                        "CP001", str(mod.path), line, f"{owner}:{key}",
+                        f"key {key!r} written by {owner}'s save path is "
+                        f"never read by {load_fn.name} — this state "
+                        "silently resets on resume",
+                        f"restore {key!r} in {load_fn.name}, or baseline "
+                        "it if the key is intentionally write-only"))
+            for key, line in sorted(hard.items()):
+                if key not in written and key not in soft:
+                    findings.append(Finding(
+                        "CP002", str(mod.path), line, f"{owner}:{key}",
+                        f"hard read state[{key!r}] in {load_fn.name} of a "
+                        f"key {owner}'s save path never writes",
+                        "guard with .get(...) for legacy layouts, fix the "
+                        "key name, or baseline with the format it reads"))
+
+            fmt_vars = _format_var_names(load_fn)
+            if not fmt_vars or not known_formats:
+                continue
+            for node in ast.walk(load_fn):
+                if not isinstance(node, ast.Compare):
+                    continue
+                sides = [node.left] + list(node.comparators)
+                if not any(isinstance(s, ast.Name) and s.id in fmt_vars
+                           for s in sides):
+                    continue
+                for s in sides:
+                    if isinstance(s, ast.Constant) and \
+                            isinstance(s.value, int) and \
+                            s.value not in known_formats:
+                        findings.append(Finding(
+                            "CP003", str(mod.path), node.lineno,
+                            f"{owner}:format=={s.value}",
+                            f"format gate in {load_fn.name} cites format "
+                            f"{s.value}, but known formats are "
+                            f"{sorted(known_formats)}",
+                            "bump the written format number in the save "
+                            "path in the same change that adds the gate"))
+    return findings
+
+
+PASS = Pass(name="ckpt", rules=RULES, run=run)

@@ -1,0 +1,262 @@
+"""Determinism in billing / parity-pinned round-path code (DT001-DT004).
+
+The resume-parity suite pins BITWISE equality: a resumed run must produce
+the same wire bytes, the same ledger, the same aggregates as an
+uninterrupted one. Anything order- or clock-dependent in that path breaks
+the pin nondeterministically — the worst kind of CI failure:
+
+  * DT001 — iterating a ``set`` without ``sorted()``: set order depends on
+    hash seeding for str keys and on insertion history for ints.
+  * DT002 — wall-clock reads (``time.time``/``perf_counter``): any value
+    that flows into billed or checkpointed state varies across runs.
+  * DT003 — unseeded randomness (stdlib ``random``, legacy global
+    ``np.random.*``, ``default_rng()`` with no seed).
+  * DT004 — ``sum()`` over ``dict.values()``: float accumulation order
+    follows insertion order; two histories that built the same mapping in
+    different orders disagree in the last ulp. (Integer sums are
+    order-independent — baseline those with that justification.)
+
+Scope: for ``repro.*`` modules only the round-path/billing surface is
+scanned (fed/, checkpoint/, netsim/, core compression+codec+segments);
+models/data/launch code may use clocks and RNGs freely. Non-``repro``
+modules (fixtures) are scanned in full.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import Finding, Module, Pass, Project, dotted_name
+
+RULES = {
+    "DT001": "set iteration without sorted() in round-path code",
+    "DT002": "wall-clock read in billing/parity-pinned code",
+    "DT003": "unseeded randomness in round-path code",
+    "DT004": "sum() over dict.values() — order-dependent for floats",
+}
+
+SCOPE_PREFIXES = ("repro.fed.", "repro.checkpoint.", "repro.netsim.",
+                  "repro.core.compression", "repro.core.codec",
+                  "repro.core.segments")
+
+WALL_CLOCK = {"time.time", "time.perf_counter", "time.monotonic",
+              "time.process_time", "time.time_ns", "time.monotonic_ns",
+              "datetime.now", "datetime.datetime.now", "datetime.utcnow",
+              "datetime.datetime.utcnow"}
+
+
+def _in_scope(mod: Module) -> bool:
+    if not mod.name.startswith("repro."):
+        return True                           # fixtures / ad-hoc files
+    if mod.name.startswith("repro.analysis"):
+        return False
+    return mod.name.startswith(SCOPE_PREFIXES) or mod.name in (
+        p.rstrip(".") for p in SCOPE_PREFIXES)
+
+
+def _parent_map(tree: ast.Module) -> Dict[ast.AST, ast.AST]:
+    out: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            out[child] = node
+    return out
+
+
+def _qualname(node: ast.AST, parents: Dict[ast.AST, ast.AST],
+              mod: Module) -> str:
+    parts: List[str] = []
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            parts.append(cur.name)
+        cur = parents.get(cur)
+    return ".".join(reversed(parts)) or mod.name.rsplit(".", 1)[-1]
+
+
+def _set_typed_attrs(project: Project) -> Set[str]:
+    """Attribute names assigned ``set()`` / a set literal anywhere — a
+    class-blind index (``self.ever = set()`` marks ``.ever`` everywhere)."""
+    out: Set[str] = set()
+    for mod in project:
+        for node in ast.walk(mod.tree):
+            value = None
+            attr = None
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Attribute):
+                attr, value = node.targets[0].attr, node.value
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Attribute):
+                attr, value = node.target.attr, node.value
+                if value is None and "Set[" in ast.dump(node.annotation):
+                    out.add(attr)
+                    continue
+            if attr is not None and value is not None and _is_set_expr(value):
+                out.add(attr)
+    return out
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and dotted_name(node.func) in (
+            "set", "frozenset"):
+        return True
+    return False
+
+
+def _local_set_names(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _is_set_expr(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+_ORDER_FREE_CONSUMERS = ("sorted", "min", "max", "frozenset", "set", "len",
+                         "any", "all")
+
+
+def _order_free(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> bool:
+    """True when the iteration's result feeds an order-insensitive consumer
+    (``sorted(x for x in s)`` is the FIX for DT001, not a violation)."""
+    parent = parents.get(node)
+    return isinstance(parent, ast.Call) and \
+        dotted_name(parent.func) in _ORDER_FREE_CONSUMERS
+
+
+def _iter_events(tree: ast.Module, parents: Dict[ast.AST, ast.AST]):
+    """(iter_expr, line) for every order-sensitive for-loop / comprehension
+    iteration and list()/tuple() materialisation."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter, node.lineno
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            if _order_free(node, parents):
+                continue
+            for gen in node.generators:
+                yield gen.iter, node.lineno
+        elif isinstance(node, ast.Call) and \
+                dotted_name(node.func) in ("list", "tuple") and \
+                len(node.args) == 1 and not _order_free(node, parents):
+            yield node.args[0], node.lineno
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    set_attrs = _set_typed_attrs(project)
+
+    for mod in project:
+        if not _in_scope(mod):
+            continue
+        parents = _parent_map(mod.tree)
+        imports = project.import_map(mod)
+        time_names = {name for name, (src, sym) in imports.items()
+                      if src == "time" and sym is not None}
+        random_names = {name for name, (src, sym) in imports.items()
+                        if src == "random" and sym is not None}
+
+        # enclosing-function local set inference
+        fn_sets: Dict[ast.AST, Set[str]] = {}
+
+        def local_sets(node: ast.AST) -> Set[str]:
+            cur = node
+            while cur is not None and not isinstance(
+                    cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                cur = parents.get(cur)
+            if cur is None:
+                return set()
+            if cur not in fn_sets:
+                fn_sets[cur] = _local_set_names(cur)
+            return fn_sets[cur]
+
+        # DT001: set iteration
+        for iter_expr, line in _iter_events(mod.tree, parents):
+            is_set = _is_set_expr(iter_expr)
+            label = dotted_name(iter_expr)
+            if not is_set and isinstance(iter_expr, ast.Name):
+                is_set = iter_expr.id in local_sets(iter_expr)
+            if not is_set and isinstance(iter_expr, ast.Attribute):
+                is_set = iter_expr.attr in set_attrs
+            if is_set:
+                qn = _qualname(iter_expr, parents, mod)
+                findings.append(Finding(
+                    "DT001", str(mod.path), line,
+                    f"{qn}:set-iter:{label or 'set-expr'}",
+                    f"iteration over a set in {qn} — order varies across "
+                    "runs and breaks bitwise resume parity",
+                    "wrap with sorted(...) or keep an insertion-ordered "
+                    "dict/list alongside the set"))
+
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            qn = _qualname(node, parents, mod)
+            # DT002: wall clock
+            if dn in WALL_CLOCK or dn in time_names:
+                findings.append(Finding(
+                    "DT002", str(mod.path), node.lineno, f"{qn}:{dn}",
+                    f"wall-clock read {dn}() in {qn} — values differ "
+                    "across runs; anything billed or checkpointed from it "
+                    "breaks parity",
+                    "derive timing from the simulated event clock, or "
+                    "baseline if the value never reaches pinned state"))
+            # DT003: unseeded randomness
+            elif dn is not None and (
+                    dn.startswith("random.") or dn in random_names):
+                findings.append(Finding(
+                    "DT003", str(mod.path), node.lineno, f"{qn}:{dn}",
+                    f"stdlib randomness {dn}() in {qn} draws from global "
+                    "unseeded state",
+                    "use an np.random.Generator seeded from the run "
+                    "config and thread it explicitly"))
+            elif dn in ("np.random.default_rng", "numpy.random.default_rng",
+                        "default_rng") and not node.args and \
+                    not node.keywords:
+                findings.append(Finding(
+                    "DT003", str(mod.path), node.lineno, f"{qn}:{dn}",
+                    f"{dn}() with no seed in {qn} — entropy from the OS, "
+                    "different every run",
+                    "pass the run config's seed"))
+            elif dn is not None and (
+                    dn.startswith("np.random.") or
+                    dn.startswith("numpy.random.")) and \
+                    not dn.endswith("default_rng"):
+                findings.append(Finding(
+                    "DT003", str(mod.path), node.lineno, f"{qn}:{dn}",
+                    f"legacy global-state numpy RNG {dn}() in {qn}",
+                    "use an explicit np.random.Generator from "
+                    "default_rng(seed)"))
+            # DT004: sum over dict.values()
+            elif dn == "sum" and node.args:
+                arg = node.args[0]
+                values_call = None
+                if isinstance(arg, ast.Call) and \
+                        isinstance(arg.func, ast.Attribute) and \
+                        arg.func.attr == "values":
+                    values_call = arg
+                elif isinstance(arg, ast.GeneratorExp) and arg.generators:
+                    gi = arg.generators[0].iter
+                    if isinstance(gi, ast.Call) and \
+                            isinstance(gi.func, ast.Attribute) and \
+                            gi.func.attr in ("values", "items"):
+                        values_call = gi
+                if values_call is not None:
+                    base = dotted_name(values_call.func.value) or "dict"
+                    findings.append(Finding(
+                        "DT004", str(mod.path), node.lineno,
+                        f"{qn}:sum-values:{base}",
+                        f"sum() over {base}.values() in {qn} accumulates "
+                        "in insertion order — float sums differ when the "
+                        "mapping was built in a different order",
+                        "sum(v for _, v in sorted(d.items())) for floats; "
+                        "integer sums are order-independent (baseline "
+                        "with that justification)"))
+    return findings
+
+
+PASS = Pass(name="det", rules=RULES, run=run)

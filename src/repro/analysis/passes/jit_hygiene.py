@@ -1,0 +1,429 @@
+"""jit/trace hygiene (JH001-JH002).
+
+Functions reachable from ``jax.jit`` / ``jax.vmap`` / ``pl.pallas_call``
+entry points are traced: host-sync operations inside them — ``.item()``,
+``float()``/``int()`` on a traced value, ``np.asarray``, Python ``if``/
+``while`` on a traced array — either crash at trace time (ConcretizationType
+error) or silently force a device sync per call. Retrace hazards
+(non-hashable static args, jit built inside a loop) recompile on every call.
+
+Entry discovery is structural: decorated functions (``@jax.jit``,
+``@functools.partial(jax.jit, static_argnames=...)``), direct wrap calls
+(``jax.jit(f)``, ``jax.jit(jax.vmap(f))``, including factory-built closures
+``jax.jit(make(...))`` whose returned nested def is the traced function),
+and Pallas kernels (first argument of ``pl.pallas_call``).
+
+Taint: every non-static parameter is a traced value; ``.shape``/``.ndim``/
+``.dtype``/``.size`` projections and ``len()`` results are static and wash
+the taint off, so branching on shapes stays legal. Taint follows calls into
+same-project helper functions (bounded depth).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.core import Finding, Module, Pass, Project, dotted_name
+
+RULES = {
+    "JH001": "host-sync in a traced function (item/float/np.*/branching)",
+    "JH002": "retrace hazard (bad static arg, mutable static, jit in loop)",
+}
+
+UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size"}
+JIT_NAMES = {"jax.jit", "jit"}
+VMAP_NAMES = {"jax.vmap", "vmap"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_MAX_DEPTH = 8
+
+
+def _static_names_from_call(call: ast.Call, params: List[str]) -> Set[str]:
+    """static_argnames / static_argnums keywords -> parameter names."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, str):
+                    out.add(node.value)
+        elif kw.arg == "static_argnums":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and \
+                        isinstance(node.value, int) and \
+                        0 <= node.value < len(params):
+                    out.add(params[node.value])
+    return out
+
+
+def _param_names(fn: ast.FunctionDef) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+
+
+def _resolve_fn(name: str, mod: Module, project: Project,
+                local_fns: Dict[str, ast.FunctionDef],
+                ) -> Optional[Tuple[Module, ast.FunctionDef]]:
+    if name in local_fns:
+        return mod, local_fns[name]
+    src = project.import_map(mod).get(name)
+    if src is not None and src[1] is not None:
+        resolved = project.resolve_export(src[0], src[1])
+        if resolved and isinstance(resolved[1], ast.FunctionDef):
+            return resolved
+    return None
+
+
+def _returned_nested_defs(fn: ast.FunctionDef) -> List[ast.FunctionDef]:
+    """Nested defs a factory returns — the closures jit actually traces."""
+    nested = {n.name: n for n in ast.walk(fn)
+              if isinstance(n, ast.FunctionDef) and n is not fn}
+    out = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            hit = nested.get(node.value.id)
+            if hit is not None:
+                out.append(hit)
+    return out
+
+
+def _inner_functions(expr: ast.AST, mod: Module, project: Project,
+                     local_fns) -> List[Tuple[Module, ast.FunctionDef]]:
+    """The function definitions a jit/vmap wrap expression ends up tracing."""
+    if isinstance(expr, ast.Name):
+        hit = _resolve_fn(expr.id, mod, project, local_fns)
+        return [hit] if hit else []
+    if isinstance(expr, ast.Call):
+        fname = dotted_name(expr.func)
+        if fname in PARTIAL_NAMES | VMAP_NAMES | JIT_NAMES and expr.args:
+            return _inner_functions(expr.args[0], mod, project, local_fns)
+        if isinstance(expr.func, ast.Name):
+            hit = _resolve_fn(expr.func.id, mod, project, local_fns)
+            if hit:           # factory call: trace what the factory returns
+                return [(hit[0], inner)
+                        for inner in _returned_nested_defs(hit[1])]
+    return []
+
+
+class _Entry:
+    def __init__(self, mod: Module, fn: ast.FunctionDef, statics: Set[str],
+                 origin: str):
+        self.mod, self.fn, self.statics, self.origin = mod, fn, statics, origin
+
+
+def _discover_entries(project: Project, findings: List[Finding]) -> List[_Entry]:
+    entries: List[_Entry] = []
+    for mod in project:
+        if mod.name.startswith("repro.analysis"):
+            continue
+        local_fns = {n.name: n for n in ast.walk(mod.tree)
+                     if isinstance(n, ast.FunctionDef)}
+        # decorated entries
+        for fn in local_fns.values():
+            for dec in fn.decorator_list:
+                params = _param_names(fn)
+                if dotted_name(dec) in JIT_NAMES:
+                    entries.append(_Entry(mod, fn, set(), "@jax.jit"))
+                elif isinstance(dec, ast.Call):
+                    dn = dotted_name(dec.func)
+                    if dn in JIT_NAMES:
+                        statics = _static_names_from_call(dec, params)
+                        entries.append(_Entry(mod, fn, statics, "@jax.jit"))
+                    elif dn in PARTIAL_NAMES and dec.args and \
+                            dotted_name(dec.args[0]) in JIT_NAMES:
+                        statics = _static_names_from_call(dec, params)
+                        entries.append(_Entry(
+                            mod, fn, statics, "@partial(jax.jit)"))
+                        for s in statics:
+                            if s not in params:
+                                findings.append(Finding(
+                                    "JH002", str(mod.path), fn.lineno,
+                                    f"{fn.name}:static={s}",
+                                    f"static_argnames names {s!r} which is "
+                                    f"not a parameter of {fn.name}",
+                                    "static arg names must match the "
+                                    "signature or jit raises at call time"))
+        # wrap-call entries: jax.jit(f, ...), pl.pallas_call(kernel, ...)
+        loop_depth = 0
+
+        def walk(node: ast.AST, in_loop: bool) -> None:
+            if isinstance(node, ast.Call):
+                dn = dotted_name(node.func)
+                if dn in JIT_NAMES or dn in VMAP_NAMES:
+                    if in_loop:
+                        findings.append(Finding(
+                            "JH002", str(mod.path), node.lineno,
+                            f"{mod.name}:jit-in-loop:L{node.lineno}",
+                            "jax.jit built inside a loop re-traces and "
+                            "recompiles every iteration",
+                            "hoist the jit wrap out of the loop"))
+                    if node.args:
+                        for emod, efn in _inner_functions(
+                                node.args[0], mod, project, local_fns):
+                            statics = _static_names_from_call(
+                                node, _param_names(efn))
+                            entries.append(_Entry(emod, efn, statics,
+                                                  "jax.jit(...)"))
+                elif dn is not None and dn.split(".")[-1] == "pallas_call" \
+                        and node.args:
+                    for emod, efn in _inner_functions(
+                            node.args[0], mod, project, local_fns):
+                        entries.append(_Entry(emod, efn, set(),
+                                              "pallas_call"))
+            next_in_loop = in_loop or isinstance(node, (ast.For, ast.While))
+            for child in ast.iter_child_nodes(node):
+                walk(child, next_in_loop)
+
+        walk(mod.tree, False)
+        _ = loop_depth
+    # dedupe (a decorated fn can also be re-wrapped)
+    seen, out = set(), []
+    for e in entries:
+        key = (id(e.fn), frozenset(e.statics))
+        if key not in seen:
+            seen.add(key)
+            out.append(e)
+    return out
+
+
+def _mutable_static_defaults(entry: _Entry, findings: List[Finding]) -> None:
+    fn = entry.fn
+    params = _param_names(fn)
+    defaults = fn.args.defaults
+    if defaults:
+        # defaults align with the tail of positional params
+        tail = (fn.args.posonlyargs + fn.args.args)[-len(defaults):]
+        for p, d in zip(tail, defaults):
+            if p.arg in entry.statics and \
+                    isinstance(d, (ast.List, ast.Dict, ast.Set)):
+                findings.append(Finding(
+                    "JH002", str(entry.mod.path), d.lineno,
+                    f"{fn.name}:static={p.arg}",
+                    f"static parameter {p.arg!r} of {fn.name} defaults to a "
+                    "non-hashable literal — jit statics must be hashable",
+                    "use a tuple / frozenset / None sentinel instead"))
+    _ = params
+
+
+def _static_call_sites(project: Project, entry: _Entry,
+                       findings: List[Finding]) -> None:
+    """Call sites passing non-hashable literals to static params."""
+    if not entry.statics:
+        return
+    params = _param_names(entry.fn)
+    for mod in project:
+        if mod.name.startswith("repro.analysis"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = dotted_name(node.func)
+            if dn is None or dn.split(".")[-1] != entry.fn.name:
+                continue
+            bad = []
+            for i, a in enumerate(node.args):
+                if i < len(params) and params[i] in entry.statics and \
+                        isinstance(a, (ast.List, ast.Dict, ast.Set)):
+                    bad.append(params[i])
+            for kw in node.keywords:
+                if kw.arg in entry.statics and \
+                        isinstance(kw.value, (ast.List, ast.Dict, ast.Set)):
+                    bad.append(kw.arg)
+            for p in bad:
+                findings.append(Finding(
+                    "JH002", str(mod.path), node.lineno,
+                    f"{entry.fn.name}:static-call:{p}",
+                    f"call passes a non-hashable literal to static "
+                    f"parameter {p!r} of {entry.fn.name}",
+                    "statics must be hashable: pass a tuple/frozenset"))
+
+
+# --------------------------------------------------------------------------
+# taint walk
+# --------------------------------------------------------------------------
+
+class _TaintChecker:
+    def __init__(self, project: Project, findings: List[Finding],
+                 entry_name: str):
+        self.project = project
+        self.findings = findings
+        self.entry_name = entry_name
+        self.memo: Set[Tuple[int, frozenset]] = set()
+
+    def check(self, mod: Module, fn: ast.FunctionDef,
+              tainted_params: Set[str], depth: int = 0) -> None:
+        key = (id(fn), frozenset(tainted_params))
+        if key in self.memo or depth > _MAX_DEPTH:
+            return
+        self.memo.add(key)
+        env: Dict[str, bool] = {p: (p in tainted_params)
+                                for p in _param_names(fn)}
+        local_fns = {n.name: n for n in ast.walk(mod.tree)
+                     if isinstance(n, ast.FunctionDef)}
+        self._stmts(fn.body, env, mod, fn, local_fns, depth)
+
+    # -- taint of an expression --------------------------------------------
+    def _tainted(self, node: ast.AST, env: Dict[str, bool]) -> bool:
+        if isinstance(node, ast.Name):
+            return env.get(node.id, False)
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in UNTAINT_ATTRS:
+                return False
+            return self._tainted(node.value, env)
+        if isinstance(node, ast.Call):
+            dn = dotted_name(node.func)
+            if dn == "len":
+                return False
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr not in UNTAINT_ATTRS and \
+                    self._tainted(node.func.value, env):
+                # a method on a traced array (x.sum(), x.mean()) yields
+                # another traced array
+                return True
+            if dn is not None and dn.split(".")[0] in ("jnp", "jax", "lax",
+                                                       "pl", "pltpu"):
+                return True
+            return any(self._tainted(a, env) for a in node.args) or \
+                any(self._tainted(k.value, env) for k in node.keywords)
+        if isinstance(node, ast.Subscript):
+            return self._tainted(node.value, env) or \
+                self._tainted(node.slice, env)
+        return any(self._tainted(c, env)
+                   for c in ast.iter_child_nodes(node)
+                   if not isinstance(c, (ast.expr_context, ast.operator,
+                                         ast.boolop, ast.cmpop,
+                                         ast.unaryop)))
+
+    # -- violations at one expression tree ---------------------------------
+    def _scan_expr(self, node: ast.AST, env, mod: Module,
+                   fn: ast.FunctionDef, local_fns, depth: int) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            dn = dotted_name(sub.func)
+            if isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr in SYNC_METHODS and \
+                    self._tainted(sub.func.value, env):
+                self._emit("JH001", mod, sub,
+                           f"{fn.name}:{sub.func.attr}",
+                           f".{sub.func.attr}() on a traced value in "
+                           f"{fn.name} (reached from {self.entry_name}) "
+                           "forces a host sync",
+                           "keep the value on device; return it and "
+                           "materialise outside the jitted function")
+            elif dn in ("float", "int", "bool") and sub.args and \
+                    self._tainted(sub.args[0], env):
+                self._emit("JH001", mod, sub, f"{fn.name}:{dn}()",
+                           f"{dn}() on a traced value in {fn.name} "
+                           f"(reached from {self.entry_name}) concretises "
+                           "the tracer",
+                           "use jnp casts (astype) or hoist the scalar "
+                           "out of the traced region")
+            elif dn is not None and \
+                    dn.split(".")[0] in ("np", "numpy", "onp") and \
+                    any(self._tainted(a, env) for a in sub.args):
+                self._emit("JH001", mod, sub,
+                           f"{fn.name}:{dn}",
+                           f"{dn}(...) on a traced value in {fn.name} "
+                           f"(reached from {self.entry_name}) pulls the "
+                           "array to host",
+                           "use the jnp equivalent inside traced code")
+            # descend into project-local callees carrying taint
+            callee = None
+            if isinstance(sub.func, ast.Name):
+                callee = _resolve_fn(sub.func.id, mod, self.project,
+                                     local_fns)
+            if callee is not None:
+                cmod, cfn = callee
+                cparams = _param_names(cfn)
+                tainted = set()
+                for i, a in enumerate(sub.args):
+                    if i < len(cparams) and self._tainted(a, env):
+                        tainted.add(cparams[i])
+                for kw in sub.keywords:
+                    if kw.arg in cparams and self._tainted(kw.value, env):
+                        tainted.add(kw.arg)
+                if tainted:
+                    self.check(cmod, cfn, tainted, depth + 1)
+
+    def _emit(self, rule: str, mod: Module, node: ast.AST, symbol: str,
+              message: str, hint: str) -> None:
+        self.findings.append(Finding(rule, str(mod.path), node.lineno,
+                                     symbol, message, hint))
+
+    # -- statement walk with linear taint propagation ----------------------
+    def _stmts(self, body, env, mod, fn, local_fns, depth) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.FunctionDef):
+                continue                       # nested defs checked if called
+            if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                value = stmt.value
+                if value is None:
+                    continue
+                self._scan_expr(value, env, mod, fn, local_fns, depth)
+                taint = self._tainted(value, env)
+                targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                    else [stmt.target]
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            env[n.id] = taint or (
+                                isinstance(stmt, ast.AugAssign) and
+                                env.get(n.id, False))
+            elif isinstance(stmt, (ast.If, ast.While)):
+                self._scan_expr(stmt.test, env, mod, fn, local_fns, depth)
+                if self._tainted(stmt.test, env):
+                    self._emit(
+                        "JH001", mod, stmt, f"{fn.name}:branch",
+                        f"Python {'if' if isinstance(stmt, ast.If) else 'while'}"
+                        f" on a traced value in {fn.name} (reached from "
+                        f"{self.entry_name})",
+                        "use jnp.where / lax.cond — Python control flow "
+                        "needs concrete values at trace time")
+                self._stmts(stmt.body, env, mod, fn, local_fns, depth)
+                self._stmts(stmt.orelse, env, mod, fn, local_fns, depth)
+            elif isinstance(stmt, ast.For):
+                # iterating a STATIC container of traced arrays (zip of
+                # kernel operands) is legal and common — only branching
+                # concretises, so taint the targets but don't flag the loop
+                self._scan_expr(stmt.iter, env, mod, fn, local_fns, depth)
+                for n in ast.walk(stmt.target):
+                    if isinstance(n, ast.Name):
+                        env[n.id] = self._tainted(stmt.iter, env)
+                self._stmts(stmt.body, env, mod, fn, local_fns, depth)
+                self._stmts(stmt.orelse, env, mod, fn, local_fns, depth)
+            elif isinstance(stmt, (ast.Return, ast.Expr)):
+                if stmt.value is not None:
+                    self._scan_expr(stmt.value, env, mod, fn, local_fns,
+                                    depth)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    self._scan_expr(item.context_expr, env, mod, fn,
+                                    local_fns, depth)
+                self._stmts(stmt.body, env, mod, fn, local_fns, depth)
+            # try/raise/assert etc: rare in traced code; skipped
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    entries = _discover_entries(project, findings)
+    for entry in entries:
+        _mutable_static_defaults(entry, findings)
+        _static_call_sites(project, entry, findings)
+        checker = _TaintChecker(project, findings, entry.fn.name)
+        tainted = {p for p in _param_names(entry.fn)
+                   if p not in entry.statics}
+        checker.check(entry.mod, entry.fn, tainted)
+    # dedupe identical findings (same fn reachable from several entries)
+    seen, out = set(), []
+    for f in findings:
+        key = (f.rule, f.file, f.line, f.symbol)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+PASS = Pass(name="jit", rules=RULES, run=run)

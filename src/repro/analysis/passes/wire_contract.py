@@ -1,0 +1,248 @@
+"""Wire-contract symmetry (WC001-WC004).
+
+The wire contract lives in ``fed/protocol.py``: dataclass messages
+(BroadcastMsg, DownloadMsg, UploadMsg, JoinMsg, JoinAck, LeaveMsg) plus the
+re-exported ``Packet``. A refactor that adds a field but forgets one side of
+the serialize/deserialize pair ships a silently-truncated message — the
+parity tests only catch it if the field happens to affect pinned bytes.
+
+Serializers are discovered structurally: ``_pack_X``/``_unpack_X`` (or
+``pack_X``/``unpack_X``) function pairs in the same module. The pack side is
+expected to read every field of the message it serializes and the key sets
+on both sides must agree; constructors at call sites must bind every
+non-defaulted field.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding, Module, Pass, Project, const_str
+
+PROTOCOL_MODULE = "repro.fed.protocol"
+
+RULES = {
+    "WC001": "message field never read by the serialize (pack) path",
+    "WC002": "key written by pack is never read by the paired unpack",
+    "WC003": "message constructor call site omits a non-defaulted field",
+    "WC004": "key read by unpack is never written by the paired pack",
+}
+
+
+def _wire_types(project: Project) -> Dict[str, Tuple[Module, ast.ClassDef]]:
+    """Message dataclasses: everything defined in — or re-exported
+    through — the protocol module. Falls back to every project dataclass
+    when no protocol module is present (fixture runs)."""
+    out: Dict[str, Tuple[Module, ast.ClassDef]] = {}
+    proto = project.modules.get(PROTOCOL_MODULE)
+    if proto is not None:
+        for name, node in project.local_symbols(proto).items():
+            if isinstance(node, ast.ClassDef) and project.is_dataclass(node):
+                out[name] = (proto, node)
+        for name, (src, sym) in project.import_map(proto).items():
+            if sym is None:
+                continue
+            resolved = project.resolve_export(src, sym)
+            if resolved and isinstance(resolved[1], ast.ClassDef) \
+                    and project.is_dataclass(resolved[1]):
+                out[name] = resolved
+        return out
+    for mod in project:
+        for name, node in project.local_symbols(mod).items():
+            if isinstance(node, ast.ClassDef) and project.is_dataclass(node):
+                out[name] = (mod, node)
+    return out
+
+
+def _pack_pairs(project: Project):
+    """(module, pack_fn, unpack_fn) for every _pack_X/_unpack_X pair."""
+    for mod in project:
+        fns = {n.name: n for n in mod.tree.body
+               if isinstance(n, ast.FunctionDef)}
+        for name, fn in fns.items():
+            stem = None
+            if name.startswith("_pack"):
+                stem = name[len("_pack"):]
+                unpack = fns.get("_unpack" + stem)
+            elif name.startswith("pack"):
+                stem = name[len("pack"):]
+                unpack = fns.get("unpack" + stem)
+            else:
+                continue
+            if unpack is not None:
+                yield mod, fn, unpack
+
+
+def _keys_written(fn: ast.FunctionDef) -> Dict[str, int]:
+    """String keys of dict literals + string subscript stores, with lines."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Dict):
+            for k in node.keys:
+                s = const_str(k) if k is not None else None
+                if s is not None:
+                    out.setdefault(s, k.lineno)
+        elif isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Store):
+            s = const_str(node.slice)
+            if s is not None:
+                out.setdefault(s, node.lineno)
+    return out
+
+
+def _keys_read(fn: ast.FunctionDef) -> Dict[str, int]:
+    """Keys read via subscript load, ``.get(...)``, or ``.pop(...)``."""
+    out: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load):
+            s = const_str(node.slice)
+            if s is not None:
+                out.setdefault(s, node.lineno)
+        elif isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("get", "pop") and node.args:
+            s = const_str(node.args[0])
+            if s is not None:
+                out.setdefault(s, node.lineno)
+    return out
+
+
+def _attrs_read_on_param(fn: ast.FunctionDef) -> set:
+    """Attribute names read off the function's first parameter."""
+    if not fn.args.args:
+        return set()
+    pname = fn.args.args[0].arg
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == pname:
+            out.add(node.attr)
+    return out
+
+
+def _constructed_dataclass(fn: ast.FunctionDef, mod: Module,
+                           project: Project):
+    """The project dataclass the unpack function instantiates, if any."""
+    local = project.local_symbols(mod)
+    imports = project.import_map(mod)
+    # unpack helpers often defer the protocol import to the function body
+    for node in ast.walk(fn):
+        if isinstance(node, ast.ImportFrom):
+            src = project._import_source(mod, node)
+            if src is not None:
+                for a in node.names:
+                    imports[a.asname or a.name] = (src, a.name)
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call) or \
+                not isinstance(node.func, ast.Name):
+            continue
+        name = node.func.id
+        target = local.get(name)
+        if isinstance(target, ast.ClassDef) and project.is_dataclass(target):
+            return name, target
+        src = imports.get(name)
+        if src is not None and src[1] is not None:
+            resolved = project.resolve_export(src[0], src[1])
+            if resolved and isinstance(resolved[1], ast.ClassDef) and \
+                    project.is_dataclass(resolved[1]):
+                return name, resolved[1]
+    return None
+
+
+def _wire_name_map(mod: Module, wire_types, project: Project):
+    """Local names in ``mod`` that refer to a wire message class."""
+    out: Dict[str, ast.ClassDef] = {}
+    for name, node in project.local_symbols(mod).items():
+        if name in wire_types and isinstance(node, ast.ClassDef):
+            out[name] = node
+    imports = project.import_map(mod)
+    # function-body imports too (unpack helpers import lazily)
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ImportFrom):
+            src = project._import_source(mod, node)
+            if src is None:
+                continue
+            for a in node.names:
+                imports.setdefault(a.asname or a.name, (src, a.name))
+    for name, (src, sym) in imports.items():
+        if sym is None or name in out:
+            continue
+        if name in wire_types:
+            resolved = project.resolve_export(src, sym)
+            if resolved and isinstance(resolved[1], ast.ClassDef):
+                out[name] = resolved[1]
+    return out
+
+
+def run(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    wire_types = _wire_types(project)
+
+    for mod, pack_fn, unpack_fn in _pack_pairs(project):
+        if mod.name.startswith("repro.analysis"):
+            continue
+        written = _keys_written(pack_fn)
+        read = _keys_read(unpack_fn)
+        ctor = _constructed_dataclass(unpack_fn, mod, project)
+        if ctor is not None:
+            cname, cls = ctor
+            attrs = _attrs_read_on_param(pack_fn)
+            for fname, _ in Project.dataclass_fields(cls):
+                if fname not in attrs:
+                    findings.append(Finding(
+                        "WC001", str(mod.path), pack_fn.lineno,
+                        f"{cname}.{fname}",
+                        f"{pack_fn.name} never reads field {fname!r} of "
+                        f"{cname} — the field is dropped on serialize",
+                        f"serialize {fname} in {pack_fn.name} or baseline "
+                        "with a justification if it must not travel"))
+        for key, line in written.items():
+            if key not in read:
+                findings.append(Finding(
+                    "WC002", str(mod.path), line, f"{pack_fn.name}:{key}",
+                    f"key {key!r} written by {pack_fn.name} is never read "
+                    f"by {unpack_fn.name}",
+                    f"read {key!r} in {unpack_fn.name} or stop writing it"))
+        for key, line in read.items():
+            if key not in written:
+                findings.append(Finding(
+                    "WC004", str(mod.path), line, f"{unpack_fn.name}:{key}",
+                    f"key {key!r} read by {unpack_fn.name} is never written "
+                    f"by {pack_fn.name}",
+                    f"write {key!r} in {pack_fn.name} (or the read is dead "
+                    "compatibility code — baseline it with the format)"))
+
+    # WC003: constructor call sites must bind every non-defaulted field
+    for mod in project:
+        if mod.name.startswith("repro.analysis"):
+            continue
+        name_map = _wire_name_map(mod, wire_types, project)
+        if not name_map:
+            continue
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Name):
+                continue
+            cls = name_map.get(node.func.id)
+            if cls is None:
+                continue
+            if any(isinstance(a, ast.Starred) for a in node.args) or \
+                    any(k.arg is None for k in node.keywords):
+                continue                      # *args/**kwargs: not checkable
+            fields = Project.dataclass_fields(cls)
+            bound = {f for f, _ in fields[:len(node.args)]}
+            bound |= {k.arg for k in node.keywords}
+            missing = [f for f, has_default in fields
+                       if not has_default and f not in bound]
+            if missing:
+                findings.append(Finding(
+                    "WC003", str(mod.path), node.lineno,
+                    f"{mod.name}:{node.func.id}",
+                    f"{node.func.id}(...) call omits non-defaulted "
+                    f"field(s) {missing}",
+                    "pass every required field explicitly — implicit "
+                    "defaults on wire messages hide protocol drift"))
+    return findings
+
+
+PASS = Pass(name="wire", rules=RULES, run=run)

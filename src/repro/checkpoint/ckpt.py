@@ -242,6 +242,8 @@ def save_fed_state(path: str, trainer, service=None) -> int:
             "download_params": srv.ledger.download_params,
             "upload_bytes": srv.ledger.upload_bytes,
             "download_bytes": srv.ledger.download_bytes,
+            "upload_dense_bytes": srv.ledger.upload_dense_bytes,
+            "download_dense_bytes": srv.ledger.download_dense_bytes,
             "upload_by_codec": dict(srv.ledger.upload_by_codec),
             "download_by_codec": dict(srv.ledger.download_by_codec),
         },
@@ -376,19 +378,24 @@ def load_fed_state(path: str, trainer, service=None) -> int:
         # format 1 never persisted adaptive-k or RNG state — resumes from a
         # legacy checkpoint restart the schedule at k_max (the bug this
         # format exists to fix)
-    # the ledger is restored WHOLESALE: clear the breakdowns first so a
-    # non-fresh trainer can't keep stale per-codec entries
-    srv.ledger.upload_by_codec = {}
-    srv.ledger.download_by_codec = {}
-    for k, v in state["ledger"].items():
-        if k == "upload_by_codec":
-            srv.ledger.upload_by_codec = {str(t): int(b)
-                                          for t, b in v.items()}
-        elif k == "download_by_codec":
-            srv.ledger.download_by_codec = {str(t): int(b)
-                                            for t, b in v.items()}
-        else:
-            setattr(srv.ledger, k, int(v))
+    # the ledger is restored key-by-key (not a setattr loop over whatever
+    # the file holds): every key save_fed_state writes is read back here,
+    # which is exactly what the CP001 analyzer rule pins. Missing keys keep
+    # the dataclass default of 0 — a pre-dense-mirror file resumes with the
+    # compression-ratio numerators restarted, never a crash.
+    led = state["ledger"]
+    srv.ledger.upload_params = int(led.get("upload_params", 0))
+    srv.ledger.download_params = int(led.get("download_params", 0))
+    srv.ledger.upload_bytes = int(led.get("upload_bytes", 0))
+    srv.ledger.download_bytes = int(led.get("download_bytes", 0))
+    srv.ledger.upload_dense_bytes = int(led.get("upload_dense_bytes", 0))
+    srv.ledger.download_dense_bytes = int(led.get("download_dense_bytes", 0))
+    srv.ledger.upload_by_codec = {
+        str(t): int(b)
+        for t, b in (led.get("upload_by_codec") or {}).items()}
+    srv.ledger.download_by_codec = {
+        str(t): int(b)
+        for t, b in (led.get("download_by_codec") or {}).items()}
     # pre-PR5 checkpoints carry no per-codec breakdown: park the restored
     # total under a legacy key so the invariant sum(upload_by_codec) ==
     # upload_bytes keeps holding as new rounds add their own tags

@@ -8,8 +8,8 @@ code path as the full dry-run configs.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 import jax.numpy as jnp
 

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.codec import (CodecPipeline, CodecSpec, GolombPositions,
                               Packet, Quantize, RawPositions, TopKSparsify,
-                              build_pipeline, decode_packet, int8_pair)
+                              decode_packet, int8_pair)
 from repro.core.sparsify import (AdaptiveSparsifier, SparsifyConfig,
                                  ab_mask_from_spec, keep_count)
 

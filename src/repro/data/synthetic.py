@@ -22,7 +22,7 @@ rewired ones through LoRA — mirroring fine-tuning dynamics.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

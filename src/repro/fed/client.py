@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,7 @@ EcoLoRA mapping replaces it with the paper's protocol, TPU-natively:
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

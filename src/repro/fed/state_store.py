@@ -18,7 +18,7 @@ parity tests can pin the two bitwise-identical.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict
 
 import numpy as np
 

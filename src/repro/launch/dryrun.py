@@ -27,7 +27,6 @@ from repro.launch import hlo as hlo_mod
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_step, step_arguments
-from repro.models import model as M
 
 from jax.sharding import PartitionSpec as P
 

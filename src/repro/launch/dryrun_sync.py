@@ -18,7 +18,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.fed.cluster_sync import (allreduce_sync, ecolora_segment_sync,
                                     wire_bytes_per_step)
-from repro.launch import hlo as hlo_mod
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 

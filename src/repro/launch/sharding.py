@@ -15,7 +15,7 @@ share one implementation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import numpy as np

@@ -11,7 +11,6 @@ from ShapeDtypeStructs without touching real memory.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional
 
 import jax

@@ -13,7 +13,7 @@ caches (stacked over the n_apps shared-block invocations).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

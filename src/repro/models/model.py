@@ -12,7 +12,7 @@ Public surface:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,6 @@ from repro.models import hybrid as hyb
 from repro.models import mamba2 as m2
 from repro.models import transformer as trf
 from repro.models.layers import mlp, rms_norm
-from repro.models.lora import init_lora_pair
 
 Params = Dict[str, Any]
 

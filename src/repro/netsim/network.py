@@ -15,7 +15,7 @@ from measured jit step walltimes (fedsim) or a supplied FLOPs/s model.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 

@@ -1,0 +1,13 @@
+"""CP001 violation: a saved key is never restored."""
+
+
+class Thing:
+    def __init__(self):
+        self.x = 0
+        self.y = 0
+
+    def state(self):
+        return {"x": int(self.x), "y": int(self.y)}
+
+    def load_state(self, st):
+        self.x = int(st["x"])      # 'y' silently resets on resume

@@ -1,0 +1,14 @@
+"""CP001 clean twin: every saved key round-trips."""
+
+
+class Thing:
+    def __init__(self):
+        self.x = 0
+        self.y = 0
+
+    def state(self):
+        return {"x": int(self.x), "y": int(self.y)}
+
+    def load_state(self, st):
+        self.x = int(st["x"])
+        self.y = int(st["y"])

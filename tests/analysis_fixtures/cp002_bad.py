@@ -1,0 +1,13 @@
+"""CP002 violation: hard read of a key the save path never writes."""
+
+
+class Thing:
+    def __init__(self):
+        self.x = 0
+
+    def state(self):
+        return {"x": int(self.x)}
+
+    def load_state(self, st):
+        self.x = int(st["x"])
+        self.z = int(st["z"])      # KeyError on every fresh file

@@ -1,0 +1,13 @@
+"""CP002 clean twin: the optional key is presence-guarded with .get."""
+
+
+class Thing:
+    def __init__(self):
+        self.x = 0
+
+    def state(self):
+        return {"x": int(self.x)}
+
+    def load_state(self, st):
+        self.x = int(st["x"])
+        self.z = int(st.get("z", 0))

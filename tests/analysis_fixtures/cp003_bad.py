@@ -1,0 +1,11 @@
+"""CP003 violation: a format gate cites a format no save path writes."""
+
+
+def save_thing(path, thing):
+    return {"format": 2, "x": int(thing.x)}
+
+
+def load_thing(state, thing):
+    fmt = int(state.get("format", 1))
+    if fmt >= 7:                   # format 7 does not exist
+        thing.x = int(state["x"])

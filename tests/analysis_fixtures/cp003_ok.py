@@ -1,0 +1,11 @@
+"""CP003 clean twin: the gate cites a written format number."""
+
+
+def save_thing(path, thing):
+    return {"format": 2, "x": int(thing.x)}
+
+
+def load_thing(state, thing):
+    fmt = int(state.get("format", 1))
+    if fmt >= 2:
+        thing.x = int(state["x"])

@@ -1,0 +1,6 @@
+"""DT001 violation: order-sensitive iteration over a set."""
+
+
+def doubled(ids):
+    seen = set(ids)
+    return [i * 2 for i in seen]   # order varies across runs

@@ -1,0 +1,6 @@
+"""DT001 clean twin: sorted() pins the order."""
+
+
+def doubled(ids):
+    seen = set(ids)
+    return [i * 2 for i in sorted(seen)]

@@ -1,0 +1,7 @@
+"""DT002 violation: wall-clock read in billed state."""
+import time
+
+
+def bill_round(ledger):
+    ledger["t"] = time.perf_counter()
+    return ledger

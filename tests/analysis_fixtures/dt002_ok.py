@@ -1,0 +1,6 @@
+"""DT002 clean twin: the simulated event clock is threaded in."""
+
+
+def bill_round(ledger, sim_clock_s):
+    ledger["t"] = float(sim_clock_s)
+    return ledger

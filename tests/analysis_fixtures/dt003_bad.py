@@ -1,0 +1,6 @@
+"""DT003 violation: global unseeded randomness."""
+import random
+
+
+def pick(xs):
+    return random.choice(xs)

@@ -1,0 +1,7 @@
+"""DT003 clean twin: an explicit Generator seeded from the run config."""
+import numpy as np
+
+
+def pick(xs, seed):
+    rng = np.random.default_rng(seed)
+    return xs[int(rng.integers(len(xs)))]

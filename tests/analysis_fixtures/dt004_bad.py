@@ -1,0 +1,5 @@
+"""DT004 violation: float accumulation in dict insertion order."""
+
+
+def total_cost(costs):
+    return sum(costs.values())

@@ -1,0 +1,5 @@
+"""DT004 clean twin: sorted items pin the accumulation order."""
+
+
+def total_cost(costs):
+    return sum(v for _, v in sorted(costs.items()))

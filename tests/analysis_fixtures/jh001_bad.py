@@ -1,0 +1,13 @@
+"""JH001 violations: host syncs inside a jitted function."""
+import functools
+
+import jax
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def f(x, flag):
+    y = x * 2
+    if y.sum() > 0:                # Python branch on a traced value
+        return float(y.sum())      # float() concretises the tracer
+    return np.asarray(y)           # numpy pulls the array to host

@@ -1,0 +1,13 @@
+"""JH001 clean twin: shape-based statics, device-side math only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def f(x, flag):
+    n = x.shape[0]                 # shapes are static: branching is fine
+    if flag and n > 1:
+        return x * 2
+    return jnp.where(x > 0, x, jnp.sum(x))

@@ -1,0 +1,25 @@
+"""JH002 violations: retrace hazards."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def g(x, opts=()):
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("missing",))
+def h(x):                          # 'missing' is not a parameter
+    return x
+
+
+def caller(x):
+    return g(x, opts=[1, 2])       # list literal: unhashable static
+
+
+def build_all(fns, x):
+    outs = []
+    for fn in fns:
+        outs.append(jax.jit(fn)(x))    # jit built inside the loop
+    return outs

@@ -1,0 +1,18 @@
+"""JH002 clean twin: hashable statics, jit hoisted out of loops."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def g(x, opts=()):
+    return x
+
+
+def caller(x):
+    return g(x, opts=(1, 2))
+
+
+def build_all(fns, x):
+    jitted = [jax.jit(fn) for fn in fns]
+    return [fn(x) for fn in jitted]

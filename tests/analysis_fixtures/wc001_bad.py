@@ -1,0 +1,16 @@
+"""WC001 violation: the pack path drops a message field."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+    b: int
+
+
+def _pack_msg(m):
+    return {"a": int(m.a)}        # m.b never serialized
+
+
+def _unpack_msg(d):
+    return Msg(int(d["a"]), 0)

@@ -1,0 +1,16 @@
+"""WC001 clean twin: every field travels."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+    b: int
+
+
+def _pack_msg(m):
+    return {"a": int(m.a), "b": int(m.b)}
+
+
+def _unpack_msg(d):
+    return Msg(int(d["a"]), int(d["b"]))

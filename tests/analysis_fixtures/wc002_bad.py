@@ -1,0 +1,15 @@
+"""WC002 violation: pack writes a key unpack never reads."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+
+
+def _pack_msg(m):
+    return {"a": int(m.a), "extra": 1}     # 'extra' is dead on arrival
+
+
+def _unpack_msg(d):
+    return Msg(int(d["a"]))

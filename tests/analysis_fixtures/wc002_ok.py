@@ -1,0 +1,15 @@
+"""WC002 clean twin: key sets agree."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+
+
+def _pack_msg(m):
+    return {"a": int(m.a)}
+
+
+def _unpack_msg(d):
+    return Msg(int(d["a"]))

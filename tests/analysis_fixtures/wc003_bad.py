@@ -1,0 +1,13 @@
+"""WC003 violation: constructor call omits a non-defaulted field."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+    b: int
+    c: int = 0
+
+
+def make():
+    return Msg(1)                  # b never passed

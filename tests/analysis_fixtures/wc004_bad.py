@@ -1,0 +1,16 @@
+"""WC004 violation: unpack reads a key pack never writes."""
+from dataclasses import dataclass
+
+
+@dataclass
+class Msg:
+    a: int
+
+
+def _pack_msg(m):
+    return {"a": int(m.a)}
+
+
+def _unpack_msg(d):
+    ghost = d["ghost"]             # never written by _pack_msg
+    return Msg(int(d["a"]) + int(ghost))

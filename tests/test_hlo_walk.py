@@ -1,5 +1,5 @@
 """Trip-count-aware HLO walker: parsing units (compile-free)."""
-from repro.launch.hlo_walk import _group_size, _wire_factor, parse, trip_count, walk
+from repro.launch.hlo_walk import _group_size, _wire_factor, walk
 
 HLO = """
 HloModule test

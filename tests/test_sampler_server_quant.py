@@ -116,7 +116,6 @@ def test_server_endpoint_round():
     the message API aggregates uploads AND bills the per-client broadcast
     catch-up the facade used to skip."""
     import jax.numpy as jnp
-    from repro.core.compression import Compressor
     from repro.core.segments import segment_bounds, segment_id, tree_spec
     from repro.fed.endpoints import ServerEndpoint
     from repro.fed.protocol import UploadMsg, WireProtocol

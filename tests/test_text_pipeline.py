@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.data.loader import TextDataset, epoch_batches
-from repro.data.tokenizer import BOS, EOS, PAD, SEP, ByteTokenizer
+from repro.data.tokenizer import PAD, ByteTokenizer
 
 
 def test_byte_roundtrip():
