@@ -1,0 +1,188 @@
+"""Wire-transport loopback benchmark (DESIGN.md §13).
+
+What the socket layer costs on top of the in-memory transport, measured on
+a Unix-domain-socket loopback with the real framed protocol (HELLO auth,
+ROUND/DOWNLOAD/UPLOAD/ACK, CRC'd frames):
+
+  wire_loopback/frame_bytes_upload  one encoded UPLOAD frame: 14-byte
+                                    header + CRC + the exact ckpt payload
+  wire_loopback/frames_per_s        framed UPLOAD frames pushed through a
+                                    UDS pair and re-decoded per second
+  wire_loopback/round_s_memory      per-round wall time, InMemoryTransport
+                                    (runs first, so it also pays the one-off
+                                    jit compile — the ratio understates the
+                                    socket overhead)
+  wire_loopback/round_s_wire        per-round wall time, SocketTransport +
+                                    CohortDriver over the UDS loopback
+  wire_loopback/parity_bitwise      1 iff the wire run's CommLedger and
+                                    global_vec are bitwise the memory run's
+
+--quick keeps the protocol identical and only shrinks rounds/cohort.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import MODEL, emit, get_config, snapshot
+
+from repro.core.codec import Packet, Section  # noqa: E402
+from repro.core.sparsify import SparsifyConfig  # noqa: E402
+from repro.data.synthetic import TaskConfig  # noqa: E402
+from repro.fed.protocol import UploadMsg  # noqa: E402
+from repro.fed.service import FederationService  # noqa: E402
+from repro.fed.strategies import EcoLoRAConfig  # noqa: E402
+from repro.fed.trainer import FedConfig, FederatedTrainer  # noqa: E402
+from repro.fed.wire import (CohortDriver, FrameDecoder, SocketTransport,  # noqa: E402
+                            WireConfig, encode_message)
+
+
+def _upload_frame() -> bytes:
+    """A representative framed UPLOAD (same shape the unit tests pin)."""
+    rng = np.random.default_rng(7)
+    pkt = Packet(
+        codec="topk_q8", stack=["sparsify", "quant"],
+        sections={"idx": Section(rng.integers(0, 255, 64, dtype=np.uint8),
+                                 64 * 8),
+                  "val": Section(rng.standard_normal(64).astype(np.float32),
+                                 64 * 32)},
+        count=64, dense_size=256, slice_=(0, 256),
+        k_used={"sparsify": 0.25}, round_t=0)
+    return encode_message(UploadMsg(0, 0, pkt, num_samples=2,
+                                    local_loss=0.5))
+
+
+def frames_per_second(n_frames: int) -> float:
+    """Push framed uploads through a connected UDS pair; decode on a reader
+    thread; report end-to-end frames/s (framing + socket + CRC + decode)."""
+    frame = _upload_frame()
+    a, b = socket.socketpair(socket.AF_UNIX, socket.SOCK_STREAM)
+    got = []
+
+    def reader():
+        dec = FrameDecoder()
+        n = 0
+        while n < n_frames:
+            chunk = b.recv(65536)
+            if not chunk:
+                break
+            dec.feed(chunk)
+            n += sum(1 for _ in dec.messages())
+        got.append(n)
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    for _ in range(n_frames):
+        a.sendall(frame)
+    t.join(timeout=60)
+    dt = time.perf_counter() - t0
+    a.close()
+    b.close()
+    assert got and got[0] == n_frames, "reader lost frames"
+    return n_frames / dt
+
+
+def _fed(quick: bool) -> FedConfig:
+    return FedConfig(
+        method="fedit", n_clients=8, clients_per_round=3,
+        rounds=4 if quick else 12, local_steps=1, local_batch=2, lr=3e-3,
+        eco=EcoLoRAConfig(n_segments=2, sparsify=SparsifyConfig()),
+        pretrain_steps=2)
+
+
+def _run_memory(cfg, fed, tc):
+    tr = FederatedTrainer(cfg, fed, tc)
+    t0 = time.perf_counter()
+    FederationService(tr).run()
+    return tr, time.perf_counter() - t0
+
+
+def _run_wire(cfg, fed, tc, sock_dir: str):
+    wcfg = WireConfig(address=os.path.join(sock_dir, "bench.sock"),
+                      auth_secret="bench", poll_s=0.005, ack_timeout_s=1.0,
+                      round_timeout_s=600.0, connect_retries=1200,
+                      retry_backoff_s=0.05, backoff_max_s=0.25)
+    tp = SocketTransport(wcfg)
+    srv_tr = FederatedTrainer(cfg, fed, tc, transport=tp)
+    svc = FederationService(srv_tr)
+    cl_tr = FederatedTrainer(cfg, fed, tc)   # hosts the cohort's clients
+    tp.start()
+    driver = CohortDriver(cl_tr.clients, range(fed.n_clients), wcfg)
+    driver.start()
+    t0 = time.perf_counter()
+    try:
+        svc.run()
+        tp.broadcast_bye()
+        driver.finish(timeout=600)
+    finally:
+        driver.stop()
+        tp.close()
+    return srv_tr, time.perf_counter() - t0
+
+
+def _bitwise(ref: FederatedTrainer, wire: FederatedTrainer) -> bool:
+    la, lb = ref.server.ledger, wire.server.ledger
+    return ((la.upload_bytes, la.download_bytes, la.upload_params,
+             la.download_params) == (lb.upload_bytes, lb.download_bytes,
+                                     lb.upload_params, lb.download_params)
+            and np.array_equal(ref.server.global_vec,
+                               wire.server.global_vec))
+
+
+def main(quick: bool = False) -> dict:
+    frame = _upload_frame()
+    emit("wire_loopback/frame_bytes_upload", len(frame))
+
+    fps = frames_per_second(200 if quick else 2000)
+    emit("wire_loopback/frames_per_s", round(fps, 1))
+
+    cfg = get_config(MODEL).reduced()
+    tc = TaskConfig(vocab_size=128, seq_len=16, n_samples=256, seed=0)
+    fed = _fed(quick)
+
+    ref, mem_s = _run_memory(cfg, fed, tc)
+    round_s_memory = mem_s / fed.rounds
+    emit("wire_loopback/round_s_memory", round(round_s_memory, 3),
+         "includes one-off jit compile")
+
+    with tempfile.TemporaryDirectory() as d:
+        wire, wire_s = _run_wire(cfg, fed, tc, d)
+    round_s_wire = wire_s / fed.rounds
+    emit("wire_loopback/round_s_wire", round(round_s_wire, 3))
+
+    parity = _bitwise(ref, wire)
+    emit("wire_loopback/parity_bitwise", int(parity))
+    assert parity, "wire loopback diverged from the in-memory transport"
+
+    out = {
+        "frame_bytes_upload": len(frame),
+        "frames_per_s": round(fps, 1),
+        "round_s_memory": round(round_s_memory, 3),
+        "round_s_wire": round(round_s_wire, 3),
+        "parity_bitwise": int(parity),
+        "rounds": fed.rounds,
+    }
+    snapshot("wire_loopback", {
+        "frame_bytes_upload": (out["frame_bytes_upload"], "bytes"),
+        "frames_per_s": (out["frames_per_s"], "rate"),
+        "round_s_memory": (out["round_s_memory"], "time"),
+        "round_s_wire": (out["round_s_wire"], "time"),
+        "parity_bitwise": (out["parity_bitwise"], "info"),
+        "rounds": (out["rounds"], "info"),
+    })
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI profile: fewer frames/rounds, same protocol")
+    args = ap.parse_args()
+    main(quick=args.quick)

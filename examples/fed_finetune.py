@@ -13,6 +13,17 @@ decoder with EcoLoRA for a few hundred aggregate optimizer steps.
     # rounds — the event-driven lifecycle of DESIGN.md §10:
     PYTHONPATH=src python examples/fed_finetune.py \
         --scenario 1/5 --service-min-uploads 4 --service-deadline 90 --churn 5
+    # the wire deployment (DESIGN.md §13): daemon + cohort over real sockets.
+    # One process (loopback, the default role) or two; the daemon checkpoints
+    # every lifecycle transition to --out and a supervisor restarts it on
+    # crashes, resuming from the checkpoint:
+    PYTHONPATH=src python examples/fed_finetune.py --transport wire \
+        --auth-token fleet --wire-listen /tmp/fed.sock
+    # split roles (run the client in a second terminal, same flags):
+    PYTHONPATH=src python examples/fed_finetune.py --transport wire \
+        --wire-role daemon --wire-listen 127.0.0.1:7733 --auth-token fleet
+    PYTHONPATH=src python examples/fed_finetune.py --transport wire \
+        --wire-role client --wire-listen 127.0.0.1:7733 --auth-token fleet
 
 Prints per-round eval + the final communication ledger (plus simulated
 wall-clock when a network scenario is selected), and writes a
@@ -36,6 +47,8 @@ from repro.fed.service import AdapterPublisher, FederationService, \
 from repro.fed.strategies import EcoLoRAConfig
 from repro.fed.trainer import FedConfig, FederatedTrainer
 from repro.fed.transport import SimTransport
+from repro.fed.wire import CohortDriver, SocketTransport, Supervisor, \
+    WireConfig
 from repro.netsim.network import SCENARIOS
 
 # ~126M params: 12L x d768 x ff3072, vocab 8192 (runs on CPU)
@@ -55,6 +68,80 @@ def make_transport(ap, args):
         SCENARIOS[args.scenario], dropout=args.dropout,
         round_mode="buffered_async" if args.async_m else "sync",
         min_uploads=args.async_m, seed=0)
+
+
+def wire_config(args) -> WireConfig:
+    addr = args.wire_listen
+    if ":" in addr:
+        host, port = addr.rsplit(":", 1)
+        address = (host, int(port))
+    else:                               # a Unix-domain socket path
+        d = os.path.dirname(addr)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        address = addr
+    return WireConfig(address=address, auth_secret=args.auth_token,
+                      poll_s=0.01, ack_timeout_s=2.0, round_timeout_s=3600.0,
+                      connect_retries=3000, retry_backoff_s=0.1,
+                      backoff_max_s=1.0)
+
+
+def run_wire(args, fed, tc):
+    """--transport wire: the DESIGN.md §13 deployment. The daemon owns all
+    server truth behind a framed socket and checkpoints every lifecycle
+    transition to --out; the supervisor restarts it on crashes and resumes
+    from the checkpoint. A cohort process hosts ALL client-side state. One
+    cohort hosting every client id stays bitwise with the in-memory path
+    (one shared rng stream, one batched round); sharding the ids over
+    several cohort processes is functionally fine but not bitwise."""
+    wcfg = wire_config(args)
+    if args.wire_role == "client":
+        tr = FederatedTrainer(MODEL_100M, fed, tc)
+        driver = CohortDriver(tr.clients, range(fed.n_clients), wcfg)
+        print(f"cohort: hosting clients 0..{fed.n_clients - 1} against "
+              f"{args.wire_listen}")
+        driver.start()
+        driver.finish(timeout=24 * 3600.0)   # exits on the daemon's BYE
+        print(f"cohort done: trained {driver.rounds_trained} rounds")
+        return
+
+    def build():
+        tp = SocketTransport(wcfg)
+        tr = FederatedTrainer(MODEL_100M, fed, tc, transport=tp)
+        return tr, FederationService(tr)
+
+    d = os.path.dirname(args.out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    if not args.resume and os.path.exists(args.out):
+        os.remove(args.out)             # fresh run: don't resume stale state
+    driver = None
+    if args.wire_role == "loopback":    # cohort thread in this process
+        cl_tr = FederatedTrainer(MODEL_100M, fed, tc)
+        driver = CohortDriver(cl_tr.clients, range(fed.n_clients), wcfg)
+        driver.start()
+    print(f"daemon: serving {args.rounds} rounds on {args.wire_listen} "
+          f"(auth {'on' if args.auth_token else 'OFF'}), "
+          f"checkpointing to {args.out}")
+    sup = Supervisor(build, args.out, rounds=args.rounds)
+    tr, _svc = sup.run()
+    try:
+        if driver is not None:
+            driver.finish(timeout=3600.0)
+    finally:
+        if driver is not None:
+            driver.stop()
+        tr.transport.close()
+    if sup.crashes:
+        print(f"supervisor recovered from {len(sup.crashes)} crash(es)")
+    for lg in tr.logs:
+        print(f"round {lg.round_t:3d} | loss {lg.global_loss:.4f} | "
+              f"acc {lg.metric:.3f} | up {lg.upload_bytes/1e6:.2f} MB | "
+              f"down {lg.download_bytes/1e6:.2f} MB")
+    s = tr.summary()
+    print("\nledger:", {k: round(v, 3) if isinstance(v, float) else v
+                        for k, v in s.items()})
+    print(f"checkpoint: {args.out}")
 
 
 def main():
@@ -92,6 +179,27 @@ def main():
                     help="service mode: every EVERY rounds a brand-new "
                          "client joins (codec negotiated at admission) and "
                          "the eldest mid-run joiner leaves")
+    ap.add_argument("--transport", choices=("memory", "sim", "wire"),
+                    default=None,
+                    help="memory: instant in-process delivery (default); "
+                         "sim: the event-clock network simulator (implied "
+                         "by --scenario); wire: the real socket daemon of "
+                         "DESIGN.md §13")
+    ap.add_argument("--wire-role", choices=("loopback", "daemon", "client"),
+                    default="loopback",
+                    help="wire mode: loopback runs daemon + cohort in one "
+                         "process (bitwise with the in-memory path); daemon "
+                         "serves the socket and waits for an external "
+                         "cohort; client hosts all client ids against a "
+                         "running daemon (pass the SAME model/codec flags "
+                         "on both sides)")
+    ap.add_argument("--wire-listen", default="results/fed.sock",
+                    metavar="ADDR",
+                    help="wire mode: Unix socket path, or host:port for TCP")
+    ap.add_argument("--auth-token", default=None, metavar="SECRET",
+                    help="wire mode: shared HMAC secret; JOIN/HELLO frames "
+                         "with a missing or wrong token are rejected before "
+                         "they touch the service (default: auth off)")
     ap.add_argument("--downlink-tiers", type=int, default=1, metavar="N",
                     help="split clients round-robin over N capability "
                          "groups (full caps / no ans / no ans+int8) so the "
@@ -109,6 +217,18 @@ def main():
     if service_mode and args.async_m:
         ap.error("--async-m is the legacy spelling of "
                  "--service-min-uploads; pick one")
+    transport_kind = args.transport
+    if transport_kind is None:
+        transport_kind = "sim" if args.scenario is not None else "memory"
+    if transport_kind == "sim" and args.scenario is None:
+        ap.error("--transport sim needs a link model: pass --scenario")
+    if transport_kind == "memory" and args.scenario is not None:
+        ap.error("--transport memory conflicts with --scenario")
+    if transport_kind == "wire" and (
+            args.scenario is not None or args.dropout or args.async_m
+            or service_mode or args.downlink_tiers > 1):
+        ap.error("--transport wire is the real-socket deployment: the "
+                 "simulator and service-mode flags apply to sim runs")
 
     if args.downlink_tiers < 1:
         ap.error("--downlink-tiers must be >= 1")
@@ -147,6 +267,9 @@ def main():
     # total optimizer steps = rounds x clients/round x local steps
     print(f"total federated optimizer steps: "
           f"{args.rounds * fed.clients_per_round * fed.local_steps}")
+    if transport_kind == "wire":
+        run_wire(args, fed, tc)
+        return
     tr = FederatedTrainer(MODEL_100M, fed, tc,
                           transport=make_transport(ap, args))
     svc = None

@@ -3,7 +3,6 @@ simulated client — they share shapes, so fedsim pays one compile)."""
 from __future__ import annotations
 
 import functools
-import time
 from typing import Any, Callable, Dict
 
 import jax
@@ -103,15 +102,21 @@ def stack_batches(task, idxs: np.ndarray, steps: int, batch: int,
 
 
 class TimedCall:
-    """Measures walltime of the jitted local step (feeds the netsim)."""
+    """Measures walltime of the jitted local step (feeds the netsim).
 
-    def __init__(self, fn):
+    Wall time comes from the injectable ``Clock`` (fed/wire/clock.py) so
+    deterministic runs can pin it; ``FedConfig.compute_model_s`` overrides
+    the measurement entirely in parity-pinned runs."""
+
+    def __init__(self, fn, clock=None):
+        from repro.fed.wire.clock import WallClock
         self.fn = fn
+        self.clock = clock if clock is not None else WallClock()
         self.last_s = 0.0
 
     def __call__(self, *a, **kw):
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         out = self.fn(*a, **kw)
         jax.block_until_ready(out)
-        self.last_s = time.perf_counter() - t0
+        self.last_s = self.clock.now() - t0
         return out

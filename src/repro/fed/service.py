@@ -29,7 +29,6 @@ phase boundary (tests/test_resume_parity.py).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -38,6 +37,7 @@ import numpy as np
 from repro.fed.protocol import JoinAck, JoinMsg, LeaveMsg
 from repro.fed.sampler import assign_starved_segments
 from repro.fed.transport import RoundClosePolicy
+from repro.fed.wire.clock import Clock, WallClock
 
 
 @dataclass
@@ -181,7 +181,7 @@ class RoundLifecycle:
         led = srv.ledger
         self._led0 = [led.upload_bytes, led.download_bytes,
                       led.upload_params, led.download_params]
-        self._t_wall = time.perf_counter()
+        self._t_wall = self.svc.clock.now()
         tp.on_broadcast(srv.begin_round(t))
         for cid in participants:
             # sync doubles as the negotiation handshake: the client
@@ -192,7 +192,10 @@ class RoundLifecycle:
                                  capabilities=cl.capabilities_for(int(cid)),
                                  segment=overrides.get(int(cid)))
             tp.on_download(dl)
-            cl.apply_download(int(cid), dl)
+            if not tp.remote_clients:
+                # wire mode: the download travels the socket to a REAL
+                # client; the in-process runtime hosts nobody
+                cl.apply_download(int(cid), dl)
         self._participants = np.asarray(participants, np.int64)
         self.phase = self.COLLECTING
         return self._participants
@@ -203,7 +206,12 @@ class RoundLifecycle:
         tr = self.svc.tr
         srv, cl, tp = tr.server, tr.clients, tr.transport
         t = self.round_t
-        msgs, compute_s = cl.run_round(t, self._participants)
+        if tp.remote_clients:
+            # remote peers train on their side of the socket; the uploads
+            # surface through dispatch_uploads below
+            msgs, compute_s = [], []
+        else:
+            msgs, compute_s = cl.run_round(t, self._participants)
         self._compute_s = [float(c) for c in compute_s]
         for msg in tp.dispatch_uploads(t, msgs, compute_s,
                                        policy=self.svc.close_policy):
@@ -228,7 +236,7 @@ class RoundLifecycle:
         t = self.round_t
         compute_s = self._compute_s
         if self.svc.cfg.measured_overhead and self._t_wall is not None:
-            overhead_s = time.perf_counter() - self._t_wall - sum(compute_s)
+            overhead_s = self.svc.clock.now() - self._t_wall - sum(compute_s)
         else:
             overhead_s = 0.0            # deterministic service-mode clock
         tp.finish_round(t, max(overhead_s, 0.0))
@@ -236,6 +244,9 @@ class RoundLifecycle:
                 or tr._last_eval is None:
             gloss, metric = tr.evaluate(srv.global_vec)
             tr.observe_global_loss(gloss)
+            # remote-client transports forward the loss so the peer's
+            # compressor pools see the same adaptive-k signal (Eq. 4)
+            tp.notify_global_loss(gloss)
             tr._last_eval = (gloss, metric)
         else:
             gloss, metric = tr._last_eval
@@ -292,7 +303,7 @@ class RoundLifecycle:
         # walltime anchor does not survive a process boundary; a resumed
         # round's measured overhead restarts at load (service mode bills a
         # deterministic 0.0 anyway)
-        self._t_wall = time.perf_counter()
+        self._t_wall = self.svc.clock.now()
         if self.phase == self.COLLECTING and self._overrides:
             # remediation overrides were delivered during OPEN (they live
             # in ClientRuntime._seg_overrides until collect() consumes
@@ -316,10 +327,13 @@ class FederationService:
 
     def __init__(self, trainer, config: Optional[ServiceConfig] = None,
                  publisher: Optional[AdapterPublisher] = None,
-                 dynamic: bool = False):
+                 dynamic: bool = False, clock: Optional[Clock] = None):
         self.tr = trainer
         self.cfg = config or ServiceConfig()
         self.publisher = publisher
+        # every wall-time read below goes through this (tests inject
+        # ManualClock; WallClock is the single sanctioned perf_counter site)
+        self.clock = clock if clock is not None else WallClock()
         self.close_policy = self.cfg.close_policy()
         if self.close_policy is not None \
                 and trainer.policy.merges_into_base:
@@ -327,6 +341,12 @@ class FederationService:
                 "arrival-triggered round close (min_uploads/deadline_s) is "
                 "not supported for merge-into-base policies (flora): a "
                 "straggler's base model no longer exists next round")
+        if trainer.transport.remote_clients \
+                and trainer.policy.merges_into_base:
+            raise ValueError(
+                "remote-client transports (fed/wire SocketTransport) are "
+                "not supported for merge-into-base policies (flora): the "
+                "per-round base-model re-init cannot reach remote peers")
         self.membership = (Membership(trainer.fed.n_clients)
                            if dynamic else None)
         self.lc = RoundLifecycle(self)

@@ -59,11 +59,31 @@ class RoundClosePolicy:
         if self.deadline_s is not None and self.deadline_s <= 0:
             raise ValueError("deadline_s must be > 0")
 
+    # the ONE close predicate, shared by the event-clock transports below
+    # and the wall-clock SocketTransport (fed/wire): an upload is on time
+    # when it is among the first ``min_uploads`` arrivals AND lands at or
+    # before ``deadline_s`` (arrival exactly AT the deadline is on time;
+    # expiry is strictly past it)
+    def on_time(self, idx: int, elapsed: float) -> bool:
+        """Is arrival number ``idx`` (0-based, in arrival order) at round
+        time ``elapsed`` consumed this round?"""
+        return (self.min_uploads is None or idx < self.min_uploads) \
+            and (self.deadline_s is None or elapsed <= self.deadline_s)
+
+    def expired(self, elapsed: float) -> bool:
+        """Has the round deadline passed outright (close with whatever
+        arrived, even nothing)?"""
+        return self.deadline_s is not None and elapsed > self.deadline_s
+
 
 class Transport:
     """Delivery contract between ServerEndpoint and ClientRuntime."""
 
     round_mode = "sync"
+    # remote-client transports (fed/wire SocketTransport) deliver downloads
+    # to real peers and source uploads from the socket: the lifecycle skips
+    # the in-process ClientRuntime calls for them
+    remote_clients = False
 
     def __init__(self):
         self._late: List[UploadMsg] = []         # straggler buffer
@@ -103,6 +123,13 @@ class Transport:
 
     def finish_round(self, round_t: int, overhead_s: float = 0.0) -> None:
         """Close the round's timing entry (overhead = host-side CPU cost)."""
+        pass
+
+    def notify_global_loss(self, loss: float) -> None:
+        """The server observed a fresh global eval loss. In-process
+        transports ignore it (the trainer feeds both endpoints directly);
+        remote-client transports forward it so the remote compressor pools
+        see the same Eq. 4 adaptive-k signal."""
         pass
 
     # -- checkpointing (ckpt format 4) --------------------------------------
@@ -205,11 +232,7 @@ class SimTransport(Transport):
         else:
             arrived, late = [], []
             for idx, a in enumerate(arrivals):
-                on_time = (policy.min_uploads is None
-                           or idx < policy.min_uploads) \
-                    and (policy.deadline_s is None
-                         or a[0] <= policy.deadline_s)
-                (arrived if on_time else late).append(a)
+                (arrived if policy.on_time(idx, a[0]) else late).append(a)
         for total, m, t_down, c, t_up in arrived:
             self.events.append(MessageEvent(
                 "upload", m.client_id, round_t, m.packet.wire_bytes,

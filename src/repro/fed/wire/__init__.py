@@ -1,0 +1,35 @@
+"""Wire transport: sockets, auth, wall-clock deadlines, crash-recovery
+(DESIGN.md §13).
+
+The Protocol/Endpoint/Transport layering (§6) and the event-driven
+lifecycle (§10) are transport-agnostic; this package supplies the missing
+deployment half:
+
+  * ``framing``    — versioned binary frame codec (length-prefixed header +
+                     CRC32 + message type) for the §6 wire contract;
+  * ``clock``      — the injectable ``Clock`` behind every wall-time read
+                     (``WallClock`` is the single sanctioned source);
+  * ``auth``       — HMAC-token admission control on ``JoinMsg``/``HELLO``;
+  * ``transport``  — ``SocketTransport(Transport)`` over TCP/UDS;
+  * ``client``     — ``WireClient``/``CohortDriver``: the client side;
+  * ``daemon``     — ``WireDaemon``/``Supervisor``: the long-lived server
+                     process, checkpointing every lifecycle transition;
+  * ``faults``     — deterministic frame-level fault injection for tests.
+"""
+from repro.fed.wire.auth import make_token, verify_token
+from repro.fed.wire.clock import Clock, ManualClock, WallClock
+from repro.fed.wire.client import CohortDriver, WireClient
+from repro.fed.wire.daemon import Supervisor, WireDaemon
+from repro.fed.wire.faults import FaultPlan, InjectedCrash
+from repro.fed.wire.framing import FrameDecoder, FrameError, encode_message
+from repro.fed.wire.transport import SocketTransport, WireConfig
+
+__all__ = [
+    "Clock", "ManualClock", "WallClock",
+    "make_token", "verify_token",
+    "FrameDecoder", "FrameError", "encode_message",
+    "SocketTransport", "WireConfig",
+    "WireClient", "CohortDriver",
+    "WireDaemon", "Supervisor",
+    "FaultPlan", "InjectedCrash",
+]

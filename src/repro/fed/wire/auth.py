@@ -1,0 +1,63 @@
+"""HMAC-token client authentication (DESIGN.md §13).
+
+A client proves knowledge of the shared fleet secret by presenting
+``HMAC-SHA256(secret, "purpose:client_id")`` with its first frame (HELLO
+for a transport connection, JOIN for mid-run admission). Verification is
+constant-time (``hmac.compare_digest``); a bad token is rejected BEFORE the
+message reaches the federation service, so failed auth mutates no
+membership, billing cursor, or compressor state.
+
+The token binds the client id: a valid token for client 3 does not admit
+client 4. There is no replay protection — the threat model is accidental
+cross-fleet joins and fat-fingered configs, not an active network attacker
+(run the socket over a trusted link or tunnel for that).
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac
+from typing import Iterable, Optional
+
+
+def make_token(secret: Optional[str], client_id: int,
+               purpose: str = "join") -> Optional[str]:
+    """Hex HMAC-SHA256 over ``"purpose:client_id"`` (None when auth is
+    disabled — the verifier accepts anything then)."""
+    if secret is None:
+        return None
+    msg = f"{purpose}:{int(client_id)}".encode()
+    return hmac.new(secret.encode(), msg, hashlib.sha256).hexdigest()
+
+
+def verify_token(secret: Optional[str], client_id: int, token: Optional[str],
+                 purpose: str = "join") -> bool:
+    """True when ``token`` authenticates ``client_id``. ``secret=None``
+    disables auth (every token, including none, passes)."""
+    if secret is None:
+        return True
+    if token is None:
+        return False
+    return hmac.compare_digest(make_token(secret, client_id, purpose),
+                               str(token))
+
+
+def make_hello_token(secret: Optional[str],
+                     client_ids: Iterable[int]) -> Optional[str]:
+    """One token authenticating a whole connection's id set: HMAC over the
+    sorted ids, so the cohort driver presents a single credential per
+    socket regardless of how many simulated clients it hosts."""
+    if secret is None:
+        return None
+    ids = ",".join(str(int(c)) for c in sorted(int(i) for i in client_ids))
+    msg = f"hello:{ids}".encode()
+    return hmac.new(secret.encode(), msg, hashlib.sha256).hexdigest()
+
+
+def verify_hello_token(secret: Optional[str], client_ids: Iterable[int],
+                       token: Optional[str]) -> bool:
+    if secret is None:
+        return True
+    if token is None:
+        return False
+    return hmac.compare_digest(make_hello_token(secret, client_ids),
+                               str(token))

@@ -1,0 +1,270 @@
+"""Client side of the wire transport (DESIGN.md §13).
+
+``WireClient`` is one framed, authenticated connection: bounded
+retry-with-backoff connect, HELLO handshake, fault-injectable sends.
+``CohortDriver`` is a thread that hosts a ``ClientRuntime`` behind that
+connection and speaks the round protocol:
+
+    ROUND(t, participants, gloss) ... DOWNLOAD(cid, t) x K
+        -> run_round(t, participants) -> UPLOAD x K -> ACK x K
+
+One driver hosts the WHOLE cohort (all client ids) over one runtime, so
+local training consumes the shared rng stream in the exact order the
+in-memory transport does — that is what makes the loopback parity pin
+bitwise rather than merely statistical.
+
+Recovery rules (mirrors of the server's dedup guarantees):
+
+  * an un-ACKed upload is re-sent after ``ack_timeout_s``;
+  * any reconnect re-runs HELLO, and a re-received ROUND for an
+    already-trained round re-sends ALL of that round's uploads, ACKed or
+    not — a restarted server may have lost them, and it dedupes;
+  * training never re-runs: uploads are produced once per round and
+    replayed from memory.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.fed.protocol import DownloadMsg, JoinAck, UploadMsg
+from repro.fed.wire.auth import make_hello_token
+from repro.fed.wire.clock import Clock, WallClock
+from repro.fed.wire.framing import (AckMsg, ByeMsg, ErrorMsg, FrameDecoder,
+                                    FrameError, HelloMsg, RoundOpen,
+                                    encode_message)
+from repro.fed.wire.transport import WireConfig
+
+
+class WireClient:
+    """One framed connection to the daemon, with bounded reconnect."""
+
+    def __init__(self, config: WireConfig, client_ids: Sequence[int],
+                 faults=None):
+        self.config = config
+        self.client_ids = [int(c) for c in client_ids]
+        self.faults = faults
+        self.sock = None
+        self.decoder = FrameDecoder()
+        self._sent = 0                      # outgoing frame counter (faults)
+        self._lock = threading.Lock()
+
+    def connect(self) -> None:
+        """Dial with linear backoff; send the authenticated HELLO."""
+        cfg = self.config
+        last: Optional[Exception] = None
+        for attempt in range(max(1, cfg.connect_retries)):
+            try:
+                s = cfg.make_socket()
+                s.settimeout(cfg.io_timeout_s)
+                s.connect(cfg.connect_address())
+                self.sock = s
+                self.decoder = FrameDecoder()
+                hello = encode_message(
+                    HelloMsg(self.client_ids),
+                    auth=make_hello_token(cfg.auth_secret, self.client_ids))
+                s.sendall(hello)            # HELLO is never fault-injected
+                return
+            except OSError as e:
+                last = e
+                time.sleep(min(cfg.retry_backoff_s * (attempt + 1),
+                               cfg.backoff_max_s))
+        raise ConnectionError(
+            f"could not reach {cfg.connect_address()!r} after "
+            f"{cfg.connect_retries} attempts: {last}")
+
+    def send(self, msg, auth: Optional[str] = None) -> None:
+        """Frame and send one message, applying the fault plan if any."""
+        frame = encode_message(msg, auth=auth)
+        with self._lock:
+            idx = self._sent
+            self._sent += 1
+        if self.faults is not None:
+            frame = self.faults.transform(idx, frame)
+            if frame is None:
+                return                       # injected drop
+        if self.sock is None:
+            raise ConnectionError("not connected")
+        self.sock.sendall(frame)
+
+    def recv_messages(self, timeout: Optional[float] = None) -> list:
+        """Block up to ``timeout`` for bytes; return decoded (msg, auth)
+        pairs (possibly empty). Raises ``ConnectionError`` on EOF and
+        ``FrameError`` on a corrupted stream — reconnect either way."""
+        if self.sock is None:
+            raise ConnectionError("not connected")
+        self.sock.settimeout(self.config.poll_s if timeout is None
+                             else timeout)
+        try:
+            chunk = self.sock.recv(65536)
+        except TimeoutError:
+            return []
+        except OSError as e:
+            raise ConnectionError(str(e))
+        if not chunk:
+            raise ConnectionError("server closed the connection")
+        self.decoder.feed(chunk)
+        return list(self.decoder.messages())
+
+    def close(self, reason: str = "done") -> None:
+        if self.sock is not None:
+            try:
+                self.sock.sendall(encode_message(ByeMsg(reason=reason)))
+            except OSError:
+                pass
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+            self.sock = None
+
+
+class _RoundState:
+    """What the cohort knows about one round."""
+
+    def __init__(self, round_t: int):
+        self.round_t = round_t
+        self.participants: List[int] = []
+        self.applied: Set[int] = set()       # downloads consumed
+        self.uploads: Optional[List[UploadMsg]] = None
+        self.unacked: Set[int] = set()
+        self.last_send = 0.0
+
+
+class CohortDriver(threading.Thread):
+    """Thread hosting a ClientRuntime for a set of client ids over one
+    ``WireClient`` connection. Exits on BYE, fatal error, or ``stop()``."""
+
+    def __init__(self, runtime, client_ids: Sequence[int],
+                 config: WireConfig, clock: Optional[Clock] = None,
+                 faults=None, name: str = "wire-cohort"):
+        super().__init__(name=name, daemon=True)
+        self.runtime = runtime
+        self.client_ids = [int(c) for c in client_ids]
+        self.config = config
+        self.clock = clock if clock is not None else WallClock()
+        self.client = WireClient(config, self.client_ids, faults=faults)
+        self.rounds: Dict[int, _RoundState] = {}
+        self.join_acks: List[JoinAck] = []
+        self.error: Optional[Exception] = None
+        self.rounds_trained = 0
+        self._halt = threading.Event()
+
+    # -- protocol handlers ----------------------------------------------------
+    def _state_for(self, round_t: int) -> _RoundState:
+        st = self.rounds.get(int(round_t))
+        if st is None:
+            st = _RoundState(int(round_t))
+            self.rounds[int(round_t)] = st
+        return st
+
+    def _on_round(self, msg: RoundOpen) -> None:
+        st = self._state_for(msg.round_t)
+        st.participants = [int(c) for c in msg.participants]
+        if msg.gloss is not None:
+            # idempotent for repeated values; keeps the remote compressor
+            # pools on the server's Eq. 4 loss stream
+            self.runtime.observe_global_loss(float(msg.gloss))
+        # a re-received ROUND means the server (re)opened or recovered this
+        # round: replay everything we already produced for it
+        if st.uploads is not None:
+            self._send_uploads(st)
+        # drop rounds that can no longer matter
+        for t in sorted(self.rounds):
+            if t < msg.round_t - 1:
+                del self.rounds[t]
+
+    def _on_download(self, msg: DownloadMsg) -> None:
+        st = self._state_for(msg.round_t)
+        cid = int(msg.client_id)
+        if cid in st.applied:
+            return                           # reconnect duplicate
+        self.runtime.apply_download(cid, msg)
+        st.applied.add(cid)
+        self._maybe_train(st)
+
+    def _maybe_train(self, st: _RoundState) -> None:
+        if st.uploads is not None or not st.participants:
+            return
+        if not set(st.participants) <= st.applied:
+            return
+        msgs, _ = self.runtime.run_round(st.round_t, st.participants)
+        st.uploads = list(msgs)
+        self.rounds_trained += 1
+        self._send_uploads(st)
+
+    def _send_uploads(self, st: _RoundState) -> None:
+        if not st.uploads:
+            return
+        st.unacked = {int(m.client_id) for m in st.uploads}
+        st.last_send = self.clock.now()
+        for m in st.uploads:                 # participant order
+            self.client.send(m)
+
+    def _maybe_resend(self) -> None:
+        for st in [self.rounds[t] for t in sorted(self.rounds)]:
+            if st.uploads is None or not st.unacked:
+                continue
+            if self.clock.now() - st.last_send > self.config.ack_timeout_s:
+                st.last_send = self.clock.now()
+                for m in st.uploads:
+                    if int(m.client_id) in st.unacked:
+                        self.client.send(m)
+
+    def _handle(self, msg) -> bool:
+        """Returns True when the driver should exit."""
+        if isinstance(msg, RoundOpen):
+            self._on_round(msg)
+        elif isinstance(msg, DownloadMsg):
+            self._on_download(msg)
+        elif isinstance(msg, AckMsg):
+            st = self.rounds.get(int(msg.round_t))
+            if st is not None:
+                st.unacked.discard(int(msg.client_id))
+        elif isinstance(msg, JoinAck):
+            self.join_acks.append(msg)
+        elif isinstance(msg, ErrorMsg):
+            if msg.code in ("auth", "static", "proto"):
+                self.error = PermissionError(
+                    f"server rejected cohort: {msg.code}: {msg.detail}")
+                return True                  # fatal: do not reconnect-loop
+            # "frame": our last send got mangled; the server drops us and
+            # the reconnect path replays
+        elif isinstance(msg, ByeMsg):
+            if msg.gloss is not None:
+                # the final eval's loss, which no further ROUND can carry
+                self.runtime.observe_global_loss(float(msg.gloss))
+            return True
+        return False
+
+    # -- thread body -----------------------------------------------------------
+    def run(self) -> None:
+        try:
+            self.client.connect()
+            while not self._halt.is_set():
+                try:
+                    for msg, _auth in self.client.recv_messages():
+                        if self._handle(msg):
+                            return
+                    self._maybe_resend()
+                except (ConnectionError, FrameError, OSError):
+                    if self._halt.is_set():
+                        return
+                    self.client.connect()    # HELLO -> server replays round
+        except Exception as e:               # surface to the joiner
+            self.error = e
+        finally:
+            self.client.close()
+
+    def stop(self) -> None:
+        self._halt.set()
+
+    def finish(self, timeout: float = 60.0) -> None:
+        """Join the thread and re-raise anything fatal it recorded."""
+        self.join(timeout=timeout)
+        if self.error is not None:
+            raise self.error
+        if self.is_alive():
+            self.stop()
+            raise TimeoutError("cohort driver did not exit in time")

@@ -1,0 +1,43 @@
+"""Injectable wall-clock (DESIGN.md §13).
+
+Every wall-time read in the federation layers goes through a ``Clock`` so
+deterministic tests swap in ``ManualClock`` and the parity suite never
+observes real time. ``WallClock`` is the ONE sanctioned ``time.perf_counter``
+call site (the DT002 analyzer rule baselines exactly this symbol); new code
+must take a ``Clock`` rather than calling ``time`` directly.
+
+``SimTransport``'s event clock is NOT a ``Clock`` — it is simulated protocol
+time advanced by message sizes, not by the host — and stays untouched.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Monotonic seconds. Only differences are meaningful."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    """Real host time — the single sanctioned wall-clock source."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class ManualClock(Clock):
+    """Test clock: advances only when told to."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        if dt < 0:
+            raise ValueError("ManualClock only runs forward")
+        self._t += float(dt)

@@ -1,0 +1,116 @@
+"""Supervised federation daemon (DESIGN.md §13).
+
+``WireDaemon`` runs a ``FederationService`` behind a ``SocketTransport``
+and checkpoints EVERY lifecycle transition (format 5), so at any instant
+the newest checkpoint is at most one transition old. ``Supervisor`` wraps
+it in a restart loop: on a crash (injected or real) it rebuilds the whole
+server stack, reloads the checkpoint, and resumes — bitwise, because the
+checkpoint carries the mid-round lifecycle phase, the transport's round
+context (the exact frames already sent), and the upload dedup set.
+
+The division of truth that makes this work: the CLIENT COHORT outlives
+daemon crashes and holds all client-side state (views, local vectors,
+compressor residuals, the rng cursor); the DAEMON's checkpoint holds all
+server-side truth. The daemon's in-process ``ClientRuntime`` hosts nobody
+in wire mode (``remote_clients`` skips it), so nothing client-side needs
+to survive the server process. A reconnecting cohort re-receives the open
+round's cached frames and re-sends its uploads; the server dedupes.
+
+Control frames (JOIN/LEAVE) drain between rounds, while the lifecycle sits
+at OPEN — dynamic membership changes land on round boundaries exactly as
+the in-process service semantics define.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, List, Optional, Tuple
+
+from repro.checkpoint.ckpt import load_fed_state, save_fed_state
+from repro.fed.wire.faults import FaultPlan, InjectedCrash
+from repro.fed.wire.transport import SocketTransport
+
+
+class WireDaemon:
+    """One daemon process-equivalent: service + socket + checkpoint cadence."""
+
+    def __init__(self, trainer, service, ckpt_path: str,
+                 faults: Optional[FaultPlan] = None):
+        self.tr = trainer
+        self.svc = service
+        self.tp: SocketTransport = trainer.transport
+        self.ckpt_path = str(ckpt_path)
+        self.faults = faults
+
+    def _drain_control(self) -> None:
+        """Process authenticated JOIN/LEAVE requests at a round boundary."""
+        for kind, msg in self.tp.poll_control():
+            if self.svc.membership is None:
+                self.tp.reject_control(
+                    msg, "static population: run the daemon with "
+                         "dynamic membership to join/leave")
+                continue
+            if kind == "join":
+                self.tp.send_join_ack(self.svc.join(msg))
+            else:
+                self.svc.leave(msg)
+
+    def serve(self, rounds: int) -> None:
+        """Drive the service to ``rounds`` completed rounds. Checkpoint
+        after every transition; crash where the fault plan says so. Leaves
+        the transport OPEN (the caller decides when to drop clients)."""
+        tr, svc, tp = self.tr, self.svc, self.tp
+        tp.start()
+        while tr.start_round < rounds or svc.lc.phase != svc.lc.OPEN:
+            if svc.lc.phase == svc.lc.OPEN:
+                self._drain_control()
+                t = tr.start_round
+            else:
+                t = svc.lc.round_t          # resumed mid-round
+            phase = svc.step(final=(t == rounds - 1))
+            save_fed_state(self.ckpt_path, tr, service=svc)
+            if self.faults is not None:
+                self.faults.maybe_crash(t, phase)
+        tp.broadcast_bye()
+
+
+class Supervisor:
+    """Crash-restart loop around ``WireDaemon``.
+
+    ``build`` constructs a FRESH (trainer, service) pair — process-restart
+    semantics: nothing survives in memory, everything comes back from the
+    checkpoint. Returns the final (trainer, service); the caller closes
+    ``trainer.transport`` once its clients have drained the BYE."""
+
+    RECOVERABLE = (InjectedCrash, ConnectionError, OSError)
+
+    def __init__(self, build: Callable[[], Tuple[object, object]],
+                 ckpt_path: str, rounds: int, max_restarts: int = 3,
+                 backoff_s: float = 0.1,
+                 faults: Optional[FaultPlan] = None):
+        self.build = build
+        self.ckpt_path = str(ckpt_path)
+        self.rounds = int(rounds)
+        self.max_restarts = int(max_restarts)
+        self.backoff_s = float(backoff_s)
+        self.faults = faults
+        self.crashes: List[str] = []         # what each restart recovered from
+
+    def run(self) -> Tuple[object, object]:
+        restarts = 0
+        while True:
+            trainer, service = self.build()
+            if os.path.exists(self.ckpt_path):
+                load_fed_state(self.ckpt_path, trainer, service=service)
+            daemon = WireDaemon(trainer, service, self.ckpt_path,
+                                faults=self.faults)
+            try:
+                daemon.serve(self.rounds)
+                return trainer, service
+            except self.RECOVERABLE as e:
+                self.crashes.append(repr(e))
+                trainer.transport.close()    # drop conns; clients reconnect
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                time.sleep(self.backoff_s)

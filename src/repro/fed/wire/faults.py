@@ -1,0 +1,70 @@
+"""Deterministic fault injection for the wire stack (DESIGN.md §13).
+
+No randomness: every fault is named by the index of the frame it hits (a
+per-connection outgoing counter) or by the lifecycle position of a crash,
+so the fault matrix in the tests is exactly reproducible.
+
+Client-side frame faults (``FaultPlan.transform`` is called by
+``WireClient.send``):
+
+  * drop      — the frame never leaves the client; recovered by the
+                ACK-timeout re-send;
+  * corrupt   — one payload byte flipped; the server's CRC check raises,
+                the connection dies, the client reconnects and replays;
+  * truncate  — the frame is cut short; the server blocks on a partial
+                frame until the client's next (re-)send completes it or a
+                reconnect resets the stream;
+  * delay     — the frame is sent ``delay_s`` late (sleep on the sender).
+
+Server-side: ``crash_at=(round_t, phase)`` makes the daemon raise
+``InjectedCrash`` immediately AFTER checkpointing that transition — the
+supervisor must restart it and resume bitwise from the checkpoint. The
+crash is one-shot (``consumed``): the restarted daemon sails past it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import FrozenSet, Optional, Tuple
+
+
+class InjectedCrash(RuntimeError):
+    """Raised by the daemon when the fault plan says 'die here'."""
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic faults, addressed by outgoing-frame index."""
+    drop: FrozenSet[int] = frozenset()
+    corrupt: FrozenSet[int] = frozenset()
+    truncate: FrozenSet[int] = frozenset()
+    delay: FrozenSet[int] = frozenset()
+    delay_s: float = 0.05
+    crash_at: Optional[Tuple[int, str]] = None   # (round_t, phase name)
+    consumed: bool = field(default=False, compare=False)
+
+    def transform(self, idx: int, frame: bytes) -> Optional[bytes]:
+        """Apply frame faults; None means the frame is dropped."""
+        if idx in self.drop:
+            return None
+        if idx in self.truncate:
+            return frame[:max(1, len(frame) // 2)]
+        if idx in self.corrupt:
+            # flip one payload byte (the last one: past the header, so the
+            # CRC — not the length field — is what catches it)
+            mangled = bytearray(frame)
+            mangled[-1] ^= 0xFF
+            return bytes(mangled)
+        if idx in self.delay:
+            time.sleep(self.delay_s)
+        return frame
+
+    def maybe_crash(self, round_t: int, phase: str) -> None:
+        """One-shot daemon crash at the named lifecycle transition."""
+        if self.consumed or self.crash_at is None:
+            return
+        want_t, want_phase = self.crash_at
+        if int(round_t) == int(want_t) and str(phase) == str(want_phase):
+            self.consumed = True
+            raise InjectedCrash(f"fault plan: crash at round {round_t} "
+                                f"phase {phase}")

@@ -1,0 +1,354 @@
+"""Versioned binary frame codec for the wire contract (DESIGN.md §13).
+
+Every message on the socket is one frame::
+
+    +--------+---------+------+-------------+----------+=========+
+    | magic  | version | type | payload_len | crc32    | payload |
+    | "EFW1" | u8      | u8   | u32 BE      | u32 BE   | bytes   |
+    +--------+---------+------+-------------+----------+=========+
+
+The payload is the msgpack encoding of a plain tree produced by the
+``_pack_*`` helpers below — the SAME tree shapes checkpoint format 4/5 uses
+(``Packet`` travels through ``ckpt._pack_packet``), so the compressed
+payload bytes on the socket are byte-identical to the billed ledger bytes
+and the analyzer's WC-rules cover both layers with one contract. CRC32
+(zlib) guards the payload; a mismatch, bad magic, or version skew raises a
+``FrameError`` subclass and the receiver drops the connection (stream state
+is unrecoverable after corruption — recovery is reconnect + re-send).
+
+Frame types 1-6 are the §6 wire contract; 16+ are transport-layer control
+(connection hello, round open, delivery acks, errors, shutdown) that never
+reaches the federation service.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.checkpoint.ckpt import (_decode, _encode, _pack_packet,
+                                   _pack_upload, _unpack_packet,
+                                   _unpack_upload)
+from repro.fed.protocol import (BroadcastMsg, DownloadMsg, JoinAck, JoinMsg,
+                                LeaveMsg, UploadMsg)
+
+MAGIC = b"EFW1"
+VERSION = 1
+_HEADER = struct.Struct(">4sBBII")
+HEADER_SIZE = _HEADER.size
+# frames larger than this are rejected before allocation: a corrupted
+# length field must not look like a 4 GiB read
+MAX_PAYLOAD = 256 * 1024 * 1024
+
+# -- §6 wire-contract frames --
+T_JOIN = 1
+T_JOIN_ACK = 2
+T_UPLOAD = 3
+T_DOWNLOAD = 4
+T_BROADCAST = 5
+T_LEAVE = 6
+# -- transport control frames --
+T_HELLO = 16
+T_ROUND = 17
+T_ACK = 18
+T_ERROR = 19
+T_BYE = 20
+
+
+class FrameError(Exception):
+    """Base for unrecoverable stream errors (receiver must reconnect)."""
+
+
+class BadMagic(FrameError):
+    pass
+
+
+class BadVersion(FrameError):
+    pass
+
+
+class BadCrc(FrameError):
+    pass
+
+
+class UnknownType(FrameError):
+    pass
+
+
+class FrameTooLarge(FrameError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# transport-control messages (never reach the federation service)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HelloMsg:
+    """First frame on every connection: which client ids it hosts, plus the
+    connection-level auth token (rides the frame, not the dataclass)."""
+    client_ids: List[int]
+
+
+@dataclass
+class RoundOpen:
+    """Server -> clients at OPEN: round number, sampled participants, and
+    the freshest observed global loss (the Eq. 4 adaptive-k signal — remote
+    compressor pools must see the same loss stream the server's did)."""
+    round_t: int
+    participants: List[int]
+    gloss: Optional[float] = None
+
+
+@dataclass
+class AckMsg:
+    """Server -> client: upload (client_id, round_t) accepted. Suppresses
+    the client's timeout-driven re-send; a reconnect re-sends regardless
+    (the server after a crash-restart may need acked uploads again, and it
+    dedupes duplicates)."""
+    client_id: int
+    round_t: int
+
+
+@dataclass
+class ErrorMsg:
+    code: str                 # "auth" | "frame" | "static" | "proto"
+    detail: str = ""
+
+
+@dataclass
+class ByeMsg:
+    """Server shutdown notice. Carries the final observed global loss —
+    the last eval's Eq. 4 signal otherwise rides the NEXT round's ROUND
+    frame, and after the final round there is none."""
+    reason: str = "done"
+    gloss: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack pairs (analyzer rules WC001/WC002/WC004 pin their symmetry)
+# ---------------------------------------------------------------------------
+
+def _pack_join(msg: JoinMsg, auth: Optional[str] = None) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t),
+            "capabilities": (None if msg.capabilities is None
+                             else [str(c) for c in msg.capabilities]),
+            "auth": auth}
+
+
+def _unpack_join(d: Dict[str, Any]) -> Tuple[JoinMsg, Optional[str]]:
+    caps = d.get("capabilities")
+    return JoinMsg(int(d["client_id"]), int(d["round_t"]),
+                   capabilities=None if caps is None else list(caps)), \
+        d.get("auth")
+
+
+def _pack_join_ack(msg: JoinAck) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t),
+            "codec": msg.codec,
+            "bcast_version": int(msg.bcast_version),
+            "rejoined": bool(msg.rejoined),
+            "capabilities": (None if msg.capabilities is None
+                             else [str(c) for c in msg.capabilities]),
+            "downlink": msg.downlink}
+
+
+def _unpack_join_ack(d: Dict[str, Any]) -> JoinAck:
+    caps = d.get("capabilities")
+    return JoinAck(int(d["client_id"]), int(d["round_t"]),
+                   codec=d.get("codec"),
+                   bcast_version=int(d["bcast_version"]),
+                   rejoined=bool(d["rejoined"]),
+                   capabilities=None if caps is None else list(caps),
+                   downlink=d.get("downlink"))
+
+
+def _pack_download(msg: DownloadMsg) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t),
+            "view": np.asarray(msg.view),
+            "n_missed": int(msg.n_missed),
+            "wire_bytes": int(msg.wire_bytes),
+            "param_count": int(msg.param_count),
+            "bcast_version": int(msg.bcast_version),
+            "codec": msg.codec,
+            "capabilities": (None if msg.capabilities is None
+                             else [str(c) for c in msg.capabilities]),
+            "segment": None if msg.segment is None else int(msg.segment),
+            "tier": msg.tier}
+
+
+def _unpack_download(d: Dict[str, Any]) -> DownloadMsg:
+    caps = d.get("capabilities")
+    seg = d.get("segment")
+    return DownloadMsg(int(d["client_id"]), int(d["round_t"]),
+                       np.asarray(d["view"]),
+                       int(d["n_missed"]), int(d["wire_bytes"]),
+                       int(d["param_count"]),
+                       bcast_version=int(d["bcast_version"]),
+                       codec=d.get("codec"),
+                       capabilities=None if caps is None else list(caps),
+                       segment=None if seg is None else int(seg),
+                       tier=d.get("tier"))
+
+
+def _pack_broadcast(msg: BroadcastMsg) -> Dict[str, Any]:
+    return {"round_t": int(msg.round_t),
+            "packet": _pack_packet(msg.packet),
+            "segment_schedule": int(msg.segment_schedule)}
+
+
+def _unpack_broadcast(d: Dict[str, Any]) -> BroadcastMsg:
+    return BroadcastMsg(int(d["round_t"]), _unpack_packet(d["packet"]),
+                        int(d["segment_schedule"]))
+
+
+def _pack_leave(msg: LeaveMsg) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t)}
+
+
+def _unpack_leave(d: Dict[str, Any]) -> LeaveMsg:
+    return LeaveMsg(int(d["client_id"]), int(d["round_t"]))
+
+
+def _pack_hello(msg: HelloMsg, auth: Optional[str] = None) -> Dict[str, Any]:
+    return {"client_ids": [int(c) for c in msg.client_ids], "auth": auth}
+
+
+def _unpack_hello(d: Dict[str, Any]) -> Tuple[HelloMsg, Optional[str]]:
+    return HelloMsg([int(c) for c in d["client_ids"]]), d.get("auth")
+
+
+def _pack_round(msg: RoundOpen) -> Dict[str, Any]:
+    return {"round_t": int(msg.round_t),
+            "participants": [int(c) for c in msg.participants],
+            "gloss": None if msg.gloss is None else float(msg.gloss)}
+
+
+def _unpack_round(d: Dict[str, Any]) -> RoundOpen:
+    g = d.get("gloss")
+    return RoundOpen(int(d["round_t"]),
+                     [int(c) for c in d["participants"]],
+                     gloss=None if g is None else float(g))
+
+
+def _pack_ack(msg: AckMsg) -> Dict[str, Any]:
+    return {"client_id": int(msg.client_id), "round_t": int(msg.round_t)}
+
+
+def _unpack_ack(d: Dict[str, Any]) -> AckMsg:
+    return AckMsg(int(d["client_id"]), int(d["round_t"]))
+
+
+def _pack_error(msg: ErrorMsg) -> Dict[str, Any]:
+    return {"code": str(msg.code), "detail": str(msg.detail)}
+
+
+def _unpack_error(d: Dict[str, Any]) -> ErrorMsg:
+    return ErrorMsg(str(d["code"]), detail=str(d["detail"]))
+
+
+def _pack_bye(msg: ByeMsg) -> Dict[str, Any]:
+    return {"reason": str(msg.reason),
+            "gloss": None if msg.gloss is None else float(msg.gloss)}
+
+
+def _unpack_bye(d: Dict[str, Any]) -> ByeMsg:
+    g = d.get("gloss")
+    return ByeMsg(reason=str(d["reason"]),
+                  gloss=None if g is None else float(g))
+
+
+_PACKERS = {
+    JoinMsg: (T_JOIN, _pack_join),
+    JoinAck: (T_JOIN_ACK, lambda m, auth=None: _pack_join_ack(m)),
+    UploadMsg: (T_UPLOAD, lambda m, auth=None: _pack_upload(m)),
+    DownloadMsg: (T_DOWNLOAD, lambda m, auth=None: _pack_download(m)),
+    BroadcastMsg: (T_BROADCAST, lambda m, auth=None: _pack_broadcast(m)),
+    LeaveMsg: (T_LEAVE, lambda m, auth=None: _pack_leave(m)),
+    HelloMsg: (T_HELLO, _pack_hello),
+    RoundOpen: (T_ROUND, lambda m, auth=None: _pack_round(m)),
+    AckMsg: (T_ACK, lambda m, auth=None: _pack_ack(m)),
+    ErrorMsg: (T_ERROR, lambda m, auth=None: _pack_error(m)),
+    ByeMsg: (T_BYE, lambda m, auth=None: _pack_bye(m)),
+}
+
+# unpackers returning (message, auth); auth is None except JOIN/HELLO
+_UNPACKERS = {
+    T_JOIN: _unpack_join,
+    T_JOIN_ACK: lambda d: (_unpack_join_ack(d), None),
+    T_UPLOAD: lambda d: (_unpack_upload(d), None),
+    T_DOWNLOAD: lambda d: (_unpack_download(d), None),
+    T_BROADCAST: lambda d: (_unpack_broadcast(d), None),
+    T_LEAVE: lambda d: (_unpack_leave(d), None),
+    T_HELLO: _unpack_hello,
+    T_ROUND: lambda d: (_unpack_round(d), None),
+    T_ACK: lambda d: (_unpack_ack(d), None),
+    T_ERROR: lambda d: (_unpack_error(d), None),
+    T_BYE: lambda d: (_unpack_bye(d), None),
+}
+
+
+def encode_message(msg, auth: Optional[str] = None) -> bytes:
+    """One message -> one complete frame (header + msgpack payload)."""
+    try:
+        type_id, packer = _PACKERS[type(msg)]
+    except KeyError:
+        raise UnknownType(f"no frame type for {type(msg).__name__}")
+    payload = msgpack.packb(_encode(packer(msg, auth=auth)),
+                            use_bin_type=True)
+    if len(payload) > MAX_PAYLOAD:
+        raise FrameTooLarge(f"{len(payload)} byte payload")
+    return _HEADER.pack(MAGIC, VERSION, type_id, len(payload),
+                        zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+def decode_payload(type_id: int, payload: bytes):
+    """(message, auth) from a verified frame body."""
+    unpacker = _UNPACKERS.get(type_id)
+    if unpacker is None:
+        raise UnknownType(f"frame type {type_id}")
+    return unpacker(_decode(msgpack.unpackb(payload, raw=False)))
+
+
+class FrameDecoder:
+    """Incremental frame parser over a byte stream.
+
+    ``feed(chunk)`` buffers; ``messages()`` yields every complete
+    ``(message, auth)`` pair currently decodable. Any header/CRC violation
+    raises a ``FrameError`` — the stream is then unusable and the caller
+    must drop the connection.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, chunk: bytes) -> None:
+        self._buf.extend(chunk)
+
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+    def messages(self):
+        while True:
+            if len(self._buf) < HEADER_SIZE:
+                return
+            magic, version, type_id, length, crc = _HEADER.unpack_from(
+                self._buf, 0)
+            if magic != MAGIC:
+                raise BadMagic(f"got {bytes(magic)!r}")
+            if version != VERSION:
+                raise BadVersion(f"peer speaks frame v{version}, "
+                                 f"this build v{VERSION}")
+            if length > MAX_PAYLOAD:
+                raise FrameTooLarge(f"{length} byte payload")
+            if len(self._buf) < HEADER_SIZE + length:
+                return                      # wait for the rest of the frame
+            payload = bytes(self._buf[HEADER_SIZE:HEADER_SIZE + length])
+            if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+                raise BadCrc(f"frame type {type_id}, {length} bytes")
+            del self._buf[:HEADER_SIZE + length]
+            yield decode_payload(type_id, payload)

@@ -1,0 +1,500 @@
+"""``SocketTransport``: the wire contract over real TCP/UDS sockets
+(DESIGN.md §13).
+
+The server side of a deployed federation: a listener plus one reader
+thread per client connection, decoding frames (``framing``) into the same
+typed messages the in-process transports move. The lifecycle
+(fed/service.py) stays unchanged — ``remote_clients = True`` only makes it
+skip the in-process ``ClientRuntime`` calls, because downloads now travel
+the socket to real peers and uploads arrive from it.
+
+Round close is WALL-clock: ``dispatch_uploads`` applies the same
+``RoundClosePolicy`` predicate the event-clock transports use, but
+``elapsed`` comes from the injectable ``Clock`` — deterministic tests pass
+``ManualClock``, deployments the sanctioned ``WallClock``.
+
+Delivery semantics (what the crash-recovery tests pin):
+
+  * every accepted upload is ACKed; duplicates — (client_id, round_t)
+    already seen — are re-ACKed and dropped, so client re-sends (timeout,
+    reconnect, daemon restart) are always safe;
+  * the current round's context (ROUND/BROADCAST/DOWNLOAD frames, encoded
+    once) is cached and re-served to any connection that (re)appears
+    mid-round — late joiners and post-crash reconnects use one path;
+  * ``state()``/``load_state()`` persist that context plus the dedup set,
+    so a daemon restarting from a mid-round checkpoint re-serves the SAME
+    bytes and never double-consumes an upload it already aggregated.
+
+Frames sent to a dead connection are dropped silently — the client's
+reconnect (bounded retry with backoff, fed/wire/client.py) re-requests
+everything via HELLO.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+import numpy as np
+
+from repro.fed.protocol import (BroadcastMsg, DownloadMsg, JoinAck, JoinMsg,
+                                LeaveMsg, UploadMsg)
+from repro.fed.transport import RoundClosePolicy, Transport
+from repro.fed.wire.auth import verify_hello_token, verify_token
+from repro.fed.wire.clock import Clock, WallClock
+from repro.fed.wire.framing import (AckMsg, ByeMsg, ErrorMsg, FrameDecoder,
+                                    FrameError, HelloMsg, RoundOpen,
+                                    encode_message)
+
+Address = Union[str, Tuple[str, int]]
+
+
+class WireTimeout(RuntimeError):
+    """dispatch_uploads waited past ``round_timeout_s`` real seconds."""
+
+
+@dataclass
+class WireConfig:
+    """Socket-layer knobs shared by server and client.
+
+    ``address``: a filesystem path (Unix-domain socket) or a
+    ``(host, port)`` tuple (TCP). ``io_timeout_s`` bounds every socket
+    send/recv; ``connect_retries``/``retry_backoff_s`` bound the client's
+    reconnect loop (backoff grows linearly, capped at ``backoff_max_s``).
+    ``round_timeout_s`` is the server's hard real-time cap on one round's
+    collect phase — a liveness guard, not a close policy (None disables)."""
+    address: Address
+    auth_secret: Optional[str] = None
+    io_timeout_s: float = 5.0
+    poll_s: float = 0.02
+    connect_retries: int = 40
+    retry_backoff_s: float = 0.05
+    backoff_max_s: float = 1.0
+    ack_timeout_s: float = 2.0
+    round_timeout_s: Optional[float] = 120.0
+    listen_backlog: int = 16
+
+    def make_socket(self) -> socket.socket:
+        if isinstance(self.address, (tuple, list)):
+            return socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        return socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+
+    def connect_address(self):
+        return (tuple(self.address)
+                if isinstance(self.address, (tuple, list))
+                else str(self.address))
+
+
+class _Conn:
+    """One accepted client connection (sends serialized by a lock)."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.decoder = FrameDecoder()
+        self.ids: List[int] = []
+        self.alive = True
+        self.lock = threading.Lock()
+
+    def send_bytes(self, frame: bytes) -> bool:
+        try:
+            with self.lock:
+                self.sock.sendall(frame)
+            return True
+        except OSError:
+            self.alive = False
+            return False
+
+    def close(self) -> None:
+        self.alive = False
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+@dataclass
+class _RoundCtx:
+    """The open round's encoded frames, cached for (re)delivery."""
+    round_t: int
+    participants: List[int]
+    round_frame: bytes
+    broadcast_frame: Optional[bytes] = None
+    download_frames: Dict[int, bytes] = field(default_factory=dict)
+
+
+class _Reject(Exception):
+    """Connection-fatal protocol violation (bad auth, frame before HELLO)."""
+
+
+class SocketTransport(Transport):
+    """Server-side wire transport over TCP or Unix-domain sockets."""
+
+    remote_clients = True
+    round_mode = "sync"
+
+    def __init__(self, config: WireConfig, clock: Optional[Clock] = None):
+        super().__init__()
+        self.config = config
+        self.clock = clock if clock is not None else WallClock()
+        self._uploads: "queue.Queue[UploadMsg]" = queue.Queue()
+        self._control: List[Tuple[str, object]] = []
+        self._conns: List[_Conn] = []
+        self._owners: Dict[int, _Conn] = {}
+        self._round: Optional[_RoundCtx] = None
+        self._seen: Set[Tuple[int, int]] = set()
+        self._last_gloss: Optional[float] = None
+        self._lock = threading.Lock()
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._closed = False
+        self._started = False
+
+    # -- lifecycle of the transport itself ----------------------------------
+    def start(self) -> None:
+        """Bind, listen, and start accepting (idempotent)."""
+        if self._started:
+            return
+        cfg = self.config
+        sock = cfg.make_socket()
+        if isinstance(cfg.address, (tuple, list)):
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            sock.bind(tuple(cfg.address))
+        else:
+            path = str(cfg.address)
+            if os.path.exists(path):
+                os.unlink(path)             # stale socket from a dead run
+            sock.bind(path)
+        sock.listen(cfg.listen_backlog)
+        sock.settimeout(cfg.poll_s * 10)
+        self._listener = sock
+        self._closed = False
+        self._started = True
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="wire-accept", daemon=True)
+        self._accept_thread.start()
+
+    def close(self) -> None:
+        """Tear the listener and every connection down (crash or shutdown);
+        round context and dedup state survive for a checkpoint resume."""
+        self._closed = True
+        self._started = False
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+        with self._lock:
+            conns, self._conns = list(self._conns), []
+            self._owners = {}
+        for c in conns:
+            c.close()
+        if not isinstance(self.config.address, (tuple, list)):
+            path = str(self.config.address)
+            if os.path.exists(path):
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+
+    def broadcast_bye(self, reason: str = "done") -> None:
+        # the final round's eval loss travels with the shutdown notice —
+        # there is no next ROUND frame to carry it
+        frame = encode_message(ByeMsg(reason=reason, gloss=self._last_gloss))
+        for c in self._snapshot_conns():
+            c.send_bytes(frame)
+
+    # -- connection handling -------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed and self._listener is not None:
+            try:
+                sock, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return                       # listener closed
+            conn = _Conn(sock)
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             name="wire-conn", daemon=True).start()
+
+    def _serve_conn(self, conn: _Conn) -> None:
+        conn.sock.settimeout(self.config.io_timeout_s)
+        hello_done = False
+        try:
+            while not self._closed and conn.alive:
+                try:
+                    chunk = conn.sock.recv(65536)
+                except socket.timeout:
+                    continue
+                except OSError:
+                    break
+                if not chunk:
+                    break                    # peer closed
+                conn.decoder.feed(chunk)
+                try:
+                    for msg, auth in conn.decoder.messages():
+                        hello_done = self._route(conn, msg, auth, hello_done)
+                except FrameError as e:
+                    # stream is unrecoverable after a framing error: tell
+                    # the peer best-effort and force a reconnect
+                    conn.send_bytes(encode_message(
+                        ErrorMsg("frame", detail=str(e))))
+                    break
+                except _Reject:
+                    break
+        finally:
+            self._drop_conn(conn)
+
+    def _route(self, conn: _Conn, msg, auth: Optional[str],
+               hello_done: bool) -> bool:
+        """Handle one decoded frame; returns the new hello state."""
+        if isinstance(msg, HelloMsg):
+            if not verify_hello_token(self.config.auth_secret,
+                                      msg.client_ids, auth):
+                conn.send_bytes(encode_message(
+                    ErrorMsg("auth", detail="bad connection token")))
+                raise _Reject
+            self._register(conn, msg.client_ids)
+            self._resend_round(conn)
+            return True
+        if isinstance(msg, JoinMsg):
+            # auth gate BEFORE the service sees the message: a bad token
+            # causes no admission and no billing-cursor mutation
+            if not verify_token(self.config.auth_secret,
+                                int(msg.client_id), auth):
+                conn.send_bytes(encode_message(
+                    ErrorMsg("auth", detail="bad join token")))
+                raise _Reject
+            self._register(conn, [int(msg.client_id)])
+            with self._lock:
+                self._control.append(("join", msg))
+            return True
+        if not hello_done:
+            conn.send_bytes(encode_message(
+                ErrorMsg("proto", detail="first frame must be HELLO/JOIN")))
+            raise _Reject
+        if isinstance(msg, UploadMsg):
+            self._uploads.put(msg)
+        elif isinstance(msg, LeaveMsg):
+            with self._lock:
+                self._control.append(("leave", msg))
+        elif isinstance(msg, ByeMsg):
+            raise _Reject                    # graceful client exit
+        # anything else (stray acks/errors) is ignored
+        return hello_done
+
+    def _register(self, conn: _Conn, ids: Sequence[int]) -> None:
+        with self._lock:
+            for cid in ids:
+                cid = int(cid)
+                if cid not in conn.ids:
+                    conn.ids.append(cid)
+                self._owners[cid] = conn     # latest connection wins
+
+    def _drop_conn(self, conn: _Conn) -> None:
+        conn.close()
+        with self._lock:
+            if conn in self._conns:
+                self._conns.remove(conn)
+            for cid in conn.ids:
+                if self._owners.get(cid) is conn:
+                    del self._owners[cid]
+
+    def _snapshot_conns(self) -> List[_Conn]:
+        with self._lock:
+            return list(self._conns)
+
+    def _resend_round(self, conn: _Conn) -> None:
+        """Serve the open round's cached frames to a (re)connected peer:
+        initial delivery and post-crash/reconnect recovery are ONE path."""
+        ctx = self._round
+        if ctx is None:
+            return
+        conn.send_bytes(ctx.round_frame)
+        if ctx.broadcast_frame is not None:
+            conn.send_bytes(ctx.broadcast_frame)
+        for cid in conn.ids:
+            frame = ctx.download_frames.get(int(cid))
+            if frame is not None:
+                conn.send_bytes(frame)
+
+    def _send_to(self, cid: int, frame: bytes) -> bool:
+        with self._lock:
+            conn = self._owners.get(int(cid))
+        return conn is not None and conn.send_bytes(frame)
+
+    # -- control-plane surface for the daemon --------------------------------
+    def poll_control(self) -> List[Tuple[str, object]]:
+        """Drain pending ("join", JoinMsg) / ("leave", LeaveMsg) requests
+        (already authenticated). The daemon processes them between
+        lifecycle transitions and answers joins via ``send_join_ack``."""
+        with self._lock:
+            out, self._control = self._control, []
+        return out
+
+    def send_join_ack(self, ack: JoinAck) -> None:
+        self._send_to(int(ack.client_id), encode_message(ack))
+
+    def reject_control(self, msg, detail: str) -> None:
+        """Answer a join/leave the service cannot process (static run)."""
+        self._send_to(int(msg.client_id),
+                      encode_message(ErrorMsg("static", detail=detail)))
+
+    # -- Transport contract ---------------------------------------------------
+    def plan_round(self, round_t: int, sampled) -> np.ndarray:
+        if not self._started:
+            self.start()
+        sampled = np.asarray(sampled)
+        participants = [int(c) for c in sampled.tolist()]
+        frame = encode_message(RoundOpen(int(round_t), participants,
+                                         gloss=self._last_gloss))
+        self._round = _RoundCtx(int(round_t), participants, frame)
+        # dedup window: the current round (re-sends) and the previous one
+        # (stragglers still in flight); older keys can never recur
+        self._seen = {k for k in sorted(self._seen)
+                      if k[1] >= int(round_t) - 1}
+        for c in self._snapshot_conns():
+            c.send_bytes(frame)
+        return sampled
+
+    def on_broadcast(self, msg: BroadcastMsg) -> None:
+        frame = encode_message(msg)
+        if self._round is not None:
+            self._round.broadcast_frame = frame
+        for c in self._snapshot_conns():
+            c.send_bytes(frame)
+
+    def on_download(self, msg: DownloadMsg) -> None:
+        frame = encode_message(msg)
+        if self._round is not None:
+            self._round.download_frames[int(msg.client_id)] = frame
+        # owner not connected yet -> the cached frame is served at HELLO
+        self._send_to(int(msg.client_id), frame)
+
+    def notify_global_loss(self, loss: float) -> None:
+        # rides the next ROUND frame so remote compressor pools track the
+        # same Eq. 4 signal; repeated observation of an unchanged loss is
+        # idempotent on the adaptive-k state
+        self._last_gloss = float(loss)
+
+    def _ack(self, msg: UploadMsg) -> None:
+        self._send_to(int(msg.client_id),
+                      encode_message(AckMsg(int(msg.client_id),
+                                            int(msg.round_t))))
+
+    def _accept_arrival(self, m: UploadMsg, round_t: int,
+                        policy: Optional[RoundClosePolicy], t0: float,
+                        current: List[UploadMsg], got: Set[int],
+                        delivered: List[UploadMsg]) -> None:
+        key = (int(m.client_id), int(m.round_t))
+        if key in self._seen:
+            self._ack(m)                     # duplicate re-send: quiet it
+            return
+        self._seen.add(key)
+        self._ack(m)
+        if int(m.round_t) == int(round_t):
+            elapsed = self.clock.now() - t0
+            if policy is None or policy.on_time(len(current), elapsed):
+                current.append(m)
+                got.add(int(m.client_id))
+            else:
+                self._late.append(m)         # past the deadline: next round
+        else:
+            delivered.append(m)              # straggler from an older round
+
+    def dispatch_uploads(self, round_t: int, msgs: Sequence[UploadMsg],
+                         compute_s: Sequence[float],
+                         policy: Optional[RoundClosePolicy] = None
+                         ) -> List[UploadMsg]:
+        if msgs:
+            raise ValueError("SocketTransport sources uploads from the "
+                             "socket; in-process messages are unsupported")
+        delivered, self._late = list(self._late), []
+        ctx = self._round
+        expected = list(ctx.participants) if ctx is not None else []
+        t0 = self.clock.now()
+        wall0 = self.clock.now()
+        current: List[UploadMsg] = []
+        got: Set[int] = set()
+        while True:
+            if expected and len(got) >= len(expected):
+                break                        # everyone answered
+            if not expected:
+                break
+            if policy is not None:
+                if policy.min_uploads is not None \
+                        and len(current) >= policy.min_uploads:
+                    break
+                if policy.expired(self.clock.now() - t0):
+                    break
+            cap = self.config.round_timeout_s
+            if cap is not None and self.clock.now() - wall0 > cap:
+                raise WireTimeout(
+                    f"round {round_t}: {len(got)}/{len(expected)} uploads "
+                    f"after {cap}s (no close policy deadline configured)")
+            try:
+                m = self._uploads.get(timeout=self.config.poll_s)
+            except queue.Empty:
+                continue
+            self._accept_arrival(m, round_t, policy, t0, current, got,
+                                 delivered)
+        # post-cut drain: anything already queued missed this round's
+        # aggregate — ack it and buffer it as an in-flight straggler
+        while True:
+            try:
+                m = self._uploads.get_nowait()
+            except queue.Empty:
+                break
+            key = (int(m.client_id), int(m.round_t))
+            if key in self._seen:
+                self._ack(m)
+                continue
+            self._seen.add(key)
+            self._ack(m)
+            self._late.append(m)
+        # deterministic aggregation order: the participant schedule, not
+        # socket arrival order (float summation is order-sensitive)
+        order = {int(c): i for i, c in enumerate(expected)}
+        current.sort(key=lambda m: order.get(int(m.client_id), len(order)))
+        return delivered + current
+
+    # -- checkpointing --------------------------------------------------------
+    def state(self) -> dict:
+        ctx = self._round
+        return {
+            "round_ctx": None if ctx is None else {
+                "round_t": int(ctx.round_t),
+                "participants": [int(c) for c in ctx.participants],
+                "round_frame": bytes(ctx.round_frame),
+                "broadcast_frame": (None if ctx.broadcast_frame is None
+                                    else bytes(ctx.broadcast_frame)),
+                "download_frames": {str(c): bytes(f) for c, f in
+                                    sorted(ctx.download_frames.items())},
+            },
+            "seen": [[int(c), int(t)] for c, t in sorted(self._seen)],
+            "last_gloss": (None if self._last_gloss is None
+                           else float(self._last_gloss)),
+        }
+
+    def load_state(self, state: dict) -> None:
+        ctx = state.get("round_ctx")
+        if ctx is None:
+            self._round = None
+        else:
+            self._round = _RoundCtx(
+                int(ctx["round_t"]),
+                [int(c) for c in ctx["participants"]],
+                bytes(ctx["round_frame"]),
+                broadcast_frame=(None if ctx.get("broadcast_frame") is None
+                                 else bytes(ctx["broadcast_frame"])),
+                download_frames={int(c): bytes(f) for c, f in
+                                 (ctx.get("download_frames") or {}).items()})
+        self._seen = {(int(c), int(t))
+                      for c, t in (state.get("seen") or [])}
+        g = state.get("last_gloss")
+        self._last_gloss = None if g is None else float(g)

@@ -335,3 +335,156 @@ def test_starvation_override_survives_mid_collecting_resume(tmp_path):
             == (lgb.round_t, lgb.upload_bytes, lgb.download_bytes)
     np.testing.assert_array_equal(full_tr.server.global_vec,
                                   b_tr.server.global_vec)
+
+
+# ---------------------------------------------------------------------------
+# wire transport (DESIGN.md §13): UDS loopback parity and supervised
+# crash-recovery — the socket path must be bitwise the in-memory path
+# ---------------------------------------------------------------------------
+
+def _wire_cfg(tmp_path, name):
+    from repro.fed.wire import WireConfig
+    return WireConfig(address=str(tmp_path / name), auth_secret="fleet",
+                      io_timeout_s=5.0, poll_s=0.005, ack_timeout_s=1.0,
+                      round_timeout_s=300.0, connect_retries=1200,
+                      retry_backoff_s=0.05, backoff_max_s=0.25)
+
+
+def _ref_run():
+    tr = FederatedTrainer(CFG, _fed(), TC)
+    FederationService(tr).run()
+    return tr
+
+
+def _assert_wire_parity(ref, srv_tr, cl_tr):
+    """Ledger, per-round logs, global vector, and client-side state of a
+    wire run must be bitwise the in-memory reference."""
+    la, lb = ref.server.ledger, srv_tr.server.ledger
+    assert (la.upload_bytes, la.download_bytes, la.upload_params,
+            la.download_params) == (lb.upload_bytes, lb.download_bytes,
+                                    lb.upload_params, lb.download_params)
+    # logs are not checkpointed (same contract as the resume tests above):
+    # a supervisor-restarted run only holds the post-crash rounds — align
+    # on the tail and compare those bitwise
+    assert srv_tr.logs
+    for lga, lgb in zip(ref.logs[-len(srv_tr.logs):], srv_tr.logs):
+        assert lga.round_t == lgb.round_t
+        assert lga.upload_bytes == lgb.upload_bytes, lga.round_t
+        assert lga.download_bytes == lgb.download_bytes, lga.round_t
+        assert lga.global_loss == lgb.global_loss, lga.round_t
+    np.testing.assert_array_equal(ref.server.global_vec,
+                                  srv_tr.server.global_vec)
+    np.testing.assert_array_equal(ref.server.last_broadcast,
+                                  srv_tr.server.last_broadcast)
+    # the cohort's client state is bitwise the in-memory runtime's
+    np.testing.assert_array_equal(ref.clients.views, cl_tr.clients.views)
+    # adaptive-k: uplink schedule state lives client-side, downlink
+    # server-side — compare each against the reference's matching half
+    ka, kb = _k_state(ref), {}
+    for cid, c in cl_tr.clients.up_comps.active().items():
+        sp = c.sparsifier
+        kb[cid] = (sp.loss0, sp.loss_prev, dict(sp.last_k))
+    sp = srv_tr.server.down_comp.sparsifier
+    kb["down"] = (sp.loss0, sp.loss_prev, dict(sp.last_k))
+    assert ka == kb
+
+
+def test_wire_loopback_parity_bitwise(tmp_path):
+    """ISSUE 9 acceptance pin: an N-round run over SocketTransport (UDS,
+    real client thread speaking the framed protocol) produces a CommLedger
+    and global_vec bitwise-identical to the same schedule over
+    InMemoryTransport."""
+    from repro.fed.wire import CohortDriver, SocketTransport
+
+    ref = _ref_run()
+
+    cfg = _wire_cfg(tmp_path, "parity.sock")
+    tp = SocketTransport(cfg)
+    srv_tr = FederatedTrainer(CFG, _fed(), TC, transport=tp)
+    svc = FederationService(srv_tr)
+    cl_tr = FederatedTrainer(CFG, _fed(), TC)   # hosts the cohort's clients
+    tp.start()
+    driver = CohortDriver(cl_tr.clients, range(8), cfg)
+    driver.start()
+    try:
+        svc.run()
+        tp.broadcast_bye()
+        driver.finish(timeout=180)
+    finally:
+        driver.stop()
+        tp.close()
+
+    assert driver.rounds_trained == 2 * N
+    _assert_wire_parity(ref, srv_tr, cl_tr)
+
+
+def test_wire_daemon_crash_mid_collecting_resumes_bitwise(tmp_path):
+    """Kill the daemon mid-COLLECTING; the supervisor restarts a FRESH
+    server stack from the format-5 checkpoint and the run finishes bitwise:
+    the checkpoint carries the lifecycle phase, the open round's encoded
+    frames, and the upload dedup set, while the surviving cohort re-sends
+    its uploads into the restarted server."""
+    from repro.fed.wire import (CohortDriver, FaultPlan, SocketTransport,
+                                Supervisor)
+
+    ref = _ref_run()
+
+    cfg = _wire_cfg(tmp_path, "crash.sock")
+    ckpt_path = str(tmp_path / "daemon.ckpt")
+
+    def build():
+        tp = SocketTransport(cfg)
+        tr = FederatedTrainer(CFG, _fed(), TC, transport=tp)
+        return tr, FederationService(tr)
+
+    sup = Supervisor(build, ckpt_path, rounds=2 * N,
+                     faults=FaultPlan(crash_at=(N, "collecting")))
+    cl_tr = FederatedTrainer(CFG, _fed(), TC)
+    driver = CohortDriver(cl_tr.clients, range(8), cfg)
+    driver.start()
+    srv_tr = None
+    try:
+        srv_tr, _svc = sup.run()
+        driver.finish(timeout=180)
+    finally:
+        driver.stop()
+        if srv_tr is not None:
+            srv_tr.transport.close()
+
+    assert sup.crashes, "the injected mid-COLLECTING crash never fired"
+    assert len(sup.crashes) == 1
+    # training ran exactly once per round — the restart replayed frames and
+    # uploads, never client compute
+    assert driver.rounds_trained == 2 * N
+    _assert_wire_parity(ref, srv_tr, cl_tr)
+
+
+def test_wire_parity_with_injected_frame_faults(tmp_path):
+    """Dropped, corrupted, and truncated client frames force ACK-timeout
+    re-sends and reconnects — and change NOTHING in the result: the dedup
+    and replay rules keep the run bitwise."""
+    from repro.fed.wire import CohortDriver, FaultPlan, SocketTransport
+
+    ref = _ref_run()
+
+    cfg = _wire_cfg(tmp_path, "faulty.sock")
+    tp = SocketTransport(cfg)
+    srv_tr = FederatedTrainer(CFG, _fed(), TC, transport=tp)
+    svc = FederationService(srv_tr)
+    cl_tr = FederatedTrainer(CFG, _fed(), TC)
+    tp.start()
+    # frame 0 is the first upload (HELLO is never injected): drop one,
+    # corrupt a later one (kills the connection -> reconnect + replay)
+    faults = FaultPlan(drop=frozenset([0]), corrupt=frozenset([4]))
+    driver = CohortDriver(cl_tr.clients, range(8), cfg, faults=faults)
+    driver.start()
+    try:
+        svc.run()
+        tp.broadcast_bye()
+        driver.finish(timeout=180)
+    finally:
+        driver.stop()
+        tp.close()
+
+    assert driver.rounds_trained == 2 * N
+    _assert_wire_parity(ref, srv_tr, cl_tr)

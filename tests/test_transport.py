@@ -149,3 +149,63 @@ def test_async_rejected_for_flora():
                            rounds=1, pretrain_steps=0),
             TC, transport=SimTransport(round_mode="buffered_async",
                                        min_uploads=2))
+
+
+# ---------------------------------------------------------------------------
+# RoundClosePolicy edge cases on the EVENT clock (the wall-clock mirror of
+# these lives in tests/test_wire.py on SocketTransport + ManualClock)
+# ---------------------------------------------------------------------------
+
+def _fake_upload(cid, wire_bytes=1000):
+    from types import SimpleNamespace
+    return SimpleNamespace(client_id=cid,
+                           packet=SimpleNamespace(wire_bytes=wire_bytes))
+
+
+def test_event_clock_arrival_exactly_at_deadline_is_on_time():
+    from repro.fed.transport import RoundClosePolicy
+    tp = SimTransport(SCENARIOS["1/5"])
+    t_up = tp.sim.transfer_time(1000, up=True, cid=0)
+    # arrival total is compute + uplink (no recorded downlink this round):
+    # a deadline EQUAL to it keeps the upload on time (<=, not <)
+    policy = RoundClosePolicy(deadline_s=1.0 + t_up)
+    out = tp.dispatch_uploads(0, [_fake_upload(0)], [1.0], policy=policy)
+    assert [m.client_id for m in out] == [0]
+    assert tp.inflight() == []
+    tp.finish_round(0)
+    # one representable tick tighter and the same arrival is late
+    late_policy = RoundClosePolicy(
+        deadline_s=np.nextafter(1.0 + t_up, 0.0))
+    out = tp.dispatch_uploads(1, [_fake_upload(0)], [1.0],
+                              policy=late_policy)
+    assert out == []
+    assert [m.client_id for m in tp.inflight()] == [0]
+
+
+def test_event_clock_min_uploads_larger_than_member_count():
+    from repro.fed.transport import RoundClosePolicy
+    tp = SimTransport(SCENARIOS["1/5"])
+    msgs = [_fake_upload(c) for c in range(3)]
+    out = tp.dispatch_uploads(0, msgs, [0.1, 0.2, 0.3],
+                              policy=RoundClosePolicy(min_uploads=10))
+    # an unreachable count never blocks the round: everyone who arrived is
+    # consumed and nothing is left in flight
+    assert sorted(m.client_id for m in out) == [0, 1, 2]
+    assert tp.inflight() == []
+
+
+def test_event_clock_deadline_close_with_zero_arrivals():
+    from repro.fed.transport import RoundClosePolicy
+    tp = SimTransport(SCENARIOS["1/5"])
+    policy = RoundClosePolicy(deadline_s=0.5)
+    # nothing was ever sent: the round closes empty and costs nothing
+    assert tp.dispatch_uploads(0, [], [], policy=policy) == []
+    assert tp._round_total == 0.0
+    tp.finish_round(0)
+    # everything sent misses the deadline: still closes empty, but the
+    # round lasted until its deadline on the event clock
+    out = tp.dispatch_uploads(1, [_fake_upload(0), _fake_upload(1)],
+                              [5.0, 6.0], policy=policy)
+    assert out == []
+    assert sorted(m.client_id for m in tp.inflight()) == [0, 1]
+    assert tp._round_total == 0.5

@@ -1,0 +1,399 @@
+"""Wire-stack unit tests (DESIGN.md §13): frame codec round-trips and
+stream errors, HMAC auth gating (bad token -> clean reject, no admission),
+wall-clock ``RoundClosePolicy`` edge cases on ``SocketTransport`` driven by
+a ``ManualClock``, upload dedup/straggler semantics, and fault-plan
+determinism."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.codec import Packet, Section
+from repro.fed.protocol import (BroadcastMsg, DownloadMsg, JoinAck, JoinMsg,
+                                LeaveMsg, UploadMsg)
+from repro.fed.transport import RoundClosePolicy
+from repro.fed.wire import (FaultPlan, FrameDecoder, InjectedCrash,
+                            ManualClock, SocketTransport, WireConfig,
+                            encode_message, make_token, verify_token)
+from repro.fed.wire.auth import make_hello_token, verify_hello_token
+from repro.fed.wire.framing import (AckMsg, BadCrc, BadMagic, BadVersion,
+                                    ByeMsg, ErrorMsg, HEADER_SIZE, HelloMsg,
+                                    RoundOpen)
+from repro.fed.wire.transport import WireTimeout
+
+
+def _packet(rt=0):
+    rng = np.random.default_rng(7 + rt)
+    return Packet(
+        codec="topk_q8", stack=["sparsify", "quant"],
+        sections={"idx": Section(rng.integers(0, 255, 64, dtype=np.uint8),
+                                 64 * 8),
+                  "val": Section(rng.standard_normal(64).astype(np.float32),
+                                 64 * 32)},
+        count=64, dense_size=256, slice_=(0, 256),
+        k_used={"sparsify": 0.25}, round_t=rt,
+        local={"idx_cache": np.arange(64)})
+
+
+def _up(cid, rt):
+    return UploadMsg(cid, rt, _packet(rt), num_samples=2, local_loss=0.5)
+
+
+def _decode_one(frame):
+    dec = FrameDecoder()
+    dec.feed(frame)
+    msgs = list(dec.messages())
+    assert len(msgs) == 1
+    return msgs[0]
+
+
+# ---------------------------------------------------------------------------
+# frame codec
+# ---------------------------------------------------------------------------
+
+def test_upload_frame_roundtrip_bitwise():
+    m = _up(3, 5)
+    out, auth = _decode_one(encode_message(m))
+    assert auth is None
+    assert (out.client_id, out.round_t, out.num_samples) == (3, 5, 2)
+    assert out.local_loss == 0.5
+    pa, pb = m.packet, out.packet
+    assert (pa.codec, pa.stack, pa.count, pa.dense_size, pa.slice_,
+            pa.k_used, pa.round_t) == (pb.codec, pb.stack, pb.count,
+                                       pb.dense_size, pb.slice_, pb.k_used,
+                                       pb.round_t)
+    for name in pa.sections:
+        np.testing.assert_array_equal(pa.sections[name].data,
+                                      pb.sections[name].data)
+        assert pa.sections[name].wire_bits == pb.sections[name].wire_bits
+    # same-process shortcuts never travel (the ckpt format-4 contract)
+    assert pb.local == {}
+
+
+def test_socket_payload_matches_billed_bytes():
+    """The frame payload embeds the packet through ckpt._pack_packet: the
+    decoded packet's wire accounting is bitwise the sender's, so socket
+    bytes and ledger bytes describe the same object."""
+    m = _up(0, 1)
+    out, _ = _decode_one(encode_message(m))
+    assert out.packet.wire_bits == m.packet.wire_bits
+    assert out.packet.wire_bytes == m.packet.wire_bytes
+
+
+def test_control_frames_roundtrip():
+    cases = [
+        (HelloMsg([3, 1, 2]), "tok"),
+        (RoundOpen(4, [0, 2], gloss=1.25), None),
+        (RoundOpen(0, [1], gloss=None), None),
+        (AckMsg(7, 9), None),
+        (ErrorMsg("auth", detail="bad join token"), None),
+        (ByeMsg(reason="done"), None),
+        (JoinMsg(11, 6, capabilities=["q8", "rans"]), "jt"),
+        (JoinAck(11, 6, codec="topk_q8", bcast_version=3, rejoined=True,
+                 downlink="cdn"), None),
+        (LeaveMsg(2, 8), None),
+    ]
+    for msg, auth in cases:
+        out, got_auth = _decode_one(encode_message(msg, auth=auth))
+        assert out == msg, type(msg).__name__
+        assert got_auth == auth, type(msg).__name__
+
+
+def test_download_and_broadcast_frames_roundtrip():
+    dl = DownloadMsg(2, 3, np.arange(16, dtype=np.float32), n_missed=1,
+                     wire_bytes=512, param_count=16, bcast_version=2,
+                     codec="topk_q8", segment=1, tier="edge")
+    out, _ = _decode_one(encode_message(dl))
+    np.testing.assert_array_equal(out.view, dl.view)
+    assert (out.client_id, out.round_t, out.n_missed, out.wire_bytes,
+            out.param_count, out.bcast_version, out.codec, out.segment,
+            out.tier) == (2, 3, 1, 512, 16, 2, "topk_q8", 1, "edge")
+    bc = BroadcastMsg(3, _packet(3), segment_schedule=2)
+    out, _ = _decode_one(encode_message(bc))
+    assert out.round_t == 3 and out.segment_schedule == 2
+    np.testing.assert_array_equal(out.packet.sections["val"].data,
+                                  bc.packet.sections["val"].data)
+
+
+def test_decoder_reassembles_split_and_concatenated_frames():
+    frames = [encode_message(AckMsg(i, 0)) for i in range(3)]
+    blob = b"".join(frames)
+    dec = FrameDecoder()
+    got = []
+    for i in range(0, len(blob), 7):        # drip-feed in 7-byte chunks
+        dec.feed(blob[i:i + 7])
+        got.extend(m for m, _ in dec.messages())
+    assert [m.client_id for m in got] == [0, 1, 2]
+    assert dec.pending_bytes() == 0
+
+
+def test_decoder_rejects_corruption():
+    frame = bytearray(encode_message(AckMsg(1, 2)))
+    flipped = bytearray(frame)
+    flipped[-1] ^= 0xFF                      # payload byte -> CRC mismatch
+    dec = FrameDecoder()
+    dec.feed(bytes(flipped))
+    with pytest.raises(BadCrc):
+        list(dec.messages())
+
+    bad_magic = b"XXXX" + bytes(frame[4:])
+    dec = FrameDecoder()
+    dec.feed(bad_magic)
+    with pytest.raises(BadMagic):
+        list(dec.messages())
+
+    bad_version = bytearray(frame)
+    bad_version[4] = 99
+    dec = FrameDecoder()
+    dec.feed(bytes(bad_version))
+    with pytest.raises(BadVersion):
+        list(dec.messages())
+
+
+def test_partial_frame_waits_instead_of_raising():
+    frame = encode_message(AckMsg(1, 2))
+    dec = FrameDecoder()
+    dec.feed(frame[:HEADER_SIZE + 2])
+    assert list(dec.messages()) == []        # incomplete, not an error
+    dec.feed(frame[HEADER_SIZE + 2:])
+    assert len(list(dec.messages())) == 1
+
+
+# ---------------------------------------------------------------------------
+# auth tokens
+# ---------------------------------------------------------------------------
+
+def test_hmac_tokens():
+    t = make_token("s3cret", 4)
+    assert verify_token("s3cret", 4, t)
+    assert not verify_token("s3cret", 5, t)          # bound to the id
+    assert not verify_token("other", 4, t)           # bound to the secret
+    assert not verify_token("s3cret", 4, None)       # token required
+    assert verify_token(None, 4, None)               # auth disabled
+    h = make_hello_token("s3cret", [2, 0, 1])
+    assert verify_hello_token("s3cret", [0, 1, 2], h)   # order-insensitive
+    assert not verify_hello_token("s3cret", [0, 1], h)  # id-set-bound
+
+
+# ---------------------------------------------------------------------------
+# SocketTransport close policy on the wall clock (ManualClock-driven)
+# ---------------------------------------------------------------------------
+
+def _tp(tmp_path, **kw):
+    kw.setdefault("round_timeout_s", None)
+    cfg = WireConfig(address=str(tmp_path / "pol.sock"), poll_s=0.005, **kw)
+    clock = ManualClock()
+    tp = SocketTransport(cfg, clock=clock)
+    tp._started = True                       # policy tests never touch I/O
+    return tp, clock
+
+
+def _dispatch_bg(tp, round_t, policy):
+    """Run dispatch_uploads in a thread; returns (thread, result-box)."""
+    box = {}
+
+    def work():
+        try:
+            box["out"] = tp.dispatch_uploads(round_t, [], [], policy=policy)
+        except Exception as e:               # surfaced by the caller
+            box["err"] = e
+
+    th = threading.Thread(target=work, daemon=True)
+    th.start()
+    time.sleep(0.05)                         # let it reach the poll loop
+    return th, box
+
+
+def test_min_uploads_larger_than_member_count_closes_on_all_arrived(tmp_path):
+    tp, _ = _tp(tmp_path)
+    tp.plan_round(0, [0, 1, 2])
+    for cid in (2, 0, 1):                    # socket arrival order scrambled
+        tp._uploads.put(_up(cid, 0))
+    out = tp.dispatch_uploads(0, [], [],
+                              policy=RoundClosePolicy(min_uploads=5))
+    # closes on every-participant-arrived, not on the unreachable count —
+    # and sorts to participant order (float aggregation is order-sensitive)
+    assert [m.client_id for m in out] == [0, 1, 2]
+
+
+def test_deadline_close_with_zero_arrivals_returns_empty(tmp_path):
+    tp, clock = _tp(tmp_path)
+    tp.plan_round(0, [0, 1])
+    th, box = _dispatch_bg(tp, 0, RoundClosePolicy(deadline_s=5.0))
+    clock.advance(5.01)                      # strictly past the deadline
+    th.join(timeout=30)
+    assert box["out"] == []
+    assert tp.inflight() == []
+
+
+def test_arrival_exactly_at_deadline_is_on_time(tmp_path):
+    tp, clock = _tp(tmp_path)
+    tp.plan_round(0, [7])
+    th, box = _dispatch_bg(tp, 0, RoundClosePolicy(deadline_s=5.0))
+    clock.advance(5.0)                       # elapsed == deadline_s exactly
+    tp._uploads.put(_up(7, 0))
+    th.join(timeout=30)
+    assert [m.client_id for m in box["out"]] == [7]
+    assert tp.inflight() == []
+
+
+def test_arrival_past_deadline_becomes_straggler_then_delivers(tmp_path):
+    tp, clock = _tp(tmp_path)
+    tp.plan_round(0, [1, 2])
+    tp._uploads.put(_up(1, 0))               # on time at elapsed 0
+    th, box = _dispatch_bg(tp, 0, RoundClosePolicy(deadline_s=5.0))
+    clock.advance(5.01)
+    tp._uploads.put(_up(2, 0))               # lands past the cut
+    th.join(timeout=30)
+    assert [m.client_id for m in box["out"]] == [1]
+    assert [m.client_id for m in tp.inflight()] == [2]
+    # a duplicate re-send of an already-consumed upload is dropped
+    tp._uploads.put(_up(1, 0))
+    # next round: the straggler delivers first, then round-1 arrivals
+    tp.plan_round(1, [1, 2])
+    tp._uploads.put(_up(1, 1))
+    tp._uploads.put(_up(2, 1))
+    out = tp.dispatch_uploads(1, [], [], policy=None)
+    assert [(m.client_id, m.round_t) for m in out] \
+        == [(2, 0), (1, 1), (2, 1)]
+
+
+def test_round_timeout_guard_raises(tmp_path):
+    tp, clock = _tp(tmp_path, round_timeout_s=0.5)
+    tp.plan_round(0, [9])                    # upload that never comes
+    th, box = _dispatch_bg(tp, 0, None)
+    clock.advance(0.6)
+    th.join(timeout=30)
+    assert isinstance(box["err"], WireTimeout)
+
+
+def test_in_process_uploads_rejected(tmp_path):
+    tp, _ = _tp(tmp_path)
+    with pytest.raises(ValueError, match="socket"):
+        tp.dispatch_uploads(0, [_up(0, 0)], [0.1])
+
+
+# ---------------------------------------------------------------------------
+# socket-level auth gating (real UDS)
+# ---------------------------------------------------------------------------
+
+def _read_one(sock, timeout=10.0):
+    dec = FrameDecoder()
+    sock.settimeout(timeout)
+    while True:
+        chunk = sock.recv(65536)
+        if not chunk:
+            raise ConnectionError("closed")
+        dec.feed(chunk)
+        for m, a in dec.messages():
+            return m
+
+
+def _poll_control(tp, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        got = tp.poll_control()
+        if got:
+            return got
+        time.sleep(0.01)
+    return []
+
+
+def test_join_with_bad_token_is_cleanly_rejected(tmp_path):
+    cfg = WireConfig(address=str(tmp_path / "auth.sock"),
+                     auth_secret="hunter2", poll_s=0.005)
+    tp = SocketTransport(cfg)
+    tp.start()
+    try:
+        s = cfg.make_socket()
+        s.connect(cfg.connect_address())
+        s.sendall(encode_message(JoinMsg(5, 0), auth="wrong-token"))
+        err = _read_one(s)
+        assert isinstance(err, ErrorMsg) and err.code == "auth"
+        s.settimeout(10.0)
+        assert s.recv(1) == b""              # server dropped the connection
+        s.close()
+        # THE pin: the join never reached the control plane, so no
+        # admission and no billing-cursor mutation can have happened
+        assert tp.poll_control() == []
+
+        s2 = cfg.make_socket()
+        s2.connect(cfg.connect_address())
+        s2.sendall(encode_message(JoinMsg(5, 0),
+                                  auth=make_token("hunter2", 5)))
+        got = _poll_control(tp)
+        assert [(k, m.client_id) for k, m in got] == [("join", 5)]
+        s2.close()
+    finally:
+        tp.close()
+
+
+def test_hello_with_bad_token_is_rejected(tmp_path):
+    cfg = WireConfig(address=str(tmp_path / "hello.sock"),
+                     auth_secret="hunter2", poll_s=0.005)
+    tp = SocketTransport(cfg)
+    tp.start()
+    try:
+        s = cfg.make_socket()
+        s.connect(cfg.connect_address())
+        s.sendall(encode_message(HelloMsg([0, 1]), auth="nope"))
+        err = _read_one(s)
+        assert isinstance(err, ErrorMsg) and err.code == "auth"
+        s.close()
+        # an unauthenticated data frame is a protocol violation too
+        s2 = cfg.make_socket()
+        s2.connect(cfg.connect_address())
+        s2.sendall(encode_message(_up(0, 0)))
+        err = _read_one(s2)
+        assert isinstance(err, ErrorMsg) and err.code == "proto"
+        s2.close()
+    finally:
+        tp.close()
+
+
+def test_corrupt_frame_drops_connection_with_frame_error(tmp_path):
+    cfg = WireConfig(address=str(tmp_path / "crc.sock"), poll_s=0.005)
+    tp = SocketTransport(cfg)
+    tp.start()
+    try:
+        s = cfg.make_socket()
+        s.connect(cfg.connect_address())
+        s.sendall(encode_message(HelloMsg([0]),
+                                 auth=make_hello_token(None, [0])))
+        frame = bytearray(encode_message(_up(0, 0)))
+        frame[-1] ^= 0xFF
+        s.sendall(bytes(frame))
+        err = _read_one(s)
+        assert isinstance(err, ErrorMsg) and err.code == "frame"
+        s.close()
+    finally:
+        tp.close()
+
+
+# ---------------------------------------------------------------------------
+# fault plan determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_frame_transforms():
+    plan = FaultPlan(drop=frozenset([0]), corrupt=frozenset([1]),
+                     truncate=frozenset([2]))
+    frame = encode_message(AckMsg(1, 2))
+    assert plan.transform(0, frame) is None
+    mangled = plan.transform(1, frame)
+    dec = FrameDecoder()
+    dec.feed(mangled)
+    with pytest.raises(BadCrc):
+        list(dec.messages())
+    cut = plan.transform(2, frame)
+    assert len(cut) < len(frame)
+    assert plan.transform(3, frame) == frame     # untouched past the plan
+
+
+def test_fault_plan_crash_is_one_shot():
+    plan = FaultPlan(crash_at=(2, "collecting"))
+    plan.maybe_crash(1, "collecting")            # wrong round: no crash
+    plan.maybe_crash(2, "aggregating")           # wrong phase: no crash
+    with pytest.raises(InjectedCrash):
+        plan.maybe_crash(2, "collecting")
+    plan.maybe_crash(2, "collecting")            # consumed: restart survives
