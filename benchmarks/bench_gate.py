@@ -90,6 +90,50 @@ def compare(baseline: dict, current: dict,
     return failures, notes
 
 
+def summary_rows(baseline: dict, current: dict) -> List[Tuple]:
+    """Flatten one benchmark's snapshot pair into perf-trend table rows:
+    (bench, metric, kind, baseline, current, delta%). Metrics missing on
+    either side get a None placeholder; delta is None when not computable
+    (non-numeric, zero baseline, or a missing side)."""
+    name = baseline.get("bench", current.get("bench", "?"))
+    base_m: Dict[str, dict] = baseline.get("metrics", {})
+    cur_m: Dict[str, dict] = current.get("metrics", {})
+    rows: List[Tuple] = []
+    for key in sorted(set(base_m) | set(cur_m)):
+        bm, cm = base_m.get(key), cur_m.get(key)
+        kind = (bm or cm).get("kind", "info")
+        bv = bm["value"] if bm else None
+        cv = cm["value"] if cm else None
+        delta = None
+        try:
+            if bv is not None and cv is not None and float(bv) != 0.0:
+                delta = (float(cv) - float(bv)) / float(bv) * 100.0
+        except (TypeError, ValueError):
+            pass
+        rows.append((name, key, kind, bv, cv, delta))
+    return rows
+
+
+def render_markdown(rows: List[Tuple], title: str = "Benchmark trend") -> str:
+    """The perf-trend table the CI job drops into $GITHUB_STEP_SUMMARY."""
+    def fmt(v):
+        if v is None:
+            return "—"
+        if isinstance(v, float):
+            return f"{v:g}"
+        return str(v)
+
+    lines = [f"### {title}", "",
+             "| bench | metric | kind | baseline | current | delta % |",
+             "|---|---|---|---:|---:|---:|"]
+    for name, key, kind, bv, cv, delta in rows:
+        d = "—" if delta is None else f"{delta:+.1f}%"
+        lines.append(f"| {name} | {key} | {kind} | {fmt(bv)} | {fmt(cv)} "
+                     f"| {d} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
 def load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
@@ -112,6 +156,11 @@ def main(argv=None) -> int:
                     help="absolute slack for *_ms time metrics, in ms "
                          f"(default {DEFAULT_MS_SLACK}; runner jitter "
                          "dwarfs a relative budget at sub-ms scale)")
+    ap.add_argument("--summary",
+                    default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="append a markdown perf-trend table (bench, metric, "
+                         "baseline, current, delta %%) to this file; "
+                         "defaults to $GITHUB_STEP_SUMMARY when set")
     args = ap.parse_args(argv)
 
     base_files = sorted(glob.glob(os.path.join(args.baseline,
@@ -120,15 +169,20 @@ def main(argv=None) -> int:
         print(f"bench_gate: no baselines under {args.baseline!r}", flush=True)
         return 2
     all_failures: List[str] = []
+    all_rows: List[Tuple] = []
     for bpath in base_files:
         fname = os.path.basename(bpath)
         cpath = os.path.join(args.current, fname)
         if not os.path.exists(cpath):
-            all_failures.append(f"{fname}: baseline exists but the current "
-                                "run produced no snapshot")
+            msg = (f"{fname}: baseline exists but the current run produced "
+                   "no snapshot")
+            print(f"bench_gate FAIL  {msg}")
+            all_failures.append(msg)
             continue
-        failures, notes = compare(load(bpath), load(cpath), args.tolerance,
+        base, cur = load(bpath), load(cpath)
+        failures, notes = compare(base, cur, args.tolerance,
                                   ms_slack=args.ms_slack)
+        all_rows.extend(summary_rows(base, cur))
         for msg in notes:
             print(f"bench_gate NOTE  {msg}")
         for msg in failures:
@@ -136,6 +190,9 @@ def main(argv=None) -> int:
         if not failures:
             print(f"bench_gate OK    {fname}")
         all_failures.extend(failures)
+    if args.summary and all_rows:
+        with open(args.summary, "a") as f:
+            f.write(render_markdown(all_rows) + "\n")
     if all_failures:
         print(f"bench_gate: {len(all_failures)} regression(s) — failing")
         return 1

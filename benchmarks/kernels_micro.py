@@ -1,11 +1,18 @@
 """Kernel microbenchmarks (interpret-mode correctness-path timing on CPU;
-on TPU these are the perf-critical ops). Prints name,us_per_call,derived."""
+on TPU these are the perf-critical ops). Prints name,us_per_call,derived.
+
+``--quick`` is the CI fast-gate smoke: smaller shapes, one timed rep — it
+exists to catch import/shape/dtype breakage in the kernel entry points
+(including the device-resident batch path), not to produce stable numbers,
+so its snapshot carries info metrics only.
+"""
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, snapshot
 
 
 def timeit(fn, *args, n=3):
@@ -16,27 +23,33 @@ def timeit(fn, *args, n=3):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def main():
+def main(quick: bool = False) -> dict:
     from repro.kernels import ops
+    reps = 1 if quick else 3
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    m, k, n, r = 256, 512, 256, 16
+    m, k, n, r = (64, 128, 64, 8) if quick else (256, 512, 256, 16)
     x = jax.random.normal(ks[0], (m, k), jnp.float32)
     w = jax.random.normal(ks[1], (k, n), jnp.float32)
     a = jax.random.normal(ks[2], (k, r), jnp.float32)
     b = jax.random.normal(ks[3], (r, n), jnp.float32)
-    us = timeit(lambda: ops.lora_matmul(x, w, a, b, 2.0))
-    emit("kernels/lora_matmul", round(us, 1),
-         f"flops={2*m*k*n + 2*m*k*r + 2*m*r*n}")
+    metrics = {}
 
-    v = jax.random.normal(ks[0], (1 << 16,), jnp.float32)
+    def record(name, us, derived=""):
+        emit(f"kernels/{name}", round(us, 1), derived)
+        metrics[f"{name}_us"] = (round(us, 1), "info")
+
+    us = timeit(lambda: ops.lora_matmul(x, w, a, b, 2.0), n=reps)
+    record("lora_matmul", us, f"flops={2*m*k*n + 2*m*k*r + 2*m*r*n}")
+
+    v = jax.random.normal(ks[0], (1 << (12 if quick else 16),), jnp.float32)
     res = jnp.zeros_like(v)
-    us = timeit(lambda: ops.sparsify_residual(v, res, 0.3))
-    emit("kernels/sparsify_residual", round(us, 1), f"n={v.size}")
+    us = timeit(lambda: ops.sparsify_residual(v, res, 0.3), n=reps)
+    record("sparsify_residual", us, f"n={v.size}")
 
     # the device-resident uplink codec: batched sparsify + int8 quantize in
     # one pass (values leave the device as int8 codes + scales)
     import numpy as np
-    K, L = 10, 1 << 13
+    K, L = (4, 1 << 10) if quick else (10, 1 << 13)
     xb = np.asarray(jax.random.normal(ks[1], (K, L), jnp.float32))
     rb = np.zeros((K, L), np.float32)
     ab = np.tile(np.arange(L) % 2 == 0, (K, 1))
@@ -47,17 +60,29 @@ def main():
     # its argument) so the timing covers only the fused op, matching the
     # sparsify_residual micro above
     us = timeit(lambda: ops.sparsify_quantize_batch(xb, rb, ab, valid,
-                                                    ka, kb))
-    emit("kernels/sparsify_quantize_batch", round(us, 1), f"KxL={K}x{L}")
+                                                    ka, kb), n=reps)
+    record("sparsify_quantize_batch", us, f"KxL={K}x{L}")
 
+    # device-resident entry (DESIGN.md §14): residual stays on device and
+    # the outputs are device handles until the one host_fetch crossing
+    us = timeit(lambda: ops.host_fetch(ops.sparsify_quantize_batch_resident(
+        xb, rb, ab, valid, ka, kb)), n=reps)
+    record("sparsify_quantize_batch_resident", us, f"KxL={K}x{L}")
+
+    s = 512 if quick else 2048
     q = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
-    kk = jax.random.normal(ks[1], (2, 2048, 2, 64), jnp.float32)
-    vv = jax.random.normal(ks[2], (2, 2048, 2, 64), jnp.float32)
-    valid = jnp.arange(2048) < 1500
-    us = timeit(lambda: ops.decode_attention(q, kk, vv, valid, 4))
-    emit("kernels/decode_attention", round(us, 1), "s=2048")
-    return {}
+    kk = jax.random.normal(ks[1], (2, s, 2, 64), jnp.float32)
+    vv = jax.random.normal(ks[2], (2, s, 2, 64), jnp.float32)
+    vmask = jnp.arange(s) < int(s * 0.75)
+    us = timeit(lambda: ops.decode_attention(q, kk, vv, vmask, 4), n=reps)
+    record("decode_attention", us, f"s={s}")
+
+    snapshot("kernels_micro", metrics)
+    return metrics
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI fast-gate smoke: small shapes, one timed rep")
+    main(quick=ap.parse_args().quick)

@@ -77,20 +77,28 @@ def _time_engine_rounds(tr: FederatedTrainer, rounds: int) -> list:
 
 
 def _run(engine: str, backend: str, quick: bool):
+    from repro.kernels import ops
     cfg = get_config(MODEL).reduced()
     tc = TaskConfig(vocab_size=256, seq_len=8, n_samples=512, seed=0)
     tr = FederatedTrainer(cfg, _fed(engine, backend, quick), tc)
     tr.run(rounds=WARMUP)              # compile + caches
     # min over rounds = steady-state rate (this 2-core CI box is noisy —
     # occasional rounds stall on scheduler hiccups)
+    fetch0 = ops.host_fetch_count()
     per_round = _time_engine_rounds(tr, _rounds(quick))
-    return tr, 1.0 / min(per_round)
+    fetches = ops.host_fetch_count() - fetch0
+    return tr, 1.0 / min(per_round), fetches
 
 
 def main(quick: bool = False) -> dict:
-    serial, rps_serial = _run("serial", "numpy", quick)
-    batched, rps_batched = _run("batched", "pallas", quick)
+    serial, rps_serial, _ = _run("serial", "numpy", quick)
+    batched, rps_batched, fetches = _run("batched", "pallas", quick)
     speedup = rps_batched / rps_serial
+    rounds = _rounds(quick)
+    # device-residency contract (DESIGN.md §14): the batched pallas round
+    # makes exactly ONE counted device->host codec crossing per round — the
+    # int8/fp16 wire payload itself. Residual shards stay device-resident.
+    fetches_per_round = fetches / rounds
 
     # parity: same seeds -> same protocol state and same wire traffic
     gv_err = float(np.abs(serial.server.global_vec
@@ -105,6 +113,8 @@ def main(quick: bool = False) -> dict:
          "target >=3x at K=10 (ISSUE 1)")
     emit("round_engine/global_vec_max_err", f"{gv_err:.2e}")
     emit("round_engine/ledger_bytes_equal", bytes_equal)
+    emit("round_engine/host_fetches_per_round", f"{fetches_per_round:.2f}",
+         "device-residency contract: exactly 1 (DESIGN.md §14)")
     # snapshot BEFORE the asserts: when a smoke trips, the uploaded
     # artifact is the evidence the investigation needs
     snapshot("round_engine", {
@@ -118,9 +128,13 @@ def main(quick: bool = False) -> dict:
         "serial_rounds_per_s": (round(rps_serial, 4), "info"),
         "batched_rounds_per_s": (round(rps_batched, 4), "info"),
         "ledger_bytes_equal": (int(bytes_equal), "info"),
+        "host_fetches_per_round": (round(fetches_per_round, 3), "info"),
     })
     assert gv_err <= 1e-5, f"engine parity broken: max err {gv_err}"
     assert bytes_equal, "engine parity broken: ledger bytes differ"
+    assert fetches == rounds, \
+        (f"device-residency contract broken: {fetches} host fetches over "
+         f"{rounds} rounds (expected exactly one per round)")
     if quick:
         # CI smoke: the batched engine must stay ahead of the serial
         # reference (a lenient floor — shared CI boxes are noisy; the full

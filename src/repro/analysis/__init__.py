@@ -71,7 +71,18 @@ def analyze(paths: Sequence, rules: Optional[Sequence[str]] = None,
     for f in raw:
         (result.baselined if baseline.match(f) else
          result.findings).append(f)
-    # a --rule filter must not report out-of-scope suppressions as stale
+    # a --rule filter must not report out-of-scope suppressions as stale,
+    # and neither must a narrowed path scope: an entry for a file that was
+    # never scanned is unexercised, not paid-off debt (the CI invocation
+    # scans the union scope, so genuinely stale entries still surface there)
+    scanned = [m.path.as_posix() for m in project.modules.values()]
+
+    def _scope_has(e: BaselineEntry) -> bool:
+        b = Path(e.file).as_posix()
+        return any(a == b or a.endswith("/" + b) or b.endswith("/" + a)
+                   for a in scanned)
+
     result.stale_baseline = [e for e in baseline.stale(raw)
-                             if selected is None or e.rule in selected]
+                             if (selected is None or e.rule in selected)
+                             and _scope_has(e)]
     return result

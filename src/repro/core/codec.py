@@ -267,6 +267,10 @@ class TopKSparsify(Codec):
     # -- uniform checkpoint hooks ------------------------------------------
     def state(self) -> Dict[str, Any]:
         sp = self.sparsifier
+        # the device-resident path may hold some shards as device handles;
+        # checkpoints serialise host numpy, so this is one of the sanctioned
+        # lifecycle-transition drain points (DESIGN.md §14)
+        sp.drain_device()
         st = {"loss0": sp.loss0, "loss_prev": sp.loss_prev,
               "last_k": {k: float(v) for k, v in sp.last_k.items()},
               "shards": {f"{s}:{e}": arr
@@ -284,6 +288,7 @@ class TopKSparsify(Codec):
         sp._shards = {tuple(int(x) for x in key.split(":")):
                       np.asarray(arr, np.float32)
                       for key, arr in st["shards"].items()}
+        sp._device_shards = {}       # restored state is host-authoritative
         sp._legacy_residual = (np.asarray(st["legacy"], np.float32)
                                if st.get("legacy") is not None else None)
 
@@ -493,7 +498,13 @@ class AnsValues(Codec):
             return
         symbols = sec.data.astype(np.int16).astype(np.int64) + 128
         if symbols.size:
-            stream, model, scale_bits = rans.encode_bytes(symbols)
+            # lane count by packet size: big packets take the interleaved
+            # coder (vectorised encode), small ones stay on the scalar
+            # single-lane format — recorded in meta only when != 1 so
+            # historical packets/checkpoints decode unchanged
+            lanes = rans.lanes_for(symbols.size)
+            stream, model, scale_bits = rans.encode_bytes(symbols,
+                                                          lanes=lanes)
             if len(stream) + len(model) < sec.data.size:  # never expand
                 car.sections["values"] = Section(
                     np.frombuffer(stream, np.uint8), 8 * len(stream))
@@ -501,12 +512,16 @@ class AnsValues(Codec):
                     np.frombuffer(model, np.uint8), 8 * len(model))
                 car.meta["ans"] = {"count": int(symbols.size),
                                    "scale_bits": int(scale_bits)}
+                if lanes != 1:
+                    car.meta["ans"]["lanes"] = int(lanes)
         ssec = car.sections.get("scales")
         if ssec is None or ssec.data.size == 0:
             return
         raw = np.frombuffer(np.ascontiguousarray(
             ssec.data, np.float32).tobytes(), np.uint8)
-        stream, model, scale_bits = rans.encode_bytes(raw.astype(np.int64))
+        lanes = rans.lanes_for(raw.size)
+        stream, model, scale_bits = rans.encode_bytes(raw.astype(np.int64),
+                                                      lanes=lanes)
         if len(stream) + len(model) >= raw.size:
             return                       # raw bypass: never expand
         car.sections["scales"] = Section(
@@ -515,6 +530,8 @@ class AnsValues(Codec):
             np.frombuffer(model, np.uint8), 8 * len(model))
         car.meta["ans_scales"] = {"count": int(raw.size),
                                   "scale_bits": int(scale_bits)}
+        if lanes != 1:
+            car.meta["ans_scales"]["lanes"] = int(lanes)
 
     @classmethod
     def decode(cls, car: Carrier, pkt: Packet) -> None:
@@ -524,7 +541,8 @@ class AnsValues(Codec):
                 np.asarray(car.sections["values"].data, np.uint8).tobytes(),
                 np.asarray(car.sections["ans_model"].data,
                            np.uint8).tobytes(),
-                int(meta["count"]), int(meta["scale_bits"]))
+                int(meta["count"]), int(meta["scale_bits"]),
+                lanes=int(meta.get("lanes", 1)))
             codes = (symbols - 128).astype(np.int8)
             car.sections = dict(car.sections)
             car.sections["values"] = Section(codes, 8 * codes.size)
@@ -535,7 +553,8 @@ class AnsValues(Codec):
                 np.asarray(car.sections["scales"].data, np.uint8).tobytes(),
                 np.asarray(car.sections["ans_scales_model"].data,
                            np.uint8).tobytes(),
-                int(meta["count"]), int(meta["scale_bits"]))
+                int(meta["count"]), int(meta["scale_bits"]),
+                lanes=int(meta.get("lanes", 1)))
             scales = np.frombuffer(raw.astype(np.uint8).tobytes(),
                                    np.float32).copy()
             car.sections = dict(car.sections)

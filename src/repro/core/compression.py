@@ -99,15 +99,21 @@ def _int8_chunk(pipeline: CodecPipeline) -> Optional[int]:
     return pair[1].chunk if pair is not None else None
 
 
-def _stack_batch(comps, values_rows, slices, pad_to):
+def _stack_batch(comps, values_rows, slices, pad_to, resident: bool = False):
     """Stack K clients' slices into the padded (K, L) batch the fused
-    kernels take; reads residual shards and computes exact keep counts."""
+    kernels take; reads residual shards and computes exact keep counts.
+
+    ``resident=True`` keeps residual rows as DEVICE handles where a client
+    holds one (``AdaptiveSparsifier.device_shard``): the stacked residual is
+    then assembled device-side (``ops.stack_rows``) so last round's kernel
+    output feeds this round's kernel without a host round-trip."""
     K = len(comps)
     # a round-independent width (pad_to = widest segment) keeps the jitted
     # batched pass at ONE compilation for the whole run
     lmax = max(max(e - s for s, e in slices), pad_to or 0)
     x = np.zeros((K, lmax), np.float32)
-    res = np.zeros((K, lmax), np.float32)
+    res_rows: list = [None] * K
+    res = None if resident else np.zeros((K, lmax), np.float32)
     ab = np.zeros((K, lmax), bool)
     valid = np.zeros((K, lmax), bool)
     keep_a = np.zeros(K, np.int32)
@@ -117,7 +123,12 @@ def _stack_batch(comps, values_rows, slices, pad_to):
         n = e - s
         assert v.size == n
         x[i, :n] = v
-        res[i, :n] = sp.residual_shard(s, e)
+        if resident:
+            dev = sp.device_shard(s, e)
+            res_rows[i] = dev if dev is not None \
+                else sp.residual_shard(s, e)
+        else:
+            res[i, :n] = sp.residual_shard(s, e)
         seg_ab = sp.ab_mask[s:e]
         ab[i, :n] = seg_ab
         valid[i, :n] = True
@@ -129,30 +140,51 @@ def _stack_batch(comps, values_rows, slices, pad_to):
             keep_a[i] = keep_count(na, ks["a"])
         if nb:
             keep_b[i] = keep_count(nb, ks["b"])
+    if resident:
+        from repro.kernels import ops
+        res = ops.stack_rows(res_rows, lmax)
     return x, res, ab, valid, keep_a, keep_b
 
 
 def _compress_uplinks_one_stack(comps, values_rows, slices, round_t: int,
-                                backend: str, pad_to: Optional[int]) -> list:
-    """Batched pass for clients sharing ONE codec stack."""
+                                backend: str, pad_to: Optional[int],
+                                resident: bool = False) -> list:
+    """Batched pass for clients sharing ONE codec stack.
+
+    ``resident=True`` (pallas backend only) is the device-resident round
+    loop (DESIGN.md §14): residual rows stay on device between rounds (the
+    kernel's new-residual output is adopted as each client's next-round
+    shard without materialising), and the wire payload crosses the host
+    boundary in exactly ONE counted ``ops.host_fetch`` per batch pass —
+    byte-identical packets to the non-resident path."""
     sp_stage = comps[0].pipeline.sparsify
     if backend != "pallas" or sp_stage is None or not sp_stage.enabled:
         return [c.compress(v, round_t, slice_=s)
                 for c, v, s in zip(comps, values_rows, slices)]
 
     from repro.kernels import ops  # deferred: jax only needed on this path
-    x, res, ab, valid, keep_a, keep_b = _stack_batch(comps, values_rows,
-                                                     slices, pad_to)
+    x, res, ab, valid, keep_a, keep_b = _stack_batch(
+        comps, values_rows, slices, pad_to, resident=resident)
     chunk = _int8_chunk(comps[0].pipeline)
     pkts = []
     if chunk is not None:
         # device-resident value path: the fused kernel emits int8 codes +
         # per-chunk scales; fp32 values never cross the host boundary
-        codes, scales, new_res, mask, nz = ops.sparsify_quantize_batch(
+        fn = (ops.sparsify_quantize_batch_resident if resident
+              else ops.sparsify_quantize_batch)
+        codes, scales, new_res, mask, nz = fn(
             x, res, ab, valid, keep_a, keep_b, chunk=chunk)
+        if resident:
+            # adopt device residuals BEFORE the fetch, then make the one
+            # sanctioned crossing with everything the wire needs
+            for i, (c, (s, e)) in enumerate(zip(comps, slices)):
+                c.sparsifier.put_device_shard(s, e, new_res[i, :e - s])
+            codes, scales, mask, nz = ops.host_fetch(
+                (codes, scales, mask, nz))
         for i, (c, (s, e)) in enumerate(zip(comps, slices)):
             n = e - s
-            c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
+            if not resident:
+                c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
             m = mask[i, :n]
             mnz = nz[i, :n]
             nch = -(-int(mnz.sum()) // chunk) if mnz.any() else 0
@@ -160,14 +192,21 @@ def _compress_uplinks_one_stack(comps, values_rows, slices, round_t: int,
                 codes[i, :n][mnz], scales[i, :nch], m, mnz,
                 c.sparsifier.last_k, round_t, (s, e), chunk))
         return pkts
-    sparse, new_res, mask = ops.sparsify_topk_batch(x, res, ab, valid,
-                                                    keep_a, keep_b)
-    sparse = np.asarray(sparse)
-    new_res = np.asarray(new_res)
-    mask = np.asarray(mask)
+    fn = (ops.sparsify_topk_batch_resident if resident
+          else ops.sparsify_topk_batch)
+    sparse, new_res, mask = fn(x, res, ab, valid, keep_a, keep_b)
+    if resident:
+        for i, (c, (s, e)) in enumerate(zip(comps, slices)):
+            c.sparsifier.put_device_shard(s, e, new_res[i, :e - s])
+        sparse, mask = ops.host_fetch((sparse, mask))
+    else:
+        sparse = np.asarray(sparse)
+        new_res = np.asarray(new_res)
+        mask = np.asarray(mask)
     for i, (c, (s, e)) in enumerate(zip(comps, slices)):
         n = e - s
-        c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
+        if not resident:
+            c.sparsifier.residual_shard(s, e)[:] = new_res[i, :n]
         pkts.append(c.packetize(sparse[i, :n], mask[i, :n],
                                 c.sparsifier.last_k, round_t, (s, e)))
     return pkts
@@ -175,7 +214,8 @@ def _compress_uplinks_one_stack(comps, values_rows, slices, round_t: int,
 
 def compress_uplinks(comps, values_rows, slices, round_t: int,
                      backend: str = "numpy",
-                     pad_to: Optional[int] = None) -> list:
+                     pad_to: Optional[int] = None,
+                     resident: bool = False) -> list:
     """Compress K clients' uplink segment slices in one batched pass.
 
     ``backend="numpy"`` is the serial reference (K independent
@@ -206,12 +246,12 @@ def compress_uplinks(comps, values_rows, slices, round_t: int,
         groups.setdefault(key, []).append(i)
     if len(groups) == 1:
         return _compress_uplinks_one_stack(comps, values_rows, slices,
-                                           round_t, backend, pad_to)
+                                           round_t, backend, pad_to, resident)
     pkts: list = [None] * len(comps)
     for idxs in groups.values():
         sub = _compress_uplinks_one_stack(
             [comps[i] for i in idxs], [values_rows[i] for i in idxs],
-            [slices[i] for i in idxs], round_t, backend, pad_to)
+            [slices[i] for i in idxs], round_t, backend, pad_to, resident)
         for i, p in zip(idxs, sub):
             pkts[i] = p
     return pkts

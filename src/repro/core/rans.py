@@ -16,10 +16,25 @@ table costs less than the rate it gives up. The table rides in the packet
 so decode needs nothing but the stream. ``repro.core.codec.AnsValues`` is
 the stage that applies it to the quantized value section.
 
-Encoding walks the symbols in reverse with a scalar state machine (ANS is
-sequential by construction); numpy handles the histogram/normalisation and
-the decoder's slot table. Interleaved multi-state vectorisation is the known
-follow-up if the value stage ever dominates encode time.
+Two encoders share one model/table layer:
+
+  * the scalar reference (``encode``/``decode``): one state machine walking
+    the symbols in reverse — the wire format every existing checkpoint,
+    ledger, and benchmark baseline was produced with;
+  * the N-lane INTERLEAVED coder (``encode_interleaved``): N independent
+    rANS states round-robin over the symbol stream (symbol i -> lane
+    i % N, the ryg_rans interleaving), so the per-symbol state transform
+    and renormalisation vectorise across lanes with numpy — encode runs
+    rows of N symbols per numpy step instead of one Python-loop iteration
+    per symbol. Decode stays a table lookup per symbol, alternating lanes.
+
+Lane count 1 IS the scalar format (byte-identical, no header); lanes >= 2
+prepend a one-byte lane-count field followed by the N flushed states, so
+the stream is self-describing and a mismatched/truncated lane header fails
+loudly instead of mis-decoding. ``lanes_for`` picks the lane count from the
+stream length: short packets stay scalar (the interleave overhead — one
+header byte plus 4 bytes of flushed state per extra lane — would cost more
+than vectorisation saves), long packets scale up to ``MAX_LANES``.
 """
 from __future__ import annotations
 
@@ -32,6 +47,22 @@ import numpy as np
 MAX_SCALE_BITS = 12              # frequency table resolution ceiling
 RANS_L = 1 << 23                 # normalised state lower bound
 _STATE_BYTES = 4
+MAX_LANES = 255                  # the lane-count header field is one byte
+
+# interleave schedule: (minimum stream length, lane count) — descending.
+# The floor keeps every packet the quick benchmark profiles emit (and every
+# historical checkpoint/ledger) on the scalar single-lane format; the lane
+# count grows with the stream so the fixed 1 + 4*N byte overhead stays well
+# under 1% of the encoded size.
+_LANE_SCHEDULE = ((1 << 17, 255), (1 << 15, 64), (1 << 13, 16))
+
+
+def lanes_for(count: int) -> int:
+    """Lane count for a ``count``-symbol stream (1 = the scalar format)."""
+    for floor, lanes in _LANE_SCHEDULE:
+        if count >= floor:
+            return lanes
+    return 1
 
 
 def scale_bits_for(count: int) -> int:
@@ -71,19 +102,30 @@ def normalize_freqs(counts: np.ndarray, scale_bits: int) -> np.ndarray:
     return f.astype(np.int64)
 
 
+def _per_symbol_tables(symbols: np.ndarray, freqs: np.ndarray,
+                       scale_bits: int):
+    """Per-symbol (freq, cum, renorm bound) gathers shared by both encoders,
+    with the zero-frequency guard."""
+    cum = np.concatenate([[0], np.cumsum(freqs)])
+    f = freqs[symbols]
+    if f.size and int(f.min()) == 0:
+        bad = int(symbols[int(np.argmin(f))])
+        raise ValueError(f"symbol {bad} has zero model frequency")
+    c = cum[symbols]
+    x_max = ((RANS_L >> scale_bits) << 8) * f
+    return f, c, x_max
+
+
 def encode(symbols: np.ndarray, freqs: np.ndarray, scale_bits: int) -> bytes:
     """rANS-encode ``symbols`` (ints in [0, len(freqs))) under the
     normalized model ``freqs`` (sum == 1 << scale_bits, freq >= 1 wherever a
     symbol occurs). Returns the byte stream the decoder reads FORWARD."""
     symbols = np.asarray(symbols, np.int64)
     freqs = np.asarray(freqs, np.int64)
-    cum = np.concatenate([[0], np.cumsum(freqs)])
-    f = freqs[symbols].tolist()        # per-symbol freq/cum/renorm bound,
-    c = cum[symbols].tolist()          # precomputed; python lists keep the
-    if min(f, default=1) == 0:         # sequential loop off numpy scalars
-        bad = int(symbols[int(np.argmin(freqs[symbols]))])
-        raise ValueError(f"symbol {bad} has zero model frequency")
-    x_max = (((RANS_L >> scale_bits) << 8) * freqs[symbols]).tolist()
+    fa, ca, xma = _per_symbol_tables(symbols, freqs, scale_bits)
+    f = fa.tolist()                    # python lists keep the sequential
+    c = ca.tolist()                    # loop off numpy scalars
+    x_max = xma.tolist()
     out = bytearray()
     x = RANS_L
     for i in range(len(f) - 1, -1, -1):        # ANS encodes in reverse
@@ -130,6 +172,123 @@ def decode(data: bytes, freqs: np.ndarray, count: int,
 
 
 # ---------------------------------------------------------------------------
+# interleaved N-lane coder
+# ---------------------------------------------------------------------------
+
+def encode_interleaved(symbols: np.ndarray, freqs: np.ndarray,
+                       scale_bits: int, lanes: int) -> bytes:
+    """N-lane interleaved rANS encode: symbol i belongs to lane i % lanes
+    and the lanes advance in lockstep, so each numpy step encodes one ROW of
+    ``lanes`` symbols (gathered freq/cum/bound, two vectorised renorm byte
+    extractions — the 32-bit state and the >= 2^19 renorm bound cap renorm
+    at two bytes per symbol — and one vectorised divmod state transform).
+
+    ``lanes == 1`` is byte-identical to the scalar ``encode`` stream (no
+    header); ``lanes >= 2`` produce ``[lanes:1][state_0..state_{N-1}:4N]``
+    followed by the interleaved renorm bytes in decode order. The emission
+    order is the exact time-reversal of ``decode_interleaved``'s forward
+    read, i.e. the format the scalar coder would produce if it kept N
+    states — the lane count is the only wire-format degree of freedom."""
+    if not 1 <= lanes <= MAX_LANES:
+        raise ValueError(f"lane count {lanes} outside [1, {MAX_LANES}]")
+    if lanes == 1:
+        return encode(symbols, freqs, scale_bits)
+    symbols = np.asarray(symbols, np.int64)
+    freqs = np.asarray(freqs, np.int64)
+    f_all, c_all, xm_all = _per_symbol_tables(symbols, freqs, scale_bits)
+    ff_all = f_all.astype(np.float64)
+    n = symbols.size
+    rows = -(-n // lanes)               # the last row may be partial
+    x = np.full(lanes, RANS_L, np.int64)
+    lo = np.zeros((rows, lanes), np.uint8)     # first renorm byte (x & 0xFF)
+    hi = np.zeros((rows, lanes), np.uint8)     # second renorm byte
+    m_lo = np.zeros((rows, lanes), bool)
+    m_hi = np.zeros((rows, lanes), bool)
+    for r in range(rows - 1, -1, -1):          # ANS encodes in reverse
+        s0 = r * lanes
+        w = min(lanes, n - s0)
+        fr = f_all[s0:s0 + w]
+        xm = xm_all[s0:s0 + w]
+        xr = x[:w]
+        b0 = xr >= xm
+        lo[r, :w] = xr & 0xFF
+        xr = np.where(b0, xr >> 8, xr)
+        b1 = xr >= xm                          # b1 implies b0
+        hi[r, :w] = xr & 0xFF
+        xr = np.where(b1, xr >> 8, xr)
+        m_lo[r, :w] = b0
+        m_hi[r, :w] = b1
+        # exact integer division via float64: the post-renorm state is
+        # < 2^31 and freq >= 1, so the correctly-rounded f64 quotient can
+        # never straddle an integer boundary (r/f >= 2^-12 whenever the
+        # remainder is nonzero, vs an ulp of at most 2^-22 at q < 2^30) —
+        # and it vectorises ~3x faster than int64 divmod
+        q = (xr / ff_all[s0:s0 + w]).astype(np.int64)
+        x[:w] = (q << scale_bits) + (xr - q * fr) + c_all[s0:s0 + w]
+    # decoder-forward order: rows ascending, lanes ascending, and within a
+    # symbol the SECOND-emitted byte reads first (the refill shifts it into
+    # the higher position) — the exact reversal of the reverse-order walk
+    body = np.stack([hi, lo], axis=2)
+    keep = np.stack([m_hi, m_lo], axis=2)
+    head = bytearray([lanes])
+    for j in range(lanes):                     # lane 0's state reads first
+        head += int(x[j]).to_bytes(_STATE_BYTES, "big")
+    return bytes(head) + body.reshape(-1)[keep.reshape(-1)].tobytes()
+
+
+def decode_interleaved(data: bytes, freqs: np.ndarray, count: int,
+                       scale_bits: int, lanes: int) -> np.ndarray:
+    """Decode ``count`` symbols from an ``encode_interleaved`` stream: one
+    table lookup per symbol, alternating lanes (symbol i reads lane
+    i % lanes), refilling whichever lane drops below ``RANS_L`` — the
+    single forward byte cursor is shared by all lanes.
+
+    Raises ``ValueError`` when the stream is too short to hold the lane
+    header + flushed states or its lane-count field disagrees with the
+    packet metadata, so corruption/truncation fails loudly instead of
+    mis-decoding."""
+    if not 1 <= lanes <= MAX_LANES:
+        raise ValueError(f"lane count {lanes} outside [1, {MAX_LANES}]")
+    if lanes == 1:
+        return decode(data, freqs, count, scale_bits)
+    data = bytes(data)
+    if len(data) < 1 + _STATE_BYTES * lanes:
+        raise ValueError("truncated ANS lane stream")
+    if data[0] != lanes:
+        raise ValueError(
+            f"corrupt ANS lane header: stream says {data[0]} lane(s), "
+            f"metadata says {lanes}")
+    freqs = np.asarray(freqs, np.int64)
+    cumf = np.concatenate([[0], np.cumsum(freqs)])
+    slots = np.repeat(np.arange(freqs.size), freqs).tolist()
+    fl = freqs.tolist()
+    cl = cumf.tolist()
+    pos = 1
+    xs = [0] * lanes
+    for j in range(lanes):
+        x = 0
+        for _ in range(_STATE_BYTES):
+            x = (x << 8) | data[pos]
+            pos += 1
+        xs[j] = x
+    mask = (1 << scale_bits) - 1
+    n_data = len(data)
+    out = [0] * count
+    for i in range(count):
+        j = i % lanes
+        x = xs[j]
+        slot = x & mask
+        s = slots[slot]
+        out[i] = s
+        x = fl[s] * (x >> scale_bits) + slot - cl[s]
+        while x < RANS_L and pos < n_data:
+            x = (x << 8) | data[pos]
+            pos += 1
+        xs[j] = x
+    return np.asarray(out, np.int64)
+
+
+# ---------------------------------------------------------------------------
 # model (frequency table) serialization
 # ---------------------------------------------------------------------------
 
@@ -148,17 +307,22 @@ def unpack_model(blob: bytes, n_symbols: int, scale_bits: int) -> np.ndarray:
     return f
 
 
-def encode_bytes(symbols: np.ndarray, n_symbols: int = 256
+def encode_bytes(symbols: np.ndarray, n_symbols: int = 256, lanes: int = 1
                  ) -> Tuple[bytes, bytes, int]:
-    """Histogram + encode in one call: (stream, packed_model, scale_bits)."""
+    """Histogram + encode in one call: (stream, packed_model, scale_bits).
+    ``lanes == 1`` (the default) is the historical scalar wire format;
+    callers opting into the interleaved coder pick a count with
+    ``lanes_for`` and must carry it to ``decode_bytes``."""
     symbols = np.asarray(symbols, np.int64)
     bits = scale_bits_for(symbols.size)
     counts = np.bincount(symbols, minlength=n_symbols)
     freqs = normalize_freqs(counts, bits)
-    return encode(symbols, freqs, bits), pack_model(freqs), bits
+    return (encode_interleaved(symbols, freqs, bits, lanes),
+            pack_model(freqs), bits)
 
 
 def decode_bytes(stream: bytes, model: bytes, count: int, scale_bits: int,
-                 n_symbols: int = 256) -> np.ndarray:
-    return decode(stream, unpack_model(model, n_symbols, scale_bits), count,
-                  scale_bits)
+                 n_symbols: int = 256, lanes: int = 1) -> np.ndarray:
+    return decode_interleaved(stream,
+                              unpack_model(model, n_symbols, scale_bits),
+                              count, scale_bits, lanes)

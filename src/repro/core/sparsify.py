@@ -13,7 +13,7 @@ and is re-offered next round, so every update is eventually sent.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -120,6 +120,14 @@ class AdaptiveSparsifier:
     lifetime must not overlap (they are the fixed segment partition, or the
     full vector for the downlink); a full dense vector loaded from a legacy
     checkpoint seeds shards lazily via ``_legacy_residual``.
+
+    Under the device-resident uplink path (DESIGN.md §14) a shard may
+    instead live as an opaque DEVICE handle in ``_device_shards`` — the
+    fused kernel's new-residual output adopted without a host round-trip.
+    A device handle is authoritative for its span; any host-side access
+    (``residual_shard``, the ``residual`` property, checkpointing) first
+    DRAINS it back to a numpy shard, so the two stores never disagree and
+    non-resident callers see exactly the legacy behaviour.
     """
     cfg: SparsifyConfig
     ab_mask: np.ndarray           # bool, True where entry is from an A matrix
@@ -129,6 +137,10 @@ class AdaptiveSparsifier:
     fixed_k: Optional[float] = None
     _shards: Dict[Tuple[int, int], np.ndarray] = field(default_factory=dict)
     _legacy_residual: Optional[np.ndarray] = None
+    # span -> opaque device array (jax.Array on an accelerator; any
+    # __array__-convertible object works). Kept out of the numpy store so
+    # draining is explicit and countable.
+    _device_shards: Dict[Tuple[int, int], Any] = field(default_factory=dict)
 
     def observe_loss(self, loss: float) -> None:
         if self.loss0 is None:
@@ -144,11 +156,36 @@ class AdaptiveSparsifier:
                 "b": adaptive_k(self.cfg, l0, lp, "b")}
 
     # -- residual shards ----------------------------------------------------
+    def device_shard(self, start: int, end: int):
+        """The device-resident handle for [start, end), or None. Hot-path
+        read for the resident kernel batch; does NOT drain."""
+        return self._device_shards.get((start, end))
+
+    def put_device_shard(self, start: int, end: int, handle) -> None:
+        """Adopt ``handle`` (a device array) as the authoritative residual
+        for [start, end). The host shard for the span — now stale — is
+        dropped; the next host-side access drains the handle back."""
+        self._shards.pop((start, end), None)
+        self._device_shards[(start, end)] = handle
+
+    def drain_device(self) -> None:
+        """Materialise every device-resident shard back into the numpy
+        store (a host transfer per shard — a lifecycle-transition cost, paid
+        at checkpoint/legacy access, never per round). ``np.array`` forces a
+        WRITABLE copy: dlpack-shared views from a device buffer are
+        read-only, and shard arrays are mutated in place."""
+        for key, h in list(self._device_shards.items()):
+            self._shards[key] = np.array(h, np.float32)
+        self._device_shards.clear()
+
     def residual_shard(self, start: int, end: int) -> np.ndarray:
         """The [start, end) residual shard, zero-allocated on first touch
         (seeded from a legacy dense vector if one was loaded). The returned
         array IS the state — callers update it in place."""
         key = (start, end)
+        dev = self._device_shards.pop(key, None)
+        if dev is not None:
+            self._shards[key] = np.array(dev, np.float32)
         arr = self._shards.get(key)
         if arr is None:
             if self._legacy_residual is not None:
@@ -169,6 +206,7 @@ class AdaptiveSparsifier:
     def residual(self) -> Optional[np.ndarray]:
         """Dense materialisation (None if never touched) — checkpoint legacy
         layout and tests; hot paths use ``residual_shard``."""
+        self.drain_device()
         if not self._shards and self._legacy_residual is None:
             return None
         out = (np.array(self._legacy_residual, np.float32)
@@ -181,15 +219,20 @@ class AdaptiveSparsifier:
     @residual.setter
     def residual(self, value: Optional[np.ndarray]) -> None:
         self._shards = {}
+        self._device_shards = {}
         self._legacy_residual = (None if value is None
                                  else np.array(value, np.float32))
 
     def residual_nbytes(self) -> int:
-        n = sum(a.nbytes for a in self._shards.values())
+        # device shards counted by span (4 bytes/f32 element) WITHOUT
+        # draining — the byte census must not silently end residency
+        n = sum(a.nbytes for a in self._shards.values()) \
+            + 4 * sum(e - s for (s, e) in self._device_shards)
         if self._legacy_residual is not None:
             # spans already sharded were seeded FROM the legacy vector —
             # don't count them twice
-            covered = 4 * sum(a.size for a in self._shards.values())
+            covered = 4 * (sum(a.size for a in self._shards.values())
+                           + sum(e - s for (s, e) in self._device_shards))
             n += max(self._legacy_residual.nbytes - covered, 0)
         return int(n)
 

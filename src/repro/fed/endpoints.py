@@ -15,6 +15,8 @@ broadcast catch-up); there is exactly one round implementation now.
 """
 from __future__ import annotations
 
+import copy
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -77,19 +79,75 @@ class ServerEndpoint:
         # checkpoint format 3 persists) and answered in DownloadMsg.codec
         self.negotiator = protocol.make_negotiator()
         self.codec_table: Dict[int, str] = {}
+        # encode-overlap staging (DESIGN.md §14): stage_broadcast() encodes
+        # next round's delta on a worker thread while training proceeds;
+        # begin_round() adopts the staged packet only if nothing that feeds
+        # the encode changed in between (_down_version tracks mutations of
+        # the downlink compressor's adaptive schedule)
+        self._staged: Optional[dict] = None
+        self._down_version = 0
+        self._staged_hits = 0           # instrumentation: adopted encodes
         # the broadcast distribution plane (DESIGN.md §11): capability-
         # tiered multicast encoding, per-tier exact billing, and the
         # encoded-delta cache. Single-tier default = pure bookkeeping.
         self.distribution = DistributionPlane(protocol, config=distribution)
 
     # -- round lifecycle ----------------------------------------------------
+    def stage_broadcast(self, round_t: int) -> None:
+        """Start encoding round ``round_t``'s broadcast on a worker thread.
+
+        The encode runs against a deepcopy of the downlink compressor (its
+        residual/schedule state mutates during compress), so the staged
+        result is only adopted by ``begin_round`` if the inputs are still
+        exactly what they were at staging time: same round, same
+        ``global_vec`` / ``last_broadcast`` array identities, and no
+        intervening downlink-compressor mutation (``_down_version``). On
+        any miss the clone is discarded and ``begin_round`` encodes
+        synchronously — bitwise identical either way."""
+        if self._staged is not None:        # one staged encode at a time
+            self._staged["thread"].join()
+        clone = copy.deepcopy(self.down_comp)
+        delta = self.global_vec - self.last_broadcast
+        staged = {"round_t": int(round_t), "gvec": self.global_vec,
+                  "base": self.last_broadcast, "version": self._down_version,
+                  "comp": clone, "delta": delta, "pkt": None}
+
+        def _encode():
+            staged["pkt"] = clone.compress(delta, int(round_t))
+
+        staged["thread"] = threading.Thread(target=_encode, daemon=True)
+        staged["thread"].start()
+        self._staged = staged
+
+    def _consume_staged(self, round_t: int):
+        """Adopt the staged encode if still valid; None forces the
+        synchronous path."""
+        staged, self._staged = self._staged, None
+        if staged is None:
+            return None
+        staged["thread"].join()
+        if (staged["round_t"] == round_t
+                and staged["gvec"] is self.global_vec
+                and staged["base"] is self.last_broadcast
+                and staged["version"] == self._down_version
+                and staged["pkt"] is not None):
+            # the clone carried the compressor's state forward; adopt it
+            self.down_comp = staged["comp"]
+            self._staged_hits += 1
+            return staged["delta"], staged["pkt"]
+        return None
+
     def begin_round(self, round_t: Optional[int] = None) -> BroadcastMsg:
         """Server -> clients: compressed delta of global vs last broadcast."""
         t = self.round_t if round_t is None else round_t
         self.round_t = t
         eco = self.protocol.eco
-        delta = self.global_vec - self.last_broadcast
-        pkt = self.down_comp.compress(delta, t)
+        hit = self._consume_staged(t)
+        if hit is not None:
+            delta, pkt = hit
+        else:
+            delta = self.global_vec - self.last_broadcast
+            pkt = self.down_comp.compress(delta, t)
         if (self.protocol.codec is not None) or (eco and eco.compress_download):
             # lossy downlink pipeline: the broadcast base advances by what
             # the clients actually decode, so views never drift
@@ -230,6 +288,7 @@ class ServerEndpoint:
         the stacked-module download already delivered the new state)."""
         self.global_vec = np.asarray(vec, np.float32).copy()
         self.last_broadcast = self.global_vec.copy()
+        self._down_version += 1          # invalidate any staged encode
         self._bcast_count = 0
         self._cum_stats[:] = 0
         self.client_sync[:] = 0
@@ -237,6 +296,7 @@ class ServerEndpoint:
         self.distribution.reset()
 
     def observe_global_loss(self, loss: float) -> None:
+        self._down_version += 1          # schedule moved: staged encode stale
         self.down_comp.observe_loss(loss)
         self.distribution.observe_loss(loss)
 
@@ -527,7 +587,11 @@ class ClientRuntime:
                                               batches)
         per_s = (fed.compute_model_s
                  or self.batched_train.last_s / max(k, 1))
-        trained_vecs = self.protocol.tree_to_vec_batch(jax.device_get(loras))
+        # one transfer for trained params + losses (not two): the training
+        # side of the round's host traffic, distinct from the codec-side
+        # crossing counted by ops.host_fetch (DESIGN.md §14)
+        loras, losses = jax.device_get((loras, losses))
+        trained_vecs = self.protocol.tree_to_vec_batch(loras)
         n_samples = [self.parts[cid].size for cid in sampled]
         msgs = self.make_uploads_batch(sampled, t, trained_vecs, start_vecs,
                                        n_samples, np.asarray(losses))

@@ -219,7 +219,8 @@ class WireProtocol:
 
     def __init__(self, full_spec, eco, backend: str = "numpy",
                  b_only: bool = False,
-                 codec: Optional[CodecConfig] = None):
+                 codec: Optional[CodecConfig] = None,
+                 resident: bool = False):
         self.full_spec = list(full_spec)
         self.b_only = b_only
         self.spec = ([s for s in self.full_spec if s[0].endswith("/b")]
@@ -229,6 +230,9 @@ class WireProtocol:
         # eco normalized exactly like the strategies did: disabled == absent
         self.eco = eco if (eco and eco.enabled) else None
         self.backend = backend
+        # device-resident round loop (DESIGN.md §14): residual shards live
+        # on device between rounds; only meaningful with backend="pallas"
+        self.resident = bool(resident) and backend == "pallas"
         if codec is not None:
             codec.validate()
         self.codec = codec
@@ -236,9 +240,11 @@ class WireProtocol:
     @classmethod
     def for_method(cls, method: str, lora_template: Params, eco,
                    backend: str = "numpy",
-                   codec: Optional[CodecConfig] = None) -> "WireProtocol":
+                   codec: Optional[CodecConfig] = None,
+                   resident: bool = False) -> "WireProtocol":
         return cls(tree_spec(lora_template), eco, backend=backend,
-                   b_only=(method == "ffa_lora"), codec=codec)
+                   b_only=(method == "ffa_lora"), codec=codec,
+                   resident=resident)
 
     # -- segment schedule ---------------------------------------------------
     @property
@@ -357,7 +363,8 @@ class WireProtocol:
         """One (K, seg) sparsify+encode pass (fused on backend='pallas')."""
         return compress_uplinks(comps, values_rows, slices, round_t,
                                 backend=self.backend,
-                                pad_to=self.max_segment_len)
+                                pad_to=self.max_segment_len,
+                                resident=self.resident)
 
     # -- tree <-> protocol vector ------------------------------------------
     def tree_to_vec(self, tree: Params) -> np.ndarray:

@@ -62,10 +62,17 @@ class ServiceConfig:
     semantics). ``measured_overhead=True`` bills host walltime into the
     simulated clock (the batch shim's legacy behaviour); service mode
     defaults to a deterministic zero overhead so the event clock — and
-    therefore a checkpoint resume — is bitwise reproducible."""
+    therefore a checkpoint resume — is bitwise reproducible.
+
+    ``overlap_encode=True`` stages the NEXT round's broadcast encode on a
+    worker thread as soon as aggregation lands, overlapping it with the
+    round-close work (eval, logging, transport teardown). The staged packet
+    is adopted only when provably unchanged inputs reach ``begin_round``
+    (DESIGN.md §14) — results are bitwise identical either way."""
     min_uploads: Optional[int] = None
     deadline_s: Optional[float] = None
     measured_overhead: bool = False
+    overlap_encode: bool = False
 
     def close_policy(self) -> Optional[RoundClosePolicy]:
         if self.min_uploads is None and self.deadline_s is None:
@@ -226,6 +233,12 @@ class RoundLifecycle:
         updates = tr.server.end_round(t)
         if tr.policy.merges_into_base:
             tr._flora_merge_and_reinit(t, self._participants, updates)
+        elif self.svc.cfg.overlap_encode:
+            # global_vec for round t+1 is final here: stage its broadcast
+            # encode on a worker thread so it overlaps close_round's eval
+            # and logging (merge-into-base policies re-anchor the base in
+            # the merge, so their delta is not final yet — skip)
+            tr.server.stage_broadcast(t + 1)
         self.phase = self.BROADCAST
 
     # -- BROADCAST: close timing, eval cadence, log, publish ----------------

@@ -60,6 +60,11 @@ class FedConfig:
     pretrain_lr: float = 3e-3
     engine: str = "batched"            # batched (one vmapped call/round) | serial
     backend: str = "numpy"             # uplink sparsify backend: numpy | pallas
+    # device-resident round loop (DESIGN.md §14): residual shards stay on
+    # device between rounds and only the wire payload crosses to host.
+    # None = follow the backend (on for pallas, off for numpy); True
+    # requires backend="pallas".
+    device_resident: Optional[bool] = None
     sampler: str = "uniform"           # uniform | weighted | availability
     sampler_kw: Optional[Dict[str, Any]] = None  # extra sampler args
     state_store: str = "cow"           # cow (O(active)) | dense (legacy)
@@ -91,6 +96,10 @@ class FedConfig:
         if self.backend not in _BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r} "
                              "(expected 'numpy' or 'pallas')")
+        if self.device_resident and self.backend != "pallas":
+            raise ValueError(
+                "device_resident=True requires backend='pallas': the "
+                "numpy backend has no device buffers to keep resident")
         if self.sampler not in SAMPLERS:
             raise ValueError(f"unknown sampler {self.sampler!r} "
                              f"(expected one of {sorted(SAMPLERS)})")
@@ -205,9 +214,12 @@ class FederatedTrainer:
                                     fed.clients_per_round, fed.seed, **skw)
 
         # ---- the three federation layers: protocol, endpoints, transport ----
+        resident = (fed.device_resident if fed.device_resident is not None
+                    else fed.backend == "pallas")
         self.protocol = WireProtocol.for_method(fed.method, self.lora0,
                                                 fed.eco, backend=fed.backend,
-                                                codec=fed.codec)
+                                                codec=fed.codec,
+                                                resident=resident)
         self.policy = make_policy(
             fed.method, server_vec_cap=fed.flora_server_vec_cap,
             product_fn=((lambda v: lora_product_vec(self.protocol,

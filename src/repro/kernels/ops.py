@@ -16,6 +16,45 @@ from repro.kernels import sparsify as _sp
 
 INTERPRET = jax.default_backend() != "tpu"
 
+# ---------------------------------------------------------------------------
+# the sanctioned device->host boundary
+# ---------------------------------------------------------------------------
+# The device-resident round loop (DESIGN.md §14) funnels every wire-payload
+# transfer through host_fetch so the crossing count is observable: exactly
+# ONE fetch per codec batch pass per round (the int8 codes / fp16 sparse
+# values + masks that actually go on the wire). benchmarks/round_engine.py
+# asserts the per-round delta; anything else reading device state on the hot
+# path is a regression the counter makes visible.
+_HOST_FETCHES = 0
+
+
+def host_fetch(tree):
+    """Materialise ``tree`` (any pytree of device arrays) on the host in one
+    counted transfer. THE sanctioned per-round device->host crossing of the
+    resident uplink path — all payload arrays ride a single call."""
+    global _HOST_FETCHES
+    _HOST_FETCHES += 1
+    return jax.device_get(tree)
+
+
+def host_fetch_count() -> int:
+    """Monotone count of sanctioned crossings (read deltas, never reset)."""
+    return _HOST_FETCHES
+
+
+def stack_rows(rows, width: int):
+    """Stack variable-length 1-D rows into a zero-padded (K, width) f32
+    batch WITHOUT forcing device rows through the host: device-side
+    pad+stack on a real accelerator; plain numpy under CPU interpret, where
+    host and device are the same memory."""
+    if INTERPRET:
+        out = np.zeros((len(rows), width), np.float32)
+        for i, r in enumerate(rows):
+            out[i, :r.shape[0]] = np.asarray(r)
+        return out
+    return jnp.stack([jnp.pad(jnp.asarray(r, jnp.float32),
+                              (0, width - r.shape[0])) for r in rows])
+
 
 def lora_matmul(x, w, a, b, scale: float, **kw):
     """Fused y = x @ w + (x @ a) @ b * scale. Accepts (..., K) x; flattens
@@ -143,6 +182,70 @@ def sparsify_quantize_batch(x, residual, ab_mask, valid, keep_a, keep_b,
                 c, sc = quantize(s[i][kept], qcfg)
                 codes[i][kept] = c.astype(np.int8)
                 scales[i, :sc.size] = sc
+    return (codes[:, :n], scales[:, :n_chunks], nr[:, :n], mask[:, :n],
+            nz[:, :n])
+
+
+def _pad_batch_device(x, residual, ab_mask, valid, block):
+    """Device-side half of ``_pad_batch`` for the resident entries: x and
+    residual pad with jnp (they may be device arrays and must stay put);
+    the bool group masks are host metadata and pad with numpy."""
+    n = np.shape(x)[1]
+    block = min(block, n)
+    pad = (-n) % block
+    wide = ((0, 0), (0, pad))
+    xp = jnp.pad(jnp.asarray(x, jnp.float32), wide)
+    rp = jnp.pad(jnp.asarray(residual, jnp.float32), wide)
+    ab = np.asarray(ab_mask, bool)
+    va = np.asarray(valid, bool)
+    gm_a = np.pad(ab & va, wide)
+    gm_b = np.pad(~ab & va, wide)
+    return xp, rp, gm_a, gm_b, block
+
+
+def sparsify_topk_batch_resident(x, residual, ab_mask, valid, keep_a,
+                                 keep_b, **kw):
+    """Device-in/device-out ``sparsify_topk_batch``: accepts device arrays
+    for ``x``/``residual`` (host numpy also fine), returns DEVICE handles —
+    no np.asarray on the outputs. On a real accelerator the donated jit
+    consumes the padded residual buffer; callers keep ``new_residual[i]``
+    slices as next round's device-resident shards and fetch only the wire
+    payload (sparse values + mask) via ``host_fetch``. Under CPU interpret
+    the numerics route through the exact numpy fallback of
+    ``sparsify_topk_batch`` — bit-identical wire bytes either way."""
+    if INTERPRET:
+        return sparsify_topk_batch(np.asarray(x), np.asarray(residual),
+                                   ab_mask, valid, keep_a, keep_b, **kw)
+    n = np.shape(x)[1]
+    xp, rp, gm_a, gm_b, block = _pad_batch_device(
+        x, residual, ab_mask, valid, kw.pop("block", 1024))
+    s, nr, mask = _sp.topk_sparsify_batch_donated(
+        xp, rp, jnp.asarray(gm_a), jnp.asarray(gm_b),
+        jnp.asarray(keep_a, jnp.int32), jnp.asarray(keep_b, jnp.int32),
+        block=block, interpret=False, **kw)
+    return s[:, :n], nr[:, :n], mask[:, :n]
+
+
+def sparsify_quantize_batch_resident(x, residual, ab_mask, valid, keep_a,
+                                     keep_b, chunk: int = 2048, **kw):
+    """Device-in/device-out ``sparsify_quantize_batch`` (see
+    ``sparsify_topk_batch_resident`` for the contract): the fused
+    sparsify+int8 pass consumes possibly-device inputs and returns device
+    handles, donating the residual buffer on real accelerators. The single
+    sanctioned host crossing is the caller's ``host_fetch`` of (codes,
+    scales, mask, nzmask) — the bytes that actually go on the wire."""
+    if INTERPRET:
+        return sparsify_quantize_batch(np.asarray(x), np.asarray(residual),
+                                       ab_mask, valid, keep_a, keep_b,
+                                       chunk=chunk, **kw)
+    n = np.shape(x)[1]
+    n_chunks = -(-n // chunk)
+    xp, rp, gm_a, gm_b, block = _pad_batch_device(
+        x, residual, ab_mask, valid, kw.pop("block", 1024))
+    codes, scales, nr, mask, nz = _sp.sparsify_quantize_batch_donated(
+        xp, rp, jnp.asarray(gm_a), jnp.asarray(gm_b),
+        jnp.asarray(keep_a, jnp.int32), jnp.asarray(keep_b, jnp.int32),
+        chunk=chunk, block=block, interpret=False, **kw)
     return (codes[:, :n], scales[:, :n_chunks], nr[:, :n], mask[:, :n],
             nz[:, :n])
 

@@ -178,20 +178,31 @@ def grouped_topk_mask(offered: jnp.ndarray, group_masks, keeps) -> jnp.ndarray:
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def topk_sparsify_batch(x: jnp.ndarray, residual: jnp.ndarray,
-                        gm_a: jnp.ndarray, gm_b: jnp.ndarray,
-                        keep_a: jnp.ndarray, keep_b: jnp.ndarray,
-                        *, block: int = 1024, interpret: bool = True):
-    """One jitted pass for a whole round's uplink compression: the batched
-    (K, L) threshold/rank selection followed by the fused masked kernel.
-    Inputs must be pre-padded to L % block == 0 (pad with gm_a=gm_b=False).
+def _topk_sparsify_batch(x: jnp.ndarray, residual: jnp.ndarray,
+                         gm_a: jnp.ndarray, gm_b: jnp.ndarray,
+                         keep_a: jnp.ndarray, keep_b: jnp.ndarray,
+                         *, block: int = 1024, interpret: bool = True):
+    """One pass for a whole round's uplink compression: the batched (K, L)
+    threshold/rank selection followed by the fused masked kernel. Inputs
+    must be pre-padded to L % block == 0 (pad with gm_a=gm_b=False).
     Returns (sparse, new_residual, mask), all (K, L)."""
     offered = x + residual
     mask = grouped_topk_mask(offered, (gm_a, gm_b), (keep_a, keep_b))
     sparse, new_res = sparsify_residual_masked(x, residual, mask,
                                                block=block, interpret=interpret)
     return sparse, new_res, mask
+
+
+topk_sparsify_batch = jax.jit(_topk_sparsify_batch,
+                              static_argnames=("block", "interpret"))
+# donated variant for the device-resident round loop: the incoming residual
+# buffer is CONSUMED (XLA writes new_residual into its storage instead of
+# allocating) — callers must drop their handle to the argument and adopt the
+# returned one. Only dispatched on real accelerators (ops.py): CPU jit
+# ignores donation with a warning.
+topk_sparsify_batch_donated = jax.jit(
+    _topk_sparsify_batch, static_argnames=("block", "interpret"),
+    donate_argnums=(1,))
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -215,12 +226,11 @@ def quantize_codes(sparse: jnp.ndarray, scale_elem: jnp.ndarray,
     )(sparse, scale_elem)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "block", "interpret"))
-def sparsify_quantize_batch(x: jnp.ndarray, residual: jnp.ndarray,
-                            gm_a: jnp.ndarray, gm_b: jnp.ndarray,
-                            keep_a: jnp.ndarray, keep_b: jnp.ndarray,
-                            *, chunk: int = 2048, block: int = 1024,
-                            interpret: bool = True):
+def _sparsify_quantize_batch(x: jnp.ndarray, residual: jnp.ndarray,
+                             gm_a: jnp.ndarray, gm_b: jnp.ndarray,
+                             keep_a: jnp.ndarray, keep_b: jnp.ndarray,
+                             *, chunk: int = 2048, block: int = 1024,
+                             interpret: bool = True):
     """The device-resident uplink codec: batched exact top-k selection, the
     fused masked sparsify+residual kernel, then symmetric int8 quantization
     with per-chunk scales — all in ONE jitted pass, so the selected values
@@ -264,3 +274,14 @@ def sparsify_quantize_batch(x: jnp.ndarray, residual: jnp.ndarray,
     codes = quantize_codes(sparse, scale_elem, block=block,
                            interpret=interpret)
     return codes, scales, new_res, mask, nzmask
+
+
+sparsify_quantize_batch = jax.jit(
+    _sparsify_quantize_batch,
+    static_argnames=("chunk", "block", "interpret"))
+# donated variant (see topk_sparsify_batch_donated): consumes the residual
+# buffer so the device-resident round loop recycles its storage for
+# new_residual instead of holding both generations live.
+sparsify_quantize_batch_donated = jax.jit(
+    _sparsify_quantize_batch,
+    static_argnames=("chunk", "block", "interpret"), donate_argnums=(1,))

@@ -10,6 +10,20 @@ import pytest
 
 jax.config.update("jax_platform_name", "cpu")
 
+# CI backend matrix (.github/workflows/ci.yml): ECOLORA_TEST_BACKEND=pallas
+# flips the DEFAULT uplink/downlink sparsify backend for every test that
+# doesn't pin one, so the whole fast suite also runs through the fused
+# Pallas kernels (CPU interpret mode here; real kernels on TPU). Tests that
+# pass backend= explicitly — the numpy-vs-pallas parity pins — are
+# unaffected, which is what keeps the matrix legs comparable.
+_BACKEND = os.environ.get("ECOLORA_TEST_BACKEND")
+if _BACKEND:
+    if _BACKEND not in ("numpy", "pallas"):
+        raise ValueError(
+            f"ECOLORA_TEST_BACKEND={_BACKEND!r}: expected numpy or pallas")
+    from repro.fed.trainer import FedConfig
+    FedConfig.__dataclass_fields__["backend"].default = _BACKEND
+
 
 @pytest.fixture(scope="session")
 def rng_key():

@@ -103,6 +103,20 @@ def test_committed_baseline_zeroes_src_repro():
     assert result.baselined, "baseline matched nothing — suffix matching broke"
 
 
+def test_stale_is_scope_aware():
+    """A narrowed path scope must not report entries for unscanned files
+    as stale (they are unexercised, not paid off) — while an in-scope
+    entry that matches nothing still surfaces as debt to remove."""
+    from repro.analysis.core import BaselineEntry
+    out_of_scope = BaselineEntry("DT002", "benchmarks/nonexistent_bench.py",
+                                 "whatever:time.time", "out-of-scope entry")
+    paid_off = BaselineEntry("WC001", "dt002_ok.py",
+                             "Gone.field", "scanned file, matches nothing")
+    result = analyze([_fixture("DT002", "ok")],
+                     baseline=Baseline([out_of_scope, paid_off]))
+    assert result.stale_baseline == [paid_off]
+
+
 def test_baseline_rejects_empty_justification(tmp_path):
     bad = tmp_path / "ANALYSIS_BASELINE.json"
     bad.write_text(json.dumps({"entries": [

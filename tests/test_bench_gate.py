@@ -14,7 +14,17 @@ import pytest
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
-from benchmarks.bench_gate import compare, main  # noqa: E402
+from benchmarks.bench_gate import (compare, main, render_markdown,  # noqa: E402
+                                   summary_rows)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_step_summary(monkeypatch):
+    """CI sets $GITHUB_STEP_SUMMARY for every step — including this pytest
+    run. Tests drive the summary through an explicit --summary path, never
+    the ambient file."""
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY", raising=False)
+
 
 BASE = {
     "bench": "codec_sweep",
@@ -135,3 +145,60 @@ def test_main_missing_snapshot_fails(tmp_path):
 def test_main_no_baselines_is_an_error(tmp_path):
     assert main(["--baseline", str(tmp_path), "--current",
                  str(tmp_path)]) == 2
+
+
+# ---------------------------------------------------------------------------
+# perf-trend summary table ($GITHUB_STEP_SUMMARY)
+# ---------------------------------------------------------------------------
+
+def test_summary_rows_deltas():
+    cur = _with("default/wire_bytes", 20000)      # -3.6%
+    rows = {(r[0], r[1]): r for r in summary_rows(BASE, cur)}
+    name, key, kind, bv, cv, delta = rows[("codec_sweep",
+                                           "default/wire_bytes")]
+    assert (kind, bv, cv) == ("bytes", 20750, 20000)
+    assert delta == pytest.approx(-3.614, abs=1e-3)
+    # unchanged metric: delta 0
+    assert rows[("codec_sweep", "engine/speedup")][5] == pytest.approx(0.0)
+
+
+def test_summary_rows_handle_one_sided_metrics():
+    cur = copy.deepcopy(BASE)
+    del cur["metrics"]["engine/speedup"]          # disappeared
+    cur["metrics"]["brand_new"] = {"value": 5, "kind": "rate"}
+    rows = {(r[0], r[1]): r for r in summary_rows(BASE, cur)}
+    assert rows[("codec_sweep", "engine/speedup")][4] is None   # no current
+    assert rows[("codec_sweep", "brand_new")][3] is None        # no baseline
+    assert rows[("codec_sweep", "brand_new")][5] is None        # no delta
+
+
+def test_render_markdown_table_shape():
+    md = render_markdown(summary_rows(BASE, _with("default/encode_ms", 1.5)))
+    lines = md.splitlines()
+    assert lines[2].startswith("| bench | metric | kind | baseline "
+                               "| current | delta % |")
+    row = next(ln for ln in lines if "default/encode_ms" in ln)
+    assert "| 1.2 | 1.5 | +25.0% |" in row
+    # one table row per metric
+    assert sum(ln.startswith("| codec_sweep |") for ln in lines) \
+        == len(BASE["metrics"])
+
+
+def test_main_appends_step_summary(tmp_path):
+    """The CI wiring: --summary (defaulted from $GITHUB_STEP_SUMMARY)
+    APPENDS the trend table — regression runs included, because the table
+    is exactly the evidence a red gate needs."""
+    bdir, cdir = tmp_path / "base", tmp_path / "cur"
+    bdir.mkdir()
+    cdir.mkdir()
+    (bdir / "BENCH_codec_sweep.json").write_text(json.dumps(BASE))
+    (cdir / "BENCH_codec_sweep.json").write_text(
+        json.dumps(_with("default/wire_bytes", 30000)))
+    summary = tmp_path / "summary.md"
+    summary.write_text("pre-existing step output\n")
+    assert main(["--baseline", str(bdir), "--current", str(cdir),
+                 "--summary", str(summary)]) == 1
+    text = summary.read_text()
+    assert text.startswith("pre-existing step output\n")
+    assert "| codec_sweep | default/wire_bytes | bytes | 20750 | 30000 " \
+        in text

@@ -1,8 +1,11 @@
 """rANS coder edge cases (repro.core.rans): adversarial inputs that the
 federated wire path never produces on the happy path — degenerate
 single-symbol histograms, max-resolution tables, empty payloads, corrupt
-model tables — plus the ``AnsValues`` never-expand bypass boundary. All
-deterministic (fixed seeds / constructed inputs), no property-test deps."""
+model tables — plus the ``AnsValues`` never-expand bypass boundary and the
+N-lane interleaved coder (ISSUE 10): lane-1 byte-parity with the scalar
+format, exact round-trips across random streams/lane counts, and typed
+errors on truncated/corrupted lane headers. The deterministic tests run on
+a bare interpreter; the hypothesis property tests skip without it."""
 import numpy as np
 import pytest
 
@@ -10,6 +13,15 @@ from repro.core import rans
 from repro.core.codec import (AnsValues, Carrier, CodecSpec, Section,
                               build_pipeline, decode_packet)
 from repro.core.sparsify import SparsifyConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # bare-interpreter CI job
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
 
 
 # ---------------------------------------------------------------------------
@@ -198,3 +210,159 @@ def test_ans_exact_boundary_is_never_worse():
                if "ans_model" in pkt.sections else 0)
         assert billed <= raw_bytes, (mix, billed, raw_bytes)
         assert np.isfinite(decode_packet(pkt)).all()
+
+
+# ---------------------------------------------------------------------------
+# N-lane interleaved coder (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+def _model_for(symbols, n_symbols=256):
+    bits = rans.scale_bits_for(symbols.size)
+    freqs = rans.normalize_freqs(
+        np.bincount(symbols, minlength=n_symbols), bits)
+    return freqs, bits
+
+
+def test_lanes_for_schedule_pins():
+    """The size->lane-count schedule is wire-adjacent configuration: quick
+    CI packets (and every committed BENCH baseline) stay scalar, large
+    packets take the full lane fan-out. Changing these thresholds re-prices
+    streams, so they are pinned."""
+    for count, lanes in [(0, 1), (1, 1), (8191, 1), (8192, 16),
+                         (32767, 16), (32768, 64), (131071, 64),
+                         (131072, 255), (1 << 20, 255)]:
+        assert rans.lanes_for(count) == lanes, (count, lanes)
+    assert rans.MAX_LANES == 255
+
+
+def test_lane1_byte_identical_to_scalar():
+    """Lane-count 1 IS the legacy format: same bytes, no header, so every
+    existing checkpoint, ledger pin, and codec-sweep baseline stays
+    valid."""
+    rng = np.random.default_rng(0xEC0)
+    for n in (1, 7, 100, 4096):
+        symbols = np.clip(rng.normal(0, 20, n), -127, 127)\
+            .astype(np.int64) + 128
+        freqs, bits = _model_for(symbols)
+        assert rans.encode_interleaved(symbols, freqs, bits, 1) \
+            == rans.encode(symbols, freqs, bits)
+        stream1, model1, bits1 = rans.encode_bytes(symbols, lanes=1)
+        stream0, model0, bits0 = rans.encode_bytes(symbols)
+        assert (stream1, model1, bits1) == (stream0, model0, bits0)
+
+
+def test_multi_lane_stream_format_and_round_trip():
+    """Multi-lane wire format: header byte = lane count, then 4 bytes of
+    big-endian state per lane, then the interleaved body. Decodes exactly
+    for lane counts that do and don't divide the stream length."""
+    rng = np.random.default_rng(0xEC1)
+    n = 10_001                       # deliberately not a lane multiple
+    symbols = np.clip(rng.normal(0, 9, n), -127, 127).astype(np.int64) + 128
+    freqs, bits = _model_for(symbols)
+    for lanes in (2, 3, 16, 255):
+        stream = rans.encode_interleaved(symbols, freqs, bits, lanes)
+        assert stream[0] == lanes
+        assert len(stream) >= 1 + rans._STATE_BYTES * lanes
+        out = rans.decode_interleaved(stream, freqs, n, bits, lanes)
+        np.testing.assert_array_equal(out, symbols)
+
+
+def test_multi_lane_via_encode_bytes_meta_round_trip():
+    """The codec-facing entry points carry the lane count out-of-band (the
+    packet meta) AND in the stream header; both must agree on decode."""
+    rng = np.random.default_rng(0xEC2)
+    symbols = rng.integers(0, 64, size=9000).astype(np.int64)
+    lanes = rans.lanes_for(symbols.size)
+    assert lanes > 1
+    stream, model, bits = rans.encode_bytes(symbols, lanes=lanes)
+    out = rans.decode_bytes(stream, model, symbols.size, bits, lanes=lanes)
+    np.testing.assert_array_equal(out, symbols)
+
+
+def test_truncated_lane_stream_raises():
+    symbols = np.arange(100, dtype=np.int64) % 7
+    freqs, bits = _model_for(symbols, n_symbols=8)
+    stream = rans.encode_interleaved(symbols, freqs, bits, 4)
+    for cut in (0, 1, 1 + rans._STATE_BYTES * 4 - 1):
+        with pytest.raises(ValueError, match="truncated ANS lane stream"):
+            rans.decode_interleaved(stream[:cut], freqs, symbols.size,
+                                    bits, 4)
+
+
+def test_corrupt_lane_header_raises():
+    """A stream whose embedded lane count disagrees with the metadata is
+    corrupt — decoding with the wrong interleave order would emit garbage
+    silently, so it must raise instead."""
+    symbols = np.arange(100, dtype=np.int64) % 7
+    freqs, bits = _model_for(symbols, n_symbols=8)
+    stream = rans.encode_interleaved(symbols, freqs, bits, 4)
+    tampered = bytes([2]) + stream[1:]
+    with pytest.raises(ValueError, match="corrupt ANS lane header"):
+        rans.decode_interleaved(tampered, freqs, symbols.size, bits, 4)
+
+
+def test_ans_values_stage_records_lane_count():
+    """End-to-end through the int8+ans pipeline: a large clustered stream
+    engages the lane schedule, the packet meta records the lane count, and
+    the decode matches the plain int8 stack exactly."""
+    n = 60_000
+    ab = np.arange(n) % 2 == 0
+    rng = np.random.default_rng(0xEC3)
+    values = rng.choice([-1.0, -0.5, 0.5, 1.0], n).astype(np.float32) \
+        + rng.uniform(-1e-3, 1e-3, n).astype(np.float32)
+    pipe = build_pipeline(CodecSpec(sparsify="fixed", k=0.5,
+                                    quantize="int8", entropy="ans"),
+                          SparsifyConfig(), ab)
+    pipe.observe_loss(1.0)
+    pkt = pipe.encode(values.copy(), 0)
+    kept = pkt.meta["ans"]["count"]
+    assert rans.lanes_for(kept) > 1
+    assert pkt.meta["ans"]["lanes"] == rans.lanes_for(kept)
+    plain = build_pipeline(CodecSpec(sparsify="fixed", k=0.5,
+                                     quantize="int8"),
+                           SparsifyConfig(), ab)
+    plain.observe_loss(1.0)
+    pkt_plain = plain.encode(values.copy(), 0)
+    pkt.local.clear()               # force the wire decode, not the shortcut
+    np.testing.assert_array_equal(decode_packet(pkt),
+                                  decode_packet(pkt_plain))
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None) if HAVE_HYPOTHESIS else lambda f: f
+@given(st.data()) if HAVE_HYPOTHESIS else lambda f: f
+def test_interleaved_round_trip_property(data):
+    """Any stream x any lane count round-trips exactly, and lane-count 1
+    always matches the scalar coder byte-for-byte."""
+    n = data.draw(st.integers(1, 400), label="n")
+    alpha = data.draw(st.integers(1, 64), label="alphabet")
+    lanes = data.draw(st.integers(1, 8), label="lanes")
+    raw = data.draw(st.lists(st.integers(0, alpha - 1),
+                             min_size=n, max_size=n), label="symbols")
+    symbols = np.asarray(raw, np.int64)
+    freqs, bits = _model_for(symbols, n_symbols=alpha)
+    stream = rans.encode_interleaved(symbols, freqs, bits, lanes)
+    if lanes == 1:
+        assert stream == rans.encode(symbols, freqs, bits)
+    out = rans.decode_interleaved(stream, freqs, n, bits, lanes)
+    np.testing.assert_array_equal(out, symbols)
+
+
+@needs_hypothesis
+@settings(max_examples=40, deadline=None) if HAVE_HYPOTHESIS else lambda f: f
+@given(st.data()) if HAVE_HYPOTHESIS else lambda f: f
+def test_lane_stream_truncation_always_raises(data):
+    """Cutting a multi-lane stream anywhere inside the header region
+    raises the typed ValueError — never a silent wrong decode or an
+    IndexError from the refill loop."""
+    lanes = data.draw(st.integers(2, 8), label="lanes")
+    symbols = np.asarray(data.draw(st.lists(st.integers(0, 7), min_size=32,
+                                            max_size=128),
+                                   label="symbols"), np.int64)
+    freqs, bits = _model_for(symbols, n_symbols=8)
+    stream = rans.encode_interleaved(symbols, freqs, bits, lanes)
+    header = 1 + rans._STATE_BYTES * lanes
+    cut = data.draw(st.integers(0, header - 1), label="cut")
+    with pytest.raises(ValueError, match="truncated ANS lane stream"):
+        rans.decode_interleaved(stream[:cut], freqs, symbols.size, bits,
+                                lanes)
